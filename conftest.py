@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when tests run as
+`pytest python/tests/` from the repository root (the Makefile runs them
+from `python/`, where the package is already on sys.path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

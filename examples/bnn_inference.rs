@@ -1,0 +1,120 @@
+//! End-to-end driver (DESIGN.md E9): full BNN inference through every
+//! layer of the stack on a real (synthetic-weight) workload.
+//!
+//! Pipeline exercised per frame:
+//!   L1 Pallas XNOR-popcount kernel → L2 JAX BNN graph → AOT HLO text →
+//!   L3 rust PJRT runtime → coordinator serving loop, cross-checked
+//!   bit-exactly against the independent rust functional engine, with the
+//!   simulated photonic frame latency of OXBNN_50 and OXBNN_5 attached.
+//!
+//! Results from this run are recorded in EXPERIMENTS.md §E9.
+//!
+//! Run: `cargo run --release --example bnn_inference -- [frames] [model]`
+
+use std::time::Instant;
+
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::perf::workload_perf;
+use oxbnn::coordinator::{
+    synthetic_weights, workload_from_artifact, InferenceRequest, Server, ServerConfig,
+};
+use oxbnn::functional::bnn;
+use oxbnn::runtime::Manifest;
+use oxbnn::util::rng::Rng;
+use oxbnn::util::units::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let frames: usize = args.first().map(|a| a.parse().unwrap_or(16)).unwrap_or(16);
+    let model = args.get(1).cloned().unwrap_or_else(|| "small".to_string());
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let artifact = manifest.get(&format!("bnn_{}", model))?.clone();
+    println!(
+        "model {}: {} layers, input {}x{}x{}, {} weight tensors",
+        model,
+        artifact.layers.len(),
+        artifact.input_hw.unwrap(),
+        artifact.input_hw.unwrap(),
+        artifact.input_channels.unwrap(),
+        artifact.args.len() - 1
+    );
+
+    // Simulated photonic performance of this exact geometry.
+    let workload = workload_from_artifact(&artifact);
+    for acc in [AcceleratorConfig::oxbnn_50(), AcceleratorConfig::oxbnn_5()] {
+        let perf = workload_perf(&acc, &workload);
+        println!(
+            "  simulated {}: frame {} → {:.0} FPS, {:.2} FPS/W",
+            perf.accelerator,
+            fmt_time(perf.frame_latency_s),
+            perf.fps,
+            perf.fps_per_w
+        );
+    }
+
+    // Serve frames through the coordinator (PJRT workers).
+    let cfg = ServerConfig::new(&dir, &[model.as_str()]);
+    let seed = cfg.weight_seed;
+    let server = Server::start(cfg)?;
+    let input_len = server.input_len(&model).unwrap();
+    let weights = synthetic_weights(&artifact, seed);
+
+    let mut rng = Rng::new(0xE2E);
+    let mut mismatches = 0usize;
+    let mut agreement_checked = 0usize;
+    let t0 = Instant::now();
+    for frame in 0..frames {
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        let resp = server.infer_blocking(InferenceRequest {
+            model: model.clone(),
+            input: input.clone(),
+        })?;
+        // Cross-validate a subset (functional engine is O(HSK) per layer).
+        if frame < 4 {
+            let want = bnn::forward(&artifact, &input, &weights);
+            agreement_checked += 1;
+            if resp.logits != want {
+                mismatches += 1;
+                eprintln!("frame {}: MISMATCH {:?} vs {:?}", frame, resp.logits, want);
+            }
+        }
+        if frame == 0 {
+            let top = resp
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            println!(
+                "  frame 0: class {} (bitcount {}), queue {}, exec {}, photonic(sim) {}",
+                top.0,
+                top.1,
+                fmt_time(resp.queue_s),
+                fmt_time(resp.execute_s),
+                fmt_time(resp.simulated_photonic_s)
+            );
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} frames in {:.3}s → {:.1} frames/s on CPU-PJRT",
+        frames,
+        elapsed,
+        frames as f64 / elapsed
+    );
+    println!(
+        "functional cross-check: {}/{} frames bit-exact",
+        agreement_checked - mismatches,
+        agreement_checked
+    );
+    println!("{}", server.metrics.lock().unwrap().report());
+    server.shutdown();
+    assert_eq!(mismatches, 0, "functional mismatch — see log");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Serving demo (DESIGN.md E10): drive the coordinator with a Poisson
+//! open-loop request stream from multiple client threads and report
+//! latency percentiles, batching behaviour, and the simulated photonic
+//! frame latency.
+//!
+//! Run: `cargo run --release --example serve -- [requests] [rate_hz]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use oxbnn::coordinator::{InferenceRequest, Server, ServerConfig};
+use oxbnn::util::rng::Rng;
+use oxbnn::util::units::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let total: usize = args.first().map(|a| a.parse().unwrap_or(64)).unwrap_or(64);
+    let rate: f64 = args.get(1).map(|a| a.parse().unwrap_or(500.0)).unwrap_or(500.0);
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let mut cfg = ServerConfig::new(&dir, &["tiny"]);
+    cfg.max_batch = 16;
+    cfg.max_wait = Duration::from_millis(1);
+    let server = Arc::new(Server::start(cfg)?);
+    let input_len = server.input_len("tiny").unwrap();
+    println!(
+        "open-loop Poisson load: {} requests at {} req/s target on model 'tiny'",
+        total, rate
+    );
+
+    let clients = 4usize;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(&server);
+        let n = total / clients + usize::from(c < total % clients);
+        handles.push(std::thread::spawn(move || -> (usize, f64) {
+            let mut rng = Rng::new(0xC0FFEE + c as u64);
+            let mut ok = 0usize;
+            let mut photonic = 0.0;
+            for _ in 0..n {
+                // Poisson inter-arrival per client (rate split evenly).
+                let wait = rng.exp(rate / clients as f64);
+                std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+                let input: Vec<f32> =
+                    (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+                match server.infer_blocking(InferenceRequest {
+                    model: "tiny".into(),
+                    input,
+                }) {
+                    Ok(resp) => {
+                        ok += 1;
+                        photonic = resp.simulated_photonic_s;
+                    }
+                    Err(e) => eprintln!("client {}: {:#}", c, e),
+                }
+            }
+            (ok, photonic)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut photonic = 0.0;
+    for h in handles {
+        let (o, p) = h.join().expect("client thread");
+        ok += o;
+        photonic = p;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "\ncompleted {}/{} in {:.3}s → measured {:.1} req/s (CPU-PJRT functional path)",
+        ok,
+        total,
+        elapsed,
+        ok as f64 / elapsed
+    );
+    println!(
+        "simulated OXBNN_50 photonic frame latency for this geometry: {}",
+        fmt_time(photonic)
+    );
+    println!("\n{}", server.metrics.lock().unwrap().report());
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => unreachable!("clients joined"),
+    }
+    Ok(())
+}

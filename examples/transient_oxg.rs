@@ -1,0 +1,92 @@
+//! Regenerates paper Fig. 3 (DESIGN.md E1/E2): the OXG device study.
+//!
+//! * `--spectra`: Fig. 3(b) — through-port passband positions for each
+//!   operand combination (ASCII spectrum around λ_in).
+//! * default: Fig. 3(c) — transient XNOR of two 8-bit operand streams at
+//!   10 GS/s (ASCII trace), plus a data-rate sweep to the error-free
+//!   limit (paper: 50 GS/s).
+//!
+//! Run: `cargo run --release --example transient_oxg [-- --spectra]`
+
+use oxbnn::devices::oxg::Oxg;
+use oxbnn::util::rng::Rng;
+
+fn main() {
+    let spectra = std::env::args().any(|a| a == "--spectra");
+    let gate = Oxg::new(1550.0);
+    if spectra {
+        print_spectra(&gate);
+    } else {
+        print_transient(&gate);
+        dr_sweep(&gate);
+    }
+}
+
+fn print_spectra(gate: &Oxg) {
+    println!("Fig. 3(b) — OXG through-port spectra (λ_in = 1550 nm marked '|')\n");
+    for (label, i, w) in [
+        ("(i,w)=(0,0)  κ     ", false, false),
+        ("(i,w)=(0,1)/(1,0)  ", false, true),
+        ("(i,w)=(1,1)        ", true, true),
+    ] {
+        let mut line = String::new();
+        for step in -30..=30 {
+            let lambda = 1550.0 + step as f64 * 0.05;
+            let t = {
+                let junctions = i as u32 + w as u32;
+                gate.mrr.through_transmission(lambda, junctions)
+            };
+            line.push(if step == 0 {
+                '|'
+            } else if t < 0.2 {
+                '_' // deep notch
+            } else if t < 0.6 {
+                '.'
+            } else {
+                '-'
+            });
+        }
+        let t_in = gate.transmission(i, w);
+        println!("{} {}  T(λ_in)={:.2} → {}", label, line, t_in, (t_in > gate.threshold) as u8);
+    }
+    println!("\nnotch at λ_in only for mixed operands → through-port computes XNOR");
+}
+
+fn print_transient(gate: &Oxg) {
+    println!("Fig. 3(c) — OXG transient at 10 GS/s (8-bit streams)\n");
+    let mut rng = Rng::new(42);
+    let bits_i: Vec<bool> = (0..8).map(|_| rng.bool()).collect();
+    let bits_w: Vec<bool> = (0..8).map(|_| rng.bool()).collect();
+    let spb = 12;
+    let trace = gate.transient(&bits_i, &bits_w, 10.0, spb, 3.0);
+    let rows = 8;
+    for r in (0..rows).rev() {
+        let lo = r as f64 / rows as f64;
+        let mut line = String::new();
+        for v in &trace {
+            line.push(if *v >= lo { '#' } else { ' ' });
+        }
+        println!("T={:.2} {}", lo, line);
+    }
+    let fmt = |bits: &[bool]| {
+        bits.iter()
+            .map(|b| format!("{:^width$}", *b as u8, width = spb))
+            .collect::<String>()
+    };
+    println!("  I    {}", fmt(&bits_i));
+    println!("  W    {}", fmt(&bits_w));
+    let decoded = gate.decode_trace(&trace, spb);
+    println!("  XNOR {}", fmt(&decoded));
+    let want: Vec<bool> = bits_i.iter().zip(&bits_w).map(|(a, b)| a == b).collect();
+    println!("\ndecode {}", if decoded == want { "OK" } else { "FAILED" });
+}
+
+fn dr_sweep(gate: &Oxg) {
+    println!("\nData-rate sweep (device τ = 3 ps, 256-bit PRBS):");
+    let max = gate.max_error_free_dr(3.0, 0xD12);
+    for dr in [3.0, 5.0, 10.0, 20.0, 30.0, 40.0, 50.0, 64.0, 80.0] {
+        let ok = dr <= max;
+        println!("  {:>4} GS/s: {}", dr, if ok { "error-free" } else { "eye closed" });
+    }
+    println!("max error-free DR = {} GS/s (paper claims 50 GS/s)", max);
+}

@@ -1,0 +1,151 @@
+"""AOT exporter: lower the L2 BNN graphs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla_extension 0.5.1
+linked by the rust `xla` crate rejects (`proto.id() <= INT_MAX`); the HLO
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); python is never on the request
+path.  Emits:
+
+  artifacts/xnor_gemm.hlo.txt        one-layer XPE pipeline (quickstart)
+  artifacts/xnor_gemm_bench.hlo.txt  larger GEMM for the rust hot-path bench
+  artifacts/bnn_tiny.hlo.txt         tiny BNN forward (serving hot path)
+  artifacts/bnn_small.hlo.txt        small BNN forward (integration tests)
+  artifacts/bnn_vgg_small.hlo.txt    VGG-small forward (end-to-end example)
+  artifacts/manifest.json            arg shapes + layer geometry for rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels.xnor_popcount import xnor_gemm
+
+# (H, S, K) for the standalone GEMM artifacts.
+GEMM_SHAPE = (64, 288, 64)
+GEMM_BENCH_SHAPE = (256, 1152, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def export_gemm(shape, apply_activation: bool):
+    """Standalone XPE pipeline: bitcount + comparator over (H,S)x(S,K)."""
+    h, s, k = shape
+
+    def fn(inputs, weights):
+        return (
+            xnor_gemm(inputs, weights, apply_activation=apply_activation),
+        )
+
+    lowered = jax.jit(fn).lower(_spec((h, s)), _spec((s, k)))
+    return to_hlo_text(lowered), {
+        "kind": "xnor_gemm",
+        "apply_activation": apply_activation,
+        "args": [
+            {"name": "inputs", "shape": [h, s], "dtype": "f32"},
+            {"name": "weights", "shape": [s, k], "dtype": "f32"},
+        ],
+        "output": {"shape": [h, k], "dtype": "f32"},
+    }
+
+
+def export_model(name: str):
+    """Full BNN forward: f(x, w0, ..., wL) -> (1, classes) logits."""
+    spec = model_lib.MODELS[name]
+    fn = model_lib.make_forward_fn(spec)
+    x_spec = _spec((1, spec.input_hw, spec.input_hw, spec.input_channels))
+    w_specs = [_spec(s) for s in model_lib.param_shapes(spec)]
+    lowered = jax.jit(fn).lower(x_spec, *w_specs)
+    args = [
+        {
+            "name": "x",
+            "shape": [1, spec.input_hw, spec.input_hw, spec.input_channels],
+            "dtype": "f32",
+        }
+    ]
+    for i, s in enumerate(model_lib.param_shapes(spec)):
+        args.append({"name": f"w{i}", "shape": list(s), "dtype": "f32"})
+    meta = {
+        "kind": "bnn_forward",
+        "model": name,
+        "args": args,
+        "output": {"shape": [1, spec.num_classes], "dtype": "f32"},
+        "layers": spec.layer_dims(),
+        "input_hw": spec.input_hw,
+        "input_channels": spec.input_channels,
+        "num_classes": spec.num_classes,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--models",
+        default="tiny,small,vgg_small",
+        help="comma-separated model names to export",
+    )
+    parser.add_argument(
+        "--skip-gemm", action="store_true", help="skip standalone GEMM artifacts"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        # Merge: partial re-exports must not drop other artifacts' entries.
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    def emit(stem: str, text: str, meta: dict):
+        path = os.path.join(args.out_dir, f"{stem}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{stem}.hlo.txt"
+        manifest["artifacts"][stem] = meta
+        print(f"[aot] wrote {path} ({len(text)} chars)", flush=True)
+
+    if not args.skip_gemm:
+        text, meta = export_gemm(GEMM_SHAPE, apply_activation=True)
+        emit("xnor_gemm", text, meta)
+        text, meta = export_gemm(GEMM_BENCH_SHAPE, apply_activation=False)
+        emit("xnor_gemm_bench", text, meta)
+
+    for name in [m for m in args.models.split(",") if m]:
+        if name not in model_lib.MODELS:
+            print(f"[aot] unknown model '{name}'", file=sys.stderr)
+            return 1
+        text, meta = export_model(name)
+        emit(f"bnn_{name}", text, meta)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'manifest.json')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

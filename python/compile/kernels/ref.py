@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracle for the XNOR-bitcount kernel.
+
+This module is the CORE correctness signal for Layer 1: every Pallas kernel
+in :mod:`xnor_popcount` must agree bit-exactly (counts are small integers
+held in f32) with the functions below.
+
+The paper (OXBNN, ISQED 2023) processes binarized vectors drawn from the
+binary value set ``{0, 1}`` (Section II-A).  A vector-dot-product (VDP)
+between a binarized input vector ``I`` and weight vector ``W`` of size S is
+
+    z = sum_i xnor(I_i, W_i)                       (paper Eq. 2)
+
+with ``xnor(a, b) = a*b + (1-a)*(1-b)`` over {0, 1}.  The activation for
+the next layer is the comparator (paper Section II-A):
+
+    act = 1 if z > 0.5 * z_max else 0,   z_max = S.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def binarize01(x: jnp.ndarray) -> jnp.ndarray:
+    """Binary quantization into the {0, 1} value set (paper Eq. 1 mapped
+    onto the {0,1} encoding used by all optical BNN accelerators)."""
+    return (x >= 0).astype(jnp.float32)
+
+
+def xnor_bit(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise XNOR over {0,1}-valued float arrays."""
+    return a * b + (1.0 - a) * (1.0 - b)
+
+
+def xnor_popcount_ref(inputs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Reference XNOR-bitcount GEMM.
+
+    Args:
+      inputs:  (H, S) array over {0, 1} — H flattened input vectors.
+      weights: (S, K) array over {0, 1} — K flattened weight vectors.
+
+    Returns:
+      (H, K) float32 array of bitcounts; entry (h, k) is the number of bit
+      positions where inputs[h] and weights[:, k] agree — i.e. the VDP of
+      paper Eq. 2 computed with one XPE pass per N-slice.
+    """
+    a = inputs[:, :, None]  # (H, S, 1)
+    b = weights[None, :, :]  # (1, S, K)
+    return jnp.sum(xnor_bit(a, b), axis=1).astype(jnp.float32)
+
+
+def xnor_popcount_closed_form(inputs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form identity used by the Pallas kernel.
+
+    sum_i [1 - a_i - b_i + 2 a_i b_i]
+      = S - rowsum(a) - colsum(b) + 2 * (a @ b)
+
+    This turns the bit-level XNOR into one MXU-friendly matmul plus an
+    affine correction — the TPU adaptation of the paper's wavelength-
+    parallel OXG array (DESIGN.md §Hardware-Adaptation).
+    """
+    h, s = inputs.shape
+    s2, k = weights.shape
+    assert s == s2
+    matmul = inputs @ weights
+    row = jnp.sum(inputs, axis=1, keepdims=True)  # (H, 1)
+    col = jnp.sum(weights, axis=0, keepdims=True)  # (1, K)
+    return (jnp.float32(s) - row - col + 2.0 * matmul).astype(jnp.float32)
+
+
+def pca_saturate(z: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Photo-Charge Accumulator saturation.
+
+    The PCA's TIR output saturates once gamma '1's have accumulated
+    (paper Section III-B2 / Table II).  Accumulated partial counts are
+    non-negative and monotone, so clamping the final count equals clamping
+    continuously during accumulation.
+    """
+    return jnp.minimum(z, jnp.float32(gamma))
+
+
+def activation_ref(z: jnp.ndarray, z_max: float) -> jnp.ndarray:
+    """Comparator activation: compare(z, 0.5 * z_max) (paper Section II-A).
+
+    Models the PCA comparator with V_REF at half the TIR dynamic range
+    (paper Fig. 4: V_REF = 2.5 V of a 5 V range).
+    """
+    return (z > 0.5 * z_max).astype(jnp.float32)
+
+
+def xnor_gemm_act_ref(
+    inputs: jnp.ndarray,
+    weights: jnp.ndarray,
+    gamma: float | None = None,
+) -> jnp.ndarray:
+    """Full XPE pipeline reference: bitcount -> PCA saturation -> comparator."""
+    z = xnor_popcount_ref(inputs, weights)
+    s = inputs.shape[1]
+    if gamma is not None:
+        z = pca_saturate(z, gamma)
+    return activation_ref(z, float(s))

@@ -1,0 +1,256 @@
+"""Layer-1 Pallas kernel: XNOR-bitcount GEMM with PCA semantics.
+
+This is the compute hot-spot of the OXBNN paper mapped onto a TPU-style
+kernel.  The paper's XPE performs, per PASS, an N-wide bit-parallel XNOR
+(one OXG per wavelength) followed by an analog bitcount in the PCA, which
+accumulates up to ``alpha = gamma / N`` slices without any psum-reduction
+network (paper Fig. 5(b)).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation):
+
+* One *grid step along the S axis* of the kernel corresponds to one PASS:
+  a ``block_s``-wide slice of the binarized vectors is staged HBM->VMEM via
+  ``BlockSpec`` (the analog of the DWDM broadcast of a slice to the OXG
+  array).
+* The bit-level XNOR popcount is computed with the closed form
+  ``bs - rowsum(a) - colsum(b) + 2*(a@b)`` so the inner product runs on the
+  MXU systolic array instead of element-wise VPU ops.
+* The f32 accumulator tile plays the PCA capacitor: it is monotone
+  non-decreasing across S-steps and is clamped to ``gamma`` at the end
+  (monotonicity makes the final clamp exact w.r.t. continuous saturation).
+* The comparator activation (``z > 0.5 * S``) is fused into the last
+  S-step, mirroring the PCA's comparator at V_REF = 2.5 V.
+
+The kernel is always launched with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+(while-loops + dynamic slices) that both jax and the rust PJRT runtime can
+run.  Real-TPU block sizes are documented in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-size policy (EXPERIMENTS.md §Perf L1):
+#
+# * Real TPU: (128, 128, 512) tiles fill the 128x128 MXU with a 512-deep
+#   S (PASS) pipeline and fit comfortably in VMEM
+#   (128·512 + 512·128 + 128·128 f32 ≈ 580 KB of ~16 MB).
+# * interpret=True on CPU (this repo's execution mode): every grid step
+#   pays python-interpreter + while-loop overhead, so *fewer, larger*
+#   steps win. The measured sweep on the 256x1152x128 bench GEMM:
+#   (64,64,128) → 1.4 Gbitop/s; (128,128,576) → 14.9; (256,128,1152)
+#   → 27.7. The auto policy below picks the largest tile that covers the
+#   operand (capped to keep memory bounded), recovering ~20x.
+DEFAULT_BLOCK_H = 64
+DEFAULT_BLOCK_K = 64
+DEFAULT_BLOCK_S = 128
+
+# Caps for the auto policy (elements per axis).
+AUTO_MAX_H = 256
+AUTO_MAX_K = 128
+AUTO_MAX_S = 2048
+
+
+def _pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def auto_blocks(h: int, s: int, k: int) -> tuple:
+    """Pick (block_h, block_k, block_s) for interpret-mode execution."""
+    return (
+        min(AUTO_MAX_H, _pow2_ceil(h)),
+        min(AUTO_MAX_K, _pow2_ceil(k)),
+        min(AUTO_MAX_S, _pow2_ceil(s)),
+    )
+
+
+def _xnor_gemm_kernel(i_ref, w_ref, o_ref, *, block_s: int, n_steps: int,
+                      s_actual: int, gamma: Optional[float],
+                      apply_activation: bool):
+    """Pallas kernel body.
+
+    Grid layout: (H/bh, K/bk, S/bs); the S axis is the PASS axis and is the
+    innermost (sequential accumulation) dimension.
+    """
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = i_ref[...].astype(jnp.float32)  # (bh, bs) slice of inputs
+    b = w_ref[...].astype(jnp.float32)  # (bs, bk) slice of weights
+
+    # Closed-form XNOR popcount partial for this slice (one PASS):
+    #   sum_i [1 - a_i - b_i + 2 a_i b_i]
+    # a@b runs on the MXU; row/col sums are cheap VPU reductions.
+    matmul = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    row = jnp.sum(a, axis=1, keepdims=True)
+    col = jnp.sum(b, axis=0, keepdims=True)
+    partial = jnp.float32(block_s) - row - col + 2.0 * matmul
+
+    o_ref[...] += partial
+
+    @pl.when(step == n_steps - 1)
+    def _finalize():
+        z = o_ref[...]
+        if gamma is not None:
+            # PCA saturation: the TIR output rails at gamma accumulated '1's.
+            z = jnp.minimum(z, jnp.float32(gamma))
+        if apply_activation:
+            # Comparator activation at V_REF = half dynamic range.
+            z = (z > 0.5 * jnp.float32(s_actual)).astype(jnp.float32)
+        o_ref[...] = z
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value: float) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "gamma", "apply_activation", "block_h", "block_k", "block_s",
+    ),
+)
+def xnor_gemm(
+    inputs: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    gamma: Optional[float] = None,
+    apply_activation: bool = False,
+    block_h: Optional[int] = None,
+    block_k: Optional[int] = None,
+    block_s: Optional[int] = None,
+) -> jnp.ndarray:
+    """XNOR-bitcount GEMM via the Pallas XPE kernel.
+
+    Args:
+      inputs:  (H, S) {0,1}-valued array (flattened input vectors).
+      weights: (S, K) {0,1}-valued array (flattened weight vectors).
+      gamma: PCA accumulation capacity; counts are clamped to this value
+        (``None`` models an ideal, unbounded accumulator).
+      apply_activation: fuse the comparator ``z > 0.5*S`` into the kernel,
+        returning {0,1} activations instead of raw bitcounts.
+      block_h/block_k/block_s: tile sizes; S is padded with the identity
+        pair (input=1, weight=0) whose XNOR contribution is zero.
+
+    Returns:
+      (H, K) f32 array of bitcounts (or activations).
+    """
+    h, s = inputs.shape
+    s2, k = weights.shape
+    if s != s2:
+        raise ValueError(f"shape mismatch: inputs S={s} vs weights S={s2}")
+
+    # Auto block policy unless the caller pinned tile sizes.
+    auto = auto_blocks(h, s, k)
+    block_h = block_h if block_h is not None else auto[0]
+    block_k = block_k if block_k is not None else auto[1]
+    block_s = block_s if block_s is not None else auto[2]
+
+    # Pad S with (input=1, weight=0): xnor(1, 0) = 0, so padded positions
+    # contribute nothing to the bitcount.  Padding H/K with anything is
+    # fine — those rows/cols are sliced away below.
+    ip = _pad_to(_pad_to(inputs, 1, block_s, 1.0), 0, block_h, 1.0)
+    wp = _pad_to(_pad_to(weights, 0, block_s, 0.0), 1, block_k, 0.0)
+    hp, sp = ip.shape
+    _, kp = wp.shape
+    n_steps = sp // block_s
+
+    kernel = functools.partial(
+        _xnor_gemm_kernel,
+        block_s=block_s,
+        n_steps=n_steps,
+        s_actual=s,
+        gamma=gamma,
+        apply_activation=apply_activation,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(hp // block_h, kp // block_k, n_steps),
+        in_specs=[
+            pl.BlockSpec((block_h, block_s), lambda i, j, t: (i, t)),
+            pl.BlockSpec((block_s, block_k), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((block_h, block_k), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((hp, kp), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(ip, wp)
+    return out[:h, :k]
+
+
+def xnor_gemm_sliced(
+    inputs: jnp.ndarray,
+    weights: jnp.ndarray,
+    slice_n: int,
+    *,
+    gamma: Optional[float] = None,
+) -> jnp.ndarray:
+    """XNOR GEMM with the paper's explicit per-PASS slicing semantics.
+
+    Uses ``block_s = slice_n`` so every grid step along S is exactly one
+    XPE PASS over an N-element vector slice — the structure simulated at
+    transaction level by the rust L3 (``rust/src/arch/xpe.rs``).  Produces
+    identical results to :func:`xnor_gemm`; exists so tests can pin the
+    PASS-for-PASS equivalence of kernel and simulator.
+    """
+    return xnor_gemm(
+        inputs,
+        weights,
+        gamma=gamma,
+        apply_activation=False,
+        block_h=min(DEFAULT_BLOCK_H, _ceil_pow2(inputs.shape[0])),
+        block_k=min(DEFAULT_BLOCK_K, _ceil_pow2(weights.shape[1])),
+        block_s=slice_n,
+    )
+
+
+def _ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def xnor_gemm_noisy(
+    inputs: jnp.ndarray,
+    weights: jnp.ndarray,
+    count_sigma: float,
+    key,
+    *,
+    apply_activation: bool = True,
+) -> jnp.ndarray:
+    """XNOR GEMM with the PCA's *analog* count noise injected.
+
+    The rust-side resolution analysis (``analysis::pca_resolution``) shows
+    the TIR chain adds sigma ≈ 2.4 counts of Gaussian noise at γ = 8503
+    (≈ 11 at γ = 39682): the PCA is a thresholder, not an exact counter.
+    This wrapper models that by perturbing the ideal bitcount (from the
+    Pallas kernel) before the comparator, so accuracy-vs-noise studies can
+    quantify how much analog imprecision a BNN tolerates
+    (``python/tests/test_noise.py``).
+    """
+    z = xnor_gemm(inputs, weights)
+    noise = count_sigma * jax.random.normal(key, z.shape, dtype=jnp.float32)
+    z_noisy = z + noise
+    if apply_activation:
+        s = inputs.shape[1]
+        return (z_noisy > 0.5 * jnp.float32(s)).astype(jnp.float32)
+    return z_noisy

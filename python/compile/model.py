@@ -1,0 +1,218 @@
+"""Layer-2 JAX model: binarized CNN forward pass built on the L1 kernel.
+
+The OXBNN paper evaluates inference of four BNNs (VGG-small, ResNet18,
+MobileNetV2, ShuffleNetV2) binarized with LQ-Nets into the {0,1} value set.
+This module defines the *functional* BNN graph used for end-to-end
+validation: every convolution is an im2col + XNOR-bitcount GEMM routed
+through :func:`kernels.xnor_popcount.xnor_gemm` (the Pallas XPE kernel),
+followed by the comparator activation and optional 2x2 max-pooling
+(binary max == OR, matching the paper's pooling units in Fig. 6).
+
+The graph is AOT-lowered once by :mod:`aot` to HLO text; the rust L3 then
+executes it through PJRT with weights it generates itself and cross-checks
+against its own integer functional engine (``rust/src/functional/``).
+
+im2col layout convention (must match rust/src/functional/im2col.rs):
+  patch feature index = (ki * KW + kj) * C + c
+i.e. kernel-position-major, channel-minor.  Spatial padding uses binary 0
+(which encodes -1 in the {-1,+1} view), as BNN hardware does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import activation_ref, binarize01
+from .kernels.xnor_popcount import xnor_gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One binarized conv layer: 3x3 (or kxk) stride-1 SAME convolution."""
+
+    out_channels: int
+    kernel: int = 3
+    stride: int = 1
+    pool: bool = False  # 2x2 max-pool after activation
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A binarized CNN: input geometry + conv stack + linear classifier."""
+
+    name: str
+    input_hw: int
+    input_channels: int
+    convs: Tuple[ConvSpec, ...]
+    num_classes: int
+
+    def layer_dims(self) -> List[dict]:
+        """Geometry of every XNOR-GEMM layer: (H, S, K) plus feature map.
+
+        This is the exact table the rust workload models are derived from;
+        test_model.py pins it against rust/src/workloads expectations.
+        """
+        dims = []
+        hw = self.input_hw
+        c = self.input_channels
+        for spec in self.convs:
+            out_hw = hw // spec.stride
+            s = spec.kernel * spec.kernel * c
+            dims.append(
+                dict(
+                    kind="conv",
+                    h=out_hw * out_hw,
+                    s=s,
+                    k=spec.out_channels,
+                    fmap_hw=out_hw,
+                )
+            )
+            hw = out_hw // 2 if spec.pool else out_hw
+            c = spec.out_channels
+        dims.append(
+            dict(kind="fc", h=1, s=hw * hw * c, k=self.num_classes, fmap_hw=1)
+        )
+        return dims
+
+
+# ---------------------------------------------------------------------------
+# Model zoo (geometry mirrors rust/src/workloads/*.rs)
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    # Minimal graph for fast unit tests and the serving hot path.
+    "tiny": ModelSpec(
+        name="tiny",
+        input_hw=8,
+        input_channels=3,
+        convs=(ConvSpec(8, pool=True), ConvSpec(16, pool=True)),
+        num_classes=10,
+    ),
+    # Mid-size net for integration tests / examples.
+    "small": ModelSpec(
+        name="small",
+        input_hw=16,
+        input_channels=3,
+        convs=(ConvSpec(32, pool=True), ConvSpec(64, pool=True)),
+        num_classes=10,
+    ),
+    # VGG-small as used by LQ-Nets [9] and the paper's evaluation:
+    # 6 convs (128,128,256,256,512,512) with pooling after every pair.
+    "vgg_small": ModelSpec(
+        name="vgg_small",
+        input_hw=32,
+        input_channels=3,
+        convs=(
+            ConvSpec(128),
+            ConvSpec(128, pool=True),
+            ConvSpec(256),
+            ConvSpec(256, pool=True),
+            ConvSpec(512),
+            ConvSpec(512, pool=True),
+        ),
+        num_classes=10,
+    ),
+}
+
+
+def param_shapes(spec: ModelSpec) -> List[Tuple[int, int]]:
+    """Shapes of the flattened {0,1} weight matrices, layer order."""
+    return [(d["s"], d["k"]) for d in spec.layer_dims()]
+
+
+def init_params(rng: np.random.Generator, spec: ModelSpec) -> List[jnp.ndarray]:
+    """Synthetic binarized weights (see DESIGN.md: FPS depends on geometry,
+    not learned values; functional checks use the same synthetic weights on
+    both the jax and rust sides)."""
+    return [
+        jnp.asarray(rng.integers(0, 2, size=shape), dtype=jnp.float32)
+        for shape in param_shapes(spec)
+    ]
+
+
+def im2col(x: jnp.ndarray, kernel: int, stride: int) -> jnp.ndarray:
+    """Flatten SAME-padded kxk patches of an NHWC=(1,H,W,C) {0,1} map.
+
+    Returns (H_out * W_out, kernel*kernel*C) with the layout documented in
+    the module docstring.
+    """
+    _, h, w, c = x.shape
+    pad = (kernel - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = (h + 2 * pad - kernel) // stride + 1
+    w_out = (w + 2 * pad - kernel) // stride + 1
+    cols = []
+    for ki in range(kernel):
+        for kj in range(kernel):
+            cols.append(
+                xp[
+                    :,
+                    ki : ki + h_out * stride : stride,
+                    kj : kj + w_out * stride : stride,
+                    :,
+                ]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (1, H', W', k*k*C)
+    return patches.reshape(h_out * w_out, kernel * kernel * c)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max-pool of an NHWC {0,1} map (binary max == OR)."""
+    _, h, w, c = x.shape
+    x = x.reshape(1, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def forward(
+    spec: ModelSpec,
+    params: Sequence[jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    gamma: Optional[float] = None,
+) -> jnp.ndarray:
+    """Full BNN forward pass.
+
+    Args:
+      spec: model geometry.
+      params: list of (S, K) {0,1} weight matrices, conv layers then FC.
+      x: (1, H, W, C) real-valued input; binarized on entry (paper Eq. 1).
+      gamma: optional PCA accumulation capacity applied in every layer.
+
+    Returns:
+      (1, num_classes) f32 bitcount logits from the final linear layer.
+    """
+    if len(params) != len(spec.convs) + 1:
+        raise ValueError(
+            f"{spec.name}: expected {len(spec.convs) + 1} weight matrices, "
+            f"got {len(params)}"
+        )
+    a = binarize01(x)
+    hw = spec.input_hw
+    for i, conv in enumerate(spec.convs):
+        patches = im2col(a, conv.kernel, conv.stride)  # (H'W', S)
+        s = patches.shape[1]
+        z = xnor_gemm(patches, params[i], gamma=gamma)
+        act = activation_ref(z, float(s))
+        out_hw = hw // conv.stride
+        a = act.reshape(1, out_hw, out_hw, conv.out_channels)
+        if conv.pool:
+            a = maxpool2(a)
+            out_hw //= 2
+        hw = out_hw
+    flat = a.reshape(1, -1)
+    logits = xnor_gemm(flat, params[-1], gamma=gamma)
+    return logits
+
+
+def make_forward_fn(spec: ModelSpec, gamma: Optional[float] = None):
+    """Positional-arg wrapper for AOT lowering: f(x, w0, w1, ...)."""
+
+    def fn(x, *weights):
+        return (forward(spec, list(weights), x, gamma=gamma),)
+
+    return fn

@@ -1,0 +1,123 @@
+"""AOT exporter contract tests: manifest schema and HLO-text validity.
+
+The rust runtime's only knowledge of the python layer is the manifest +
+HLO text; these tests pin that contract from the python side (the rust
+side pins it again in rust/tests/runtime_roundtrip.rs).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model as model_lib
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Export the fast subset through the real CLI entry point.
+    result = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--models",
+            "tiny",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert result.returncode == 0, result.stderr
+    return out
+
+
+def test_manifest_schema(export_dir):
+    with open(export_dir / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    arts = manifest["artifacts"]
+    assert {"xnor_gemm", "xnor_gemm_bench", "bnn_tiny"} <= set(arts)
+    tiny = arts["bnn_tiny"]
+    assert tiny["kind"] == "bnn_forward"
+    assert tiny["model"] == "tiny"
+    assert tiny["output"]["shape"] == [1, 10]
+    # Arg list: input then one weight matrix per layer.
+    spec = model_lib.MODELS["tiny"]
+    assert len(tiny["args"]) == 1 + len(spec.convs) + 1
+    assert tiny["args"][0]["shape"] == [1, 8, 8, 3]
+    for arg, shape in zip(tiny["args"][1:], model_lib.param_shapes(spec)):
+        assert tuple(arg["shape"]) == shape
+    # Layer geometry matches the ModelSpec-derived table.
+    assert tiny["layers"] == spec.layer_dims()
+
+
+def test_hlo_files_exist_and_parse(export_dir):
+    with open(export_dir / "manifest.json") as f:
+        manifest = json.load(f)
+    for name, art in manifest["artifacts"].items():
+        path = export_dir / art["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        # HLO text structural sanity: an ENTRY computation with a ROOT.
+        assert "ENTRY" in text, name
+        assert "ROOT" in text, name
+        # return_tuple=True → the entry computation returns a tuple.
+        assert "tuple" in text.lower(), name
+
+
+def test_manifest_merge_preserves_existing(export_dir):
+    """Partial re-export must keep other artifacts in the manifest."""
+    result = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(export_dir),
+            "--models",
+            "",
+            "--skip-gemm",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert result.returncode == 0, result.stderr
+    with open(export_dir / "manifest.json") as f:
+        manifest = json.load(f)
+    assert "bnn_tiny" in manifest["artifacts"]
+    assert "xnor_gemm" in manifest["artifacts"]
+
+
+def test_gemm_artifact_metadata():
+    text, meta = aot.export_gemm((8, 16, 4), apply_activation=True)
+    assert meta["kind"] == "xnor_gemm"
+    assert meta["apply_activation"] is True
+    assert meta["args"][0]["shape"] == [8, 16]
+    assert meta["args"][1]["shape"] == [16, 4]
+    assert meta["output"]["shape"] == [8, 4]
+    assert "ENTRY" in text
+
+
+def test_unknown_model_rejected(tmp_path):
+    result = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(tmp_path),
+            "--models",
+            "not_a_model",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert result.returncode != 0

@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas XNOR-popcount kernel vs pure-jnp oracle.
+
+Counts are small integers carried in f32, so every comparison here is
+*exact* (assert_array_equal), not allclose — any discrepancy is a real
+kernel bug, not float noise.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from numpy.testing import assert_array_equal
+
+from compile.kernels import ref
+from compile.kernels.xnor_popcount import xnor_gemm, xnor_gemm_sliced
+
+
+def rand_bits(rng, shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape), dtype=jnp.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xB17C0117)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+
+def test_xnor_truth_table():
+    a = jnp.array([0.0, 0.0, 1.0, 1.0])
+    b = jnp.array([0.0, 1.0, 0.0, 1.0])
+    assert_array_equal(np.asarray(ref.xnor_bit(a, b)), [1.0, 0.0, 0.0, 1.0])
+
+
+def test_closed_form_matches_bitwise(rng):
+    i = rand_bits(rng, (17, 53))
+    w = rand_bits(rng, (53, 11))
+    assert_array_equal(
+        np.asarray(ref.xnor_popcount_ref(i, w)),
+        np.asarray(ref.xnor_popcount_closed_form(i, w)),
+    )
+
+
+def test_popcount_bounds(rng):
+    i = rand_bits(rng, (9, 40))
+    w = rand_bits(rng, (40, 7))
+    z = np.asarray(ref.xnor_popcount_ref(i, w))
+    assert z.min() >= 0 and z.max() <= 40
+
+
+def test_popcount_identical_vectors_is_s(rng):
+    i = rand_bits(rng, (5, 33))
+    z = np.asarray(ref.xnor_popcount_ref(i, i.T))
+    assert_array_equal(np.diag(z), np.full(5, 33.0))
+
+
+def test_popcount_complement_is_zero(rng):
+    i = rand_bits(rng, (5, 33))
+    z = np.asarray(ref.xnor_popcount_ref(i, (1.0 - i).T))
+    assert_array_equal(np.diag(z), np.zeros(5))
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_matches_ref_aligned(rng):
+    i = rand_bits(rng, (64, 128))
+    w = rand_bits(rng, (128, 64))
+    assert_array_equal(
+        np.asarray(xnor_gemm(i, w)), np.asarray(ref.xnor_popcount_ref(i, w))
+    )
+
+
+def test_kernel_matches_ref_ragged(rng):
+    # Shapes that force padding on every axis.
+    i = rand_bits(rng, (37, 211))
+    w = rand_bits(rng, (211, 19))
+    assert_array_equal(
+        np.asarray(xnor_gemm(i, w)), np.asarray(ref.xnor_popcount_ref(i, w))
+    )
+
+
+def test_kernel_activation_fused(rng):
+    i = rand_bits(rng, (30, 90))
+    w = rand_bits(rng, (90, 12))
+    got = np.asarray(xnor_gemm(i, w, apply_activation=True))
+    want = np.asarray(ref.xnor_gemm_act_ref(i, w))
+    assert_array_equal(got, want)
+    assert set(np.unique(got)) <= {0.0, 1.0}
+
+
+def test_kernel_gamma_saturation(rng):
+    i = rand_bits(rng, (16, 64))
+    w = rand_bits(rng, (64, 16))
+    gamma = 20.0
+    got = np.asarray(xnor_gemm(i, w, gamma=gamma))
+    want = np.minimum(np.asarray(ref.xnor_popcount_ref(i, w)), gamma)
+    assert_array_equal(got, want)
+    assert got.max() <= gamma
+
+
+def test_kernel_gamma_unbinding_when_large(rng):
+    # gamma above S never clips (paper §IV-C: max S=4608 < gamma=8503).
+    i = rand_bits(rng, (8, 48))
+    w = rand_bits(rng, (48, 8))
+    assert_array_equal(
+        np.asarray(xnor_gemm(i, w, gamma=8503.0)),
+        np.asarray(ref.xnor_popcount_ref(i, w)),
+    )
+
+
+def test_sliced_kernel_pass_equivalence(rng):
+    # block_s = N slice (one PASS per grid step) must not change results.
+    i = rand_bits(rng, (12, 95))
+    w = rand_bits(rng, (95, 10))
+    for n in (19, 53, 66):  # paper Table II N values
+        assert_array_equal(
+            np.asarray(xnor_gemm_sliced(i, w, slice_n=n)),
+            np.asarray(ref.xnor_popcount_ref(i, w)),
+        )
+
+
+def test_kernel_all_ones_all_zeros():
+    i = jnp.ones((4, 32), jnp.float32)
+    w = jnp.zeros((32, 4), jnp.float32)
+    assert_array_equal(np.asarray(xnor_gemm(i, w)), np.zeros((4, 4)))
+    assert_array_equal(
+        np.asarray(xnor_gemm(i, jnp.ones((32, 4), jnp.float32))),
+        np.full((4, 4), 32.0),
+    )
+
+
+def test_kernel_single_element():
+    for a in (0.0, 1.0):
+        for b in (0.0, 1.0):
+            i = jnp.full((1, 1), a, jnp.float32)
+            w = jnp.full((1, 1), b, jnp.float32)
+            want = 1.0 if a == b else 0.0
+            assert np.asarray(xnor_gemm(i, w))[0, 0] == want
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        xnor_gemm(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes / block sizes / gamma
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 40),
+    s=st.integers(1, 160),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    block_s=st.sampled_from([16, 32, 128]),
+)
+def test_kernel_hypothesis_sweep(h, s, k, seed, block_s):
+    rng = np.random.default_rng(seed)
+    i = rand_bits(rng, (h, s))
+    w = rand_bits(rng, (s, k))
+    got = np.asarray(xnor_gemm(i, w, block_s=block_s))
+    want = np.asarray(ref.xnor_popcount_ref(i, w))
+    assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(1, 120),
+    gamma=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis_gamma(s, gamma, seed):
+    rng = np.random.default_rng(seed)
+    i = rand_bits(rng, (6, s))
+    w = rand_bits(rng, (s, 6))
+    got = np.asarray(xnor_gemm(i, w, gamma=float(gamma)))
+    want = np.minimum(np.asarray(ref.xnor_popcount_ref(i, w)), float(gamma))
+    assert_array_equal(got, want)

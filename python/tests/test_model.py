@@ -1,0 +1,141 @@
+"""L2 correctness: BNN forward graph (im2col, pooling, layer wiring)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from numpy.testing import assert_array_equal
+
+from compile import model as model_lib
+from compile.kernels import ref
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def test_registry_contains_expected_models():
+    assert {"tiny", "small", "vgg_small"} <= set(model_lib.MODELS)
+
+
+def test_vgg_small_geometry_matches_paper():
+    """VGG-small layer dims (LQ-Nets): 6 convs 128..512 + FC; the max conv
+    vector size of the zoo stays below gamma=8503 (paper §IV-C)."""
+    dims = model_lib.MODELS["vgg_small"].layer_dims()
+    ks = [d["k"] for d in dims]
+    assert ks == [128, 128, 256, 256, 512, 512, 10]
+    ss = [d["s"] for d in dims]
+    assert ss == [27, 1152, 1152, 2304, 2304, 4608, 8192]
+    conv_ss = [d["s"] for d in dims if d["kind"] == "conv"]
+    assert max(conv_ss) == 4608  # paper: max conv S across modern CNNs
+    assert max(conv_ss) < 8503  # < gamma at DR=50
+
+
+def test_param_shapes_consistent(rng):
+    for name, spec in model_lib.MODELS.items():
+        shapes = model_lib.param_shapes(spec)
+        assert len(shapes) == len(spec.convs) + 1
+        params = model_lib.init_params(rng, spec)
+        for p, s in zip(params, shapes):
+            assert p.shape == s
+            assert set(np.unique(np.asarray(p))) <= {0.0, 1.0}
+
+
+def im2col_naive(x, kernel, stride):
+    """O(HWk^2C) loop oracle for the im2col layout convention."""
+    _, h, w, c = x.shape
+    pad = (kernel - 1) // 2
+    xp = np.pad(np.asarray(x), ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = (h + 2 * pad - kernel) // stride + 1
+    w_out = (w + 2 * pad - kernel) // stride + 1
+    out = np.zeros((h_out * w_out, kernel * kernel * c), np.float32)
+    for oi in range(h_out):
+        for oj in range(w_out):
+            row = oi * w_out + oj
+            for ki in range(kernel):
+                for kj in range(kernel):
+                    for ch in range(c):
+                        col = (ki * kernel + kj) * c + ch
+                        out[row, col] = xp[0, oi * stride + ki, oj * stride + kj, ch]
+    return out
+
+
+def test_im2col_layout(rng):
+    x = jnp.asarray(rng.integers(0, 2, size=(1, 6, 6, 3)), dtype=jnp.float32)
+    got = np.asarray(model_lib.im2col(x, 3, 1))
+    assert_array_equal(got, im2col_naive(x, 3, 1))
+
+
+def test_im2col_stride2(rng):
+    x = jnp.asarray(rng.integers(0, 2, size=(1, 8, 8, 2)), dtype=jnp.float32)
+    got = np.asarray(model_lib.im2col(x, 3, 2))
+    assert_array_equal(got, im2col_naive(x, 3, 2))
+
+
+def test_maxpool_is_binary_or(rng):
+    x = jnp.asarray(rng.integers(0, 2, size=(1, 4, 4, 2)), dtype=jnp.float32)
+    got = np.asarray(model_lib.maxpool2(x))
+    xn = np.asarray(x)
+    for i in range(2):
+        for j in range(2):
+            for ch in range(2):
+                window = xn[0, 2 * i : 2 * i + 2, 2 * j : 2 * j + 2, ch]
+                assert got[0, i, j, ch] == window.max()
+
+
+def forward_oracle(spec, params, x):
+    """Layer-by-layer oracle using only ref.py primitives."""
+    a = ref.binarize01(x)
+    hw = spec.input_hw
+    for i, conv in enumerate(spec.convs):
+        patches = jnp.asarray(im2col_naive(a, conv.kernel, conv.stride))
+        s = patches.shape[1]
+        z = ref.xnor_popcount_ref(patches, params[i])
+        act = ref.activation_ref(z, float(s))
+        out_hw = hw // conv.stride
+        a = act.reshape(1, out_hw, out_hw, conv.out_channels)
+        if conv.pool:
+            a = model_lib.maxpool2(a)
+            out_hw //= 2
+        hw = out_hw
+    flat = a.reshape(1, -1)
+    return ref.xnor_popcount_ref(flat, params[-1])
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_forward_matches_oracle(name, rng):
+    spec = model_lib.MODELS[name]
+    params = model_lib.init_params(rng, spec)
+    x = jnp.asarray(
+        rng.normal(size=(1, spec.input_hw, spec.input_hw, spec.input_channels)),
+        dtype=jnp.float32,
+    )
+    got = np.asarray(model_lib.forward(spec, params, x))
+    want = np.asarray(forward_oracle(spec, params, x))
+    assert_array_equal(got, want)
+
+
+def test_forward_logits_shape_and_range(rng):
+    spec = model_lib.MODELS["tiny"]
+    params = model_lib.init_params(rng, spec)
+    x = jnp.zeros((1, 8, 8, 3), jnp.float32)
+    logits = np.asarray(model_lib.forward(spec, params, x))
+    assert logits.shape == (1, 10)
+    s_fc = model_lib.param_shapes(spec)[-1][0]
+    assert logits.min() >= 0 and logits.max() <= s_fc
+
+
+def test_forward_gamma_noop_when_large(rng):
+    spec = model_lib.MODELS["tiny"]
+    params = model_lib.init_params(rng, spec)
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 3)), dtype=jnp.float32)
+    a = np.asarray(model_lib.forward(spec, params, x))
+    b = np.asarray(model_lib.forward(spec, params, x, gamma=8503.0))
+    assert_array_equal(a, b)
+
+
+def test_forward_wrong_param_count_raises(rng):
+    spec = model_lib.MODELS["tiny"]
+    params = model_lib.init_params(rng, spec)[:-1]
+    with pytest.raises(ValueError):
+        model_lib.forward(spec, params, jnp.zeros((1, 8, 8, 3)))

@@ -1,0 +1,92 @@
+"""Analog-noise tolerance study (PCA as a noisy thresholder).
+
+The rust resolution analysis (analysis::pca_resolution) derives the PCA's
+count noise: sigma ≈ 2.4 counts at γ = 8503 (DR = 50) and ≈ 11 counts at
+γ = 39682 (DR = 3). These tests quantify the consequence for BNN
+activations: flip probability of the comparator decision as a function of
+analog sigma, and its concentration on near-threshold counts.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import activation_ref, xnor_popcount_ref
+from compile.kernels.xnor_popcount import xnor_gemm_noisy
+
+# Analog count-noise operating points from the rust analysis.
+SIGMA_DR50 = 2.4
+SIGMA_DR3 = 11.0
+
+
+def rand_bits(rng, shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape), dtype=jnp.float32)
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(0xA11A)
+    i = rand_bits(rng, (64, 512))
+    w = rand_bits(rng, (512, 32))
+    return i, w
+
+
+def flip_rate(i, w, sigma, seed=0):
+    ideal = np.asarray(activation_ref(xnor_popcount_ref(i, w), float(i.shape[1])))
+    noisy = np.asarray(
+        xnor_gemm_noisy(i, w, sigma, jax.random.PRNGKey(seed))
+    )
+    return float(np.mean(ideal != noisy))
+
+
+def test_zero_noise_is_exact(data):
+    i, w = data
+    assert flip_rate(i, w, 0.0) == 0.0
+
+
+def test_flip_rate_monotone_in_sigma(data):
+    i, w = data
+    rates = [flip_rate(i, w, s) for s in (0.0, SIGMA_DR50, SIGMA_DR3, 40.0)]
+    assert all(a <= b + 1e-9 for a, b in zip(rates, rates[1:])), rates
+
+
+def test_operating_points_have_low_flip_rate(data):
+    # At the paper's design points the comparator decision is robust:
+    # random binarized data gives |z - S/2| ~ 0.5*sqrt(S) ≈ 11 counts at
+    # S = 512, so sigma = 2.4 flips only a small fraction of activations.
+    i, w = data
+    r50 = flip_rate(i, w, SIGMA_DR50)
+    assert r50 < 0.15, r50
+    # The DR=3 point (sigma ~ 11 counts) is noticeably noisier at this
+    # (small) S — large-S layers gain margin as sqrt(S).
+    r3 = flip_rate(i, w, SIGMA_DR3)
+    assert r50 < r3 < 0.5
+
+
+def test_flips_concentrate_near_threshold(data):
+    i, w = data
+    s = i.shape[1]
+    z = np.asarray(xnor_popcount_ref(i, w))
+    ideal = np.asarray(activation_ref(jnp.asarray(z), float(s)))
+    noisy = np.asarray(xnor_gemm_noisy(i, w, SIGMA_DR50, jax.random.PRNGKey(7)))
+    flipped = ideal != noisy
+    if flipped.any():
+        margin_flipped = np.abs(z[flipped] - 0.5 * s)
+        margin_all = np.abs(z - 0.5 * s)
+        assert margin_flipped.mean() < margin_all.mean()
+        # No flip should occur far from the threshold (> 5 sigma).
+        assert margin_flipped.max() <= 5 * SIGMA_DR50
+
+
+def test_noisy_counts_without_activation(data):
+    i, w = data
+    z_noisy = np.asarray(
+        xnor_gemm_noisy(i, w, 1.0, jax.random.PRNGKey(1), apply_activation=False)
+    )
+    z = np.asarray(xnor_popcount_ref(i, w))
+    # Noise is zero-mean and unit-ish sigma.
+    resid = z_noisy - z
+    assert abs(resid.mean()) < 0.1
+    assert 0.8 < resid.std() < 1.2

@@ -1,0 +1,103 @@
+//! Ablation benches for the design choices DESIGN.md calls out (beyond
+//! the paper's own figures):
+//!
+//!   A1  memory-bandwidth sensitivity (is OXBNN_50 fabric- or IO-bound?)
+//!   A2  reduction-network latency sweep (how slow can the baseline's
+//!       psum path get before it dominates?)
+//!   A3  XPE-count scaling at fixed N (parallelism utilization)
+//!   A4  OXG process-variation Monte Carlo (single-MRR robustness +
+//!       thermal trimming budget)
+//!
+//! Run: `cargo bench --bench bench_ablations`
+
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::arch::perf::workload_perf;
+use oxbnn::devices::variation::{max_tolerated_offset_nm, monte_carlo};
+use oxbnn::util::bench::Table;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let vgg = &Workload::evaluation_set()[0];
+
+    // --- A1: memory bandwidth -------------------------------------------
+    println!("A1 — eDRAM/H-tree bandwidth sensitivity (vgg_small FPS):\n");
+    let mut t = Table::new(&["bandwidth", "OXBNN_5 FPS", "OXBNN_50 FPS", "LIGHTBULB FPS"]);
+    for bw_tbps in [0.5, 1.0, 2.0, 8.0, 32.0, 1e6] {
+        let fps = |mut cfg: AcceleratorConfig| {
+            cfg.mem_bw_bits_per_s = bw_tbps * 1e12;
+            workload_perf(&cfg, vgg).fps
+        };
+        t.row(&[
+            if bw_tbps >= 1e5 { "infinite".into() } else { format!("{} Tb/s", bw_tbps) },
+            format!("{:.0}", fps(AcceleratorConfig::oxbnn_5())),
+            format!("{:.0}", fps(AcceleratorConfig::oxbnn_50())),
+            format!("{:.0}", fps(oxbnn::baselines::lightbulb())),
+        ]);
+    }
+    t.print();
+    println!("OXBNN_50 saturates its fabric only once staging bandwidth is ample;\nOXBNN_5 is fabric-bound at every realistic bandwidth.\n");
+
+    // --- A2: reduction latency -------------------------------------------
+    println!("A2 — psum reduction latency sweep (ROBIN_PO on vgg_small):\n");
+    let mut t = Table::new(&["t_red", "FPS", "slowdown vs OXBNN_5"]);
+    let ox5 = workload_perf(&AcceleratorConfig::oxbnn_5(), vgg).fps;
+    for t_red_ns in [0.0, 0.78, 1.5625, 3.125, 6.25, 12.5] {
+        let mut cfg = oxbnn::baselines::robin_po();
+        cfg.bitcount = BitcountMode::Reduction { latency_s: t_red_ns * 1e-9, psum_bits: 16 };
+        let fps = workload_perf(&cfg, vgg).fps;
+        t.row(&[
+            format!("{} ns", t_red_ns),
+            format!("{:.0}", fps),
+            format!("{:.1}x", ox5 / fps),
+        ]);
+    }
+    t.print();
+    println!("Even a free reduction network leaves ROBIN behind (psum buffer\ntraffic + 2-MRR gates); Table III's 3.125 ns costs it the rest.\n");
+
+    // --- A3: XPE scaling ---------------------------------------------------
+    println!("A3 — XPE-count scaling, OXBNN N=19 @50 GS/s (resnet18 FPS):\n");
+    let resnet = &Workload::evaluation_set()[1];
+    let mut t = Table::new(&["XPEs", "FPS", "FPS/W", "parallel efficiency"]);
+    let base_fps = {
+        let mut cfg = AcceleratorConfig::oxbnn_50();
+        cfg.xpe_total = 64;
+        workload_perf(&cfg, resnet).fps
+    };
+    for xpes in [64usize, 128, 256, 512, 1123, 2246, 4492] {
+        let mut cfg = AcceleratorConfig::oxbnn_50();
+        cfg.xpe_total = xpes;
+        let p = workload_perf(&cfg, resnet);
+        let ideal = base_fps * xpes as f64 / 64.0;
+        t.row(&[
+            format!("{}", xpes),
+            format!("{:.0}", p.fps),
+            format!("{:.1}", p.fps_per_w),
+            format!("{:.0}%", 100.0 * p.fps / ideal),
+        ]);
+    }
+    t.print();
+    println!("Scaling efficiency collapses once staging bandwidth, not the\nfabric, bounds each layer — matching the paper's choice to report\narea-normalized rather than max-area designs.\n");
+
+    // --- A4: process variation --------------------------------------------
+    println!("A4 — OXG under fabrication variation (1000-gate Monte Carlo):\n");
+    let mut t = Table::new(&[
+        "sigma (nm)",
+        "failing gates (untrimmed)",
+        "worst eye",
+        "mean trim power (mW/gate)",
+    ]);
+    for sigma in [0.0, 0.05, 0.1, 0.2, 0.4] {
+        let r = monte_carlo(sigma, 1000, 0xFAB);
+        t.row(&[
+            format!("{}", sigma),
+            format!("{:.1}%", r.failing_fraction * 100.0),
+            format!("{:.2}", r.worst_eye),
+            format!("{:.2}", r.mean_trim_power_mw),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nuntrimmed tolerance: ±{:.2} nm (vs FWHM 0.35 nm); thermal trimming\nrecovers all gates at ~2 mW/gate — the robustness budget ROBIN's\nheterogeneous-MRR argument is about, quantified for the single-MRR OXG.",
+        max_tolerated_offset_nm()
+    );
+}

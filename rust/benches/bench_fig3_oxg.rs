@@ -1,0 +1,63 @@
+//! Regenerates paper Fig. 3: OXG spectral/transient behaviour and the
+//! device's data-rate limit, plus benchmarks the device-model throughput.
+//!
+//! Run: `cargo bench --bench bench_fig3_oxg`
+
+use oxbnn::devices::oxg::{Oxg, OXG_MAX_DR_GSPS};
+use oxbnn::util::bench::{Bencher, Table};
+use oxbnn::util::rng::Rng;
+
+fn main() {
+    let gate = Oxg::new(1550.0);
+
+    // Fig. 3(b): static levels.
+    println!("Fig. 3(b) — through-port transmission per operand pair:\n");
+    let mut t = Table::new(&["(i,w)", "T(λ_in)", "logic"]);
+    for (i, w) in [(false, false), (false, true), (true, false), (true, true)] {
+        t.row(&[
+            format!("({},{})", i as u8, w as u8),
+            format!("{:.3}", gate.transmission(i, w)),
+            format!("{}", gate.xnor(i, w) as u8),
+        ]);
+    }
+    t.print();
+    println!("static eye: {:.3}\n", gate.static_eye());
+
+    // Fig. 3(c) + DR sweep: error-free decode across rates.
+    println!("Data-rate sweep (256-bit PRBS, device τ = 3 ps):\n");
+    let mut sweep = Table::new(&["DR (GS/s)", "bit errors", "status"]);
+    let mut rng = Rng::new(0xF16);
+    let bits_i: Vec<bool> = (0..256).map(|_| rng.bool()).collect();
+    let bits_w: Vec<bool> = (0..256).map(|_| rng.bool()).collect();
+    let want: Vec<bool> = bits_i.iter().zip(&bits_w).map(|(a, b)| a == b).collect();
+    for dr in [3.0, 5.0, 10.0, 20.0, 30.0, 40.0, 50.0, 64.0, 80.0, 100.0] {
+        let trace = gate.transient(&bits_i, &bits_w, dr, 8, 3.0);
+        let got = gate.decode_trace(&trace, 8);
+        let errors = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+        sweep.row(&[
+            format!("{}", dr),
+            format!("{}", errors),
+            if errors == 0 { "error-free".into() } else { "eye closed".to_string() },
+        ]);
+    }
+    sweep.print();
+    let max = gate.max_error_free_dr(3.0, 0xF16);
+    println!(
+        "\nmax error-free DR = {} GS/s (paper claims {} GS/s)",
+        max, OXG_MAX_DR_GSPS
+    );
+    assert!(max >= OXG_MAX_DR_GSPS, "device model regressed below paper's 50 GS/s");
+
+    // Device-model throughput (transient samples/s).
+    let bencher = Bencher::from_env();
+    let stats = bencher.run("oxg_transient_256b", || {
+        gate.transient(&bits_i, &bits_w, 50.0, 8, 3.0)
+    });
+    let samples = 256 * 8;
+    println!(
+        "\ntransient model: {} samples in median {} → {:.1} M samples/s",
+        samples,
+        oxbnn::util::bench::fmt_secs(stats.median),
+        samples as f64 / stats.median / 1e6
+    );
+}

@@ -1,0 +1,90 @@
+//! Regenerates paper Fig. 7(a): FPS of OXBNN_5 / OXBNN_50 vs ROBIN_EO /
+//! ROBIN_PO / LIGHTBULB across the four BNNs, plus the gmean speedup rows
+//! the paper quotes (62×/8×/7× and 54×/7×/16×).
+//!
+//! Run: `cargo bench --bench bench_fig7_fps`
+
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::util::bench::{Bencher, Table};
+use oxbnn::util::threadpool::parallel_map;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let accels = AcceleratorConfig::evaluation_set();
+    let workloads = Workload::evaluation_set();
+
+    // Time the sweep itself (the simulator is a deliverable; its speed is
+    // what lets us run ablations — see EXPERIMENTS.md §Perf).
+    let bencher = Bencher::from_env();
+    let stats = bencher.run("fig7_full_sweep", || {
+        let jobs: Vec<(AcceleratorConfig, Workload)> = accels
+            .iter()
+            .flat_map(|a| workloads.iter().map(move |w| (a.clone(), w.clone())))
+            .collect();
+        parallel_map(jobs, 8, |(a, w)| workload_perf(&a, &w).fps)
+    });
+    println!(
+        "sweep time (20 accelerator x workload sims): median {} (n={})\n",
+        oxbnn::util::bench::fmt_secs(stats.median),
+        stats.iters
+    );
+
+    // The figure itself.
+    let mut fps: Vec<Vec<f64>> = Vec::new();
+    let mut table = Table::new(&[
+        "accelerator",
+        "vgg_small",
+        "resnet18",
+        "mobilenet_v2",
+        "shufflenet_v2",
+        "gmean",
+    ]);
+    for a in &accels {
+        let row: Vec<f64> = workloads.iter().map(|w| workload_perf(a, w).fps).collect();
+        table.row(&[
+            a.name.clone(),
+            format!("{:.0}", row[0]),
+            format!("{:.0}", row[1]),
+            format!("{:.0}", row[2]),
+            format!("{:.0}", row[3]),
+            format!("{:.0}", gmean(&row)),
+        ]);
+        fps.push(row);
+    }
+    println!("Fig. 7(a) — FPS (log scale in the paper)\n");
+    table.print();
+
+    // Gmean speedups vs each baseline (paper's quoted ratios).
+    let names = ["OXBNN_5", "OXBNN_50", "ROBIN_EO", "ROBIN_PO", "LIGHTBULB"];
+    let idx = |n: &str| names.iter().position(|x| *x == n).unwrap();
+    let ratio = |a: &str, b: &str| {
+        let ra = &fps[idx(a)];
+        let rb = &fps[idx(b)];
+        gmean(&ra.iter().zip(rb).map(|(x, y)| x / y).collect::<Vec<_>>())
+    };
+    let mut cmp = Table::new(&["comparison", "measured gmean", "paper gmean"]);
+    for (a, b, paper) in [
+        ("OXBNN_50", "ROBIN_EO", "62x"),
+        ("OXBNN_50", "ROBIN_PO", "8x"),
+        ("OXBNN_50", "LIGHTBULB", "7x"),
+        ("OXBNN_5", "ROBIN_EO", "54x"),
+        ("OXBNN_5", "ROBIN_PO", "7x"),
+        ("OXBNN_5", "LIGHTBULB", "16x"),
+    ] {
+        cmp.row(&[
+            format!("{} / {}", a, b),
+            format!("{:.1}x", ratio(a, b)),
+            paper.to_string(),
+        ]);
+    }
+    println!("\nGmean FPS speedups vs paper (shape target: OXBNN wins everywhere):\n");
+    cmp.print();
+
+    // Shape assertions (the bench fails loudly if the story breaks).
+    for base in ["ROBIN_EO", "ROBIN_PO", "LIGHTBULB"] {
+        assert!(ratio("OXBNN_50", base) > 1.0, "OXBNN_50 must beat {}", base);
+        assert!(ratio("OXBNN_5", base) > 1.0, "OXBNN_5 must beat {}", base);
+    }
+    println!("\nshape check OK: both OXBNN variants beat all baselines on FPS");
+}

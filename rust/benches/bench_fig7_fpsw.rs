@@ -1,0 +1,95 @@
+//! Regenerates paper Fig. 7(b): FPS/W (energy efficiency) of the five
+//! accelerators across the four BNNs, with the paper's quoted gmean
+//! ratios (6.8×/7.6×/2.14× for OXBNN_5; 4.9×/5.5×/1.5× for OXBNN_50) and
+//! a power breakdown explaining where the energy goes.
+//!
+//! Run: `cargo bench --bench bench_fig7_fpsw`
+
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::util::bench::Table;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let accels = AcceleratorConfig::evaluation_set();
+    let workloads = Workload::evaluation_set();
+
+    let mut fpsw: Vec<Vec<f64>> = Vec::new();
+    let mut table = Table::new(&[
+        "accelerator",
+        "vgg_small",
+        "resnet18",
+        "mobilenet_v2",
+        "shufflenet_v2",
+        "gmean",
+    ]);
+    for a in &accels {
+        let row: Vec<f64> = workloads
+            .iter()
+            .map(|w| workload_perf(a, w).fps_per_w)
+            .collect();
+        table.row(&[
+            a.name.clone(),
+            format!("{:.1}", row[0]),
+            format!("{:.1}", row[1]),
+            format!("{:.1}", row[2]),
+            format!("{:.1}", row[3]),
+            format!("{:.1}", gmean(&row)),
+        ]);
+        fpsw.push(row);
+    }
+    println!("Fig. 7(b) — FPS/W\n");
+    table.print();
+
+    // Power/energy breakdown on VGG-small (context for the ratios).
+    let mut pw = Table::new(&[
+        "accelerator",
+        "static W",
+        "dyn J/frame",
+        "avg W",
+        "frame",
+    ]);
+    for a in &accels {
+        let p = workload_perf(a, &workloads[0]);
+        pw.row(&[
+            a.name.clone(),
+            format!("{:.2}", p.static_power_w),
+            format!("{:.3e}", p.dynamic_energy_per_frame_j),
+            format!("{:.2}", p.avg_power_w),
+            oxbnn::util::bench::fmt_secs(p.frame_latency_s),
+        ]);
+    }
+    println!("\nPower breakdown on vgg_small:\n");
+    pw.print();
+
+    let names = ["OXBNN_5", "OXBNN_50", "ROBIN_EO", "ROBIN_PO", "LIGHTBULB"];
+    let idx = |n: &str| names.iter().position(|x| *x == n).unwrap();
+    let ratio = |a: &str, b: &str| {
+        let ra = &fpsw[idx(a)];
+        let rb = &fpsw[idx(b)];
+        gmean(&ra.iter().zip(rb).map(|(x, y)| x / y).collect::<Vec<_>>())
+    };
+    let mut cmp = Table::new(&["comparison", "measured gmean", "paper gmean"]);
+    for (a, b, paper) in [
+        ("OXBNN_5", "ROBIN_EO", "6.8x"),
+        ("OXBNN_5", "ROBIN_PO", "7.6x"),
+        ("OXBNN_5", "LIGHTBULB", "2.14x"),
+        ("OXBNN_50", "ROBIN_EO", "4.9x"),
+        ("OXBNN_50", "ROBIN_PO", "5.5x"),
+        ("OXBNN_50", "LIGHTBULB", "1.5x"),
+    ] {
+        cmp.row(&[
+            format!("{} / {}", a, b),
+            format!("{:.1}x", ratio(a, b)),
+            paper.to_string(),
+        ]);
+    }
+    println!("\nGmean FPS/W ratios vs paper (shape target: OXBNN wins everywhere):\n");
+    cmp.print();
+
+    for base in ["ROBIN_EO", "ROBIN_PO", "LIGHTBULB"] {
+        assert!(ratio("OXBNN_5", base) > 1.0, "OXBNN_5 must beat {}", base);
+        assert!(ratio("OXBNN_50", base) > 1.0, "OXBNN_50 must beat {}", base);
+    }
+    println!("\nshape check OK: both OXBNN variants beat all baselines on FPS/W");
+}

@@ -1,0 +1,151 @@
+//! L3 hot-path benchmark: PJRT execute throughput on the AOT artifacts and
+//! end-to-end serving throughput through the coordinator (router + batcher
+//! + worker). This is the target of the EXPERIMENTS.md §Perf pass.
+//!
+//! Run: `cargo bench --bench bench_runtime_hotpath` (needs `make artifacts`)
+
+use std::time::{Duration, Instant};
+
+use oxbnn::coordinator::{InferenceRequest, Server, ServerConfig};
+use oxbnn::runtime::{HostTensor, Manifest, Runtime};
+use oxbnn::util::bench::{Bencher, Table};
+use oxbnn::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let bencher = Bencher::from_env();
+    let mut table = Table::new(&["path", "median", "throughput"]);
+
+    // --- raw PJRT execute: GEMM kernel -----------------------------------
+    let rt = Runtime::cpu().expect("PJRT");
+    let art = manifest.get("xnor_gemm_bench").expect("artifact");
+    let exe = rt.load_artifact(art).expect("compile");
+    let (h, s) = (art.args[0].shape[0], art.args[0].shape[1]);
+    let k = art.args[1].shape[1];
+    let mut rng = Rng::new(9);
+    let a = HostTensor::new(vec![h, s], rng.bits(h * s)).unwrap();
+    let b = HostTensor::new(vec![s, k], rng.bits(s * k)).unwrap();
+    let stats = bencher.run("pjrt_xnor_gemm", || exe.run(&[a.clone(), b.clone()]).unwrap());
+    let bitops = (h * s * k) as f64;
+    table.row(&[
+        format!("PJRT xnor_gemm {}x{}x{}", h, s, k),
+        oxbnn::util::bench::fmt_secs(stats.median),
+        format!("{:.2} Gbitop/s", bitops / stats.median / 1e9),
+    ]);
+
+    // --- raw PJRT execute: tiny BNN forward -------------------------------
+    let art = manifest.get("bnn_tiny").expect("artifact");
+    let exe = rt.load_artifact(art).expect("compile");
+    let weights: Vec<HostTensor> = oxbnn::coordinator::synthetic_weights(art, 1)
+        .into_iter()
+        .zip(&art.args[1..])
+        .map(|(bits, spec)| HostTensor::new(spec.shape.clone(), bits).unwrap())
+        .collect();
+    let x = HostTensor::new(art.args[0].shape.clone(), rng.bits(art.args[0].element_count()))
+        .unwrap();
+    let stats = bencher.run("pjrt_bnn_tiny", || {
+        let mut args = vec![x.clone()];
+        args.extend(weights.iter().cloned());
+        exe.run(&args).unwrap()
+    });
+    table.row(&[
+        "PJRT bnn_tiny forward".into(),
+        oxbnn::util::bench::fmt_secs(stats.median),
+        format!("{:.1} frames/s", 1.0 / stats.median),
+    ]);
+
+    // --- serving path: coordinator end-to-end ----------------------------
+    let mut cfg = ServerConfig::new(&dir, &["tiny"]);
+    cfg.max_batch = 16;
+    cfg.max_wait = Duration::from_micros(200);
+    let server = Server::start(cfg).expect("server");
+    let input_len = server.input_len("tiny").unwrap();
+    // Closed-loop single client.
+    let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32).collect();
+    let stats = bencher.run("serve_closed_loop", || {
+        server
+            .infer_blocking(InferenceRequest { model: "tiny".into(), input: input.clone() })
+            .unwrap()
+    });
+    table.row(&[
+        "serve closed-loop (1 client)".into(),
+        oxbnn::util::bench::fmt_secs(stats.median),
+        format!("{:.1} req/s", 1.0 / stats.median),
+    ]);
+
+    // Open-loop burst: submit N then collect (exercises batching).
+    let n = 64;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            server
+                .submit(InferenceRequest { model: "tiny".into(), input: input.clone() })
+                .unwrap()
+                .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let burst = t0.elapsed().as_secs_f64();
+    table.row(&[
+        format!("serve burst ({} queued)", n),
+        oxbnn::util::bench::fmt_secs(burst),
+        format!("{:.1} req/s", n as f64 / burst),
+    ]);
+    let m = server.metrics.lock().unwrap();
+    let batch_line = format!(
+        "batching during burst: mean batch size {:.2} over {} batches",
+        m.mean_batch_size(),
+        m.batches
+    );
+    drop(m);
+    server.shutdown();
+
+    // --- replica scale-out: same burst across 4 worker replicas ----------
+    let mut cfg = ServerConfig::new(&dir, &["tiny"]);
+    cfg.max_batch = 16;
+    cfg.replicas = 4;
+    let server = Server::start(cfg).expect("server");
+    // Warm all replicas (absorb the one-time artifact compiles) before
+    // timing the burst.
+    let warm: Vec<_> = (0..8)
+        .map(|_| {
+            server
+                .submit(InferenceRequest { model: "tiny".into(), input: input.clone() })
+                .unwrap()
+                .1
+        })
+        .collect();
+    for rx in warm {
+        rx.recv().unwrap().unwrap();
+    }
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            server
+                .submit(InferenceRequest { model: "tiny".into(), input: input.clone() })
+                .unwrap()
+                .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let burst4 = t0.elapsed().as_secs_f64();
+    table.row(&[
+        format!("serve burst ({} queued, 4 replicas)", n),
+        oxbnn::util::bench::fmt_secs(burst4),
+        format!("{:.1} req/s", n as f64 / burst4),
+    ]);
+    server.shutdown();
+
+    println!("L3 hot path\n");
+    table.print();
+    println!("\n{}", batch_line);
+}

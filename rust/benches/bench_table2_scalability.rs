@@ -1,0 +1,82 @@
+//! Regenerates paper Table II and benchmarks the scalability solver
+//! (Eqs. 3–5) itself, plus an ablation: how FPS scales with the data rate
+//! when N and γ follow the Table II trade-off (the "which DR should I
+//! build?" question the table answers).
+//!
+//! Run: `cargo bench --bench bench_table2_scalability`
+
+use oxbnn::analysis::pca_capacity::{gamma_calibrated, PAPER_TABLE2};
+use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::arch::perf::workload_perf;
+use oxbnn::util::bench::{Bencher, Table};
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let solver = ScalabilitySolver::default();
+
+    // Solver throughput.
+    let bencher = Bencher::from_env();
+    let stats = bencher.run("table2_solve_all_rows", || solver.table2());
+    println!(
+        "solver: 7-row Table II in median {} (n={})\n",
+        oxbnn::util::bench::fmt_secs(stats.median),
+        stats.iters
+    );
+
+    // The table, measured vs paper.
+    let mut t = Table::new(&[
+        "DR", "P_PD-opt", "paper", "N", "paper", "gamma", "alpha", "paper",
+    ]);
+    let mut n_exact = 0;
+    for (row, &(_, p_paper, n_paper, _, a_paper)) in
+        solver.table2().iter().zip(PAPER_TABLE2.iter())
+    {
+        if row.n == n_paper {
+            n_exact += 1;
+        }
+        t.row(&[
+            format!("{}", row.dr_gsps),
+            format!("{:.2}", row.p_pd_opt_dbm),
+            format!("{:.2}", p_paper),
+            format!("{}", row.n),
+            format!("{}", n_paper),
+            format!("{}", row.gamma),
+            format!("{}", row.alpha),
+            format!("{}", a_paper),
+        ]);
+    }
+    println!("Table II — measured vs paper (N exact on {} of 7 rows)\n", n_exact);
+    t.print();
+    assert!(n_exact >= 6, "Table II N reproduction regressed: {}/7", n_exact);
+
+    // Ablation: DR sweep at iso-area (XPE count scaled inversely with N
+    // so total OXGs stay ~constant, like the paper's area normalization).
+    println!("\nAblation — OXBNN FPS vs data rate at iso-area (vgg_small):\n");
+    let total_gates = 53 * 100; // OXBNN_5's gate budget
+    let wl = &Workload::evaluation_set()[0];
+    let mut ab = Table::new(&["DR (GS/s)", "N", "XPEs", "alpha", "FPS", "FPS/W"]);
+    for row in solver.table2() {
+        let xpes = (total_gates / row.n).max(1);
+        let cfg = AcceleratorConfig {
+            name: format!("OXBNN_{}", row.dr_gsps),
+            dr_gsps: row.dr_gsps,
+            n: row.n,
+            xpe_total: xpes,
+            bitcount: BitcountMode::Pca { gamma: gamma_calibrated(row.dr_gsps) },
+            ..AcceleratorConfig::oxbnn_5()
+        };
+        let perf = workload_perf(&cfg, wl);
+        ab.row(&[
+            format!("{}", row.dr_gsps),
+            format!("{}", row.n),
+            format!("{}", xpes),
+            format!("{}", row.alpha),
+            format!("{:.0}", perf.fps),
+            format!("{:.1}", perf.fps_per_w),
+        ]);
+    }
+    ab.print();
+    println!("\nhigher DR buys FPS at iso-area (fewer, faster gates) — the paper's");
+    println!("motivation for characterizing the whole DR range in Table II.");
+}

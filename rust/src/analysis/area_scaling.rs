@@ -1,0 +1,160 @@
+//! Area-proportionate accelerator scaling analysis (paper Section V-B).
+//!
+//! "For fair comparison, we perform area proportionate analysis, wherein
+//! we altered the XPE count for each photonic BNN accelerator ... to match
+//! with the area of OXBNN_5 having 100 XPEs. Accordingly, the scaled XPE
+//! counts of OXBNN_50 (N=19), ROBIN_PO (N=50), ROBIN_EO (N=10), and
+//! LIGHTBULB (N=16) are 1123, 183, 916, and 1139, respectively."
+//!
+//! This module checks what model of area those published counts imply.
+//! Findings (pinned by the tests below):
+//!
+//! * **ROBIN_EO vs ROBIN_PO are exactly gate-linear**: 916·10 ≈ 183·50
+//!   (9160 vs 9150 gates) — the paper scaled ROBIN by resonator count.
+//! * **LIGHTBULB matches ROBIN's resonator population**: 1139·16 = 18224
+//!   microdisk-gates vs ROBIN's 9160 two-MRR gates = 18320 resonators —
+//!   consistent if a LIGHTBULB gate occupies one microdisk-equivalent.
+//! * **OXBNN_50 sits near the same resonator population**: 1123·19 =
+//!   21337 single-MRR gates (+16% of 18320).
+//! * **The OXBNN_5 anchor is the outlier**: 100·53 = 5300 resonators —
+//!   3.5–4× fewer than every other design at the *same* claimed area.
+//!   Under any resonator-dominated area model the paper *under-provisions
+//!   its own anchor*, which makes OXBNN_5's reported wins conservative
+//!   rather than inflated. We therefore keep the published counts in the
+//!   evaluation configs (exact reproduction) and expose
+//!   [`resonator_population`] so benches can report both views.
+
+/// Resonators (ring/disk count) implied by a (gates/bit, N, XPEs) design.
+pub fn resonator_population(resonators_per_gate: f64, n: usize, xpes: usize) -> f64 {
+    resonators_per_gate * (n * xpes) as f64
+}
+
+/// Published Section V-B counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaledCounts {
+    pub oxbnn_5: usize,
+    pub oxbnn_50: usize,
+    pub robin_po: usize,
+    pub robin_eo: usize,
+    pub lightbulb: usize,
+}
+
+pub const PAPER_COUNTS: ScaledCounts = ScaledCounts {
+    oxbnn_5: 100,
+    oxbnn_50: 1123,
+    robin_po: 183,
+    robin_eo: 916,
+    lightbulb: 1139,
+};
+
+/// Resonator populations of the five published configurations.
+/// (OXBNN: 1 MRR/gate; ROBIN: 2 MRRs/gate; LIGHTBULB: 1 microdisk-pair
+/// footprint treated as one resonator-equivalent per gate.)
+pub fn paper_populations() -> [(&'static str, f64); 5] {
+    [
+        ("OXBNN_5", resonator_population(1.0, 53, PAPER_COUNTS.oxbnn_5)),
+        ("OXBNN_50", resonator_population(1.0, 19, PAPER_COUNTS.oxbnn_50)),
+        ("ROBIN_EO", resonator_population(2.0, 10, PAPER_COUNTS.robin_eo)),
+        ("ROBIN_PO", resonator_population(2.0, 50, PAPER_COUNTS.robin_po)),
+        ("LIGHTBULB", resonator_population(1.0, 16, PAPER_COUNTS.lightbulb)),
+    ]
+}
+
+/// XPE count for a design (gates/bit g, XPE size n) that matches a target
+/// resonator population — the scaling rule the non-anchor counts follow.
+pub fn xpes_for_population(resonators_per_gate: f64, n: usize, target: f64) -> usize {
+    (target / (resonators_per_gate * n as f64)).round() as usize
+}
+
+/// Re-derive the non-anchor counts from ROBIN_EO's population (the
+/// cleanest published pair), reproducing the paper's numbers within 17%.
+pub fn derive_from_resonator_parity() -> ScaledCounts {
+    let target = resonator_population(2.0, 10, PAPER_COUNTS.robin_eo);
+    ScaledCounts {
+        oxbnn_5: PAPER_COUNTS.oxbnn_5, // the anchor is taken as published
+        oxbnn_50: xpes_for_population(1.0, 19, target),
+        robin_po: xpes_for_population(2.0, 50, target),
+        robin_eo: PAPER_COUNTS.robin_eo,
+        lightbulb: xpes_for_population(1.0, 16, target),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn robin_variants_are_gate_linear() {
+        let eo = 10 * PAPER_COUNTS.robin_eo;
+        let po = 50 * PAPER_COUNTS.robin_po;
+        let rel = (eo as f64 - po as f64).abs() / po as f64;
+        assert!(rel < 0.002, "EO {} vs PO {} gates", eo, po);
+    }
+
+    #[test]
+    fn non_anchor_designs_share_resonator_population() {
+        let pops = paper_populations();
+        let robin_eo = pops[2].1;
+        for (name, pop) in &pops[1..] {
+            let rel = (pop - robin_eo).abs() / robin_eo;
+            assert!(
+                rel < 0.17,
+                "{}: population {} vs ROBIN_EO {} ({:.0}% off)",
+                name,
+                pop,
+                robin_eo,
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn anchor_is_underprovisioned() {
+        // OXBNN_5 has 3.5-4x fewer resonators than the designs it is
+        // compared against — its published wins are conservative.
+        let pops = paper_populations();
+        let anchor = pops[0].1;
+        for (name, pop) in &pops[1..] {
+            assert!(
+                pop / anchor > 3.0,
+                "{}: {} vs anchor {}",
+                name,
+                pop,
+                anchor
+            );
+        }
+    }
+
+    #[test]
+    fn parity_derivation_close_to_paper() {
+        let got = derive_from_resonator_parity();
+        let pairs = [
+            (got.oxbnn_50, PAPER_COUNTS.oxbnn_50, "OXBNN_50"),
+            (got.robin_po, PAPER_COUNTS.robin_po, "ROBIN_PO"),
+            (got.lightbulb, PAPER_COUNTS.lightbulb, "LIGHTBULB"),
+        ];
+        for (got, paper, name) in pairs {
+            let rel = (got as f64 - paper as f64).abs() / paper as f64;
+            assert!(
+                rel < 0.17,
+                "{}: derived {} vs paper {} ({:.0}% off)",
+                name,
+                got,
+                paper,
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn evaluation_set_uses_paper_counts() {
+        use crate::arch::accelerator::AcceleratorConfig;
+        let set = AcceleratorConfig::evaluation_set();
+        let by_name = |n: &str| set.iter().find(|a| a.name == n).unwrap().xpe_total;
+        assert_eq!(by_name("OXBNN_5"), PAPER_COUNTS.oxbnn_5);
+        assert_eq!(by_name("OXBNN_50"), PAPER_COUNTS.oxbnn_50);
+        assert_eq!(by_name("ROBIN_PO"), PAPER_COUNTS.robin_po);
+        assert_eq!(by_name("ROBIN_EO"), PAPER_COUNTS.robin_eo);
+        assert_eq!(by_name("LIGHTBULB"), PAPER_COUNTS.lightbulb);
+    }
+}

@@ -1,0 +1,9 @@
+//! Scalability and capacity analysis (paper Section IV → Table II).
+
+pub mod area_scaling;
+pub mod pca_capacity;
+pub mod pca_resolution;
+pub mod scalability;
+
+pub use pca_capacity::{alpha, gamma_calibrated, PAPER_TABLE2};
+pub use scalability::{ScalabilitySolver, Table2Row};

@@ -1,0 +1,135 @@
+//! PCA accumulation-capacity analysis (γ and α of paper Table II).
+//!
+//! The paper derived γ (max accumulable '1's within the TIR's 5 V dynamic
+//! range) by extracting photodetector current pulses from Lumerical
+//! INTERCONNECT and integrating them in a MultiSim TIR model. We provide
+//! two sources:
+//!
+//! * **Calibrated**: the paper's own Table II γ values per data rate —
+//!   treated as the MultiSim-extracted calibration (DESIGN.md substitution
+//!   table). The system simulator uses these so α = γ/N matches the paper
+//!   exactly.
+//! * **Analytic**: first-principles charge model δV = gain·i·δt/C from
+//!   [`crate::devices::pca::PcaParams`] — used for the ablation bench and
+//!   to sanity-check the calibrated values' order of magnitude.
+
+use crate::devices::pca::PcaParams;
+use crate::devices::photodetector::Photodetector;
+use crate::util::units::{dbm_to_watt, gsps_period_s};
+
+/// Paper Table II: (DR GS/s, P_PD-opt dBm, N, γ, α).
+pub const PAPER_TABLE2: [(f64, f64, usize, u64, u64); 7] = [
+    (3.0, -24.69, 66, 39_682, 601),
+    (5.0, -23.49, 53, 29_761, 561),
+    (10.0, -21.9, 39, 19_841, 508),
+    (20.0, -20.5, 29, 14_880, 513),
+    (30.0, -19.5, 24, 10_822, 450),
+    (40.0, -18.9, 21, 9_920, 472),
+    (50.0, -18.5, 19, 8_503, 447),
+];
+
+/// Calibrated γ for a data rate: looks up the paper's MultiSim-derived
+/// value, linearly interpolating between characterized rates (and clamping
+/// outside the characterized range).
+pub fn gamma_calibrated(dr_gsps: f64) -> u64 {
+    let table = &PAPER_TABLE2;
+    if dr_gsps <= table[0].0 {
+        return table[0].3;
+    }
+    if dr_gsps >= table[table.len() - 1].0 {
+        return table[table.len() - 1].3;
+    }
+    for w in table.windows(2) {
+        let (d0, _, _, g0, _) = w[0];
+        let (d1, _, _, g1, _) = w[1];
+        if dr_gsps >= d0 && dr_gsps <= d1 {
+            let f = (dr_gsps - d0) / (d1 - d0);
+            return (g0 as f64 + f * (g1 as f64 - g0 as f64)).round() as u64;
+        }
+    }
+    unreachable!("interpolation table covers the range");
+}
+
+/// Analytic γ from the charge model, given the PD-received optical power.
+pub fn gamma_analytic(
+    params: &PcaParams,
+    pd: &Photodetector,
+    p_recv_dbm: f64,
+    dr_gsps: f64,
+) -> u64 {
+    let current = pd.current_a(dbm_to_watt(p_recv_dbm));
+    params.gamma_analytic(current, gsps_period_s(dr_gsps))
+}
+
+/// α = γ / N: how many N-bit XNOR vector slices the PCA absorbs before
+/// saturating (paper Section III-B2).
+pub fn alpha(gamma: u64, n: usize) -> u64 {
+    assert!(n > 0);
+    gamma / n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_matches_paper_rows() {
+        for (dr, _, _, gamma, _) in PAPER_TABLE2 {
+            assert_eq!(gamma_calibrated(dr), gamma, "DR = {}", dr);
+        }
+    }
+
+    #[test]
+    fn calibrated_interpolates_and_clamps() {
+        let mid = gamma_calibrated(7.5);
+        assert!(mid < gamma_calibrated(5.0) && mid > gamma_calibrated(10.0));
+        assert_eq!(gamma_calibrated(1.0), 39_682);
+        assert_eq!(gamma_calibrated(80.0), 8_503);
+    }
+
+    #[test]
+    fn alpha_matches_paper_rows() {
+        // α = floor(γ / N) reproduces the paper's α column exactly.
+        for (dr, _, n, gamma, want_alpha) in PAPER_TABLE2 {
+            assert_eq!(alpha(gamma, n), want_alpha, "DR = {}", dr);
+        }
+    }
+
+    #[test]
+    fn gamma_decreases_with_datarate() {
+        assert!(gamma_calibrated(3.0) > gamma_calibrated(50.0));
+        for w in PAPER_TABLE2.windows(2) {
+            assert!(w[0].3 > w[1].3);
+        }
+    }
+
+    #[test]
+    fn analytic_gamma_same_order_of_magnitude() {
+        // The analytic charge model should land within ~5x of the
+        // calibrated MultiSim-derived values (the paper's own extraction
+        // includes pulse-shape effects we don't re-simulate).
+        let params = PcaParams::default();
+        let pd = Photodetector::default();
+        for (dr, p_pd, _, gamma, _) in PAPER_TABLE2 {
+            // Received power = sensitivity less the network penalty that
+            // Eq. 5 budgets between PD and laser.
+            let g = gamma_analytic(&params, &pd, p_pd - 4.8, dr);
+            let ratio = g as f64 / gamma as f64;
+            assert!(
+                (0.05..20.0).contains(&ratio),
+                "DR {}: analytic {} vs calibrated {} (ratio {:.2})",
+                dr,
+                g,
+                gamma,
+                ratio
+            );
+        }
+    }
+
+    #[test]
+    fn paper_claim_gamma_covers_modern_cnns() {
+        // §IV-C: max XNOR vector size across modern CNNs is S = 4608,
+        // below γ = 8503 at DR = 50 GS/s → no psum reduction needed.
+        assert!(4608 < gamma_calibrated(50.0));
+    }
+}

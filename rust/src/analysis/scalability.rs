@@ -1,0 +1,143 @@
+//! XPC scalability analysis (paper Section IV-A → Table II).
+//!
+//! Chains the receiver-sensitivity solve (Eqs. 3–4, in
+//! [`crate::devices::photodetector`]) with the optical loss budget
+//! (Eq. 5, in [`crate::devices::laser`]) to produce, per data rate:
+//! the minimum PD power `P_PD-opt`, the feasible XPE size `N`, the PCA
+//! capacity `γ`, and the slice capacity `α = γ/N`.
+
+use crate::analysis::pca_capacity::{alpha, gamma_calibrated, PAPER_TABLE2};
+use crate::devices::laser::LossBudget;
+use crate::devices::photodetector::Photodetector;
+use crate::util::units::watt_to_dbm;
+
+/// Bit precision processed by the XPC; binarized vectors → B = 1.
+pub const BNN_BITS: f64 = 1.0;
+/// OOK average-vs-peak sensitivity margin (×2 in optical power). See
+/// `Photodetector::min_power_w`; calibrated against paper Table II.
+pub const OOK_MARGIN: f64 = 2.0;
+/// Paper spectral assumptions: FSR and inter-wavelength gap (nm).
+pub const FSR_NM: f64 = 50.0;
+pub const WAVELENGTH_GAP_NM: f64 = 0.7;
+
+/// One row of the scalability table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table2Row {
+    pub dr_gsps: f64,
+    pub p_pd_opt_dbm: f64,
+    pub n: usize,
+    pub gamma: u64,
+    pub alpha: u64,
+}
+
+/// Configuration for the solver (device + budget models).
+#[derive(Debug, Clone, Default)]
+pub struct ScalabilitySolver {
+    pub pd: Photodetector,
+    pub budget: LossBudget,
+}
+
+impl ScalabilitySolver {
+    /// Solve one data rate.
+    pub fn solve(&self, dr_gsps: f64) -> Table2Row {
+        let p_w = self.pd.min_power_w(BNN_BITS, dr_gsps * 1e9, OOK_MARGIN);
+        let p_dbm = watt_to_dbm(p_w);
+        let n = self.budget.max_n(p_dbm);
+        let n_spectral = self.max_n_spectral();
+        let n = n.min(n_spectral);
+        let gamma = gamma_calibrated(dr_gsps);
+        Table2Row {
+            dr_gsps,
+            p_pd_opt_dbm: p_dbm,
+            n,
+            gamma,
+            alpha: alpha(gamma, n.max(1)),
+        }
+    }
+
+    /// Spectral cap: all N wavelengths must fit in one FSR at the chosen
+    /// inter-wavelength gap (paper verifies N = 66 < 50 nm / 0.7 nm).
+    pub fn max_n_spectral(&self) -> usize {
+        (FSR_NM / WAVELENGTH_GAP_NM).floor() as usize
+    }
+
+    /// Regenerate the full Table II for the paper's data-rate sweep.
+    pub fn table2(&self) -> Vec<Table2Row> {
+        PAPER_TABLE2
+            .iter()
+            .map(|&(dr, ..)| self.solve(dr))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_reproduces_paper_n_within_one() {
+        // With our first-principles P_PD-opt solve, N matches the paper on
+        // 6 of 7 rows and is within ±1 on the remaining row (DR=10; the
+        // paper's own P value there is rounded to 3 significant digits).
+        let solver = ScalabilitySolver::default();
+        let mut exact = 0;
+        for (row, &(dr, _, n_paper, ..)) in
+            solver.table2().iter().zip(PAPER_TABLE2.iter())
+        {
+            assert_eq!(row.dr_gsps, dr);
+            assert!(
+                (row.n as i64 - n_paper as i64).abs() <= 1,
+                "DR {}: N = {} vs paper {}",
+                dr,
+                row.n,
+                n_paper
+            );
+            if row.n == n_paper {
+                exact += 1;
+            }
+        }
+        assert!(exact >= 6, "only {}/7 rows exact", exact);
+    }
+
+    #[test]
+    fn table2_p_pd_within_tolerance() {
+        let solver = ScalabilitySolver::default();
+        for (row, &(dr, p_paper, ..)) in
+            solver.table2().iter().zip(PAPER_TABLE2.iter())
+        {
+            assert!(
+                (row.p_pd_opt_dbm - p_paper).abs() < 0.15,
+                "DR {}: {:.2} dBm vs paper {} dBm",
+                dr,
+                row.p_pd_opt_dbm,
+                p_paper
+            );
+        }
+    }
+
+    #[test]
+    fn n_monotone_decreasing_in_dr() {
+        let solver = ScalabilitySolver::default();
+        let rows = solver.table2();
+        for w in rows.windows(2) {
+            assert!(w[0].n >= w[1].n);
+            assert!(w[0].p_pd_opt_dbm < w[1].p_pd_opt_dbm);
+        }
+    }
+
+    #[test]
+    fn spectral_cap_applies() {
+        let solver = ScalabilitySolver::default();
+        assert_eq!(solver.max_n_spectral(), 71);
+        // Paper: max N = 66 fits within the FSR.
+        assert!(solver.solve(3.0).n <= 71);
+    }
+
+    #[test]
+    fn alpha_consistent_with_gamma_and_n() {
+        let solver = ScalabilitySolver::default();
+        for row in solver.table2() {
+            assert_eq!(row.alpha, row.gamma / row.n as u64);
+        }
+    }
+}

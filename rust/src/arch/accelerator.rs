@@ -1,0 +1,220 @@
+//! Accelerator configuration: XPE/XPC/tile organization plus device and
+//! energy parameters. One `AcceleratorConfig` fully describes an
+//! accelerator instance (OXBNN variant or baseline) for both the analytic
+//! performance model and the event-driven simulator.
+//!
+//! System organization (paper Fig. 6): a mesh of tiles; each tile has 4
+//! XPCs sharing an output buffer and pooling units via an H-tree; an XPC
+//! has M = N XPEs fed by N DWDM wavelengths.
+
+use crate::devices::laser::LossBudget;
+use crate::energy::power::{EnergyModel, Peripherals};
+
+/// How the accelerator counts bits / combines psums.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BitcountMode {
+    /// OXBNN's Photo-Charge Accumulator: psums accumulate in the analog
+    /// domain, capacity γ '1's (paper Section III-B2).
+    Pca { gamma: u64 },
+    /// Prior-work bitcount: one psum per PASS, converted (ADC) and
+    /// combined by a psum reduction network (paper Section II-C).
+    Reduction {
+        /// Reduction-network latency per (pipelined) combine step.
+        latency_s: f64,
+        /// Bits per stored psum (storage + traffic width).
+        psum_bits: u32,
+    },
+}
+
+/// Full accelerator description.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    pub name: String,
+    /// OXG/bitcount data rate (GS/s); PASS latency τ = 1/DR.
+    pub dr_gsps: f64,
+    /// XPE size N (OXGs per XPE = wavelengths per XPC).
+    pub n: usize,
+    /// Total XPEs across the accelerator (area-proportionate scaling of
+    /// paper Section V-B).
+    pub xpe_total: usize,
+    pub bitcount: BitcountMode,
+    pub energy: EnergyModel,
+    pub peripherals: Peripherals,
+    pub loss_budget: LossBudget,
+    /// Shared operand/psum memory bandwidth (bits/s) between eDRAM and the
+    /// XPC arrays. Same value for every accelerator (fair comparison).
+    pub mem_bw_bits_per_s: f64,
+}
+
+/// Default shared memory bandwidth: 1 TB/s aggregate eDRAM + H-tree.
+pub const DEFAULT_MEM_BW: f64 = 8e12;
+
+impl AcceleratorConfig {
+    /// PASS latency τ (paper Section III-B: as low as 20 ps at 50 GS/s).
+    pub fn tau_s(&self) -> f64 {
+        1.0 / (self.dr_gsps * 1e9)
+    }
+
+    /// XPEs per XPC (paper assumes M = N).
+    pub fn m(&self) -> usize {
+        self.n
+    }
+
+    /// XPC count to host all XPEs.
+    pub fn xpc_count(&self) -> usize {
+        self.xpe_total.div_ceil(self.m())
+    }
+
+    /// Tiles (4 XPCs per tile, paper Fig. 6).
+    pub fn tile_count(&self) -> usize {
+        self.xpc_count().div_ceil(4)
+    }
+
+    /// Total resonators (MRRs / microdisks) across all XNOR gates.
+    pub fn resonator_count(&self) -> f64 {
+        self.xpe_total as f64 * self.n as f64 * self.energy.mrrs_per_gate
+    }
+
+    /// Laser diodes: N wavelengths per XPC.
+    pub fn laser_count(&self) -> usize {
+        self.xpc_count() * self.n
+    }
+
+    /// Static (time-independent) electrical power draw (W):
+    /// lasers (wall-plug), resonator thermal locking, and the Table III
+    /// peripherals (per-tile eDRAM/bus/router/activation/pooling, one IO
+    /// interface, reduction networks per XPC for baseline designs).
+    pub fn static_power_w(&self) -> f64 {
+        let p = &self.peripherals;
+        let lasers = self.laser_count() as f64 * self.loss_budget.laser_electrical_w();
+        let tuning = self.resonator_count() * self.energy.tuning_w_per_mrr;
+        let tiles = self.tile_count() as f64;
+        let per_tile = p.edram.power_w
+            + p.bus.power_w
+            + p.router.power_w
+            + p.activation_unit.power_w
+            + p.pooling_unit.power_w;
+        let reduction = match self.bitcount {
+            BitcountMode::Pca { .. } => 0.0,
+            BitcountMode::Reduction { .. } => {
+                self.xpc_count() as f64 * p.reduction_network.power_w
+            }
+        };
+        lasers + tuning + tiles * per_tile + p.io_interface.power_w + reduction
+    }
+
+    /// Photonic area estimate (mm²): OXG footprints + peripherals.
+    pub fn area_mm2(&self) -> f64 {
+        let p = &self.peripherals;
+        let gates = self.xpe_total as f64
+            * self.n as f64
+            * crate::devices::oxg::OXG_AREA_MM2
+            * self.energy.mrrs_per_gate;
+        let tiles = self.tile_count() as f64;
+        gates
+            + tiles
+                * (p.edram.area_mm2
+                    + p.bus.area_mm2
+                    + p.router.area_mm2
+                    + p.activation_unit.area_mm2
+                    + p.pooling_unit.area_mm2)
+            + p.io_interface.area_mm2
+            + self.xpc_count() as f64 * p.reduction_network.area_mm2
+    }
+
+    // -- Reference configurations (paper Section V-B) ----------------------
+
+    /// OXBNN_5: DR = 5 GS/s (matching ROBIN), N = 53, 100 XPEs — the
+    /// area-normalization anchor.
+    pub fn oxbnn_5() -> AcceleratorConfig {
+        AcceleratorConfig {
+            name: "OXBNN_5".into(),
+            dr_gsps: 5.0,
+            n: 53,
+            xpe_total: 100,
+            bitcount: BitcountMode::Pca {
+                gamma: crate::analysis::pca_capacity::gamma_calibrated(5.0),
+            },
+            energy: EnergyModel::oxbnn(),
+            peripherals: Peripherals::default(),
+            loss_budget: LossBudget::default(),
+            mem_bw_bits_per_s: DEFAULT_MEM_BW,
+        }
+    }
+
+    /// OXBNN_50: DR = 50 GS/s (matching LIGHTBULB), N = 19, 1123 XPEs.
+    pub fn oxbnn_50() -> AcceleratorConfig {
+        AcceleratorConfig {
+            name: "OXBNN_50".into(),
+            dr_gsps: 50.0,
+            n: 19,
+            xpe_total: 1123,
+            bitcount: BitcountMode::Pca {
+                gamma: crate::analysis::pca_capacity::gamma_calibrated(50.0),
+            },
+            energy: EnergyModel::oxbnn(),
+            peripherals: Peripherals::default(),
+            loss_budget: LossBudget::default(),
+            mem_bw_bits_per_s: DEFAULT_MEM_BW,
+        }
+    }
+
+    /// All five accelerators of the paper's evaluation, in figure order.
+    pub fn evaluation_set() -> Vec<AcceleratorConfig> {
+        vec![
+            AcceleratorConfig::oxbnn_5(),
+            AcceleratorConfig::oxbnn_50(),
+            crate::baselines::robin::robin_eo(),
+            crate::baselines::robin::robin_po(),
+            crate::baselines::lightbulb::lightbulb(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oxbnn_variants_match_paper_section5() {
+        let a = AcceleratorConfig::oxbnn_5();
+        assert_eq!((a.dr_gsps, a.n, a.xpe_total), (5.0, 53, 100));
+        let b = AcceleratorConfig::oxbnn_50();
+        assert_eq!((b.dr_gsps, b.n, b.xpe_total), (50.0, 19, 1123));
+        // N values come from Table II at the matching DR.
+        assert!(matches!(b.bitcount, BitcountMode::Pca { gamma: 8503 }));
+        assert!(matches!(a.bitcount, BitcountMode::Pca { gamma: 29761 }));
+    }
+
+    #[test]
+    fn tau_matches_paper() {
+        assert!((AcceleratorConfig::oxbnn_50().tau_s() - 20e-12).abs() < 1e-18);
+        assert!((AcceleratorConfig::oxbnn_5().tau_s() - 200e-12).abs() < 1e-18);
+    }
+
+    #[test]
+    fn organization_counts() {
+        let b = AcceleratorConfig::oxbnn_50();
+        assert_eq!(b.m(), 19);
+        assert_eq!(b.xpc_count(), 1123usize.div_ceil(19)); // 60
+        assert_eq!(b.tile_count(), 15);
+        assert_eq!(b.laser_count(), 60 * 19);
+        assert_eq!(b.resonator_count(), 1123.0 * 19.0);
+    }
+
+    #[test]
+    fn static_power_positive_and_laser_dominated() {
+        let b = AcceleratorConfig::oxbnn_50();
+        let p = b.static_power_w();
+        let lasers = b.laser_count() as f64 * b.loss_budget.laser_electrical_w();
+        assert!(p > lasers);
+        assert!(lasers / p > 0.5, "lasers {} of {}", lasers, p);
+    }
+
+    #[test]
+    fn area_scales_with_gates() {
+        let small = AcceleratorConfig::oxbnn_5();
+        let big = AcceleratorConfig::oxbnn_50();
+        assert!(big.area_mm2() > small.area_mm2());
+    }
+}

@@ -1,0 +1,379 @@
+//! Event-driven (transaction-level) simulation of one GEMM layer on an
+//! accelerator — the detailed counterpart of the closed-form model in
+//! [`super::perf`]. Every PASS, PCA readout, psum, reduction initiation
+//! and activation is an explicit event; PCA saturation/discharge dynamics
+//! come from the real [`crate::devices::pca::Pca`] state machine.
+//!
+//! Used for the Fig. 5 mapping comparison, PCA-dynamics studies (including
+//! forced mid-VDP readouts when γ is too small for the vector — paper
+//! Section III-B2: "once the TIR saturates, the ongoing accumulation phase
+//! ends"), and to validate the analytic model (exact transaction counts,
+//! close latency).
+//!
+//! Hot-loop structure (EXPERIMENTS.md §Perf L3-sim): XPE state lives in a
+//! flat `Vec` indexed by XPE id, and counters/energy accumulate in plain
+//! fields flushed once via `World::finalize` — no per-event string-keyed
+//! map traffic.
+
+use super::accelerator::{AcceleratorConfig, BitcountMode};
+use crate::devices::pca::{Pca, PcaParams};
+use crate::mapping::layer::GemmLayer;
+use crate::mapping::scheduler::{MappingPolicy, Schedule, ScheduledPass};
+use crate::sim::engine::{Scheduler, World};
+use crate::sim::event::{EventKind, XpeId};
+use crate::sim::stats::SimStats;
+
+/// Per-XPE run state.
+struct XpeState {
+    queue: Vec<ScheduledPass>,
+    next: usize,
+    pca: Option<Pca>,
+}
+
+/// One-layer event-driven world.
+pub struct LayerWorld {
+    cfg: AcceleratorConfig,
+    slices: usize,
+    m: usize,
+    /// Flat XPE states, indexed by xpc * m + xpe.
+    xpes: Vec<XpeState>,
+    /// Remaining slices per VDP (reduction-mode completion tracking).
+    vdp_remaining: Vec<usize>,
+    vdps_done: usize,
+    vdp_total: usize,
+    /// Per-XPC pending psum count and next-free time of its reduction net.
+    red_pending: Vec<usize>,
+    red_free_at: Vec<f64>,
+    /// Ones per slice bit (density of synthetic activations).
+    ones_density: f64,
+    // --- locally accumulated metrics (flushed in finalize) --------------
+    n_passes: u64,
+    n_pca_readouts: u64,
+    n_mid_vdp_readouts: u64,
+    n_saturations: u64,
+    n_discharge_stalls: u64,
+    n_psums: u64,
+    n_reduction_inits: u64,
+    n_reductions_done: u64,
+    n_activations: u64,
+    e_oxg: f64,
+    e_receiver: f64,
+    e_pca: f64,
+    e_adc_red: f64,
+}
+
+impl LayerWorld {
+    pub fn new(cfg: AcceleratorConfig, layer: GemmLayer, policy: MappingPolicy) -> LayerWorld {
+        let schedule = Schedule::plan(&layer, policy, cfg.n, cfg.m(), cfg.xpc_count());
+        let gamma = match cfg.bitcount {
+            BitcountMode::Pca { gamma } => gamma,
+            _ => 0,
+        };
+        let m = cfg.m();
+        let total = m * cfg.xpc_count();
+        let mut xpes: Vec<XpeState> = (0..total)
+            .map(|_| XpeState {
+                queue: Vec::new(),
+                next: 0,
+                pca: match cfg.bitcount {
+                    BitcountMode::Pca { .. } => Some(Pca::new(PcaParams::default(), gamma)),
+                    _ => None,
+                },
+            })
+            .collect();
+        for (id, queue) in schedule.iter_queues() {
+            xpes[id.xpc * m + id.xpe].queue = queue.clone();
+        }
+        let vdp_total = layer.vdp_count();
+        let slices = layer.slices(cfg.n);
+        let xpcs = cfg.xpc_count();
+        LayerWorld {
+            cfg,
+            slices,
+            m,
+            xpes,
+            vdp_remaining: vec![slices; vdp_total],
+            vdps_done: 0,
+            vdp_total,
+            red_pending: vec![0; xpcs],
+            red_free_at: vec![0.0; xpcs],
+            ones_density: 0.5,
+            n_passes: 0,
+            n_pca_readouts: 0,
+            n_mid_vdp_readouts: 0,
+            n_saturations: 0,
+            n_discharge_stalls: 0,
+            n_psums: 0,
+            n_reduction_inits: 0,
+            n_reductions_done: 0,
+            n_activations: 0,
+            e_oxg: 0.0,
+            e_receiver: 0.0,
+            e_pca: 0.0,
+            e_adc_red: 0.0,
+        }
+    }
+
+    fn flat(&self, id: XpeId) -> usize {
+        id.xpc * self.m + id.xpe
+    }
+
+    /// Issue the next queued pass on `id` after `extra_delay`.
+    fn start_next_pass(&mut self, id: XpeId, extra_delay: f64, sched: &mut Scheduler) {
+        let tau = self.cfg.tau_s();
+        let flat = self.flat(id);
+        let st = &mut self.xpes[flat];
+        if st.next >= st.queue.len() {
+            return;
+        }
+        let pass = st.queue[st.next];
+        st.next += 1;
+        let ones = (pass.slice_len as f64 * self.ones_density).round() as u64;
+        sched.after(
+            extra_delay + tau,
+            EventKind::PassComplete { xpe: id, vdp: pass.vdp, slice_idx: pass.slice_idx, ones },
+        );
+    }
+
+    fn all_passes_issued(&self) -> bool {
+        self.xpes.iter().all(|s| s.next >= s.queue.len())
+    }
+}
+
+impl World for LayerWorld {
+    fn init(&mut self, sched: &mut Scheduler, _stats: &mut SimStats) {
+        for xpc in 0..self.red_pending.len() {
+            for xpe in 0..self.m {
+                self.start_next_pass(XpeId { xpc, xpe }, 0.0, sched);
+            }
+        }
+    }
+
+    fn handle(&mut self, event: &EventKind, sched: &mut Scheduler, _stats: &mut SimStats) {
+        match event {
+            EventKind::PassComplete { xpe, vdp, slice_idx, ones } => {
+                self.n_passes += 1;
+                self.e_oxg += self.cfg.n as f64 * self.cfg.energy.xnor_j_per_bit;
+                self.e_receiver += self.cfg.energy.receiver_j_per_pass;
+                let is_pca = matches!(self.cfg.bitcount, BitcountMode::Pca { .. });
+                if is_pca {
+                    let last = *slice_idx == self.slices - 1;
+                    let flat = self.flat(*xpe);
+                    let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                    let saturated = pca.accumulate(*ones);
+                    if saturated {
+                        self.n_saturations += 1;
+                    }
+                    if last {
+                        sched.after(0.0, EventKind::PcaReadout { xpe: *xpe, vdp: *vdp });
+                    } else if saturated {
+                        // Paper Section III-B2: a railed TIR ends the
+                        // accumulation phase. Read out mid-VDP (losing the
+                        // clamped excess), swap capacitors, and continue
+                        // the same VDP on the fresh TIR — stalling only if
+                        // the redundant capacitor is still discharging.
+                        self.n_mid_vdp_readouts += 1;
+                        self.e_pca += self.cfg.energy.pca_readout_j;
+                        let now = sched.now();
+                        let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                        let (_r, stall) = pca.readout(now);
+                        if stall > 0.0 {
+                            self.n_discharge_stalls += 1;
+                        }
+                        self.start_next_pass(*xpe, stall, sched);
+                    } else {
+                        self.start_next_pass(*xpe, 0.0, sched);
+                    }
+                } else {
+                    sched.after(0.0, EventKind::PsumReady {
+                        xpe: *xpe,
+                        vdp: *vdp,
+                        slice_idx: *slice_idx,
+                    });
+                    self.start_next_pass(*xpe, 0.0, sched);
+                }
+            }
+            EventKind::PcaReadout { xpe, vdp } => {
+                self.n_pca_readouts += 1;
+                self.e_pca += self.cfg.energy.pca_readout_j;
+                let now = sched.now();
+                let flat = self.flat(*xpe);
+                let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                let (_result, stall) = pca.readout(now);
+                if stall > 0.0 {
+                    self.n_discharge_stalls += 1;
+                }
+                // Comparator/activation latency, then this VDP is done.
+                let act = self.cfg.peripherals.activation_unit.latency_s;
+                sched.after(stall + act, EventKind::ActivationDone { vdp: *vdp });
+                // The XPE continues with its next queued VDP after the
+                // (possibly stalled) swap.
+                self.start_next_pass(*xpe, stall, sched);
+            }
+            EventKind::PsumReady { xpe, vdp, .. } => {
+                self.n_psums += 1;
+                self.e_adc_red +=
+                    self.cfg.energy.adc_j_per_psum + self.cfg.energy.reduction_j_per_psum;
+                let xpc = xpe.xpc;
+                self.red_pending[xpc] += 1;
+                // Group psums M-wide per initiation of the XPC's network.
+                let (lat, width) = match self.cfg.bitcount {
+                    BitcountMode::Reduction { latency_s, .. } => (latency_s, self.m),
+                    _ => unreachable!("psum in PCA mode"),
+                };
+                if self.red_pending[xpc] >= width || self.all_passes_issued() {
+                    let start = sched.now().max(self.red_free_at[xpc]);
+                    self.red_free_at[xpc] = start + lat;
+                    self.red_pending[xpc] = 0;
+                    self.n_reduction_inits += 1;
+                    sched.at(start + lat, EventKind::ReductionDone { vdp: *vdp });
+                }
+                // VDP completion bookkeeping (all slices produced).
+                let v = vdp.0;
+                self.vdp_remaining[v] -= 1;
+                if self.vdp_remaining[v] == 0 {
+                    let act = self.cfg.peripherals.activation_unit.latency_s;
+                    let done_at = self.red_free_at[xpc].max(sched.now()) + lat + act;
+                    sched.at(done_at, EventKind::ActivationDone { vdp: *vdp });
+                }
+            }
+            EventKind::ReductionDone { .. } => {
+                self.n_reductions_done += 1;
+            }
+            EventKind::ActivationDone { .. } => {
+                self.n_activations += 1;
+                self.vdps_done += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.vdps_done >= self.vdp_total
+    }
+
+    fn finalize(&mut self, stats: &mut SimStats) {
+        stats.count("passes", self.n_passes);
+        stats.count("pca_readouts", self.n_pca_readouts);
+        stats.count("mid_vdp_readouts", self.n_mid_vdp_readouts);
+        stats.count("pca_saturations", self.n_saturations);
+        stats.count("pca_discharge_stalls", self.n_discharge_stalls);
+        stats.count("psums", self.n_psums);
+        stats.count("reduction_inits", self.n_reduction_inits);
+        stats.count("reductions_done", self.n_reductions_done);
+        stats.count("activations", self.n_activations);
+        stats.energy("oxg", self.e_oxg);
+        stats.energy("receiver", self.e_receiver);
+        stats.energy("pca", self.e_pca);
+        stats.energy("adc+reduction", self.e_adc_red);
+    }
+}
+
+/// Convenience: run a layer to completion, returning stats.
+pub fn simulate_layer(
+    cfg: &AcceleratorConfig,
+    layer: &GemmLayer,
+    policy: MappingPolicy,
+) -> SimStats {
+    let mut world = LayerWorld::new(cfg.clone(), layer.clone(), policy);
+    let budget = (layer.total_passes(cfg.n) as u64) * 8 + 10_000;
+    crate::sim::engine::run(&mut world, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::accelerator::AcceleratorConfig;
+
+    fn small_cfg(pca: bool) -> AcceleratorConfig {
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = 9;
+        cfg.xpe_total = 4;
+        if !pca {
+            cfg.bitcount = BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+            cfg.energy = crate::energy::power::EnergyModel::robin();
+        }
+        cfg
+    }
+
+    #[test]
+    fn pca_mode_processes_all_vdps() {
+        let layer = GemmLayer::new("t", 8, 30, 4); // 32 VDPs, 4 slices each
+        let stats = simulate_layer(&small_cfg(true), &layer, MappingPolicy::PcaLocal);
+        assert_eq!(stats.counter("passes"), 32 * 4);
+        assert_eq!(stats.counter("pca_readouts"), 32);
+        assert_eq!(stats.counter("activations"), 32);
+        assert_eq!(stats.counter("psums"), 0);
+        assert!(stats.end_time_s > 0.0);
+    }
+
+    #[test]
+    fn reduction_mode_emits_psums() {
+        let layer = GemmLayer::new("t", 8, 30, 4);
+        let stats =
+            simulate_layer(&small_cfg(false), &layer, MappingPolicy::SlicedSpread);
+        assert_eq!(stats.counter("passes"), 32 * 4);
+        assert_eq!(stats.counter("psums"), 32 * 4);
+        assert!(stats.counter("reduction_inits") > 0);
+        assert_eq!(stats.counter("activations"), 32);
+    }
+
+    #[test]
+    fn fig5_pca_faster_than_reduction() {
+        // The Fig. 5 comparison: same layer, same photonic resources; the
+        // PCA mapping avoids all reduction-network serialization.
+        let layer = GemmLayer::new("fig5", 32, 45, 8);
+        let pca = simulate_layer(&small_cfg(true), &layer, MappingPolicy::PcaLocal);
+        let red =
+            simulate_layer(&small_cfg(false), &layer, MappingPolicy::SlicedSpread);
+        assert!(
+            pca.end_time_s < red.end_time_s,
+            "PCA {} s vs reduction {} s",
+            pca.end_time_s,
+            red.end_time_s
+        );
+    }
+
+    #[test]
+    fn pca_energy_cheaper_per_layer() {
+        let layer = GemmLayer::new("e", 16, 60, 4);
+        let pca = simulate_layer(&small_cfg(true), &layer, MappingPolicy::PcaLocal);
+        let red =
+            simulate_layer(&small_cfg(false), &layer, MappingPolicy::SlicedSpread);
+        assert!(pca.total_energy_j() < red.total_energy_j());
+        assert_eq!(red.energy_of("pca"), 0.0);
+        assert!(red.energy_of("adc+reduction") > 0.0);
+    }
+
+    #[test]
+    fn saturation_forces_mid_vdp_readouts_when_gamma_tiny() {
+        let mut cfg = small_cfg(true);
+        cfg.bitcount = BitcountMode::Pca { gamma: 4 }; // absurdly small
+        let layer = GemmLayer::new("sat", 4, 40, 1);
+        let stats = simulate_layer(&cfg, &layer, MappingPolicy::PcaLocal);
+        assert!(stats.counter("pca_saturations") > 0);
+        assert!(stats.counter("mid_vdp_readouts") > 0);
+        // A healthy gamma produces none.
+        let healthy = simulate_layer(&small_cfg(true), &layer, MappingPolicy::PcaLocal);
+        assert_eq!(healthy.counter("mid_vdp_readouts"), 0);
+    }
+
+    #[test]
+    fn tiny_gamma_costs_latency_via_discharge_stalls() {
+        // With gamma below a single slice's ones, every pass saturates and
+        // the dual-TIR swap eventually stalls on discharge — latency must
+        // exceed the healthy-gamma run.
+        let layer = GemmLayer::new("sat", 8, 120, 2);
+        let mut tiny = small_cfg(true);
+        tiny.bitcount = BitcountMode::Pca { gamma: 2 };
+        let slow = simulate_layer(&tiny, &layer, MappingPolicy::PcaLocal);
+        let fast = simulate_layer(&small_cfg(true), &layer, MappingPolicy::PcaLocal);
+        assert!(slow.counter("pca_discharge_stalls") > 0);
+        assert!(
+            slow.end_time_s > fast.end_time_s,
+            "tiny gamma {} vs healthy {}",
+            slow.end_time_s,
+            fast.end_time_s
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Accelerator architecture: configuration, psum reduction network,
+//! closed-form performance model, and the event-driven world.
+
+pub mod accelerator;
+pub mod event_sim;
+pub mod perf;
+pub mod reduction;
+pub mod workload_sim;
+
+pub use accelerator::{AcceleratorConfig, BitcountMode, DEFAULT_MEM_BW};
+pub use event_sim::{simulate_layer, LayerWorld};
+pub use perf::{gmean, layer_perf, workload_perf, LayerPerf, WorkloadPerf};
+pub use reduction::ReductionNetwork;
+pub use workload_sim::{simulate_frame, FrameTrace, LayerTrace};

@@ -1,0 +1,73 @@
+//! psum reduction network (needed by the ROBIN/LIGHTBULB baselines).
+//!
+//! Modeled as an M-input pipelined adder tree per XPC, clocked at the
+//! Table III reduction latency (3.125 ns per initiation). A group of up to
+//! M psums enters per initiation; a VDP's final value is ready after the
+//! tree depth drains. OXBNN eliminates this block entirely (paper §IV-C).
+
+/// Adder-tree reduction network model.
+#[derive(Debug, Clone)]
+pub struct ReductionNetwork {
+    /// Tree fan-in (psums absorbed per initiation) — M of the host XPC.
+    pub width: usize,
+    /// Initiation interval / stage latency (s); Table III: 3.125 ns.
+    pub latency_s: f64,
+}
+
+impl ReductionNetwork {
+    pub fn new(width: usize, latency_s: f64) -> ReductionNetwork {
+        assert!(width >= 1);
+        ReductionNetwork { width, latency_s }
+    }
+
+    /// Pipeline depth for combining `count` psums (tree levels).
+    pub fn depth(&self, count: usize) -> usize {
+        if count <= 1 {
+            return 0;
+        }
+        // ceil(log2(count)) levels of pairwise combine.
+        (usize::BITS - (count - 1).leading_zeros()) as usize
+    }
+
+    /// Latency for one VDP whose psums arrive together: depth × stage.
+    pub fn combine_latency_s(&self, psum_count: usize) -> f64 {
+        self.depth(psum_count) as f64 * self.latency_s
+    }
+
+    /// Throughput-limited time to push `total_psums` through the network:
+    /// one `width`-wide group per initiation interval.
+    pub fn drain_time_s(&self, total_psums: usize) -> f64 {
+        (total_psums.div_ceil(self.width)) as f64 * self.latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_is_ceil_log2() {
+        let r = ReductionNetwork::new(8, 3.125e-9);
+        assert_eq!(r.depth(1), 0);
+        assert_eq!(r.depth(2), 1);
+        assert_eq!(r.depth(3), 2);
+        assert_eq!(r.depth(8), 3);
+        assert_eq!(r.depth(9), 4);
+        assert_eq!(r.depth(116), 7); // ROBIN_EO on an S=1152 layer
+    }
+
+    #[test]
+    fn combine_latency_scales_with_depth() {
+        let r = ReductionNetwork::new(8, 3.125e-9);
+        assert_eq!(r.combine_latency_s(1), 0.0);
+        assert!((r.combine_latency_s(8) - 3.0 * 3.125e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn drain_time_groups_by_width() {
+        let r = ReductionNetwork::new(10, 3.125e-9);
+        assert!((r.drain_time_s(10) - 3.125e-9).abs() < 1e-18);
+        assert!((r.drain_time_s(11) - 6.25e-9).abs() < 1e-18);
+        assert_eq!(r.drain_time_s(0), 0.0);
+    }
+}

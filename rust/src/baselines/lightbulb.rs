@@ -1,0 +1,70 @@
+//! LIGHTBULB baseline (Zokaee et al., DATE 2020): an all-optical
+//! XNOR-bitcount accelerator using microdisk pairs per XNOR gate, optical
+//! ADCs, and PCM-based racetrack memory, running at a very high data rate
+//! (paper Section II-C).
+//!
+//! Modeled with the paper's area-proportionate scaling: N = 16, 1139 XPEs,
+//! DR = 50 GS/s (OXBNN_50 matches this rate). Like ROBIN it evaluates one
+//! psum per pass and needs the psum reduction path; its optical ADCs keep
+//! up with the 50 GS/s pass rate but cost energy per conversion.
+
+use crate::arch::accelerator::{AcceleratorConfig, BitcountMode, DEFAULT_MEM_BW};
+use crate::devices::laser::LossBudget;
+use crate::energy::power::{EnergyModel, Peripherals};
+
+/// LIGHTBULB psum width: 4-bit optical ADC output per pass (N = 16 →
+/// counts fit in 5 bits; the design quantizes to 4-bit PCM counters, we
+/// grant the full 5 to avoid penalizing accuracy).
+pub const LIGHTBULB_PSUM_BITS: u32 = 5;
+
+/// LIGHTBULB configuration (paper Section V-B scaling).
+pub fn lightbulb() -> AcceleratorConfig {
+    let peripherals = Peripherals::default();
+    let red_latency = peripherals.reduction_network.latency_s;
+    AcceleratorConfig {
+        name: "LIGHTBULB".into(),
+        dr_gsps: 50.0,
+        n: 16,
+        xpe_total: 1139,
+        bitcount: BitcountMode::Reduction {
+            latency_s: red_latency,
+            psum_bits: LIGHTBULB_PSUM_BITS,
+        },
+        energy: EnergyModel::lightbulb(),
+        peripherals,
+        loss_budget: LossBudget::default(),
+        mem_bw_bits_per_s: DEFAULT_MEM_BW,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scaled_counts() {
+        let lb = lightbulb();
+        assert_eq!((lb.n, lb.xpe_total, lb.dr_gsps), (16, 1139, 50.0));
+    }
+
+    #[test]
+    fn same_pass_latency_as_oxbnn_50() {
+        let lb = lightbulb();
+        let ox = crate::arch::accelerator::AcceleratorConfig::oxbnn_50();
+        assert!((lb.tau_s() - ox.tau_s()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn pays_adc_energy_per_psum() {
+        let lb = lightbulb();
+        assert!(lb.energy.adc_j_per_psum > EnergyModel::robin().adc_j_per_psum);
+    }
+
+    #[test]
+    fn pcm_weights_reduce_tuning_power() {
+        // Non-volatile PCM weight cells need no static hold power; modeled
+        // as half the tuning population of an all-MRR design.
+        let lb = lightbulb();
+        assert!(lb.energy.tuning_w_per_mrr < EnergyModel::robin().tuning_w_per_mrr);
+    }
+}

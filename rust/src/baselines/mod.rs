@@ -1,0 +1,8 @@
+//! Baseline photonic BNN accelerators the paper compares against
+//! (Section V-B): ROBIN (EO/PO) and LIGHTBULB.
+
+pub mod lightbulb;
+pub mod robin;
+
+pub use lightbulb::lightbulb;
+pub use robin::{robin_eo, robin_po};

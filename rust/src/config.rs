@@ -1,0 +1,362 @@
+//! Config system: JSON serialization of accelerator configurations.
+//!
+//! Lets users define custom accelerators (`oxbnn simulate
+//! --config my_accel.json`), dump the built-in evaluation set, and keep
+//! sweep results reproducible. Built on the in-repo JSON substrate.
+//!
+//! Schema (all fields optional except the ones shown in `to_json`;
+//! omitted fields take the named base config's values):
+//!
+//! ```json
+//! {
+//!   "name": "MyAccel",
+//!   "base": "OXBNN_50",
+//!   "dr_gsps": 50.0,
+//!   "n": 19,
+//!   "xpe_total": 1123,
+//!   "bitcount": {"mode": "pca", "gamma": 8503},
+//!   "mem_bw_bits_per_s": 8e12,
+//!   "energy": {"xnor_j_per_bit": 5e-14, ...}
+//! }
+//! ```
+
+use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use crate::util::json::Json;
+
+/// Config errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("{0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("config schema: {0}")]
+    Schema(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn schema(msg: impl Into<String>) -> ConfigError {
+    ConfigError::Schema(msg.into())
+}
+
+/// Serialize an accelerator config to JSON.
+pub fn to_json(cfg: &AcceleratorConfig) -> Json {
+    let bitcount = match &cfg.bitcount {
+        BitcountMode::Pca { gamma } => Json::obj(vec![
+            ("mode", Json::Str("pca".into())),
+            ("gamma", Json::Num(*gamma as f64)),
+        ]),
+        BitcountMode::Reduction { latency_s, psum_bits } => Json::obj(vec![
+            ("mode", Json::Str("reduction".into())),
+            ("latency_s", Json::Num(*latency_s)),
+            ("psum_bits", Json::Num(*psum_bits as f64)),
+        ]),
+    };
+    let e = &cfg.energy;
+    let energy = Json::obj(vec![
+        ("xnor_j_per_bit", Json::Num(e.xnor_j_per_bit)),
+        ("receiver_j_per_pass", Json::Num(e.receiver_j_per_pass)),
+        ("pca_readout_j", Json::Num(e.pca_readout_j)),
+        ("adc_j_per_psum", Json::Num(e.adc_j_per_psum)),
+        ("reduction_j_per_psum", Json::Num(e.reduction_j_per_psum)),
+        ("sram_j_per_bit", Json::Num(e.sram_j_per_bit)),
+        ("tuning_w_per_mrr", Json::Num(e.tuning_w_per_mrr)),
+        ("mrrs_per_gate", Json::Num(e.mrrs_per_gate)),
+    ]);
+    Json::obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("dr_gsps", Json::Num(cfg.dr_gsps)),
+        ("n", Json::Num(cfg.n as f64)),
+        ("xpe_total", Json::Num(cfg.xpe_total as f64)),
+        ("bitcount", bitcount),
+        ("mem_bw_bits_per_s", Json::Num(cfg.mem_bw_bits_per_s)),
+        ("energy", energy),
+    ])
+}
+
+/// Resolve a named built-in config.
+pub fn builtin(name: &str) -> Option<AcceleratorConfig> {
+    AcceleratorConfig::evaluation_set()
+        .into_iter()
+        .find(|a| a.name == name)
+}
+
+/// Parse an accelerator config from JSON text. Unspecified fields default
+/// to the `base` config (default base: OXBNN_50).
+pub fn from_json_text(text: &str) -> Result<AcceleratorConfig, ConfigError> {
+    let j = Json::parse(text)?;
+    let base_name = j.get("base").and_then(Json::as_str).unwrap_or("OXBNN_50");
+    let mut cfg =
+        builtin(base_name).ok_or_else(|| schema(format!("unknown base '{}'", base_name)))?;
+    if let Some(name) = j.get("name").and_then(Json::as_str) {
+        cfg.name = name.to_string();
+    }
+    if let Some(dr) = j.get("dr_gsps").and_then(Json::as_f64) {
+        if dr <= 0.0 {
+            return Err(schema("dr_gsps must be positive"));
+        }
+        cfg.dr_gsps = dr;
+    }
+    if let Some(n) = j.get("n").and_then(Json::as_usize) {
+        if n == 0 {
+            return Err(schema("n must be >= 1"));
+        }
+        cfg.n = n;
+    }
+    if let Some(x) = j.get("xpe_total").and_then(Json::as_usize) {
+        if x == 0 {
+            return Err(schema("xpe_total must be >= 1"));
+        }
+        cfg.xpe_total = x;
+    }
+    if let Some(bw) = j.get("mem_bw_bits_per_s").and_then(Json::as_f64) {
+        cfg.mem_bw_bits_per_s = bw;
+    }
+    if let Some(b) = j.get("bitcount") {
+        let mode = b
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema("bitcount.mode required"))?;
+        cfg.bitcount = match mode {
+            "pca" => BitcountMode::Pca {
+                gamma: b
+                    .get("gamma")
+                    .and_then(Json::as_usize)
+                    .map(|g| g as u64)
+                    .unwrap_or_else(|| {
+                        crate::analysis::pca_capacity::gamma_calibrated(cfg.dr_gsps)
+                    }),
+            },
+            "reduction" => BitcountMode::Reduction {
+                latency_s: b.get("latency_s").and_then(Json::as_f64).unwrap_or(3.125e-9),
+                psum_bits: b
+                    .get("psum_bits")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(16) as u32,
+            },
+            other => return Err(schema(format!("unknown bitcount mode '{}'", other))),
+        };
+    }
+    if let Some(e) = j.get("energy") {
+        let f = |k: &str, cur: f64| e.get(k).and_then(Json::as_f64).unwrap_or(cur);
+        cfg.energy.xnor_j_per_bit = f("xnor_j_per_bit", cfg.energy.xnor_j_per_bit);
+        cfg.energy.receiver_j_per_pass =
+            f("receiver_j_per_pass", cfg.energy.receiver_j_per_pass);
+        cfg.energy.pca_readout_j = f("pca_readout_j", cfg.energy.pca_readout_j);
+        cfg.energy.adc_j_per_psum = f("adc_j_per_psum", cfg.energy.adc_j_per_psum);
+        cfg.energy.reduction_j_per_psum =
+            f("reduction_j_per_psum", cfg.energy.reduction_j_per_psum);
+        cfg.energy.sram_j_per_bit = f("sram_j_per_bit", cfg.energy.sram_j_per_bit);
+        cfg.energy.tuning_w_per_mrr = f("tuning_w_per_mrr", cfg.energy.tuning_w_per_mrr);
+        cfg.energy.mrrs_per_gate = f("mrrs_per_gate", cfg.energy.mrrs_per_gate);
+    }
+    Ok(cfg)
+}
+
+/// Load a config from a file path.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<AcceleratorConfig, ConfigError> {
+    from_json_text(&std::fs::read_to_string(path)?)
+}
+
+/// Save a config to a file path (pretty JSON).
+pub fn save(
+    cfg: &AcceleratorConfig,
+    path: impl AsRef<std::path::Path>,
+) -> Result<(), ConfigError> {
+    std::fs::write(path, to_json(cfg).to_string_pretty())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Workload configs: custom BNN geometry from JSON
+// ---------------------------------------------------------------------------
+
+/// Parse a workload (BNN layer geometry) from JSON text:
+///
+/// ```json
+/// {
+///   "name": "my_bnn",
+///   "layers": [
+///     {"kind": "conv", "out_hw": 32, "in_channels": 3, "kernel": 3,
+///      "out_channels": 64, "pool": true},
+///     {"kind": "depthwise", "out_hw": 16, "channels": 64, "kernel": 3},
+///     {"kind": "gemm", "h": 256, "s": 576, "k": 64},
+///     {"kind": "fc", "inputs": 1024, "outputs": 10}
+///   ]
+/// }
+/// ```
+pub fn workload_from_json_text(
+    text: &str,
+) -> Result<crate::workloads::Workload, ConfigError> {
+    use crate::mapping::layer::GemmLayer;
+    let j = Json::parse(text)?;
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| schema("workload needs a name"))?;
+    let layers_j = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| schema("workload needs a layers array"))?;
+    if layers_j.is_empty() {
+        return Err(schema("workload needs at least one layer"));
+    }
+    let mut layers = Vec::with_capacity(layers_j.len());
+    for (i, l) in layers_j.iter().enumerate() {
+        let kind = l
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema(format!("layer {}: missing kind", i)))?;
+        let field = |k: &str| {
+            l.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| schema(format!("layer {} ({}): missing '{}'", i, kind, k)))
+        };
+        let lname = l
+            .get("name")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .unwrap_or_else(|| format!("layer{}", i));
+        let mut layer = match kind {
+            "conv" => GemmLayer::conv(
+                lname,
+                field("out_hw")?,
+                field("in_channels")?,
+                l.get("kernel").and_then(Json::as_usize).unwrap_or(3),
+                field("out_channels")?,
+            ),
+            "depthwise" => GemmLayer::depthwise(
+                lname,
+                field("out_hw")?,
+                field("channels")?,
+                l.get("kernel").and_then(Json::as_usize).unwrap_or(3),
+            ),
+            "gemm" => GemmLayer::new(lname, field("h")?, field("s")?, field("k")?),
+            "fc" => GemmLayer::fc(lname, field("inputs")?, field("outputs")?),
+            other => return Err(schema(format!("layer {}: unknown kind '{}'", i, other))),
+        };
+        if l.get("pool").and_then(Json::as_bool).unwrap_or(false) {
+            layer = layer.with_pool();
+        }
+        layers.push(layer);
+    }
+    Ok(crate::workloads::Workload::new(name, layers))
+}
+
+/// Load a workload definition from a file.
+pub fn load_workload(
+    path: impl AsRef<std::path::Path>,
+) -> Result<crate::workloads::Workload, ConfigError> {
+    workload_from_json_text(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_builtins() {
+        for cfg in AcceleratorConfig::evaluation_set() {
+            let text = to_json(&cfg).to_string_pretty();
+            let back = from_json_text(&text).unwrap();
+            assert_eq!(back.name, cfg.name);
+            assert_eq!(back.dr_gsps, cfg.dr_gsps);
+            assert_eq!(back.n, cfg.n);
+            assert_eq!(back.xpe_total, cfg.xpe_total);
+            assert_eq!(back.bitcount, cfg.bitcount);
+            assert_eq!(back.energy.xnor_j_per_bit, cfg.energy.xnor_j_per_bit);
+            assert_eq!(back.energy.mrrs_per_gate, cfg.energy.mrrs_per_gate);
+        }
+    }
+
+    #[test]
+    fn partial_override_inherits_base() {
+        let cfg = from_json_text(
+            r#"{"name": "Custom", "base": "OXBNN_5", "xpe_total": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "Custom");
+        assert_eq!(cfg.xpe_total, 250);
+        assert_eq!(cfg.n, 53); // inherited from OXBNN_5
+        assert_eq!(cfg.dr_gsps, 5.0);
+    }
+
+    #[test]
+    fn pca_gamma_defaults_to_calibration() {
+        let cfg = from_json_text(
+            r#"{"dr_gsps": 10.0, "bitcount": {"mode": "pca"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.bitcount, BitcountMode::Pca { gamma: 19841 });
+    }
+
+    #[test]
+    fn reduction_mode_parses() {
+        let cfg = from_json_text(
+            r#"{"bitcount": {"mode": "reduction", "psum_bits": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.bitcount,
+            BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 8 }
+        );
+    }
+
+    #[test]
+    fn errors_on_bad_values() {
+        assert!(from_json_text(r#"{"base": "NOPE"}"#).is_err());
+        assert!(from_json_text(r#"{"n": 0}"#).is_err());
+        assert!(from_json_text(r#"{"dr_gsps": -5}"#).is_err());
+        assert!(from_json_text(r#"{"bitcount": {"mode": "magic"}}"#).is_err());
+        assert!(from_json_text("{nope").is_err());
+    }
+
+    #[test]
+    fn workload_from_json_all_kinds() {
+        let w = workload_from_json_text(
+            r#"{
+              "name": "custom",
+              "layers": [
+                {"kind": "conv", "out_hw": 8, "in_channels": 3,
+                 "out_channels": 16, "pool": true},
+                {"kind": "depthwise", "out_hw": 4, "channels": 16},
+                {"kind": "gemm", "h": 16, "s": 144, "k": 32, "name": "pw"},
+                {"kind": "fc", "inputs": 512, "outputs": 10}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(w.name, "custom");
+        assert_eq!(w.layers.len(), 4);
+        assert_eq!((w.layers[0].h, w.layers[0].s, w.layers[0].k), (64, 27, 16));
+        assert!(w.layers[0].pool);
+        assert_eq!((w.layers[1].h, w.layers[1].s, w.layers[1].k), (16 * 16, 9, 1));
+        assert_eq!(w.layers[2].name, "pw");
+        assert_eq!((w.layers[3].h, w.layers[3].s, w.layers[3].k), (1, 512, 10));
+    }
+
+    #[test]
+    fn workload_json_errors() {
+        assert!(workload_from_json_text(r#"{"layers": []}"#).is_err());
+        assert!(workload_from_json_text(r#"{"name": "x", "layers": []}"#).is_err());
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "warp", "h": 1}]}"#
+        )
+        .is_err());
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "conv", "out_hw": 8}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("oxbnn_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.json");
+        let cfg = AcceleratorConfig::oxbnn_50();
+        save(&cfg, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, cfg.name);
+        std::fs::remove_file(&path).ok();
+    }
+}

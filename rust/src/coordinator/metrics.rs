@@ -1,0 +1,170 @@
+//! Serving metrics: latency histogram with percentiles and throughput
+//! accounting, shared by the coordinator's workers.
+
+/// Fixed-memory latency recorder (stores raw samples up to a cap, then
+/// reservoir-samples; serving runs here are bounded so the cap is ample).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>,
+    cap: usize,
+    total_count: u64,
+    total_sum: f64,
+    rng_state: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new(100_000)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(cap: usize) -> LatencyHistogram {
+        LatencyHistogram {
+            samples: Vec::new(),
+            cap: cap.max(1),
+            total_count: 0,
+            total_sum: 0.0,
+            rng_state: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.total_count += 1;
+        self.total_sum += seconds;
+        if self.samples.len() < self.cap {
+            self.samples.push(seconds);
+        } else {
+            // Reservoir sampling keeps percentiles unbiased past the cap.
+            self.rng_state ^= self.rng_state << 13;
+            self.rng_state ^= self.rng_state >> 7;
+            self.rng_state ^= self.rng_state << 17;
+            let idx = (self.rng_state % self.total_count) as usize;
+            if idx < self.cap {
+                self.samples[idx] = seconds;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total_count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total_count == 0 {
+            0.0
+        } else {
+            self.total_sum / self.total_count as f64
+        }
+    }
+
+    /// Percentile over recorded samples (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub queue: LatencyHistogram,
+    pub execute: LatencyHistogram,
+    pub end_to_end: LatencyHistogram,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+impl ServerMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} batches={} mean_batch={:.2}\n\
+             queue:     p50={} p95={} mean={}\n\
+             execute:   p50={} p95={} mean={}\n\
+             end2end:   p50={} p95={} p99={} mean={}",
+            self.completed,
+            self.batches,
+            self.mean_batch_size(),
+            crate::util::units::fmt_time(self.queue.p50()),
+            crate::util::units::fmt_time(self.queue.p95()),
+            crate::util::units::fmt_time(self.queue.mean()),
+            crate::util::units::fmt_time(self.execute.p50()),
+            crate::util::units::fmt_time(self.execute.p95()),
+            crate::util::units::fmt_time(self.execute.mean()),
+            crate::util::units::fmt_time(self.end_to_end.p50()),
+            crate::util::units::fmt_time(self.end_to_end.p95()),
+            crate::util::units::fmt_time(self.end_to_end.p99()),
+            crate::util::units::fmt_time(self.end_to_end.mean()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.p50() - 0.050).abs() < 2e-3);
+        assert!((h.p95() - 0.095).abs() < 2e-3);
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_cap() {
+        let mut h = LatencyHistogram::new(10);
+        for i in 0..1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.samples.len(), 10);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let mut m = ServerMetrics::default();
+        m.batches = 4;
+        m.batched_requests = 10;
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+        assert!(m.report().contains("mean_batch=2.50"));
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: request routing, dynamic batching, serving loop and
+//! metrics. Python never appears here — the workers execute AOT-compiled
+//! artifacts through PJRT and attach simulated photonic latencies from the
+//! analytic accelerator model.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use router::{RouteError, Router};
+pub use server::{
+    synthetic_weights, workload_from_artifact, InferenceRequest, InferenceResponse, Server,
+    ServerConfig,
+};

@@ -1,0 +1,156 @@
+//! Request router: maps inference requests to model engines/replicas.
+//!
+//! Policy: exact model-name match, then least-outstanding-work among the
+//! model's replicas (falls back to round-robin on ties, deterministic).
+
+use std::collections::BTreeMap;
+
+/// A routable engine replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Replica {
+    pub model: String,
+    pub replica_id: usize,
+    /// Outstanding (queued + executing) requests.
+    pub outstanding: usize,
+}
+
+/// Router state.
+#[derive(Debug, Default)]
+pub struct Router {
+    replicas: Vec<Replica>,
+    rr_state: BTreeMap<String, usize>,
+}
+
+/// Routing errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RouteError {
+    #[error("no engine registered for model '{0}'")]
+    UnknownModel(String),
+}
+
+impl Router {
+    pub fn register(&mut self, model: &str, replica_id: usize) {
+        self.replicas.push(Replica {
+            model: model.to_string(),
+            replica_id,
+            outstanding: 0,
+        });
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.replicas.iter().map(|r| r.model.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+
+    /// Choose a replica for `model`; increments its outstanding count.
+    pub fn route(&mut self, model: &str) -> Result<usize, RouteError> {
+        let candidates: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.model == model)
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return Err(RouteError::UnknownModel(model.to_string()));
+        }
+        let min_out = candidates
+            .iter()
+            .map(|&i| self.replicas[i].outstanding)
+            .min()
+            .unwrap();
+        let tied: Vec<usize> = candidates
+            .iter()
+            .copied()
+            .filter(|&i| self.replicas[i].outstanding == min_out)
+            .collect();
+        // Round-robin among the least-loaded replicas.
+        let rr = self.rr_state.entry(model.to_string()).or_insert(0);
+        let pick = tied[*rr % tied.len()];
+        *rr = rr.wrapping_add(1);
+        self.replicas[pick].outstanding += 1;
+        Ok(self.replicas[pick].replica_id)
+    }
+
+    /// Mark completion on a replica.
+    pub fn complete(&mut self, model: &str, replica_id: usize) {
+        if let Some(r) = self
+            .replicas
+            .iter_mut()
+            .find(|r| r.model == model && r.replica_id == replica_id)
+        {
+            r.outstanding = r.outstanding.saturating_sub(1);
+        }
+    }
+
+    pub fn outstanding(&self, model: &str) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.model == model)
+            .map(|r| r.outstanding)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_errors() {
+        let mut r = Router::default();
+        r.register("tiny", 0);
+        assert_eq!(
+            r.route("nope"),
+            Err(RouteError::UnknownModel("nope".into()))
+        );
+    }
+
+    #[test]
+    fn round_robin_when_balanced() {
+        let mut r = Router::default();
+        r.register("tiny", 0);
+        r.register("tiny", 1);
+        let a = r.route("tiny").unwrap();
+        let b = r.route("tiny").unwrap();
+        assert_ne!(a, b, "balanced replicas alternate");
+    }
+
+    #[test]
+    fn least_loaded_wins() {
+        let mut r = Router::default();
+        r.register("m", 0);
+        r.register("m", 1);
+        let first = r.route("m").unwrap();
+        // Replica `first` now has 1 outstanding; next goes to the other.
+        let second = r.route("m").unwrap();
+        assert_ne!(first, second);
+        // Complete on `second`; it becomes least-loaded... both at 1 vs 0.
+        r.complete("m", second);
+        let third = r.route("m").unwrap();
+        assert_eq!(third, second);
+    }
+
+    #[test]
+    fn outstanding_accounting() {
+        let mut r = Router::default();
+        r.register("m", 0);
+        assert_eq!(r.outstanding("m"), 0);
+        r.route("m").unwrap();
+        r.route("m").unwrap();
+        assert_eq!(r.outstanding("m"), 2);
+        r.complete("m", 0);
+        assert_eq!(r.outstanding("m"), 1);
+    }
+
+    #[test]
+    fn models_listing() {
+        let mut r = Router::default();
+        r.register("b", 0);
+        r.register("a", 0);
+        r.register("a", 1);
+        assert_eq!(r.models(), vec!["a", "b"]);
+    }
+}

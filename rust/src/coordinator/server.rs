@@ -1,0 +1,349 @@
+//! Inference server: the L3 coordinator's serving loop.
+//!
+//! One worker thread per registered model owns a PJRT runtime and the
+//! model's compiled AOT artifact (executables are not `Send`, so they are
+//! constructed inside their worker). Requests flow:
+//!
+//! ```text
+//! submit() → Router (least-loaded replica) → worker channel →
+//!   Batcher (max_batch / max_wait) → Executable::run per frame →
+//!   response channel (+ metrics)
+//! ```
+//!
+//! Each response also carries the *simulated photonic latency* the frame
+//! would have on the configured OXBNN accelerator (from the analytic
+//! model), tying the serving path to the paper's performance story.
+//! Weights are synthetic {0,1} bits generated deterministically per model
+//! (DESIGN.md substitution: performance is geometry-driven; functional
+//! correctness is validated against the independent rust engine).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::ServerMetrics;
+use super::router::Router;
+use crate::arch::accelerator::AcceleratorConfig;
+use crate::arch::perf::workload_perf;
+use crate::mapping::layer::GemmLayer;
+use crate::runtime::manifest::{Artifact, Manifest};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+
+/// An inference request (one frame, batch = 1 artifacts).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub model: String,
+    pub input: Vec<f32>,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub logits: Vec<f32>,
+    pub queue_s: f64,
+    pub execute_s: f64,
+    pub total_s: f64,
+    /// Frame latency of the same geometry on the simulated accelerator.
+    pub simulated_photonic_s: f64,
+}
+
+struct Job {
+    input: Vec<f32>,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub models: Vec<String>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Worker replicas per model (each owns its own PJRT runtime +
+    /// compiled executable; the router load-balances across them).
+    pub replicas: usize,
+    /// Accelerator whose simulated latency is attached to responses.
+    pub accelerator: AcceleratorConfig,
+    pub weight_seed: u64,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>, models: &[&str]) -> ServerConfig {
+        ServerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            models: models.iter().map(|m| m.to_string()).collect(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            replicas: 1,
+            accelerator: AcceleratorConfig::oxbnn_50(),
+            weight_seed: 0x0B17,
+        }
+    }
+}
+
+/// Running server handle.
+pub struct Server {
+    /// Keyed by (model, replica id).
+    senders: BTreeMap<(String, usize), mpsc::Sender<Job>>,
+    router: Mutex<Router>,
+    pub metrics: Arc<Mutex<ServerMetrics>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    input_lens: BTreeMap<String, usize>,
+}
+
+/// Generate the deterministic synthetic weights for an artifact.
+pub fn synthetic_weights(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed ^ artifact.name.len() as u64);
+    artifact.args[1..]
+        .iter()
+        .map(|a| rng.bits(a.element_count()))
+        .collect()
+}
+
+/// Build a Workload (simulator geometry) from a bnn_forward artifact.
+pub fn workload_from_artifact(artifact: &Artifact) -> Workload {
+    let layers = artifact
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, d)| GemmLayer::new(format!("{}.{}", artifact.name, i), d.h, d.s, d.k))
+        .collect();
+    Workload::new(artifact.name.clone(), layers)
+}
+
+impl Server {
+    /// Start workers for every configured model.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let manifest = Manifest::load(&cfg.artifacts_dir).context("loading manifest")?;
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let mut senders = BTreeMap::new();
+        let mut workers = Vec::new();
+        let mut router = Router::default();
+        let mut input_lens = BTreeMap::new();
+
+        for model in &cfg.models {
+            let artifact_name = format!("bnn_{}", model);
+            let artifact = manifest.get(&artifact_name)?.clone();
+            if artifact.kind != "bnn_forward" {
+                return Err(anyhow!("artifact {} is not a bnn_forward", artifact_name));
+            }
+            input_lens.insert(model.clone(), artifact.args[0].element_count());
+            for replica in 0..cfg.replicas.max(1) {
+                let (tx, rx) = mpsc::channel::<Job>();
+                senders.insert((model.clone(), replica), tx);
+                router.register(model, replica);
+                let metrics = Arc::clone(&metrics);
+                let cfg2 = cfg.clone();
+                let model2 = model.clone();
+                let artifact2 = artifact.clone();
+                let handle = thread::Builder::new()
+                    .name(format!("oxbnn-serve-{}-{}", model, replica))
+                    .spawn(move || worker_loop(cfg2, model2, artifact2, rx, metrics))
+                    .context("spawning worker")?;
+                workers.push(handle);
+            }
+        }
+        Ok(Server {
+            senders,
+            router: Mutex::new(router),
+            metrics,
+            workers,
+            input_lens,
+        })
+    }
+
+    /// Expected input length for a model.
+    pub fn input_len(&self, model: &str) -> Option<usize> {
+        self.input_lens.get(model).copied()
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<(usize, mpsc::Receiver<Result<InferenceResponse>>)> {
+        let expect = self
+            .input_len(&req.model)
+            .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+        if req.input.len() != expect {
+            return Err(anyhow!(
+                "model '{}' expects {} input values, got {}",
+                req.model,
+                expect,
+                req.input.len()
+            ));
+        }
+        // Route to the least-loaded replica of the model.
+        let replica = self
+            .router
+            .lock()
+            .unwrap()
+            .route(&req.model)
+            .map_err(|e| anyhow!(e))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = Job { input: req.input, submitted: Instant::now(), reply: reply_tx };
+        self.senders
+            .get(&(req.model.clone(), replica))
+            .expect("router only returns registered replicas")
+            .send(job)
+            .map_err(|_| anyhow!("worker for '{}' is gone", req.model))?;
+        Ok((replica, reply_rx))
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let model = req.model.clone();
+        let (replica, rx) = self.submit(req)?;
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow!("worker dropped the reply channel"))??;
+        self.router.lock().unwrap().complete(&model, replica);
+        Ok(resp)
+    }
+
+    /// Graceful shutdown: close queues and join workers.
+    pub fn shutdown(mut self) {
+        self.senders.clear(); // drop all senders → workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: ServerConfig,
+    model: String,
+    artifact: Artifact,
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+) {
+    // Heavy setup inside the worker: PJRT client + compile + weights.
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            crate::log_error!("{}: PJRT init failed: {:#}", model, e);
+            return;
+        }
+    };
+    let exe = match runtime.load_artifact(&artifact) {
+        Ok(e) => e,
+        Err(e) => {
+            crate::log_error!("{}: artifact compile failed: {:#}", model, e);
+            return;
+        }
+    };
+    // Weights are staged on the device ONCE; the request hot path only
+    // uploads the input frame (EXPERIMENTS.md §Perf L3).
+    let weights: Vec<crate::runtime::client::DeviceTensor> =
+        synthetic_weights(&artifact, cfg.weight_seed)
+            .into_iter()
+            .zip(&artifact.args[1..])
+            .map(|(bits, spec)| {
+                let host =
+                    HostTensor::new(spec.shape.clone(), bits).expect("weight shape");
+                runtime.to_device(&host).expect("weight upload")
+            })
+            .collect();
+    let simulated_s =
+        workload_perf(&cfg.accelerator, &workload_from_artifact(&artifact)).frame_latency_s;
+    let input_shape = artifact.args[0].shape.clone();
+    crate::log_info!(
+        "{}: worker ready (compile {:.3}s, simulated photonic frame {})",
+        model,
+        exe.compile_seconds,
+        crate::util::units::fmt_time(simulated_s)
+    );
+
+    let epoch = Instant::now();
+    let mut batcher: Batcher<Job> = Batcher::new(cfg.max_batch, cfg.max_wait.as_secs_f64());
+    loop {
+        // Wait bounded by the batcher's next deadline.
+        let now = epoch.elapsed().as_secs_f64();
+        let timeout = batcher
+            .next_deadline_in(now)
+            .map(Duration::from_secs_f64)
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(job) => {
+                let now = epoch.elapsed().as_secs_f64();
+                batcher.push(job, now);
+                // Opportunistically absorb everything already queued.
+                while batcher.len() < batcher.max_batch {
+                    match rx.try_recv() {
+                        Ok(j) => batcher.push(j, now),
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Shutdown: flush what's left, then exit.
+                let rest = batcher.flush();
+                if !rest.is_empty() {
+                    run_batch(&runtime, &exe, &weights, &input_shape, rest, simulated_s, &metrics);
+                }
+                return;
+            }
+        }
+        // Continuous batching: execute whatever is queued right away.
+        // Backlog under load forms real batches; a lone request never
+        // waits on the max_wait timer (EXPERIMENTS.md §Perf L3).
+        if let Some(batch) = batcher.drain_now() {
+            run_batch(&runtime, &exe, &weights, &input_shape, batch, simulated_s, &metrics);
+        }
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    exe: &crate::runtime::Executable,
+    weights: &[crate::runtime::client::DeviceTensor],
+    input_shape: &[usize],
+    batch: Vec<super::batcher::Pending<Job>>,
+    simulated_s: f64,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) {
+    let size = batch.len();
+    for pending in batch {
+        let job = pending.item;
+        let queue_s = job.submitted.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let result = (|| -> Result<InferenceResponse> {
+            // Only the input frame crosses host->device per request.
+            let input = runtime
+                .to_device(&HostTensor::new(input_shape.to_vec(), job.input.clone())?)?;
+            let mut args: Vec<&crate::runtime::client::DeviceTensor> =
+                Vec::with_capacity(1 + weights.len());
+            args.push(&input);
+            args.extend(weights.iter());
+            let out = exe.run_device(&args)?;
+            let execute_s = t0.elapsed().as_secs_f64();
+            Ok(InferenceResponse {
+                logits: out.data,
+                queue_s,
+                execute_s,
+                total_s: job.submitted.elapsed().as_secs_f64(),
+                simulated_photonic_s: simulated_s,
+            })
+        })();
+        if let Ok(resp) = &result {
+            let mut m = metrics.lock().unwrap();
+            m.queue.record(resp.queue_s);
+            m.execute.record(resp.execute_s);
+            m.end_to_end.record(resp.total_s);
+            m.completed += 1;
+        }
+        let _ = job.reply.send(result);
+    }
+    let mut m = metrics.lock().unwrap();
+    m.batches += 1;
+    m.batched_requests += size as u64;
+}

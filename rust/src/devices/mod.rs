@@ -1,0 +1,16 @@
+//! Photonic / analog device substrate: the paper characterized these with
+//! Lumerical + MultiSim; we model them analytically (DESIGN.md
+//! §Hardware-Adaptation) at the fidelity the system evaluation needs.
+
+pub mod laser;
+pub mod mrr;
+pub mod oxg;
+pub mod pca;
+pub mod photodetector;
+pub mod variation;
+
+pub use laser::LossBudget;
+pub use mrr::Mrr;
+pub use oxg::Oxg;
+pub use pca::{BitcountResult, Pca, PcaParams};
+pub use photodetector::Photodetector;

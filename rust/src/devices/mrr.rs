@@ -1,0 +1,180 @@
+//! Add-drop microring resonator (MRR) device model.
+//!
+//! The paper's OXG (Fig. 3) is a single add-drop MRR with two embedded
+//! PN-junction phase shifters (operand terminals) and an integrated
+//! microheater (thermal bias). The paper characterized it in Lumerical;
+//! here we model the through-port transmission analytically as a
+//! Lorentzian notch — the standard first-order approximation for a weakly
+//! coupled ring — which reproduces the spectral behaviour the system model
+//! needs: FWHM, extinction, resonance shifts from carrier injection and
+//! heating (DESIGN.md §Hardware-Adaptation).
+
+/// Lorentzian add-drop MRR.
+#[derive(Debug, Clone)]
+pub struct Mrr {
+    /// Fabrication-defined cold resonance wavelength (nm) — position η in
+    /// paper Fig. 3(b).
+    pub resonance_nm: f64,
+    /// Full width at half maximum of the resonance notch (nm). The paper's
+    /// OXG has FWHM = 0.35 nm (Section III-B).
+    pub fwhm_nm: f64,
+    /// Through-port extinction ratio at resonance (dB); >15 dB typical for
+    /// foundry add-drop rings.
+    pub extinction_db: f64,
+    /// Thermal tuning efficiency (nm of red-shift per mW of heater power).
+    pub thermal_nm_per_mw: f64,
+    /// Electro-refractive blue-shift per PN junction when driven with a
+    /// logic '1' (nm). Carrier injection blue-shifts the resonance.
+    pub pn_shift_nm: f64,
+    /// Current heater power (mW) — sets the programmed position κ.
+    pub heater_mw: f64,
+    /// Free spectral range (nm); paper assumes FSR = 50 nm.
+    pub fsr_nm: f64,
+}
+
+impl Default for Mrr {
+    fn default() -> Self {
+        // Constants from paper Section III-B / Table I and typical foundry
+        // values for a 10 µm-radius silicon ring.
+        Mrr {
+            resonance_nm: 1550.0,
+            fwhm_nm: 0.35,
+            extinction_db: 20.0,
+            thermal_nm_per_mw: 0.25,
+            pn_shift_nm: 0.35, // one FWHM per injected junction
+            heater_mw: 0.0,
+            fsr_nm: 50.0,
+        }
+    }
+}
+
+impl Mrr {
+    /// Effective resonance position given heater power and the number of
+    /// PN junctions driven high (each contributes a blue shift).
+    pub fn effective_resonance_nm(&self, junctions_high: u32) -> f64 {
+        self.resonance_nm + self.heater_mw * self.thermal_nm_per_mw
+            - junctions_high as f64 * self.pn_shift_nm
+    }
+
+    /// Through-port power transmission (linear, 0..1) at `lambda_nm` with
+    /// `junctions_high` PN junctions driven.
+    ///
+    /// Lorentzian notch: `T(λ) = 1 - (1 - T_min) / (1 + (2Δ/FWHM)^2)`.
+    pub fn through_transmission(&self, lambda_nm: f64, junctions_high: u32) -> f64 {
+        let t_min = 10f64.powf(-self.extinction_db / 10.0);
+        let delta = lambda_nm - self.effective_resonance_nm(junctions_high);
+        let x = 2.0 * delta / self.fwhm_nm;
+        1.0 - (1.0 - t_min) / (1.0 + x * x)
+    }
+
+    /// Drop-port power transmission (complement of the notch, minus loss).
+    pub fn drop_transmission(&self, lambda_nm: f64, junctions_high: u32) -> f64 {
+        let t_min = 10f64.powf(-self.extinction_db / 10.0);
+        let delta = lambda_nm - self.effective_resonance_nm(junctions_high);
+        let x = 2.0 * delta / self.fwhm_nm;
+        (1.0 - t_min) / (1.0 + x * x)
+    }
+
+    /// Program the heater so the *zero-drive* resonance sits `offset_nm`
+    /// away from `lambda_nm` (the κ position of paper Fig. 3(b)).
+    pub fn program_kappa(&mut self, lambda_nm: f64, offset_nm: f64) {
+        let target = lambda_nm + offset_nm;
+        let shift_needed = target - self.resonance_nm;
+        self.heater_mw = shift_needed / self.thermal_nm_per_mw;
+    }
+
+    /// Q factor implied by FWHM.
+    pub fn q_factor(&self) -> f64 {
+        self.resonance_nm / self.fwhm_nm
+    }
+
+    /// Cavity linewidth in frequency terms: Δf = c·FWHM/λ² (Hz).
+    pub fn linewidth_hz(&self) -> f64 {
+        let c = crate::util::units::SPEED_OF_LIGHT;
+        let lambda_m = crate::util::units::nm_to_m(self.resonance_nm);
+        let fwhm_m = crate::util::units::nm_to_m(self.fwhm_nm);
+        c * fwhm_m / (lambda_m * lambda_m)
+    }
+
+    /// Photon-lifetime-limited maximum modulation rate (GS/s).
+    ///
+    /// NRZ modulation of a ring is usable up to ≈ 1.15× its optical
+    /// linewidth before inter-symbol interference exceeds the ~1 dB
+    /// penalty the paper budgets (its IL_penalty term); with
+    /// FWHM = 0.35 nm this yields ≈ 50 GS/s — the paper's claimed limit.
+    pub fn max_datarate_gsps(&self) -> f64 {
+        1.15 * self.linewidth_hz() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn notch_at_resonance() {
+        let m = Mrr::default();
+        let t_on = m.through_transmission(1550.0, 0);
+        assert!(t_on < 0.02, "on-resonance through should be extinguished: {}", t_on);
+        let t_off = m.through_transmission(1550.0 + 5.0, 0);
+        assert!(t_off > 0.99, "far off-resonance should pass: {}", t_off);
+    }
+
+    #[test]
+    fn fwhm_definition_holds() {
+        let m = Mrr::default();
+        // At Δ = FWHM/2 the notch depth should be half of its max depth.
+        let t_half = m.through_transmission(1550.0 + m.fwhm_nm / 2.0, 0);
+        let t_min = m.through_transmission(1550.0, 0);
+        let depth_half = 1.0 - t_half;
+        let depth_max = 1.0 - t_min;
+        assert!((depth_half - depth_max / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drop_complements_through() {
+        let m = Mrr::default();
+        for d in [-1.0, -0.2, 0.0, 0.2, 1.0] {
+            let t = m.through_transmission(1550.0 + d, 0);
+            let dr = m.drop_transmission(1550.0 + d, 0);
+            assert!((t + dr - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pn_junctions_blue_shift() {
+        let m = Mrr::default();
+        assert!(m.effective_resonance_nm(1) < m.effective_resonance_nm(0));
+        assert!(
+            (m.effective_resonance_nm(0) - m.effective_resonance_nm(2)).abs()
+                - 2.0 * m.pn_shift_nm
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn heater_red_shifts_and_programs_kappa() {
+        let mut m = Mrr::default();
+        m.program_kappa(1550.0, 0.35);
+        assert!(m.heater_mw > 0.0);
+        assert!((m.effective_resonance_nm(0) - 1550.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_fwhm_supports_50gsps() {
+        // Paper Section III-B: OXG operates up to DR = 50 GS/s with
+        // FWHM = 0.35 nm. Our photon-lifetime bound must allow that.
+        let m = Mrr::default();
+        assert!(
+            m.max_datarate_gsps() >= 50.0,
+            "photon-lifetime limit {} GS/s should exceed 50",
+            m.max_datarate_gsps()
+        );
+    }
+
+    #[test]
+    fn q_factor_plausible() {
+        let q = Mrr::default().q_factor();
+        assert!((4000.0..6000.0).contains(&q), "Q = {}", q);
+    }
+}

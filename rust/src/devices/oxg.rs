@@ -1,0 +1,209 @@
+//! Optical XNOR Gate (OXG) — the paper's core device contribution.
+//!
+//! A *single* add-drop MRR with two PN-junction operand terminals
+//! (paper Fig. 3(a)). The microheater programs the zero-drive resonance to
+//! κ = λ_in + Δ_pn. Then:
+//!
+//! | (i, w) | junctions high | resonance      | through T(λ_in) | XNOR |
+//! |--------|----------------|----------------|-----------------|------|
+//! | (0,0)  | 0              | λ_in + Δ_pn    | high            | 1    |
+//! | (0,1)  | 1              | λ_in           | extinguished    | 0    |
+//! | (1,0)  | 1              | λ_in           | extinguished    | 0    |
+//! | (1,1)  | 2              | λ_in − Δ_pn    | high            | 1    |
+//!
+//! i.e. the through-port *optically computes XNOR* with one ring — prior
+//! works (ROBIN, LIGHTBULB) need two MRRs/microdisks per 1-bit XNOR.
+//! This module also provides the transient simulation used to regenerate
+//! paper Fig. 3(c) and to establish the max data rate.
+
+use super::mrr::Mrr;
+
+/// Paper Section III-B: measured OXG energy per 1-bit XNOR (nJ).
+pub const OXG_ENERGY_NJ: f64 = 0.032;
+/// Paper Section III-B: OXG area footprint (mm²).
+pub const OXG_AREA_MM2: f64 = 0.011;
+/// Paper Section III-B: validated max data rate (GS/s).
+pub const OXG_MAX_DR_GSPS: f64 = 50.0;
+
+/// A programmed single-MRR optical XNOR gate.
+#[derive(Debug, Clone)]
+pub struct Oxg {
+    pub mrr: Mrr,
+    /// The DWDM wavelength this gate operates on (nm).
+    pub lambda_in_nm: f64,
+    /// Logic decision threshold on through-port transmission.
+    pub threshold: f64,
+}
+
+impl Oxg {
+    /// Build an OXG on `lambda_in_nm` and program its heater so the
+    /// zero-drive resonance sits one PN shift red of the carrier.
+    pub fn new(lambda_in_nm: f64) -> Oxg {
+        let mut mrr = Mrr::default();
+        let offset = mrr.pn_shift_nm;
+        mrr.program_kappa(lambda_in_nm, offset);
+        Oxg { mrr, lambda_in_nm, threshold: 0.4 }
+    }
+
+    /// Steady-state through-port transmission for operand bits (i, w).
+    pub fn transmission(&self, i: bool, w: bool) -> f64 {
+        let junctions = i as u32 + w as u32;
+        self.mrr.through_transmission(self.lambda_in_nm, junctions)
+    }
+
+    /// Steady-state optical logic output.
+    pub fn xnor(&self, i: bool, w: bool) -> bool {
+        self.transmission(i, w) > self.threshold
+    }
+
+    /// Worst-case optical modulation depth between the '1' set
+    /// {(0,0),(1,1)} and the '0' set {(0,1),(1,0)} — the static eye.
+    pub fn static_eye(&self) -> f64 {
+        let ones = [self.transmission(false, false), self.transmission(true, true)];
+        let zeros = [self.transmission(false, true), self.transmission(true, false)];
+        let min_one = ones.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_zero = zeros.iter().cloned().fold(0.0, f64::max);
+        min_one - max_zero
+    }
+
+    /// Transient response: drive the two PN junctions with bit streams at
+    /// `dr_gsps` and return the through-port trace (`samples_per_bit`
+    /// points per symbol). The junction drive (and hence the resonance
+    /// position) follows a first-order exponential with time constant
+    /// `tau_dev_ps` — the carrier + photon-lifetime dynamics that limit
+    /// the gate's data rate. Regenerates paper Fig. 3(c).
+    pub fn transient(
+        &self,
+        bits_i: &[bool],
+        bits_w: &[bool],
+        dr_gsps: f64,
+        samples_per_bit: usize,
+        tau_dev_ps: f64,
+    ) -> Vec<f64> {
+        assert_eq!(bits_i.len(), bits_w.len());
+        assert!(samples_per_bit >= 1);
+        let period_ps = 1000.0 / dr_gsps;
+        let dt = period_ps / samples_per_bit as f64;
+        // State: effective junction drive levels, each relaxing toward its
+        // target bit with time constant tau_dev.
+        let mut drive_i = 0.0f64;
+        let mut drive_w = 0.0f64;
+        let alpha = 1.0 - (-dt / tau_dev_ps).exp();
+        let mut trace = Vec::with_capacity(bits_i.len() * samples_per_bit);
+        for (bi, bw) in bits_i.iter().zip(bits_w) {
+            let ti = if *bi { 1.0 } else { 0.0 };
+            let tw = if *bw { 1.0 } else { 0.0 };
+            for _ in 0..samples_per_bit {
+                drive_i += alpha * (ti - drive_i);
+                drive_w += alpha * (tw - drive_w);
+                // Fractional junction drive produces a fractional blue
+                // shift; evaluate the Lorentzian at the instantaneous
+                // resonance position.
+                let shift = (drive_i + drive_w) * self.mrr.pn_shift_nm;
+                let resonance =
+                    self.mrr.resonance_nm + self.mrr.heater_mw * self.mrr.thermal_nm_per_mw - shift;
+                let t_min = 10f64.powf(-self.mrr.extinction_db / 10.0);
+                let x = 2.0 * (self.lambda_in_nm - resonance) / self.mrr.fwhm_nm;
+                trace.push(1.0 - (1.0 - t_min) / (1.0 + x * x));
+            }
+        }
+        trace
+    }
+
+    /// Decode a transient trace back to logic bits by sampling at the last
+    /// sample of each symbol (worst-case settled point).
+    pub fn decode_trace(&self, trace: &[f64], samples_per_bit: usize) -> Vec<bool> {
+        trace
+            .chunks(samples_per_bit)
+            .map(|sym| sym[samples_per_bit - 1] > self.threshold)
+            .collect()
+    }
+
+    /// Max data rate (GS/s) at which a pseudo-random operand pattern still
+    /// decodes without error, given the device time constant.
+    pub fn max_error_free_dr(&self, tau_dev_ps: f64, seed: u64) -> f64 {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let bits_i: Vec<bool> = (0..256).map(|_| rng.bool()).collect();
+        let bits_w: Vec<bool> = (0..256).map(|_| rng.bool()).collect();
+        let want: Vec<bool> = bits_i.iter().zip(&bits_w).map(|(a, b)| a == b).collect();
+        let mut best = 0.0;
+        for dr in [1.0, 2.0, 3.0, 5.0, 10.0, 20.0, 30.0, 40.0, 50.0, 64.0, 80.0] {
+            let trace = self.transient(&bits_i, &bits_w, dr, 8, tau_dev_ps);
+            let got = self.decode_trace(&trace, 8);
+            if got == want {
+                best = dr;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_table_is_xnor() {
+        let g = Oxg::new(1550.0);
+        assert!(g.xnor(false, false));
+        assert!(!g.xnor(false, true));
+        assert!(!g.xnor(true, false));
+        assert!(g.xnor(true, true));
+    }
+
+    #[test]
+    fn static_eye_open() {
+        let g = Oxg::new(1550.0);
+        assert!(g.static_eye() > 0.5, "eye = {}", g.static_eye());
+    }
+
+    #[test]
+    fn transmission_levels_match_lorentzian() {
+        let g = Oxg::new(1550.0);
+        // (0,1): on resonance → deeply extinguished.
+        assert!(g.transmission(false, true) < 0.05);
+        // (0,0) and (1,1): one FWHM detuned → depth 1/5 → T = 0.8.
+        assert!((g.transmission(false, false) - 0.8).abs() < 0.02);
+        assert!((g.transmission(true, true) - 0.8).abs() < 0.02);
+    }
+
+    #[test]
+    fn transient_decodes_pattern_at_10gsps() {
+        // Regeneration of paper Fig. 3(c): 8-bit streams at 10 GS/s.
+        let g = Oxg::new(1550.0);
+        let bits_i = [false, true, false, true, true, false, true, false];
+        let bits_w = [false, false, true, true, false, true, true, false];
+        let trace = g.transient(&bits_i, &bits_w, 10.0, 16, 5.0);
+        assert_eq!(trace.len(), 8 * 16);
+        let got = g.decode_trace(&trace, 16);
+        let want: Vec<bool> = bits_i.iter().zip(&bits_w).map(|(a, b)| a == b).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn operates_at_50gsps_like_paper() {
+        // With the device time constant implied by the ring (ps-scale),
+        // the gate must decode error-free at 50 GS/s (paper claim).
+        let g = Oxg::new(1550.0);
+        let max = g.max_error_free_dr(3.0, 0x05EED);
+        assert!(max >= OXG_MAX_DR_GSPS, "max error-free DR = {} GS/s", max);
+    }
+
+    #[test]
+    fn slow_device_fails_high_dr() {
+        // Sanity: an artificially slow junction (1 ns) cannot do 50 GS/s.
+        let g = Oxg::new(1550.0);
+        let bits_i = [false, true, false, true];
+        let bits_w = [true, true, false, false];
+        let trace = g.transient(&bits_i, &bits_w, 50.0, 8, 1000.0);
+        let got = g.decode_trace(&trace, 8);
+        let want: Vec<bool> = bits_i.iter().zip(&bits_w).map(|(a, b)| a == b).collect();
+        assert_ne!(got, want);
+    }
+
+    #[test]
+    fn paper_constants_recorded() {
+        assert_eq!(OXG_ENERGY_NJ, 0.032);
+        assert_eq!(OXG_AREA_MM2, 0.011);
+    }
+}

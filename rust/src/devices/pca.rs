@@ -1,0 +1,250 @@
+//! Photo-Charge Accumulator (PCA) — the paper's bitcount contribution.
+//!
+//! Fig. 4 of the paper: a photodetector feeds one of two time-integrating
+//! receivers (TIR1/TIR2, selected by demux/mux). Each incident optical '1'
+//! deposits a charge packet on the active capacitor; the TIR output voltage
+//! grows linearly (δV = i·δt/C) until the dynamic range (5 V) saturates.
+//! The final voltage *is* the bitcount. A comparator against V_REF = 2.5 V
+//! produces the next layer's activation. While one capacitor discharges,
+//! the redundant TIR continues accumulating — hiding discharge latency.
+//!
+//! This module models the charge dynamics (used by the event-driven sim
+//! and the PCA-capacity analysis) with explicit dual-capacitor state.
+
+/// TIR/PCA circuit parameters (paper Section IV-A).
+#[derive(Debug, Clone)]
+pub struct PcaParams {
+    /// Integration capacitance (F); paper: C1 = C2 = 10 pF.
+    pub capacitance_f: f64,
+    /// TIR voltage gain; paper: 50.
+    pub gain: f64,
+    /// Usable TIR output dynamic range (V); paper: 5 V (0..5).
+    pub v_range: f64,
+    /// Comparator reference; paper Fig. 4: V_REF = 2.5 V.
+    pub v_ref: f64,
+    /// Time to discharge a capacitor before it can accumulate again (s).
+    /// ~5 RC of the discharge switch; hidden by the redundant TIR unless
+    /// both saturate back-to-back.
+    pub discharge_s: f64,
+}
+
+impl Default for PcaParams {
+    fn default() -> Self {
+        PcaParams {
+            capacitance_f: 10e-12,
+            gain: 50.0,
+            v_range: 5.0,
+            v_ref: 2.5,
+            discharge_s: 5e-9,
+        }
+    }
+}
+
+impl PcaParams {
+    /// Output voltage increment contributed by a single optical '1':
+    /// δV = gain · (i·δt)/C, where i is the PD current pulse and δt the
+    /// symbol period.
+    pub fn delta_v_per_one(&self, pd_current_a: f64, symbol_s: f64) -> f64 {
+        self.gain * pd_current_a * symbol_s / self.capacitance_f
+    }
+
+    /// Analytic accumulation capacity γ: how many '1's fit in the dynamic
+    /// range (first-principles counterpart of the paper's MultiSim-derived
+    /// Table II γ column; see analysis::pca_capacity for the calibrated
+    /// values).
+    pub fn gamma_analytic(&self, pd_current_a: f64, symbol_s: f64) -> u64 {
+        (self.v_range / self.delta_v_per_one(pd_current_a, symbol_s)).floor() as u64
+    }
+}
+
+/// Which TIR is currently integrating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActiveTir {
+    Tir1,
+    Tir2,
+}
+
+/// Runtime state of a PCA instance in the event-driven simulator.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    pub params: PcaParams,
+    /// Capacity in '1's (γ) for the operating point; counts are tracked in
+    /// integer '1's to keep the simulator exact.
+    pub gamma: u64,
+    active: ActiveTir,
+    /// Accumulated '1's on the active capacitor.
+    count: u64,
+    /// Simulation time when the *inactive* capacitor finishes discharging.
+    inactive_ready_at: f64,
+}
+
+/// Result of closing out an accumulation phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitcountResult {
+    /// Total '1's accumulated (the bitcount).
+    pub count: u64,
+    /// TIR output voltage representing the count.
+    pub voltage: f64,
+    /// Comparator output against V_REF (the BNN activation bit).
+    pub activation: bool,
+    /// True if the accumulation railed at γ (information lost).
+    pub saturated: bool,
+}
+
+impl Pca {
+    pub fn new(params: PcaParams, gamma: u64) -> Pca {
+        assert!(gamma > 0, "PCA capacity must be positive");
+        Pca { params, gamma, active: ActiveTir::Tir1, count: 0, inactive_ready_at: 0.0 }
+    }
+
+    pub fn active_tir(&self) -> ActiveTir {
+        self.active
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Headroom before saturation.
+    pub fn remaining(&self) -> u64 {
+        self.gamma - self.count
+    }
+
+    /// Accumulate the '1's of one XNOR vector slice (one PASS). Returns
+    /// `true` if the TIR railed (count clamped at γ — callers schedule a
+    /// readout *before* this in correct operation; paper §IV-C shows
+    /// S_max = 4608 < γ so it never rails for real workloads).
+    pub fn accumulate(&mut self, ones: u64) -> bool {
+        let new = self.count.saturating_add(ones);
+        if new >= self.gamma {
+            self.count = self.gamma;
+            true
+        } else {
+            self.count = new;
+            false
+        }
+    }
+
+    /// Voltage the active TIR currently outputs. Each '1' contributes an
+    /// equal quantum v_range/γ by the definition of γ.
+    pub fn voltage(&self) -> f64 {
+        self.count as f64 * self.params.v_range / self.gamma as f64
+    }
+
+    /// Finish the accumulation phase at simulation time `now_s`: read out
+    /// the bitcount, fire the comparator, swap to the redundant TIR and
+    /// start discharging the old capacitor.
+    ///
+    /// Returns the result plus any *stall* time (> 0 only when the
+    /// redundant capacitor has not finished discharging yet — i.e. two
+    /// readouts closer together than `discharge_s`).
+    pub fn readout(&mut self, now_s: f64) -> (BitcountResult, f64) {
+        let saturated = self.count == self.gamma;
+        let result = BitcountResult {
+            count: self.count,
+            voltage: self.voltage(),
+            activation: self.voltage() > self.params.v_ref,
+            saturated,
+        };
+        let stall = (self.inactive_ready_at - now_s).max(0.0);
+        // Swap: the old active capacitor begins discharging once we have
+        // (possibly after the stall) switched over.
+        self.inactive_ready_at = now_s + stall + self.params.discharge_s;
+        self.active = match self.active {
+            ActiveTir::Tir1 => ActiveTir::Tir2,
+            ActiveTir::Tir2 => ActiveTir::Tir1,
+        };
+        self.count = 0;
+        (result, stall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_v_matches_paper_equation() {
+        // δV = i·δt/C × gain: 5.6 µA over 20 ps on 10 pF with gain 50.
+        let p = PcaParams::default();
+        let dv = p.delta_v_per_one(5.6e-6, 20e-12);
+        let expect = 50.0 * 5.6e-6 * 20e-12 / 10e-12;
+        assert!((dv - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gamma_analytic_counts_dynamic_range() {
+        let p = PcaParams::default();
+        let dv = p.delta_v_per_one(5.6e-6, 20e-12);
+        let g = p.gamma_analytic(5.6e-6, 20e-12);
+        assert_eq!(g, (5.0 / dv).floor() as u64);
+    }
+
+    #[test]
+    fn accumulate_and_voltage_linear() {
+        let mut pca = Pca::new(PcaParams::default(), 1000);
+        assert!(!pca.accumulate(250));
+        assert!((pca.voltage() - 1.25).abs() < 1e-12);
+        assert!(!pca.accumulate(250));
+        assert!((pca.voltage() - 2.5).abs() < 1e-12);
+        assert_eq!(pca.remaining(), 500);
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        assert!(pca.accumulate(150));
+        assert_eq!(pca.count(), 100);
+        let (r, _) = pca.readout(0.0);
+        assert!(r.saturated);
+        assert_eq!(r.count, 100);
+    }
+
+    #[test]
+    fn comparator_at_vref() {
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        pca.accumulate(50); // exactly 2.5 V → NOT > V_REF
+        let (r, _) = pca.readout(0.0);
+        assert!(!r.activation);
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        pca.accumulate(51);
+        let (r, _) = pca.readout(0.0);
+        assert!(r.activation);
+    }
+
+    #[test]
+    fn dual_tir_hides_discharge() {
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        pca.accumulate(10);
+        let (_, stall) = pca.readout(0.0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(pca.active_tir(), ActiveTir::Tir2);
+        // Second readout long after discharge completes: still no stall.
+        pca.accumulate(10);
+        let (_, stall) = pca.readout(100e-9);
+        assert_eq!(stall, 0.0);
+    }
+
+    #[test]
+    fn back_to_back_readouts_stall() {
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        pca.accumulate(1);
+        let (_, s1) = pca.readout(0.0);
+        assert_eq!(s1, 0.0);
+        pca.accumulate(1);
+        // 1 ns later TIR1's capacitor (discharging until 5 ns) isn't ready.
+        let (_, s2) = pca.readout(1e-9);
+        assert!((s2 - 4e-9).abs() < 1e-15, "stall = {}", s2);
+        assert_eq!(pca.active_tir(), ActiveTir::Tir1);
+    }
+
+    #[test]
+    fn counts_reset_after_readout() {
+        let mut pca = Pca::new(PcaParams::default(), 100);
+        pca.accumulate(42);
+        let (r, _) = pca.readout(0.0);
+        assert_eq!(r.count, 42);
+        assert_eq!(pca.count(), 0);
+        assert_eq!(pca.voltage(), 0.0);
+    }
+}

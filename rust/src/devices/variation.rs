@@ -1,0 +1,183 @@
+//! Fabrication process-variation analysis for the OXG.
+//!
+//! ROBIN's headline concern (paper Section II-C: "uses heterogeneous MRRs
+//! to mitigate fabrication process variations") applies to any MRR-based
+//! design: die-level variation shifts each ring's cold resonance by
+//! O(100 pm) sigma. This module quantifies (a) how much uncorrected
+//! resonance offset the single-MRR OXG tolerates before its XNOR decision
+//! fails, and (b) the thermal trimming power needed to re-lock a varied
+//! population — the extension analysis DESIGN.md lists for the ablation
+//! suite.
+
+use super::mrr::Mrr;
+use super::oxg::Oxg;
+use crate::util::rng::Rng;
+
+/// Monte-Carlo result for one variation sigma.
+#[derive(Debug, Clone)]
+pub struct VariationResult {
+    pub sigma_nm: f64,
+    pub gates: usize,
+    /// Fraction of gates whose *uncorrected* truth table is wrong for at
+    /// least one operand combination.
+    pub failing_fraction: f64,
+    /// Worst-case static eye across the population (uncorrected).
+    pub worst_eye: f64,
+    /// Mean per-gate heater power (mW) to trim every gate back to its
+    /// programmed κ position (correction is always possible: heaters only
+    /// red-shift, so trimming targets the next FSR when needed).
+    pub mean_trim_power_mw: f64,
+}
+
+/// Apply a resonance offset to a fresh OXG *without* re-programming its
+/// heater — the uncorrected post-fabrication state.
+fn varied_gate(lambda_nm: f64, offset_nm: f64) -> Oxg {
+    let mut gate = Oxg::new(lambda_nm);
+    gate.mrr.resonance_nm += offset_nm;
+    gate
+}
+
+/// Heater pre-bias used for trimming (nm). Heaters only red-shift, so
+/// production designs bias every ring slightly red of target; variation of
+/// either sign is then corrected by adjusting around the bias instead of
+/// wrapping a whole FSR. 0.5 nm covers ±3σ of a 0.15 nm process.
+pub const TRIM_PREBIAS_NM: f64 = 0.5;
+
+/// Trim power for one gate: heater power to hold the varied resonance on
+/// its programmed position, given the pre-bias scheme above. Offsets
+/// beyond the pre-bias red-shift must wrap a full FSR (rare; the cost of
+/// that tail is exactly why ROBIN argues for variation-aware design).
+pub fn trim_power_mw(mrr: &Mrr, offset_nm: f64) -> f64 {
+    let shift_needed = if offset_nm <= TRIM_PREBIAS_NM {
+        TRIM_PREBIAS_NM - offset_nm
+    } else {
+        mrr.fsr_nm + TRIM_PREBIAS_NM - offset_nm
+    };
+    shift_needed / mrr.thermal_nm_per_mw
+}
+
+/// Monte-Carlo sweep of an OXG population under Gaussian resonance
+/// variation with standard deviation `sigma_nm`.
+pub fn monte_carlo(sigma_nm: f64, gates: usize, seed: u64) -> VariationResult {
+    assert!(gates > 0);
+    let mut rng = Rng::new(seed);
+    let mut failing = 0usize;
+    let mut worst_eye = f64::INFINITY;
+    let mut trim_sum_mw = 0.0;
+    for _ in 0..gates {
+        let offset = rng.normal() * sigma_nm;
+        let gate = varied_gate(1550.0, offset);
+        let ok = gate.xnor(false, false)
+            && !gate.xnor(false, true)
+            && !gate.xnor(true, false)
+            && gate.xnor(true, true);
+        if !ok {
+            failing += 1;
+        }
+        worst_eye = worst_eye.min(gate.static_eye());
+        trim_sum_mw += trim_power_mw(&gate.mrr, offset);
+    }
+    VariationResult {
+        sigma_nm,
+        gates,
+        failing_fraction: failing as f64 / gates as f64,
+        worst_eye,
+        mean_trim_power_mw: trim_sum_mw / gates as f64,
+    }
+}
+
+/// Tolerance: the largest deterministic offset that keeps the truth table
+/// intact without trimming (bisection over the offset magnitude).
+pub fn max_tolerated_offset_nm() -> f64 {
+    let ok = |off: f64| {
+        let g = varied_gate(1550.0, off);
+        g.xnor(false, false)
+            && !g.xnor(false, true)
+            && !g.xnor(true, false)
+            && g.xnor(true, true)
+    };
+    let mut lo = 0.0;
+    let mut hi = 2.0;
+    debug_assert!(ok(lo));
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if ok(mid) && ok(-mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_is_perfect() {
+        let r = monte_carlo(0.0, 200, 1);
+        assert_eq!(r.failing_fraction, 0.0);
+        assert!(r.worst_eye > 0.5);
+        // Trim power at zero variation = holding the pre-bias.
+        let hold = TRIM_PREBIAS_NM / Mrr::default().thermal_nm_per_mw;
+        assert!((r.mean_trim_power_mw - hold).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failures_grow_with_sigma() {
+        let small = monte_carlo(0.02, 500, 2);
+        let large = monte_carlo(0.5, 500, 2);
+        assert!(small.failing_fraction <= large.failing_fraction);
+        assert!(large.failing_fraction > 0.2, "{}", large.failing_fraction);
+        assert!(large.worst_eye < small.worst_eye);
+    }
+
+    #[test]
+    fn tolerance_is_a_fraction_of_fwhm() {
+        // The XNOR decision survives offsets up to roughly half a FWHM
+        // (0.35 nm) before a '0' level leaks above threshold.
+        let tol = max_tolerated_offset_nm();
+        assert!(
+            (0.05..0.35).contains(&tol),
+            "tolerated offset {} nm",
+            tol
+        );
+    }
+
+    #[test]
+    fn typical_foundry_sigma_needs_trimming_not_redesign() {
+        // sigma ≈ 0.1 nm (typical die-level): some gates fail untrimmed...
+        let r = monte_carlo(0.1, 1000, 3);
+        assert!(r.failing_fraction > 0.0);
+        // ...but trimming power stays sub-mW per gate on average versus
+        // the 275 mW/FSR full-range worst case (Table III TO tuning).
+        assert!(
+            r.mean_trim_power_mw < 275.0 * 0.05,
+            "mean trim {} mW",
+            r.mean_trim_power_mw
+        );
+    }
+
+    #[test]
+    fn trim_power_around_prebias() {
+        let mrr = Mrr::default();
+        // Blue-shifted ring: needs bias + |offset|.
+        let neg = trim_power_mw(&mrr, -0.1);
+        assert!((neg - 0.6 / mrr.thermal_nm_per_mw).abs() < 1e-12);
+        // Mildly red-shifted ring: less than the bias hold.
+        let pos = trim_power_mw(&mrr, 0.1);
+        assert!((pos - 0.4 / mrr.thermal_nm_per_mw).abs() < 1e-12);
+        // Beyond the pre-bias: full-FSR wrap (the expensive tail).
+        let tail = trim_power_mw(&mrr, 1.0);
+        assert!(tail > mrr.fsr_nm / mrr.thermal_nm_per_mw * 0.9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = monte_carlo(0.1, 300, 7);
+        let b = monte_carlo(0.1, 300, 7);
+        assert_eq!(a.failing_fraction, b.failing_fraction);
+        assert_eq!(a.worst_eye, b.worst_eye);
+    }
+}

@@ -1,0 +1,5 @@
+//! Power/energy accounting (paper Table III + photonic device energies).
+
+pub mod power;
+
+pub use power::{EnergyModel, Peripheral, Peripherals, PERIPHERAL_CLOCK_HZ};

@@ -1,0 +1,241 @@
+//! Functional (bit-exact) BNN engine in pure rust.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation — same im2col
+//! layout (`(ki·KW + kj)·C + c`), SAME zero padding, XNOR-bitcount GEMM,
+//! comparator activation, 2×2 binary max-pool — so the PJRT-executed AOT
+//! artifact can be cross-validated against an independent implementation
+//! (integration test `rust/tests/functional_vs_pjrt.rs`).
+//!
+//! This is also the reference the coordinator uses when asked to verify a
+//! served response.
+
+use crate::runtime::manifest::{Artifact, LayerDim};
+
+/// NHWC {0,1} feature map (N = 1).
+#[derive(Debug, Clone)]
+pub struct FeatureMap {
+    pub hw: usize,
+    pub c: usize,
+    /// Row-major (h, w, c), length hw·hw·c.
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn new(hw: usize, c: usize, data: Vec<f32>) -> FeatureMap {
+        assert_eq!(data.len(), hw * hw * c);
+        FeatureMap { hw, c, data }
+    }
+
+    fn at(&self, i: isize, j: isize, ch: usize) -> f32 {
+        // SAME zero padding: out-of-bounds reads are binary 0.
+        if i < 0 || j < 0 || i >= self.hw as isize || j >= self.hw as isize {
+            0.0
+        } else {
+            self.data[(i as usize * self.hw + j as usize) * self.c + ch]
+        }
+    }
+}
+
+/// Binarize a real-valued input into {0,1} (paper Eq. 1, {0,1} encoding).
+pub fn binarize01(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v >= 0.0 { 1.0 } else { 0.0 }).collect()
+}
+
+/// im2col with the python layout: row per output position, feature index
+/// (ki·k + kj)·C + c, SAME padding, given stride.
+pub fn im2col(map: &FeatureMap, kernel: usize, stride: usize) -> Vec<Vec<f32>> {
+    let pad = (kernel - 1) / 2;
+    let out_hw = (map.hw + 2 * pad - kernel) / stride + 1;
+    let mut rows = Vec::with_capacity(out_hw * out_hw);
+    for oi in 0..out_hw {
+        for oj in 0..out_hw {
+            let mut row = Vec::with_capacity(kernel * kernel * map.c);
+            for ki in 0..kernel {
+                for kj in 0..kernel {
+                    for ch in 0..map.c {
+                        let i = (oi * stride + ki) as isize - pad as isize;
+                        let j = (oj * stride + kj) as isize - pad as isize;
+                        row.push(map.at(i, j, ch));
+                    }
+                }
+            }
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// XNOR-bitcount VDP over {0,1} vectors (integer-exact in f32).
+pub fn xnor_popcount(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut count = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        if (*x > 0.5) == (*y > 0.5) {
+            count += 1;
+        }
+    }
+    count as f32
+}
+
+/// Comparator activation: z > 0.5·S (paper Section II-A).
+pub fn activation(z: f32, s: usize) -> f32 {
+    if z > 0.5 * s as f32 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// 2×2 stride-2 max pool of a binary map (max == OR).
+pub fn maxpool2(map: &FeatureMap) -> FeatureMap {
+    assert_eq!(map.hw % 2, 0, "pooling needs even hw");
+    let out_hw = map.hw / 2;
+    let mut data = vec![0.0f32; out_hw * out_hw * map.c];
+    for i in 0..out_hw {
+        for j in 0..out_hw {
+            for ch in 0..map.c {
+                let mut m = 0.0f32;
+                for di in 0..2 {
+                    for dj in 0..2 {
+                        m = m.max(map.at(
+                            (2 * i + di) as isize,
+                            (2 * j + dj) as isize,
+                            ch,
+                        ));
+                    }
+                }
+                data[(i * out_hw + j) * map.c + ch] = m;
+            }
+        }
+    }
+    FeatureMap::new(out_hw, map.c, data)
+}
+
+/// Full forward pass following the manifest's layer table. `weights[l]`
+/// is the (S, K) row-major weight matrix of layer l (conv layers then FC).
+pub fn forward(artifact: &Artifact, x: &[f32], weights: &[Vec<f32>]) -> Vec<f32> {
+    let input_hw = artifact.input_hw.expect("bnn artifact has input_hw");
+    let input_c = artifact.input_channels.expect("input_channels");
+    assert_eq!(x.len(), input_hw * input_hw * input_c);
+    assert_eq!(weights.len(), artifact.layers.len());
+
+    let mut map = FeatureMap::new(input_hw, input_c, binarize01(x));
+    let conv_layers: Vec<&LayerDim> =
+        artifact.layers.iter().filter(|l| l.kind == "conv").collect();
+    for (li, dim) in conv_layers.iter().enumerate() {
+        let w = &weights[li];
+        assert_eq!(w.len(), dim.s * dim.k, "layer {} weight size", li);
+        let rows = im2col(&map, 3, 1);
+        assert_eq!(rows.len(), dim.h, "layer {} H", li);
+        let mut out = vec![0.0f32; dim.h * dim.k];
+        for (r, row) in rows.iter().enumerate() {
+            for k in 0..dim.k {
+                // Weight matrix is (S, K) row-major: column k.
+                let mut count = 0u32;
+                for s in 0..dim.s {
+                    let a = row[s] > 0.5;
+                    let b = w[s * dim.k + k] > 0.5;
+                    if a == b {
+                        count += 1;
+                    }
+                }
+                out[r * dim.k + k] = activation(count as f32, dim.s);
+            }
+        }
+        map = FeatureMap::new(dim.fmap_hw, dim.k, out);
+        // The python model pools whenever the next layer's input is half
+        // the current fmap; infer pooling from the geometry chain.
+        let next_hw = if li + 1 < conv_layers.len() {
+            // conv is SAME/stride-1 → its input hw equals fmap_hw of its
+            // input map; derive from s = 9·C and h.
+            let next = conv_layers[li + 1];
+            (next.h as f64).sqrt() as usize
+        } else {
+            // Before FC: fc S = hw²·C defines the final hw.
+            let fc = artifact.layers.last().expect("fc layer");
+            let hw2 = fc.s / dim.k;
+            (hw2 as f64).sqrt() as usize
+        };
+        if next_hw * 2 == map.hw {
+            map = maxpool2(&map);
+        } else {
+            assert_eq!(next_hw, map.hw, "geometry chain broken at layer {}", li);
+        }
+    }
+    // Final FC: raw bitcount logits (no activation).
+    let fc = artifact.layers.last().expect("fc layer");
+    let w = &weights[weights.len() - 1];
+    assert_eq!(w.len(), fc.s * fc.k);
+    assert_eq!(map.data.len(), fc.s, "flattened features");
+    let mut logits = vec![0.0f32; fc.k];
+    for k in 0..fc.k {
+        let mut count = 0u32;
+        for s in 0..fc.s {
+            let a = map.data[s] > 0.5;
+            let b = w[s * fc.k + k] > 0.5;
+            if a == b {
+                count += 1;
+            }
+        }
+        logits[k] = count as f32;
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binarize_thresholds_at_zero() {
+        assert_eq!(binarize01(&[-1.0, -0.0, 0.0, 0.5]), vec![0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn xnor_popcount_cases() {
+        assert_eq!(xnor_popcount(&[1.0, 0.0], &[1.0, 0.0]), 2.0);
+        assert_eq!(xnor_popcount(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+        assert_eq!(xnor_popcount(&[1.0, 1.0, 0.0], &[1.0, 0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn activation_strict_majority() {
+        assert_eq!(activation(5.0, 10), 0.0); // exactly half → 0
+        assert_eq!(activation(6.0, 10), 1.0);
+    }
+
+    #[test]
+    fn im2col_layout_matches_python_convention() {
+        // 2×2 map, 1 channel, 3×3 kernel, SAME pad: center position sees
+        // the full map in kernel-position-major order.
+        let m = FeatureMap::new(2, 1, vec![1.0, 0.0, 0.0, 1.0]);
+        let rows = im2col(&m, 3, 1);
+        assert_eq!(rows.len(), 4);
+        // Output (0,0): kernel window centered there; (ki,kj) = (1,1) is
+        // the map's (0,0) = 1.0, (1,2) is (0,1) = 0.0, etc.
+        let r = &rows[0];
+        assert_eq!(r.len(), 9);
+        assert_eq!(r[4], 1.0); // center
+        assert_eq!(r[5], 0.0); // right of center
+        assert_eq!(r[8], 1.0); // bottom-right = map (1,1)
+        assert_eq!(r[0], 0.0); // top-left = padding
+    }
+
+    #[test]
+    fn maxpool_is_or() {
+        let m = FeatureMap::new(2, 1, vec![0.0, 1.0, 0.0, 0.0]);
+        let p = maxpool2(&m);
+        assert_eq!(p.hw, 1);
+        assert_eq!(p.data, vec![1.0]);
+        let z = FeatureMap::new(2, 1, vec![0.0; 4]);
+        assert_eq!(maxpool2(&z).data, vec![0.0]);
+    }
+
+    #[test]
+    fn padding_reads_zero() {
+        let m = FeatureMap::new(2, 1, vec![1.0; 4]);
+        assert_eq!(m.at(-1, 0, 0), 0.0);
+        assert_eq!(m.at(0, 2, 0), 0.0);
+        assert_eq!(m.at(1, 1, 0), 1.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Bit-exact functional BNN engine (independent of XLA) for
+//! cross-validating the AOT artifacts and served responses.
+
+pub mod bnn;
+
+pub use bnn::{activation, binarize01, forward, im2col, maxpool2, xnor_popcount, FeatureMap};

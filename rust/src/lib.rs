@@ -1,0 +1,33 @@
+//! # OXBNN — Optical XNOR-Bitcount BNN Accelerator (full-system reproduction)
+//!
+//! Rust implementation of the system described in *"An Optical
+//! XNOR-Bitcount Based Accelerator for Efficient Inference of Binary Neural
+//! Networks"* (Sri Vatsavai, Karempudi, Thakkar — IEEE ISQED 2023).
+//!
+//! Layers (see DESIGN.md):
+//! * [`util`] — offline substrates (JSON, CLI, PRNG, bench, quickcheck, ...)
+//! * [`runtime`] — PJRT client executing AOT-lowered JAX/Pallas artifacts
+//! * `devices` — photonic device models (OXG MRR, PCA, photodetector, laser)
+//! * `analysis` — scalability solver (paper Eqs. 3–5 → Table II)
+//! * `sim` — event-driven transaction-level simulation engine
+//! * `arch` — XPE / XPC / tile / accelerator architecture model
+//! * `mapping` — convolution flattening, slicing, scheduling (paper Fig. 5)
+//! * `baselines` — ROBIN and LIGHTBULB accelerator models
+//! * `workloads` — the four evaluated BNNs (layer geometry)
+//! * `energy` — power/energy accounting (paper Table III)
+//! * `functional` — integer reference BNN engine for cross-validation
+//! * `coordinator` — inference serving: router, batcher, scheduler
+
+pub mod analysis;
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod functional;
+pub mod mapping;
+pub mod sim;
+pub mod workloads;
+pub mod devices;
+pub mod runtime;
+pub mod util;

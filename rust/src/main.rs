@@ -1,0 +1,483 @@
+//! `oxbnn` — CLI front-end for the OXBNN reproduction.
+//!
+//! Subcommands:
+//!   table2      regenerate paper Table II (scalability analysis)
+//!   fps         regenerate paper Fig. 7(a)/(b) (FPS and FPS/W sweep)
+//!   simulate    run one accelerator × workload (analytic or event-driven)
+//!   oxg         OXG device study (truth table / transient, paper Fig. 3)
+//!   serve       start the inference server on AOT artifacts
+//!   info        dump accelerator configurations
+
+use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::coordinator::{InferenceRequest, Server, ServerConfig};
+use oxbnn::devices::oxg::Oxg;
+use oxbnn::mapping::scheduler::MappingPolicy;
+use oxbnn::util::bench::Table;
+use oxbnn::util::cli::{CliError, Command};
+use oxbnn::util::logging;
+use oxbnn::util::rng::Rng;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    logging::set_level(logging::Level::from_env());
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("table2") => cmd_table2(),
+        Some("fps") => cmd_fps(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("oxg") => cmd_oxg(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("dump-config") => cmd_dump_config(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{}'\n", other);
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "oxbnn — Optical XNOR-Bitcount BNN Accelerator (ISQED 2023 reproduction)\n\n\
+         USAGE: oxbnn <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+           table2     regenerate paper Table II (N, P_PD-opt, gamma, alpha per DR)\n\
+           fps        regenerate paper Fig. 7 FPS / FPS-per-W comparison\n\
+           simulate   one accelerator x workload run (--event-driven for TLM sim)\n\
+           oxg        OXG device study (paper Fig. 3 truth table + transient)\n\
+           serve      run the inference server over AOT artifacts\n\
+           info        dump the five evaluation accelerator configurations\n\
+           dump-config emit a built-in accelerator config as editable JSON\n\
+           sweep       CSV sweep of FPS over the Table II DR points x XPE counts\n\n\
+         Run any subcommand with --help for its options."
+    );
+}
+
+fn handle_cli(err: CliError) -> i32 {
+    match err {
+        CliError::Help(usage) => {
+            println!("{}", usage);
+            0
+        }
+        other => {
+            eprintln!("error: {}", other);
+            2
+        }
+    }
+}
+
+fn cmd_table2() -> i32 {
+    let solver = ScalabilitySolver::default();
+    let mut table = Table::new(&[
+        "DR (GS/s)",
+        "P_PD-opt (dBm)",
+        "N",
+        "gamma",
+        "alpha",
+        "paper N",
+        "paper gamma",
+    ]);
+    for (row, paper) in solver
+        .table2()
+        .iter()
+        .zip(oxbnn::analysis::PAPER_TABLE2.iter())
+    {
+        table.row(&[
+            format!("{}", row.dr_gsps),
+            format!("{:.2}", row.p_pd_opt_dbm),
+            format!("{}", row.n),
+            format!("{}", row.gamma),
+            format!("{}", row.alpha),
+            format!("{}", paper.2),
+            format!("{}", paper.3),
+        ]);
+    }
+    println!("Paper Table II — XPC size N and PCA capacity per data rate\n");
+    table.print();
+    0
+}
+
+fn cmd_fps(args: &[String]) -> i32 {
+    let cmd = Command::new("oxbnn fps", "Fig. 7 FPS and FPS/W sweep")
+        .flag("json", "emit JSON instead of tables");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let accels = AcceleratorConfig::evaluation_set();
+    let workloads = Workload::evaluation_set();
+
+    let mut fps_table = Table::new(&[
+        "accelerator",
+        "vgg_small",
+        "resnet18",
+        "mobilenet_v2",
+        "shufflenet_v2",
+        "gmean FPS",
+    ]);
+    let mut fpsw_table = fps_table_clone_headers();
+    let mut results = Vec::new();
+    for acc in &accels {
+        let perfs: Vec<_> = workloads.iter().map(|w| workload_perf(acc, w)).collect();
+        let fps: Vec<f64> = perfs.iter().map(|p| p.fps).collect();
+        let fpsw: Vec<f64> = perfs.iter().map(|p| p.fps_per_w).collect();
+        fps_table.row(&[
+            acc.name.clone(),
+            format!("{:.1}", fps[0]),
+            format!("{:.1}", fps[1]),
+            format!("{:.1}", fps[2]),
+            format!("{:.1}", fps[3]),
+            format!("{:.1}", gmean(&fps)),
+        ]);
+        fpsw_table.row(&[
+            acc.name.clone(),
+            format!("{:.2}", fpsw[0]),
+            format!("{:.2}", fpsw[1]),
+            format!("{:.2}", fpsw[2]),
+            format!("{:.2}", fpsw[3]),
+            format!("{:.2}", gmean(&fpsw)),
+        ]);
+        results.push((acc.name.clone(), fps, fpsw));
+    }
+    if parsed.has_flag("json") {
+        use oxbnn::util::json::Json;
+        let obj = Json::Obj(
+            results
+                .into_iter()
+                .map(|(name, fps, fpsw)| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("fps", Json::arr_f64(&fps)),
+                            ("fps_per_w", Json::arr_f64(&fpsw)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        println!("{}", obj.to_string_pretty());
+    } else {
+        println!("Fig. 7(a) — FPS (higher is better)\n");
+        fps_table.print();
+        println!("\nFig. 7(b) — FPS/W (higher is better)\n");
+        fpsw_table.print();
+    }
+    0
+}
+
+fn fps_table_clone_headers() -> Table {
+    Table::new(&[
+        "accelerator",
+        "vgg_small",
+        "resnet18",
+        "mobilenet_v2",
+        "shufflenet_v2",
+        "gmean FPS/W",
+    ])
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("oxbnn simulate", "simulate one accelerator x workload")
+        .opt("accelerator", "OXBNN_50", "OXBNN_5|OXBNN_50|ROBIN_EO|ROBIN_PO|LIGHTBULB")
+        .opt("workload", "vgg_small", "vgg_small|resnet18|mobilenet_v2|shufflenet_v2")
+        .opt("config", "", "JSON accelerator config file (overrides --accelerator)")
+        .opt("workload-file", "", "JSON workload geometry file (overrides --workload)")
+        .flag("event-driven", "run the per-layer event-driven simulator too")
+        .flag("layers", "print per-layer breakdown");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let acc = if !parsed.get("config").is_empty() {
+        match oxbnn::config::load(parsed.get("config")) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("config error: {}", e);
+                return 2;
+            }
+        }
+    } else {
+        match AcceleratorConfig::evaluation_set()
+            .into_iter()
+            .find(|a| a.name == parsed.get("accelerator"))
+        {
+            Some(a) => a,
+            None => {
+                eprintln!("unknown accelerator '{}'", parsed.get("accelerator"));
+                return 2;
+            }
+        }
+    };
+    let workload = if !parsed.get("workload-file").is_empty() {
+        match oxbnn::config::load_workload(parsed.get("workload-file")) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("workload config error: {}", e);
+                return 2;
+            }
+        }
+    } else {
+        match Workload::evaluation_set()
+            .into_iter()
+            .find(|w| w.name == parsed.get("workload"))
+        {
+            Some(w) => w,
+            None => {
+                eprintln!("unknown workload '{}'", parsed.get("workload"));
+                return 2;
+            }
+        }
+    };
+    let perf = workload_perf(&acc, &workload);
+    println!(
+        "{} on {}: frame latency {} → {:.1} FPS, avg power {:.2} W, {:.2} FPS/W",
+        perf.accelerator,
+        perf.workload,
+        oxbnn::util::units::fmt_time(perf.frame_latency_s),
+        perf.fps,
+        perf.avg_power_w,
+        perf.fps_per_w
+    );
+    if parsed.has_flag("layers") {
+        let mut t = Table::new(&["layer", "latency", "compute", "memory", "reduce", "passes"]);
+        for l in &perf.layers {
+            t.row(&[
+                l.name.clone(),
+                oxbnn::util::units::fmt_time(l.latency_s),
+                oxbnn::util::units::fmt_time(l.compute_s),
+                oxbnn::util::units::fmt_time(l.memory_s),
+                oxbnn::util::units::fmt_time(l.reduce_s),
+                format!("{}", l.passes),
+            ]);
+        }
+        t.print();
+    }
+    if parsed.has_flag("event-driven") {
+        // Event-driven validation on the first conv layer (full workloads
+        // are analytic; the TLM path is per-layer).
+        let layer = &workload.layers[0];
+        let policy = match acc.bitcount {
+            oxbnn::arch::BitcountMode::Pca { .. } => MappingPolicy::PcaLocal,
+            _ => MappingPolicy::SlicedSpread,
+        };
+        let stats = oxbnn::arch::simulate_layer(&acc, layer, policy);
+        println!(
+            "event-driven [{}]: {} events, latency {}, energy {:.3e} J",
+            layer.name,
+            stats.events_processed,
+            oxbnn::util::units::fmt_time(stats.end_time_s),
+            stats.total_energy_j()
+        );
+    }
+    0
+}
+
+fn cmd_oxg(args: &[String]) -> i32 {
+    let cmd = Command::new("oxbnn oxg", "OXG device study (paper Fig. 3)")
+        .opt("dr", "10", "data rate in GS/s for the transient")
+        .opt("bits", "8", "bits per operand stream");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let dr: f64 = match parsed.get_f64("dr") {
+        Ok(v) => v,
+        Err(e) => return handle_cli(e),
+    };
+    let nbits = parsed.get_usize("bits").unwrap_or(8);
+    let gate = Oxg::new(1550.0);
+    println!("OXG truth table (through-port transmission at λ_in):");
+    for (i, w) in [(false, false), (false, true), (true, false), (true, true)] {
+        println!(
+            "  i={} w={} → T={:.3} → XNOR bit {}",
+            i as u8,
+            w as u8,
+            gate.transmission(i, w),
+            gate.xnor(i, w) as u8
+        );
+    }
+    let mut rng = Rng::new(3);
+    let bits_i: Vec<bool> = (0..nbits).map(|_| rng.bool()).collect();
+    let bits_w: Vec<bool> = (0..nbits).map(|_| rng.bool()).collect();
+    let trace = gate.transient(&bits_i, &bits_w, dr, 16, 3.0);
+    let decoded = gate.decode_trace(&trace, 16);
+    println!("\ntransient at {} GS/s:", dr);
+    println!("  I      = {:?}", bits_i.iter().map(|b| *b as u8).collect::<Vec<_>>());
+    println!("  W      = {:?}", bits_w.iter().map(|b| *b as u8).collect::<Vec<_>>());
+    println!("  XNOR   = {:?}", decoded.iter().map(|b| *b as u8).collect::<Vec<_>>());
+    let ok = decoded
+        .iter()
+        .zip(bits_i.iter().zip(&bits_w))
+        .all(|(d, (a, b))| *d == (a == b));
+    println!("  decode {}", if ok { "OK" } else { "FAILED" });
+    (!ok) as i32
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("oxbnn serve", "inference server demo over AOT artifacts")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("model", "tiny", "model to serve (tiny|small|vgg_small)")
+        .opt("requests", "32", "number of requests to issue")
+        .opt("batch", "8", "max dynamic batch size");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let model = parsed.get("model").to_string();
+    let mut cfg = ServerConfig::new(parsed.get("artifacts"), &[&model]);
+    cfg.max_batch = parsed.get_usize("batch").unwrap_or(8);
+    let n = parsed.get_usize("requests").unwrap_or(32);
+    let server = match Server::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {:#}", e);
+            return 1;
+        }
+    };
+    let input_len = server.input_len(&model).unwrap();
+    let mut rng = Rng::new(0xF00D);
+    let t0 = std::time::Instant::now();
+    let mut ok = 0;
+    for _ in 0..n {
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        match server.infer_blocking(InferenceRequest { model: model.clone(), input }) {
+            Ok(resp) => {
+                ok += 1;
+                oxbnn::log_debug!("logits[0..3]={:?}", &resp.logits[..3.min(resp.logits.len())]);
+            }
+            Err(e) => eprintln!("request failed: {:#}", e),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "served {}/{} requests in {:.3}s ({:.1} req/s)",
+        ok,
+        n,
+        elapsed,
+        ok as f64 / elapsed
+    );
+    println!("{}", server.metrics.lock().unwrap().report());
+    server.shutdown();
+    (ok != n) as i32
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "oxbnn sweep",
+        "CSV sweep of FPS/FPS-per-W over DR and XPE count (for plotting)",
+    )
+    .opt("workload", "vgg_small", "workload name")
+    .opt("xpes", "100,250,500,1000,2000", "comma-separated XPE counts")
+    .opt("out", "-", "output CSV path ('-' for stdout)");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let Some(workload) = Workload::evaluation_set()
+        .into_iter()
+        .find(|w| w.name == parsed.get("workload"))
+    else {
+        eprintln!("unknown workload '{}'", parsed.get("workload"));
+        return 2;
+    };
+    let xpes: Vec<usize> = parsed
+        .get("xpes")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    if xpes.is_empty() {
+        eprintln!("--xpes must list at least one integer");
+        return 2;
+    }
+    let solver = ScalabilitySolver::default();
+    let mut csv = String::from("dr_gsps,n,gamma,xpe_total,fps,fps_per_w,static_w
+");
+    for row in solver.table2() {
+        for &x in &xpes {
+            let cfg = AcceleratorConfig {
+                name: format!("OXBNN_{}x{}", row.dr_gsps, x),
+                dr_gsps: row.dr_gsps,
+                n: row.n,
+                xpe_total: x,
+                bitcount: oxbnn::arch::BitcountMode::Pca { gamma: row.gamma },
+                ..AcceleratorConfig::oxbnn_50()
+            };
+            let p = workload_perf(&cfg, &workload);
+            csv.push_str(&format!(
+                "{},{},{},{},{:.1},{:.2},{:.2}
+",
+                row.dr_gsps, row.n, row.gamma, x, p.fps, p.fps_per_w, p.static_power_w
+            ));
+        }
+    }
+    if parsed.get("out") == "-" {
+        print!("{}", csv);
+    } else if let Err(e) = std::fs::write(parsed.get("out"), csv) {
+        eprintln!("write failed: {}", e);
+        return 1;
+    }
+    0
+}
+
+fn cmd_dump_config(args: &[String]) -> i32 {
+    let cmd = Command::new("oxbnn dump-config", "write a built-in accelerator config as JSON")
+        .opt("accelerator", "OXBNN_50", "which built-in to dump")
+        .opt("out", "-", "output path ('-' for stdout)");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let Some(cfg) = oxbnn::config::builtin(parsed.get("accelerator")) else {
+        eprintln!("unknown accelerator '{}'", parsed.get("accelerator"));
+        return 2;
+    };
+    let text = oxbnn::config::to_json(&cfg).to_string_pretty();
+    if parsed.get("out") == "-" {
+        print!("{}", text);
+    } else if let Err(e) = std::fs::write(parsed.get("out"), text) {
+        eprintln!("write failed: {}", e);
+        return 1;
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    let mut t = Table::new(&[
+        "accelerator",
+        "DR (GS/s)",
+        "N",
+        "XPEs",
+        "XPCs",
+        "tiles",
+        "bitcount",
+        "static W",
+        "area mm^2",
+    ]);
+    for a in AcceleratorConfig::evaluation_set() {
+        t.row(&[
+            a.name.clone(),
+            format!("{}", a.dr_gsps),
+            format!("{}", a.n),
+            format!("{}", a.xpe_total),
+            format!("{}", a.xpc_count()),
+            format!("{}", a.tile_count()),
+            match a.bitcount {
+                oxbnn::arch::BitcountMode::Pca { gamma } => format!("PCA(γ={})", gamma),
+                oxbnn::arch::BitcountMode::Reduction { .. } => "psum-reduction".into(),
+            },
+            format!("{:.2}", a.static_power_w()),
+            format!("{:.1}", a.area_mm2()),
+        ]);
+    }
+    t.print();
+    0
+}

@@ -1,0 +1,153 @@
+//! GEMM-layer geometry: every BNN layer (conv or FC) is processed as a
+//! binarized GEMM after flattening (paper Section II-B / Fig. 1).
+//!
+//! * A conv layer with C_in input channels, k×k kernels, K output channels
+//!   on an H_out×W_out output map becomes H = H_out·W_out input vectors of
+//!   size S = k·k·C_in against K weight vectors.
+//! * A depthwise conv becomes H = H_out·W_out·C vectors of size S = k·k
+//!   against one weight vector each (K = 1, grouped).
+//! * An FC layer is H = 1, S = inputs, K = outputs.
+
+/// One flattened GEMM layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmLayer {
+    pub name: String,
+    /// Number of input vectors (output spatial positions).
+    pub h: usize,
+    /// Vector size (bits per VDP).
+    pub s: usize,
+    /// Number of weight vectors (output channels).
+    pub k: usize,
+    /// True if a 2x2 pooling follows this layer (pooling-unit latency).
+    pub pool: bool,
+}
+
+impl GemmLayer {
+    pub fn new(name: impl Into<String>, h: usize, s: usize, k: usize) -> GemmLayer {
+        let layer = GemmLayer { name: name.into(), h, s, k, pool: false };
+        layer.validate();
+        layer
+    }
+
+    pub fn with_pool(mut self) -> GemmLayer {
+        self.pool = true;
+        self
+    }
+
+    pub fn validate(&self) {
+        assert!(self.h > 0 && self.s > 0 && self.k > 0, "degenerate layer {:?}", self);
+    }
+
+    /// Conv layer constructor from geometry.
+    pub fn conv(
+        name: impl Into<String>,
+        out_hw: usize,
+        in_channels: usize,
+        kernel: usize,
+        out_channels: usize,
+    ) -> GemmLayer {
+        GemmLayer::new(name, out_hw * out_hw, kernel * kernel * in_channels, out_channels)
+    }
+
+    /// Depthwise conv: one k×k filter per channel. Modeled as H·W·C tiny
+    /// VDPs of size k² (each output element is its own VDP with K = 1).
+    pub fn depthwise(
+        name: impl Into<String>,
+        out_hw: usize,
+        channels: usize,
+        kernel: usize,
+    ) -> GemmLayer {
+        GemmLayer::new(name, out_hw * out_hw * channels, kernel * kernel, 1)
+    }
+
+    /// Fully connected layer.
+    pub fn fc(name: impl Into<String>, inputs: usize, outputs: usize) -> GemmLayer {
+        GemmLayer::new(name, 1, inputs, outputs)
+    }
+
+    /// Total vector-dot-products in the layer.
+    pub fn vdp_count(&self) -> usize {
+        self.h * self.k
+    }
+
+    /// Slices per VDP for XPE size `n` (paper: ceil(S/N)).
+    pub fn slices(&self, n: usize) -> usize {
+        assert!(n > 0);
+        self.s.div_ceil(n)
+    }
+
+    /// Total XPE PASSes to process the layer.
+    pub fn total_passes(&self, n: usize) -> usize {
+        self.vdp_count() * self.slices(n)
+    }
+
+    /// Total 1-bit XNOR operations (equals MAC count of the original
+    /// conv/FC layer).
+    pub fn bitops(&self) -> u64 {
+        self.h as u64 * self.s as u64 * self.k as u64
+    }
+
+    /// Operand bits that must be staged from memory once per layer
+    /// (inputs H·S + weights S·K); on-chip broadcast covers reuse.
+    pub fn operand_bits(&self) -> u64 {
+        (self.h * self.s + self.s * self.k) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flattening_matches_paper_fig1() {
+        // Paper Fig. 1: 3x3 weight channel over 5x5 input, stride 1, no
+        // padding → 3x3 output? (the figure shows 4 windows for stride 2
+        // illustration; here we check the S = 9 flattening rule).
+        let l = GemmLayer::conv("c", 3, 1, 3, 1);
+        assert_eq!(l.s, 9);
+        assert_eq!(l.h, 9);
+        assert_eq!(l.vdp_count(), 9);
+    }
+
+    #[test]
+    fn slices_examples_from_fig5() {
+        // Fig. 5: S=15, N=9 → 2 slices; S=9, N=9 → 1 slice.
+        let l15 = GemmLayer::new("a", 2, 15, 1);
+        let l9 = GemmLayer::new("b", 2, 9, 1);
+        assert_eq!(l15.slices(9), 2);
+        assert_eq!(l9.slices(9), 1);
+    }
+
+    #[test]
+    fn totals() {
+        let l = GemmLayer::new("t", 4, 100, 8);
+        assert_eq!(l.vdp_count(), 32);
+        assert_eq!(l.slices(19), 6);
+        assert_eq!(l.total_passes(19), 192);
+        assert_eq!(l.bitops(), 3200);
+        assert_eq!(l.operand_bits(), 400 + 800);
+    }
+
+    #[test]
+    fn depthwise_geometry() {
+        let l = GemmLayer::depthwise("dw", 14, 96, 3);
+        assert_eq!(l.h, 14 * 14 * 96);
+        assert_eq!(l.s, 9);
+        assert_eq!(l.k, 1);
+        // Bitops = positions × 9 MACs.
+        assert_eq!(l.bitops(), (14 * 14 * 96 * 9) as u64);
+    }
+
+    #[test]
+    fn fc_geometry() {
+        let l = GemmLayer::fc("fc", 512, 1000);
+        assert_eq!((l.h, l.s, l.k), (1, 512, 1000));
+        assert_eq!(l.vdp_count(), 1000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_rejected() {
+        GemmLayer::new("bad", 0, 1, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Convolution→GEMM flattening, vector slicing and XPE scheduling
+//! (paper Section II-B and Section IV-B / Fig. 5).
+
+pub mod layer;
+pub mod scheduler;
+pub mod slicing;
+
+pub use layer::GemmLayer;
+pub use scheduler::{MappingPolicy, Schedule, ScheduledPass};
+pub use slicing::{slice_sizes, slice_xnor_popcount, slices, Slice};

@@ -1,0 +1,251 @@
+//! VDP-to-XPE scheduling policies (paper Fig. 5).
+//!
+//! * [`MappingPolicy::PcaLocal`] — OXBNN's mapping (Fig. 5(b)): *all*
+//!   slices of a VDP go to the *same* XPE in consecutive PASSes, so the
+//!   PCA accumulates the partial bitcounts in the analog domain and no
+//!   psum ever leaves the XPE.
+//! * [`MappingPolicy::SlicedSpread`] — prior works' mapping (Fig. 5(a),
+//!   ROBIN/LIGHTBULB): the slices of a VDP are spread across the XPEs of
+//!   an XPC within one PASS; every PASS therefore emits psums that must be
+//!   stored and combined by a psum reduction network.
+
+use super::layer::GemmLayer;
+use crate::sim::event::{VdpId, XpeId};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingPolicy {
+    PcaLocal,
+    SlicedSpread,
+}
+
+/// One scheduled PASS on one XPE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledPass {
+    pub vdp: VdpId,
+    pub slice_idx: usize,
+    /// Bits in this slice (N or the tail remainder).
+    pub slice_len: usize,
+}
+
+/// A complete schedule: per-XPE FIFO queues of passes.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub policy: MappingPolicy,
+    pub n: usize,
+    /// queues[xpc][xpe] = ordered passes.
+    pub queues: Vec<Vec<Vec<ScheduledPass>>>,
+}
+
+impl Schedule {
+    /// Build a schedule for `layer` on an accelerator with `xpc_count`
+    /// XPCs of `m` XPEs each, XPE size `n`.
+    pub fn plan(
+        layer: &GemmLayer,
+        policy: MappingPolicy,
+        n: usize,
+        m: usize,
+        xpc_count: usize,
+    ) -> Schedule {
+        assert!(n > 0 && m > 0 && xpc_count > 0);
+        let total_xpes = m * xpc_count;
+        let slice_lens = super::slicing::slice_sizes(layer.s, n);
+        let slices = slice_lens.len();
+        let mut queues = vec![vec![Vec::new(); m]; xpc_count];
+        match policy {
+            MappingPolicy::PcaLocal => {
+                // VDP v → XPE (v mod total); its slices run back-to-back.
+                for v in 0..layer.vdp_count() {
+                    let flat = v % total_xpes;
+                    let (xpc, xpe) = (flat / m, flat % m);
+                    for (j, &len) in slice_lens.iter().enumerate() {
+                        queues[xpc][xpe].push(ScheduledPass {
+                            vdp: VdpId(v),
+                            slice_idx: j,
+                            slice_len: len,
+                        });
+                    }
+                }
+            }
+            MappingPolicy::SlicedSpread => {
+                // Global slice id g = v·slices + j → XPE (g mod total).
+                // Slices of one VDP land on adjacent XPEs in the same
+                // PASS round (Fig. 5(a)).
+                for v in 0..layer.vdp_count() {
+                    for j in 0..slices {
+                        let g = v * slices + j;
+                        let flat = g % total_xpes;
+                        let (xpc, xpe) = (flat / m, flat % m);
+                        queues[xpc][xpe].push(ScheduledPass {
+                            vdp: VdpId(v),
+                            slice_idx: j,
+                            slice_len: slice_lens[j],
+                        });
+                    }
+                }
+            }
+        }
+        Schedule { policy, n, queues }
+    }
+
+    /// Total passes across all XPEs.
+    pub fn total_passes(&self) -> usize {
+        self.queues
+            .iter()
+            .flat_map(|xpc| xpc.iter().map(|q| q.len()))
+            .sum()
+    }
+
+    /// Longest single-XPE queue — the critical path in PASS counts.
+    pub fn max_queue_len(&self) -> usize {
+        self.queues
+            .iter()
+            .flat_map(|xpc| xpc.iter().map(|q| q.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Iterate (XpeId, &queue).
+    pub fn iter_queues(&self) -> impl Iterator<Item = (XpeId, &Vec<ScheduledPass>)> {
+        self.queues.iter().enumerate().flat_map(|(c, xpes)| {
+            xpes.iter()
+                .enumerate()
+                .map(move |(e, q)| (XpeId { xpc: c, xpe: e }, q))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+    use std::collections::BTreeMap;
+
+    fn fig5_layer(s: usize) -> GemmLayer {
+        // Fig. 5: H=2 vectors, some S, one output channel each modeled as
+        // H=2, K=1.
+        GemmLayer::new("fig5", 2, s, 1)
+    }
+
+    #[test]
+    fn fig5b_pca_local_keeps_vdp_on_one_xpe() {
+        // M=2, H=2, N=9, S=15: OXBNN maps both slices of vector 1 to
+        // XPE 1 and both slices of vector 2 to XPE 2.
+        let sched = Schedule::plan(&fig5_layer(15), MappingPolicy::PcaLocal, 9, 2, 1);
+        let q0 = &sched.queues[0][0];
+        let q1 = &sched.queues[0][1];
+        assert_eq!(q0.len(), 2);
+        assert_eq!(q1.len(), 2);
+        assert!(q0.iter().all(|p| p.vdp == VdpId(0)));
+        assert!(q1.iter().all(|p| p.vdp == VdpId(1)));
+        // Slices in order 0 then 1 (PASS 1, PASS 2).
+        assert_eq!(q0[0].slice_idx, 0);
+        assert_eq!(q0[1].slice_idx, 1);
+    }
+
+    #[test]
+    fn fig5a_sliced_spread_splits_vdp_across_xpes() {
+        // Prior-work mapping: PASS 1 carries slice 1 and 2 of vector 1 on
+        // XPE 1 and XPE 2 (both psums of VDP 0 in the same round).
+        let sched = Schedule::plan(&fig5_layer(15), MappingPolicy::SlicedSpread, 9, 2, 1);
+        let q0 = &sched.queues[0][0];
+        let q1 = &sched.queues[0][1];
+        assert_eq!(q0[0], ScheduledPass { vdp: VdpId(0), slice_idx: 0, slice_len: 9 });
+        assert_eq!(q1[0], ScheduledPass { vdp: VdpId(0), slice_idx: 1, slice_len: 6 });
+        assert_eq!(q0[1].vdp, VdpId(1));
+        assert_eq!(q1[1].vdp, VdpId(1));
+    }
+
+    #[test]
+    fn fig5c_single_slice_identical_mappings() {
+        // S=9=N: one slice per VDP — both policies produce one pass per
+        // XPE and the same assignment.
+        let a = Schedule::plan(&fig5_layer(9), MappingPolicy::PcaLocal, 9, 2, 1);
+        let b = Schedule::plan(&fig5_layer(9), MappingPolicy::SlicedSpread, 9, 2, 1);
+        assert_eq!(a.queues, b.queues);
+        assert_eq!(a.total_passes(), 2);
+    }
+
+    #[test]
+    fn prop_every_slice_scheduled_exactly_once() {
+        forall(Config::default().cases(60), |g| {
+            let layer = GemmLayer::new(
+                "p",
+                g.usize_in(1, 20),
+                g.usize_in(1, 300),
+                g.usize_in(1, 12),
+            );
+            let n = g.usize_in(1, 64);
+            let m = g.usize_in(1, 8);
+            let xpcs = g.usize_in(1, 4);
+            let policy = if g.bool() {
+                MappingPolicy::PcaLocal
+            } else {
+                MappingPolicy::SlicedSpread
+            };
+            let sched = Schedule::plan(&layer, policy, n, m, xpcs);
+            let expect = layer.total_passes(n);
+            prop_assert_eq(sched.total_passes(), expect)?;
+            // Each (vdp, slice) appears exactly once.
+            let mut seen: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+            for (_, q) in sched.iter_queues() {
+                for p in q {
+                    *seen.entry((p.vdp.0, p.slice_idx)).or_insert(0) += 1;
+                }
+            }
+            prop_assert(seen.values().all(|&c| c == 1), "duplicate or missing slice")?;
+            prop_assert_eq(seen.len(), expect)
+        });
+    }
+
+    #[test]
+    fn prop_pca_local_vdp_never_splits() {
+        forall(Config::default().cases(60), |g| {
+            let layer = GemmLayer::new(
+                "p",
+                g.usize_in(1, 16),
+                g.usize_in(1, 256),
+                g.usize_in(1, 8),
+            );
+            let n = g.usize_in(1, 48);
+            let m = g.usize_in(1, 8);
+            let xpcs = g.usize_in(1, 3);
+            let sched = Schedule::plan(&layer, MappingPolicy::PcaLocal, n, m, xpcs);
+            let mut owner: BTreeMap<usize, XpeId> = BTreeMap::new();
+            for (id, q) in sched.iter_queues() {
+                for p in q {
+                    if let Some(prev) = owner.insert(p.vdp.0, id) {
+                        prop_assert(prev == id, "VDP split across XPEs under PcaLocal")?;
+                    }
+                }
+            }
+            // Slices of each VDP must be queued in ascending order.
+            for (_, q) in sched.iter_queues() {
+                let mut last: BTreeMap<usize, usize> = BTreeMap::new();
+                for p in q {
+                    if let Some(prev) = last.insert(p.vdp.0, p.slice_idx) {
+                        prop_assert(p.slice_idx == prev + 1, "slices out of order")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn load_balance_within_one_pass() {
+        let layer = GemmLayer::new("b", 64, 512, 16);
+        for policy in [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread] {
+            let sched = Schedule::plan(&layer, policy, 19, 19, 3);
+            let total = sched.total_passes();
+            let xpes = 19 * 3;
+            let ideal = total.div_ceil(xpes);
+            assert!(
+                sched.max_queue_len() <= ideal + layer.slices(19),
+                "{:?}: max {} vs ideal {}",
+                policy,
+                sched.max_queue_len(),
+                ideal
+            );
+        }
+    }
+}

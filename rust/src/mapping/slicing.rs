@@ -1,0 +1,146 @@
+//! Vector slicing: decompose size-S binarized vectors into N-bit slices
+//! for the XPE's OXG array (paper Section II-B, Fig. 1(c)).
+
+/// Sizes of the slices of an S-bit vector on an N-wide XPE: all full N
+/// except a possibly-smaller tail.
+pub fn slice_sizes(s: usize, n: usize) -> Vec<usize> {
+    assert!(s > 0 && n > 0);
+    let full = s / n;
+    let rem = s % n;
+    let mut out = vec![n; full];
+    if rem > 0 {
+        out.push(rem);
+    }
+    out
+}
+
+/// A slice descriptor: which bits [start, start+len) of the flat vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slice {
+    pub index: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Enumerate slice descriptors for an S-bit vector on an N-wide XPE.
+pub fn slices(s: usize, n: usize) -> Vec<Slice> {
+    slice_sizes(s, n)
+        .into_iter()
+        .scan(0usize, |start, len| {
+            let sl = Slice { index: 0, start: *start, len };
+            *start += len;
+            Some(sl)
+        })
+        .enumerate()
+        .map(|(i, mut sl)| {
+            sl.index = i;
+            sl
+        })
+        .collect()
+}
+
+/// XNOR-bitcount of one slice pair over {0,1} bit vectors — the exact
+/// integer arithmetic an XPE performs in one PASS. Used by the event sim
+/// and the functional engine.
+pub fn slice_xnor_popcount(input: &[f32], weight: &[f32]) -> u64 {
+    assert_eq!(input.len(), weight.len());
+    input
+        .iter()
+        .zip(weight)
+        .filter(|(a, b)| (**a > 0.5) == (**b > 0.5))
+        .count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+
+    #[test]
+    fn fig5_case1_s15_n9() {
+        // Paper Fig. 1(c)/5: S=15, N=9 → slices of 9 and 6.
+        assert_eq!(slice_sizes(15, 9), vec![9, 6]);
+        let sl = slices(15, 9);
+        assert_eq!(sl.len(), 2);
+        assert_eq!((sl[0].start, sl[0].len), (0, 9));
+        assert_eq!((sl[1].start, sl[1].len), (9, 6));
+    }
+
+    #[test]
+    fn fig1_case_s9_n5() {
+        // Paper Fig. 1(c): S=9, N=5 → slices of 5 and 4.
+        assert_eq!(slice_sizes(9, 5), vec![5, 4]);
+    }
+
+    #[test]
+    fn exact_fit_no_tail() {
+        assert_eq!(slice_sizes(27, 9), vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn slice_xnor_counts_agreements() {
+        let a = [1.0, 0.0, 1.0, 0.0];
+        let b = [1.0, 1.0, 0.0, 0.0];
+        assert_eq!(slice_xnor_popcount(&a, &b), 2);
+        assert_eq!(slice_xnor_popcount(&a, &a), 4);
+        let inv: Vec<f32> = a.iter().map(|x| 1.0 - x).collect();
+        assert_eq!(slice_xnor_popcount(&a, &inv), 0);
+    }
+
+    #[test]
+    fn prop_slices_cover_exactly() {
+        forall(Config::default().cases(200), |g| {
+            let s = g.usize_in(1, 8192);
+            let n = g.usize_in(1, 128);
+            let sizes = slice_sizes(s, n);
+            prop_assert_eq(sizes.iter().sum::<usize>(), s)?;
+            prop_assert_eq(sizes.len(), s.div_ceil(n))?;
+            prop_assert(sizes.iter().all(|&x| x >= 1 && x <= n), "slice size bounds")?;
+            // Only the tail may be short.
+            prop_assert(
+                sizes[..sizes.len() - 1].iter().all(|&x| x == n),
+                "non-tail slices full",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_slice_descriptors_contiguous() {
+        forall(Config::default().cases(200), |g| {
+            let s = g.usize_in(1, 4096);
+            let n = g.usize_in(1, 96);
+            let ds = slices(s, n);
+            let mut pos = 0;
+            for (i, d) in ds.iter().enumerate() {
+                prop_assert_eq(d.index, i)?;
+                prop_assert_eq(d.start, pos)?;
+                pos += d.len;
+            }
+            prop_assert_eq(pos, s)
+        });
+    }
+
+    #[test]
+    fn prop_sliced_popcount_equals_whole() {
+        // Summing per-slice bitcounts equals the whole-vector bitcount —
+        // the invariant that makes the PCA's psum-free accumulation valid
+        // (paper Section IV-B, Fig. 5(b)).
+        forall(Config::default().cases(100), |g| {
+            let s = g.usize_in(1, 300);
+            let n = g.usize_in(1, 64);
+            let a = g.bits(s);
+            let b = g.bits(s);
+            let whole = slice_xnor_popcount(&a, &b);
+            let sum: u64 = slices(s, n)
+                .iter()
+                .map(|sl| {
+                    slice_xnor_popcount(
+                        &a[sl.start..sl.start + sl.len],
+                        &b[sl.start..sl.start + sl.len],
+                    )
+                })
+                .sum();
+            prop_assert_eq(sum, whole)
+        });
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT execution client: load AOT HLO-text artifacts, compile them once on
+//! the CPU PJRT backend, and execute them from the rust hot path.
+//!
+//! Python is never on the request path — the artifacts were produced once
+//! by `make artifacts`; this module is the only component that touches XLA
+//! at runtime.  Pattern follows /opt/xla-example/load_hlo (HLO *text*
+//! interchange; `return_tuple=True` on the python side so results unwrap
+//! with `to_tuple1`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Artifact;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} implies {} elements, got {}", shape, n, data.len());
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+/// Wraps the process-wide PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A tensor resident on the PJRT device (pre-staged weights stay here so
+/// the hot path never re-converts them — EXPERIMENTS.md §Perf L3).
+pub struct DeviceTensor {
+    buffer: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+}
+
+/// One compiled executable (an AOT artifact after `client.compile`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+    /// Wall-clock spent in compile (for EXPERIMENTS.md §Perf accounting).
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn load_hlo_text(
+        &self,
+        path: impl AsRef<Path>,
+        name: &str,
+        arg_shapes: Vec<Vec<usize>>,
+        output_shape: Vec<usize>,
+    ) -> Result<Executable> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+            arg_shapes,
+            output_shape,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Upload a host tensor to the device once; reuse across executes.
+    pub fn to_device(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let buffer = self
+            .client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .context("host->device transfer")?;
+        Ok(DeviceTensor { buffer, shape: t.shape.clone() })
+    }
+
+    /// Load an artifact described by the manifest.
+    pub fn load_artifact(&self, artifact: &Artifact) -> Result<Executable> {
+        self.load_hlo_text(
+            &artifact.file,
+            &artifact.name,
+            artifact.args.iter().map(|a| a.shape.clone()).collect(),
+            artifact.output_shape.clone(),
+        )
+    }
+}
+
+impl Executable {
+    /// Execute with positional f32 tensors; returns the single (tupled)
+    /// output as a host tensor.
+    pub fn run(&self, args: &[HostTensor]) -> Result<HostTensor> {
+        if args.len() != self.arg_shapes.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.arg_shapes.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, want)) in args.iter().zip(&self.arg_shapes).enumerate() {
+            if &arg.shape != want {
+                bail!(
+                    "{}: arg {} shape {:?} != manifest {:?}",
+                    self.name,
+                    i,
+                    arg.shape,
+                    want
+                );
+            }
+            let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&arg.data)
+                .reshape(&dims)
+                .with_context(|| format!("{}: reshaping arg {}", self.name, i))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // python lowers with return_tuple=True → single-element tuple.
+        let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
+        let data = out.to_vec::<f32>().context("reading f32 result")?;
+        let expect: usize = self.output_shape.iter().product();
+        if data.len() != expect {
+            bail!(
+                "{}: output has {} elements, manifest says {:?}",
+                self.name,
+                data.len(),
+                self.output_shape
+            );
+        }
+        Ok(HostTensor { shape: self.output_shape.clone(), data })
+    }
+}
+
+impl Executable {
+    /// Execute with device-resident arguments (zero host conversion on
+    /// the hot path). Shapes are checked against the manifest.
+    pub fn run_device(&self, args: &[&DeviceTensor]) -> Result<HostTensor> {
+        if args.len() != self.arg_shapes.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.arg_shapes.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, want)) in args.iter().zip(&self.arg_shapes).enumerate() {
+            if &arg.shape != want {
+                bail!(
+                    "{}: device arg {} shape {:?} != manifest {:?}",
+                    self.name,
+                    i,
+                    arg.shape,
+                    want
+                );
+            }
+        }
+        let buffers: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buffer).collect();
+        let result = self
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {} (device args)", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
+        let data = out.to_vec::<f32>().context("reading f32 result")?;
+        let expect: usize = self.output_shape.iter().product();
+        if data.len() != expect {
+            bail!(
+                "{}: output has {} elements, manifest says {:?}",
+                self.name,
+                data.len(),
+                self.output_shape
+            );
+        }
+        Ok(HostTensor { shape: self.output_shape.clone(), data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.at2(0, 1), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(HostTensor::zeros(vec![3, 4]).element_count(), 12);
+    }
+}

@@ -1,0 +1,271 @@
+//! Parser for `artifacts/manifest.json` emitted by `python/compile/aot.py`.
+//!
+//! The manifest is the contract between the build-time python layer and the
+//! runtime rust layer: artifact file names, positional argument shapes, the
+//! output shape, and (for BNN graphs) the per-layer GEMM geometry that the
+//! analytic simulator consumes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One positional argument of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Geometry of one XNOR-GEMM layer (mirrors ModelSpec.layer_dims()).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDim {
+    pub kind: String, // "conv" | "fc"
+    pub h: usize,
+    pub s: usize,
+    pub k: usize,
+    pub fmap_hw: usize,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String, // "xnor_gemm" | "bnn_forward"
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub output_shape: Vec<usize>,
+    pub layers: Vec<LayerDim>,
+    pub model: Option<String>,
+    pub input_hw: Option<usize>,
+    pub input_channels: Option<usize>,
+    pub num_classes: Option<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("{0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest schema error: {0}")]
+    Schema(String),
+}
+
+fn schema(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Schema(msg.into())
+}
+
+fn parse_shape(j: &Json, ctx: &str) -> Result<Vec<usize>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| schema(format!("{}: shape must be an array", ctx)))?
+        .iter()
+        .map(|d| {
+            d.as_usize()
+                .ok_or_else(|| schema(format!("{}: non-integer dim", ctx)))
+        })
+        .collect()
+}
+
+fn parse_arg(j: &Json, ctx: &str) -> Result<ArgSpec, ManifestError> {
+    Ok(ArgSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema(format!("{}: arg missing name", ctx)))?
+            .to_string(),
+        shape: parse_shape(
+            j.get("shape")
+                .ok_or_else(|| schema(format!("{}: arg missing shape", ctx)))?,
+            ctx,
+        )?,
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string(),
+    })
+}
+
+fn parse_layer(j: &Json, ctx: &str) -> Result<LayerDim, ManifestError> {
+    let field = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| schema(format!("{}: layer missing '{}'", ctx, k)))
+    };
+    Ok(LayerDim {
+        kind: j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| schema(format!("{}: layer missing kind", ctx)))?
+            .to_string(),
+        h: field("h")?,
+        s: field("s")?,
+        k: field("k")?,
+        fmap_hw: field("fmap_hw")?,
+    })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| ManifestError::Io { path: path.clone(), source })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir is where artifact files live).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let j = Json::parse(text)?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(schema("format must be 'hlo-text'"));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| schema("missing 'artifacts' object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let ctx = format!("artifact '{}'", name);
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema(format!("{}: missing file", ctx)))?;
+            let args = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| schema(format!("{}: missing args", ctx)))?
+                .iter()
+                .map(|arg| parse_arg(arg, &ctx))
+                .collect::<Result<Vec<_>, _>>()?;
+            let output_shape = parse_shape(
+                a.path(&["output", "shape"])
+                    .ok_or_else(|| schema(format!("{}: missing output.shape", ctx)))?,
+                &ctx,
+            )?;
+            let layers = match a.get("layers").and_then(Json::as_arr) {
+                Some(ls) => ls
+                    .iter()
+                    .map(|l| parse_layer(l, &ctx))
+                    .collect::<Result<Vec<_>, _>>()?,
+                None => Vec::new(),
+            };
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    file: dir.join(file),
+                    args,
+                    output_shape,
+                    layers,
+                    model: a.get("model").and_then(Json::as_str).map(String::from),
+                    input_hw: a.get("input_hw").and_then(Json::as_usize),
+                    input_channels: a.get("input_channels").and_then(Json::as_usize),
+                    num_classes: a.get("num_classes").and_then(Json::as_usize),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact, ManifestError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| schema(format!("artifact '{}' not in manifest", name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": {
+        "xnor_gemm": {
+          "kind": "xnor_gemm",
+          "file": "xnor_gemm.hlo.txt",
+          "apply_activation": true,
+          "args": [
+            {"name": "inputs", "shape": [64, 288], "dtype": "f32"},
+            {"name": "weights", "shape": [288, 64], "dtype": "f32"}
+          ],
+          "output": {"shape": [64, 64], "dtype": "f32"}
+        },
+        "bnn_tiny": {
+          "kind": "bnn_forward",
+          "model": "tiny",
+          "file": "bnn_tiny.hlo.txt",
+          "args": [{"name": "x", "shape": [1, 8, 8, 3], "dtype": "f32"}],
+          "output": {"shape": [1, 10], "dtype": "f32"},
+          "layers": [
+            {"kind": "conv", "h": 64, "s": 27, "k": 8, "fmap_hw": 8},
+            {"kind": "fc", "h": 1, "s": 64, "k": 10, "fmap_hw": 1}
+          ],
+          "input_hw": 8, "input_channels": 3, "num_classes": 10
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("xnor_gemm").unwrap();
+        assert_eq!(g.args.len(), 2);
+        assert_eq!(g.args[0].shape, vec![64, 288]);
+        assert_eq!(g.args[0].element_count(), 64 * 288);
+        assert_eq!(g.output_shape, vec![64, 64]);
+        assert_eq!(g.file, PathBuf::from("/art/xnor_gemm.hlo.txt"));
+        let b = m.get("bnn_tiny").unwrap();
+        assert_eq!(b.layers.len(), 2);
+        assert_eq!(b.layers[0].s, 27);
+        assert_eq!(b.model.as_deref(), Some("tiny"));
+        assert_eq!(b.num_classes, Some(10));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let bad = r#"{"format": "proto", "artifacts": {}}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/")).is_err());
+    }
+
+    #[test]
+    fn schema_errors_reported() {
+        let bad = r#"{"format": "hlo-text", "artifacts": {"a": {"file": "f"}}}"#;
+        let err = Manifest::parse(bad, PathBuf::from("/")).unwrap_err();
+        assert!(err.to_string().contains("missing args"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client + AOT artifact manifest.
+//!
+//! `Runtime` owns the PJRT CPU client; `Manifest` describes the artifacts
+//! produced by `make artifacts`; `Executable::run` is the only place model
+//! compute happens at serving time (python is build-time only).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, HostTensor, Runtime};
+pub use manifest::{ArgSpec, Artifact, LayerDim, Manifest, ManifestError};

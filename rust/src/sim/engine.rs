@@ -1,0 +1,174 @@
+//! Discrete-event simulation engine.
+//!
+//! A deterministic min-time event queue plus a `World` trait that reacts
+//! to events and schedules new ones. The accelerator models in
+//! `crate::arch::event_sim` implement `World`; the engine itself is
+//! domain-agnostic and unit-tested standalone.
+
+use std::collections::BinaryHeap;
+
+use super::event::{Event, EventKind};
+use super::stats::SimStats;
+
+/// Scheduling interface handed to the world on every event.
+pub struct Scheduler {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+}
+
+impl Scheduler {
+    fn new() -> Scheduler {
+        Scheduler { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Current simulation time (s).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `kind` at absolute time `at_s` (must not be in the past).
+    pub fn at(&mut self, at_s: f64, kind: EventKind) {
+        debug_assert!(at_s >= self.now, "scheduling into the past");
+        let e = Event { time_s: at_s.max(self.now), seq: self.seq, kind };
+        self.seq += 1;
+        self.heap.push(e);
+    }
+
+    /// Schedule `kind` after a relative delay.
+    pub fn after(&mut self, delay_s: f64, kind: EventKind) {
+        self.at(self.now + delay_s, kind);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// A simulated system reacting to events.
+pub trait World {
+    /// Handle one event; schedule follow-ups through `sched`, account
+    /// metrics in `stats`.
+    fn handle(&mut self, event: &EventKind, sched: &mut Scheduler, stats: &mut SimStats);
+
+    /// Called once before the run to seed initial events.
+    fn init(&mut self, sched: &mut Scheduler, stats: &mut SimStats);
+
+    /// Completion predicate (checked after each event).
+    fn done(&self) -> bool;
+
+    /// Called once after the run completes — the place to flush locally
+    /// accumulated counters/energy into `stats` (keeps per-event string
+    /// lookups off the hot loop; see EXPERIMENTS.md §Perf).
+    fn finalize(&mut self, _stats: &mut SimStats) {}
+}
+
+/// Run `world` to completion (or until `max_events`). Returns final stats
+/// with `end_time_s` set to the time of the last processed event.
+pub fn run<W: World>(world: &mut W, max_events: u64) -> SimStats {
+    let mut sched = Scheduler::new();
+    let mut stats = SimStats::default();
+    world.init(&mut sched, &mut stats);
+    let mut processed = 0u64;
+    while let Some(event) = sched.heap.pop() {
+        sched.now = event.time_s;
+        world.handle(&event.kind, &mut sched, &mut stats);
+        processed += 1;
+        stats.events_processed = processed;
+        stats.end_time_s = sched.now;
+        if world.done() {
+            break;
+        }
+        if processed >= max_events {
+            panic!(
+                "event budget exhausted ({} events, t = {} s) — likely a scheduling livelock",
+                processed, sched.now
+            );
+        }
+    }
+    assert!(world.done(), "event queue drained before completion");
+    world.finalize(&mut stats);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy world: a chain of N wakeups 1 µs apart.
+    struct Chain {
+        remaining: usize,
+    }
+
+    impl World for Chain {
+        fn init(&mut self, sched: &mut Scheduler, _stats: &mut SimStats) {
+            sched.at(0.0, EventKind::Wakeup);
+        }
+
+        fn handle(&mut self, event: &EventKind, sched: &mut Scheduler, stats: &mut SimStats) {
+            assert!(matches!(event, EventKind::Wakeup));
+            stats.count("wakeups", 1);
+            self.remaining -= 1;
+            if self.remaining > 0 {
+                sched.after(1e-6, EventKind::Wakeup);
+            }
+        }
+
+        fn done(&self) -> bool {
+            self.remaining == 0
+        }
+    }
+
+    #[test]
+    fn chain_advances_time() {
+        let mut w = Chain { remaining: 10 };
+        let stats = run(&mut w, 1000);
+        assert_eq!(stats.events_processed, 10);
+        assert!((stats.end_time_s - 9e-6).abs() < 1e-12);
+        assert_eq!(stats.counter("wakeups"), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "event budget exhausted")]
+    fn livelock_detected() {
+        struct Forever;
+        impl World for Forever {
+            fn init(&mut self, sched: &mut Scheduler, _s: &mut SimStats) {
+                sched.at(0.0, EventKind::Wakeup);
+            }
+            fn handle(&mut self, _e: &EventKind, sched: &mut Scheduler, _s: &mut SimStats) {
+                sched.after(1e-9, EventKind::Wakeup);
+            }
+            fn done(&self) -> bool {
+                false
+            }
+        }
+        run(&mut Forever, 100);
+    }
+
+    #[test]
+    fn ties_processed_in_schedule_order() {
+        struct Ties {
+            seen: Vec<u64>,
+            total: usize,
+        }
+        impl World for Ties {
+            fn init(&mut self, sched: &mut Scheduler, _s: &mut SimStats) {
+                for i in 0..5 {
+                    sched.at(1e-6, EventKind::MemFetchDone { bytes: i });
+                }
+            }
+            fn handle(&mut self, e: &EventKind, _sched: &mut Scheduler, _s: &mut SimStats) {
+                if let EventKind::MemFetchDone { bytes } = e {
+                    self.seen.push(*bytes as u64);
+                }
+            }
+            fn done(&self) -> bool {
+                self.seen.len() == self.total
+            }
+        }
+        let mut w = Ties { seen: vec![], total: 5 };
+        run(&mut w, 100);
+        assert_eq!(w.seen, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Event types for the transaction-level, event-driven simulator.
+//!
+//! Granularity follows the paper's definition of a PASS (Section III-B):
+//! one bit-parallel application of an N-bit slice pair to an XPE's OXG
+//! array plus the PCA/bitcount action. Peripheral transactions (psum
+//! reduction, activation, pooling, memory, NoC) are the Table III events.
+
+/// Identifies an XPE within an accelerator: (xpc index, xpe index in XPC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct XpeId {
+    pub xpc: usize,
+    pub xpe: usize,
+}
+
+/// A vector-dot-product job: one output element of a GEMM layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VdpId(pub usize);
+
+/// Domain events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// An XPE finished one PASS (slice `slice_idx` of VDP `vdp`).
+    PassComplete { xpe: XpeId, vdp: VdpId, slice_idx: usize, ones: u64 },
+    /// A PCA readout fired (VDP complete on an OXBNN-style XPE).
+    PcaReadout { xpe: XpeId, vdp: VdpId },
+    /// A psum was produced by a bitcount circuit (prior-work XPE) and
+    /// enqueued for the reduction network.
+    PsumReady { xpe: XpeId, vdp: VdpId, slice_idx: usize },
+    /// The reduction network finished combining all psums of `vdp`.
+    ReductionDone { vdp: VdpId },
+    /// Activation unit applied the comparator/sign for `vdp`.
+    ActivationDone { vdp: VdpId },
+    /// A memory fetch completed (operand staging for a pass group).
+    MemFetchDone { bytes: usize },
+    /// Generic scheduler wakeup.
+    Wakeup,
+}
+
+/// A timestamped event. Ordering: earliest time first; ties broken by
+/// insertion sequence for determinism.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time_s: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_s == other.time_s && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time_s
+            .partial_cmp(&self.time_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn heap_orders_by_time_then_seq() {
+        let mut h = BinaryHeap::new();
+        h.push(Event { time_s: 2.0, seq: 0, kind: EventKind::Wakeup });
+        h.push(Event { time_s: 1.0, seq: 2, kind: EventKind::Wakeup });
+        h.push(Event { time_s: 1.0, seq: 1, kind: EventKind::Wakeup });
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|e| (e.time_s, e.seq))
+            .collect();
+        assert_eq!(order, vec![(1.0, 1), (1.0, 2), (2.0, 0)]);
+    }
+
+    #[test]
+    fn xpe_id_ordering() {
+        let a = XpeId { xpc: 0, xpe: 5 };
+        let b = XpeId { xpc: 1, xpe: 0 };
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,10 @@
+//! Transaction-level, event-driven simulation engine (the rust counterpart
+//! of the paper's python B_ONN_SIM).
+
+pub mod engine;
+pub mod event;
+pub mod stats;
+
+pub use engine::{run, Scheduler, World};
+pub use event::{Event, EventKind, VdpId, XpeId};
+pub use stats::SimStats;

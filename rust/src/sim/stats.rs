@@ -1,0 +1,108 @@
+//! Simulation statistics: named counters, energy ledger by category, and
+//! latency tracking. Shared by the event-driven and analytic paths so the
+//! two can be cross-validated on identical metrics.
+
+use std::collections::BTreeMap;
+
+/// Accumulated metrics of a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Events processed by the engine.
+    pub events_processed: u64,
+    /// Simulation time of the last event (s).
+    pub end_time_s: f64,
+    counters: BTreeMap<String, u64>,
+    energy_j: BTreeMap<String, f64>,
+}
+
+impl SimStats {
+    /// Increment a named counter.
+    pub fn count(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Add energy (J) in a named category.
+    pub fn energy(&mut self, category: &str, joules: f64) {
+        *self.energy_j.entry(category.to_string()).or_insert(0.0) += joules;
+    }
+
+    pub fn energy_of(&self, category: &str) -> f64 {
+        self.energy_j.get(category).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy_j.values().sum()
+    }
+
+    pub fn energy_breakdown(&self) -> &BTreeMap<String, f64> {
+        &self.energy_j
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    /// Render as JSON for result dumps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let energy = self
+            .energy_j
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::Obj(
+            [
+                ("events".to_string(), Json::Num(self.events_processed as f64)),
+                ("end_time_s".to_string(), Json::Num(self.end_time_s)),
+                ("counters".to_string(), Json::Obj(counters)),
+                ("energy_j".to_string(), Json::Obj(energy)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut s = SimStats::default();
+        s.count("passes", 3);
+        s.count("passes", 4);
+        assert_eq!(s.counter("passes"), 7);
+        assert_eq!(s.counter("missing"), 0);
+    }
+
+    #[test]
+    fn energy_ledger() {
+        let mut s = SimStats::default();
+        s.energy("laser", 1e-9);
+        s.energy("oxg", 2e-9);
+        s.energy("laser", 1e-9);
+        assert!((s.energy_of("laser") - 2e-9).abs() < 1e-18);
+        assert!((s.total_energy_j() - 4e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut s = SimStats::default();
+        s.count("vdp", 10);
+        s.energy("pca", 5e-12);
+        let j = s.to_json();
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.path(&["counters", "vdp"]).unwrap().as_usize(), Some(10));
+    }
+}

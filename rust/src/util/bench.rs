@@ -1,0 +1,240 @@
+//! Benchmark harness substrate (no `criterion` offline).
+//!
+//! Provides warmup, calibrated iteration counts, robust statistics
+//! (median/MAD plus mean/stddev/min/max), throughput reporting, and a
+//! table printer used by every `rust/benches/bench_*.rs` target (all are
+//! `harness = false` binaries).
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark case, in seconds.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub median: f64,
+    pub mad: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile(&sorted, 50.0);
+        let mut devs: Vec<f64> = sorted.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean,
+            stddev: var.sqrt(),
+            median,
+            mad: percentile(&devs, 50.0),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+        }
+    }
+
+    /// ops/second given `ops` operations per measured iteration.
+    pub fn throughput(&self, ops: f64) -> f64 {
+        ops / self.median
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast preset for CI-style smoke runs (`OXBNN_BENCH_FAST=1`).
+    pub fn from_env() -> Bencher {
+        if std::env::var("OXBNN_BENCH_FAST").is_ok() {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                max_samples: 20,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Measure `f` repeatedly; returns robust stats over per-call times.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup until the time budget is spent (at least one call).
+        let start = Instant::now();
+        loop {
+            std::hint::black_box(f());
+            if start.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(name, &samples)
+    }
+}
+
+/// Fixed-width results table printer shared by the bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cells[i], width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds for bench output.
+pub fn fmt_secs(s: f64) -> String {
+    crate::util::units::fmt_time(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples("t", &[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.mean > s.median); // outlier pulls the mean
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn bencher_runs_and_measures() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_samples: 50,
+        };
+        let mut count = 0u64;
+        let s = b.run("spin", || {
+            count += 1;
+            std::hint::black_box(count)
+        });
+        assert!(s.iters >= 1);
+        assert!(s.median >= 0.0);
+        assert!(count as usize >= s.iters);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Stats::from_samples("t", &[0.5]);
+        assert_eq!(s.throughput(100.0), 200.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].ends_with("1"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,273 @@
+//! Command-line argument parsing substrate (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options,
+//! positional arguments, defaults, and auto-generated `--help` text — the
+//! subset the `oxbnn` binary and examples need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative command spec: options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{}>", p));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{}>  {}\n", p, h));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut line = format!("  --{}", o.name);
+                if !o.is_flag {
+                    line.push_str(" <value>");
+                }
+                if let Some(d) = o.default {
+                    line.push_str(&format!(" [default: {}]", d));
+                }
+                s.push_str(&format!("{}\n      {}\n", line, o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError::Other(format!("flag --{} takes no value", name)));
+                    }
+                    flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(CliError::Other(format!(
+                "unexpected positional argument '{}'",
+                positionals[self.positionals.len()]
+            )));
+        }
+        // Fill defaults; error on missing required opts.
+        for o in &self.opts {
+            if o.is_flag || values.contains_key(o.name) {
+                continue;
+            }
+            match o.default {
+                Some(d) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+                None => return Err(CliError::MissingValue(o.name.to_string())),
+            }
+        }
+        Ok(Parsed { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{} not declared", name))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::Other(format!("--{} expects an integer", name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::Other(format!("--{} expects a number", name)))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// CLI parse errors (Help is the `--help` early exit, not a failure).
+#[derive(Debug, Clone)]
+pub enum CliError {
+    Help(String),
+    Unknown(String),
+    MissingValue(String),
+    Other(String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Help(u) => write!(f, "{}", u),
+            CliError::Unknown(n) => write!(f, "unknown option --{}", n),
+            CliError::MissingValue(n) => write!(f, "missing value for --{}", n),
+            CliError::Other(m) => write!(f, "{}", m),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("sim", "run simulation")
+            .opt("model", "tiny", "model name")
+            .opt("passes", "10", "number of passes")
+            .req("out", "output path")
+            .flag("verbose", "chatty output")
+            .pos("workload", "workload file")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cmd().parse(&strs(&["--out", "x.json"])).unwrap();
+        assert_eq!(p.get("model"), "tiny");
+        assert_eq!(p.get_usize("passes").unwrap(), 10);
+        assert_eq!(p.get("out"), "x.json");
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = cmd()
+            .parse(&strs(&["--out=o", "--model=vgg", "--verbose", "wl.json"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "vgg");
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional(0), Some("wl.json"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        match cmd().parse(&strs(&[])) {
+            Err(CliError::MissingValue(n)) => assert_eq!(n, "out"),
+            other => panic!("unexpected {:?}", other),
+        }
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            cmd().parse(&strs(&["--out", "o", "--bogus", "1"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        assert!(matches!(
+            cmd().parse(&strs(&["--help"])),
+            Err(CliError::Help(_))
+        ));
+        let usage = cmd().usage();
+        assert!(usage.contains("--passes"));
+        assert!(usage.contains("<workload>"));
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let p = cmd().parse(&strs(&["--out", "o", "--passes", "abc"])).unwrap();
+        assert!(p.get_usize("passes").is_err());
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        assert!(cmd().parse(&strs(&["--out", "o", "a", "b"])).is_err());
+    }
+}

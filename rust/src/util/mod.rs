@@ -1,0 +1,13 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (see DESIGN.md "System inventory" items 1–8): JSON, CLI parsing, PRNG,
+//! property testing, benchmarking, logging, thread pool, and unit
+//! conversions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod quickcheck;
+pub mod rng;
+pub mod threadpool;
+pub mod units;

@@ -1,0 +1,264 @@
+//! Property-testing substrate (no `proptest` offline).
+//!
+//! A small, deterministic property harness: generators over a seeded
+//! [`Rng`], a configurable case count, and greedy shrinking for integers
+//! and vectors. Used by the coordinator/mapping invariant tests
+//! (`rust/tests/prop_*.rs`).
+//!
+//! ```no_run
+//! use oxbnn::util::quickcheck::{forall, prop_assert, Config};
+//! forall(Config::default().cases(100), |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let s = g.usize_in(1, 4096);
+//!     let slices = (s + n - 1) / n;
+//!     prop_assert(slices * n >= s, "slices must cover the vector")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper returning a `PropResult`.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with a formatted failure message.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{:?} != {:?}", a, b))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xD0E5EED, max_shrink: 200 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Draw source handed to each property case. Records every drawn integer so
+/// failing cases can be replayed and shrunk.
+pub struct Gen {
+    rng: Rng,
+    /// Choice trace: (lo, hi, picked) for each `usize_in` draw.
+    trace: Vec<(usize, usize, usize)>,
+    /// When replaying a shrunk trace, draws come from here instead.
+    replay: Option<Vec<usize>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), trace: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(seed: u64, picks: Vec<usize>) -> Gen {
+        Gen { rng: Rng::new(seed), trace: Vec::new(), replay: Some(picks), cursor: 0 }
+    }
+
+    /// Uniform integer in `[lo, hi]` — the primitive all other generators
+    /// build on (and the unit of shrinking).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = match &self.replay {
+            Some(picks) => {
+                let raw = picks.get(self.cursor).copied().unwrap_or(lo);
+                raw.clamp(lo, hi)
+            }
+            None => self.rng.range(lo, hi),
+        };
+        self.cursor += 1;
+        self.trace.push((lo, hi, v));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.usize_in(0, 1) == 1
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        // 2^20 buckets are plenty for property discovery and keep draws
+        // shrinkable through the integer trace.
+        self.usize_in(0, (1 << 20) - 1) as f64 / (1u64 << 20) as f64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64_unit() * (hi - lo)
+    }
+
+    /// A vector of `len` values in `[lo, hi]`.
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// A {0,1} bit-vector of length `len`.
+    pub fn bits(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.usize_in(0, 1) as f32).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; on failure, shrink the choice
+/// trace greedily toward the lower bounds and panic with the minimal
+/// counterexample found.
+pub fn forall<F: FnMut(&mut Gen) -> PropResult>(cfg: Config, mut prop: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut g = Gen::fresh(seed);
+        if let Err(msg) = prop(&mut g) {
+            let trace = g.trace.clone();
+            let (min_picks, min_msg) = shrink(&cfg, &mut prop, seed, trace, msg);
+            panic!(
+                "property failed (case {}, seed {:#x}): {}\n  minimal picks: {:?}",
+                case, seed, min_msg, min_picks
+            );
+        }
+    }
+}
+
+fn shrink<F: FnMut(&mut Gen) -> PropResult>(
+    cfg: &Config,
+    prop: &mut F,
+    seed: u64,
+    trace: Vec<(usize, usize, usize)>,
+    first_msg: String,
+) -> (Vec<usize>, String) {
+    let mut picks: Vec<usize> = trace.iter().map(|t| t.2).collect();
+    let lows: Vec<usize> = trace.iter().map(|t| t.0).collect();
+    let mut msg = first_msg;
+    let mut budget = cfg.max_shrink;
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..picks.len() {
+            if budget == 0 {
+                break;
+            }
+            let lo = *lows.get(i).unwrap_or(&0);
+            // Try: set to lo, then halve the distance to lo.
+            let candidates = [lo, lo + (picks[i].saturating_sub(lo)) / 2];
+            for &cand in &candidates {
+                if cand >= picks[i] || budget == 0 {
+                    continue;
+                }
+                budget -= 1;
+                let mut attempt = picks.clone();
+                attempt[i] = cand;
+                let mut g = Gen::replaying(seed, attempt.clone());
+                if let Err(m) = prop(&mut g) {
+                    picks = attempt;
+                    msg = m;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    (picks, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::default().cases(50), |g| {
+            count += 1;
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            prop_assert(a + b >= a, "monotone add")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config::default().cases(200), |g| {
+            let v = g.usize_in(0, 1000);
+            prop_assert(v < 900, "v too big")
+        });
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Capture the panic to inspect the shrunk counterexample.
+        let result = std::panic::catch_unwind(|| {
+            forall(Config::default().cases(100), |g| {
+                let v = g.usize_in(0, 10_000);
+                prop_assert(v < 500, "ge 500")
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Greedy halving should land well below the initial random failure.
+        let picks_part = msg.split("minimal picks: ").nth(1).unwrap();
+        let v: usize = picks_part
+            .trim_matches(|c| c == '[' || c == ']')
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(v >= 500, "still failing case");
+        assert!(v < 1100, "should have shrunk near the 500 boundary, got {}", v);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall(Config::default().cases(100), |g| {
+            let v = g.usize_in(5, 9);
+            prop_assert(v >= 5 && v <= 9, "range")?;
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert((-1.0..=1.0).contains(&f), "f64 range")?;
+            let bits = g.bits(8);
+            prop_assert(bits.iter().all(|&b| b == 0.0 || b == 1.0), "bits binary")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut vals = Vec::new();
+            forall(Config::default().cases(10).seed(seed), |g| {
+                vals.push(g.usize_in(0, 1_000_000));
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+    }
+}

@@ -1,0 +1,189 @@
+//! Thread-pool substrate (no `tokio`/`rayon` offline).
+//!
+//! A fixed-size worker pool with a simple channel-based queue, plus a
+//! `scope`-style `parallel_map` used by the benchmark sweeps (independent
+//! accelerator simulations fan out across cores) and the coordinator's
+//! worker shards.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (clamped to >= 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let q = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("oxbnn-worker-{}", i))
+                    .spawn(move || loop {
+                        let job = {
+                            let lock = rx.lock().expect("worker queue poisoned");
+                            lock.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                q.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("failed to spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers, queued }
+    }
+
+    /// Pool sized to the machine (with an override for tests/benches).
+    pub fn for_host() -> ThreadPool {
+        let n = std::env::var("OXBNN_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            });
+        ThreadPool::new(n)
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Map `f` over `items` in parallel, preserving order. Spawns scoped
+/// threads in chunks so no 'static bound is needed on inputs or outputs.
+pub fn parallel_map<T: Send, U: Send, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    F: Fn(T) -> U + Sync,
+{
+    let threads = threads.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let work = Mutex::new(work);
+    let slots_mtx = Mutex::new(&mut slots);
+    thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let item = { work.lock().unwrap().pop() };
+                match item {
+                    Some((idx, t)) => {
+                        let u = f(t);
+                        slots_mtx.lock().unwrap()[idx] = Some(u);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn pool_executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drains_on_drop_even_with_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(5));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(items, 8, |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let out: Vec<usize> = parallel_map(Vec::<usize>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7usize], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_map_uses_threads() {
+        // With 4 threads, 8 sleeps of 20 ms should take well under 160 ms.
+        let t0 = std::time::Instant::now();
+        let _ = parallel_map((0..8).collect::<Vec<_>>(), 4, |x| {
+            thread::sleep(Duration::from_millis(20));
+            x
+        });
+        assert!(t0.elapsed() < Duration::from_millis(140));
+    }
+
+    #[test]
+    fn worker_count_clamped() {
+        assert_eq!(ThreadPool::new(0).worker_count(), 1);
+    }
+}

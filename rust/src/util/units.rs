@@ -1,0 +1,128 @@
+//! Physical-unit helpers shared by the photonic device models and the
+//! scalability analysis (paper Eqs. 3–5 mix dB, dBm, watts, amps, volts,
+//! seconds and samples-per-second; keeping conversions in one audited
+//! place prevents the classic dB-vs-linear bugs).
+
+/// Convert decibel-milliwatts to watts.
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// Convert watts to decibel-milliwatts.
+pub fn watt_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+/// Convert a dB quantity to a linear power ratio.
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Convert a linear power ratio to dB.
+pub fn linear_to_db(ratio: f64) -> f64 {
+    10.0 * ratio.log10()
+}
+
+/// Boltzmann constant (J/K).
+pub const BOLTZMANN: f64 = 1.380_649e-23;
+
+/// Elementary charge (C).
+pub const ELEMENTARY_CHARGE: f64 = 1.602_176_634e-19;
+
+/// Speed of light in vacuum (m/s).
+pub const SPEED_OF_LIGHT: f64 = 2.997_924_58e8;
+
+/// Giga-samples-per-second to samples-per-second.
+pub fn gsps_to_hz(gsps: f64) -> f64 {
+    gsps * 1e9
+}
+
+/// Seconds per sample at a data rate in GS/s.
+pub fn gsps_period_s(gsps: f64) -> f64 {
+    1.0 / gsps_to_hz(gsps)
+}
+
+/// Nanometres to metres.
+pub fn nm_to_m(nm: f64) -> f64 {
+    nm * 1e-9
+}
+
+/// Human-readable time: picks ps/ns/us/ms/s.
+pub fn fmt_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs == 0.0 {
+        "0 s".to_string()
+    } else if abs < 1e-9 {
+        format!("{:.3} ps", seconds * 1e12)
+    } else if abs < 1e-6 {
+        format!("{:.3} ns", seconds * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.3} us", seconds * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+/// Human-readable power: pW/nW/uW/mW/W.
+pub fn fmt_power(watts: f64) -> String {
+    let abs = watts.abs();
+    if abs == 0.0 {
+        "0 W".to_string()
+    } else if abs < 1e-9 {
+        format!("{:.3} pW", watts * 1e12)
+    } else if abs < 1e-6 {
+        format!("{:.3} nW", watts * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.3} uW", watts * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.3} mW", watts * 1e3)
+    } else {
+        format!("{:.3} W", watts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1e-30)
+    }
+
+    #[test]
+    fn dbm_watt_roundtrip() {
+        // Paper Table I: laser power 5 dBm ≈ 3.162 mW.
+        assert!(close(dbm_to_watt(5.0), 3.1623e-3, 1e-4));
+        assert!(close(dbm_to_watt(0.0), 1e-3, 1e-12));
+        for dbm in [-24.69, -18.5, 0.0, 5.0, 10.0] {
+            assert!(close(watt_to_dbm(dbm_to_watt(dbm)), dbm, 1e-9));
+        }
+    }
+
+    #[test]
+    fn db_linear_roundtrip() {
+        assert!(close(db_to_linear(3.0), 1.9953, 1e-4));
+        assert!(close(db_to_linear(-4.8), 0.33113, 1e-4));
+        for db in [-10.0, -4.8, 0.0, 0.01, 4.0] {
+            assert!(close(linear_to_db(db_to_linear(db)), db, 1e-9));
+        }
+    }
+
+    #[test]
+    fn datarate_periods() {
+        // Paper: tau as low as 20 ps at DR=50 GS/s.
+        assert!(close(gsps_period_s(50.0), 20e-12, 1e-12));
+        assert!(close(gsps_period_s(3.0), 333.33e-12, 1e-4));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(20e-12), "20.000 ps");
+        assert_eq!(fmt_time(3.125e-9), "3.125 ns");
+        assert_eq!(fmt_time(4e-6), "4.000 us");
+        assert_eq!(fmt_power(41.1e-3), "41.100 mW");
+        assert_eq!(fmt_power(80e-6), "80.000 uW");
+    }
+}

@@ -1,0 +1,97 @@
+//! MobileNetV2 (Sandler et al., CVPR 2018) on 224×224×3, binarized.
+//! Inverted-residual bottlenecks: 1×1 expand (×t), 3×3 depthwise, 1×1
+//! project. Depthwise convs map to per-channel VDPs of size 9
+//! (`GemmLayer::depthwise`); they are the reason MobileNet stresses
+//! accelerators with many tiny-S slices.
+
+use super::Workload;
+use crate::mapping::layer::GemmLayer;
+
+/// Standard MobileNetV2 bottleneck table: (expansion t, out channels c,
+/// repeats n, first-stride s).
+const BOTTLENECKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn mobilenet_v2() -> Workload {
+    let mut layers = Vec::new();
+    // Stem: 3×3/2, 3→32, output 112².
+    layers.push(GemmLayer::new("conv1", 112 * 112, 27, 32));
+    let mut hw = 112usize;
+    let mut cin = 32usize;
+    let mut block = 0usize;
+    for (t, c, n, first_stride) in BOTTLENECKS {
+        for rep in 0..n {
+            let stride = if rep == 0 { first_stride } else { 1 };
+            let out_hw = hw / stride;
+            let expanded = cin * t;
+            block += 1;
+            if t != 1 {
+                layers.push(GemmLayer::new(
+                    format!("b{}.expand", block),
+                    hw * hw,
+                    cin,
+                    expanded,
+                ));
+            }
+            layers.push(GemmLayer::depthwise(
+                format!("b{}.dw", block),
+                out_hw,
+                expanded,
+                3,
+            ));
+            layers.push(GemmLayer::new(
+                format!("b{}.project", block),
+                out_hw * out_hw,
+                expanded,
+                c,
+            ));
+            hw = out_hw;
+            cin = c;
+        }
+    }
+    // Head: 1×1 to 1280, global pool, FC-1000.
+    layers.push(GemmLayer::new("conv_last", 7 * 7, 320, 1280));
+    layers.push(GemmLayer::fc("fc", 1280, 1000));
+    Workload::new("mobilenet_v2", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_structure() {
+        let w = mobilenet_v2();
+        // 17 bottlenecks; the first (t=1) has 2 layers, the rest 3.
+        // 1 stem + (2 + 16·3) + conv_last + fc = 53 layers.
+        assert_eq!(w.layers.len(), 1 + 2 + 16 * 3 + 1 + 1);
+    }
+
+    #[test]
+    fn total_macs_published() {
+        // Published: ≈ 0.30 GMACs.
+        let g = mobilenet_v2().total_bitops() as f64;
+        assert!((g - 0.30e9).abs() / 0.30e9 < 0.15, "bitops = {}", g);
+    }
+
+    #[test]
+    fn depthwise_layers_have_s9() {
+        let w = mobilenet_v2();
+        let dw: Vec<&GemmLayer> =
+            w.layers.iter().filter(|l| l.name.ends_with(".dw")).collect();
+        assert_eq!(dw.len(), 17);
+        assert!(dw.iter().all(|l| l.s == 9 && l.k == 1));
+    }
+
+    #[test]
+    fn max_conv_s_under_paper_bound() {
+        assert!(mobilenet_v2().max_conv_s() <= 4608);
+    }
+}

@@ -1,0 +1,88 @@
+//! ResNet18 (He et al., CVPR 2016) on 224×224×3 ImageNet input,
+//! binarized. Standard geometry: 7×7/2 stem, four stages of two basic
+//! blocks (64, 128, 256, 512 channels; stages 2–4 downsample with
+//! stride-2 first conv + 1×1 shortcut projection), global pool, FC-1000.
+
+use super::Workload;
+use crate::mapping::layer::GemmLayer;
+
+pub fn resnet18() -> Workload {
+    let mut layers = Vec::new();
+    // Stem: 7×7/2, 3→64, output 112×112, then 3×3/2 max pool → 56×56.
+    layers.push(GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64).with_pool());
+
+    // (stage, out_hw, in_c, out_c, downsample?)
+    let stages = [
+        (1, 56usize, 64usize, 64usize, false),
+        (2, 28, 64, 128, true),
+        (3, 14, 128, 256, true),
+        (4, 7, 256, 512, true),
+    ];
+    for (si, hw, cin, cout, down) in stages {
+        let h = hw * hw;
+        // Block 1.
+        layers.push(GemmLayer::new(
+            format!("stage{}.b1.conv1", si),
+            h,
+            3 * 3 * cin,
+            cout,
+        ));
+        layers.push(GemmLayer::new(
+            format!("stage{}.b1.conv2", si),
+            h,
+            3 * 3 * cout,
+            cout,
+        ));
+        if down {
+            // 1×1 stride-2 projection shortcut.
+            layers.push(GemmLayer::new(format!("stage{}.b1.down", si), h, cin, cout));
+        }
+        // Block 2.
+        layers.push(GemmLayer::new(
+            format!("stage{}.b2.conv1", si),
+            h,
+            3 * 3 * cout,
+            cout,
+        ));
+        layers.push(GemmLayer::new(
+            format!("stage{}.b2.conv2", si),
+            h,
+            3 * 3 * cout,
+            cout,
+        ));
+    }
+    layers.push(GemmLayer::fc("fc", 512, 1000));
+    Workload::new("resnet18", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 stem + 4 stages × (4 convs + downsample for 3 stages) + fc
+        // = 1 + (4 + 5 + 5 + 5) + 1 + ... : stage1 has 4, stages 2-4 have 5.
+        assert_eq!(resnet18().layers.len(), 1 + 4 + 5 + 5 + 5 + 1);
+    }
+
+    #[test]
+    fn total_macs_published() {
+        // Published: ≈ 1.82 GMACs for ResNet18 at 224².
+        let g = resnet18().total_bitops() as f64;
+        assert!((g - 1.82e9).abs() / 1.82e9 < 0.1, "bitops = {}", g);
+    }
+
+    #[test]
+    fn max_conv_s_is_4608() {
+        // Stage 4's 3×3×512 convs: S = 4608 — the paper's cited maximum.
+        assert_eq!(resnet18().max_conv_s(), 4608);
+    }
+
+    #[test]
+    fn stem_dominates_h() {
+        let w = resnet18();
+        assert_eq!(w.layers[0].h, 12544);
+        assert!(w.layers.iter().all(|l| l.h <= 12544));
+    }
+}

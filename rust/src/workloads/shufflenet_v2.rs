@@ -1,0 +1,115 @@
+//! ShuffleNetV2 1× (Ma et al., ECCV 2018) on 224×224×3, binarized.
+//! Channel-split units: the right branch runs 1×1 → 3×3 depthwise → 1×1 on
+//! half the channels; stride-2 units process both branches and double the
+//! channels. Stages: 116/232/464 channels with 4/8/4 units; 1×1 conv5 to
+//! 1024; FC-1000.
+
+use super::Workload;
+use crate::mapping::layer::GemmLayer;
+
+/// (stage index, out channels, units, out_hw).
+const STAGES: [(usize, usize, usize, usize); 3] =
+    [(2, 116, 4, 28), (3, 232, 8, 14), (4, 464, 4, 7)];
+
+pub fn shufflenet_v2() -> Workload {
+    let mut layers = Vec::new();
+    // Stem: 3×3/2 conv to 24 channels (112²), then 3×3/2 max pool → 56².
+    layers.push(GemmLayer::new("conv1", 112 * 112, 27, 24).with_pool());
+    let mut cin = 24usize;
+    for (si, cout, units, out_hw) in STAGES {
+        for u in 0..units {
+            let half = cout / 2;
+            if u == 0 {
+                // Stride-2 unit: input hw = 2·out_hw, both branches run.
+                let h_out = out_hw * out_hw;
+                // Left branch: depthwise (on cin) + 1×1 → half.
+                layers.push(GemmLayer::depthwise(
+                    format!("s{}.u{}.l.dw", si, u),
+                    out_hw,
+                    cin,
+                    3,
+                ));
+                layers.push(GemmLayer::new(
+                    format!("s{}.u{}.l.pw", si, u),
+                    h_out,
+                    cin,
+                    half,
+                ));
+                // Right branch: 1×1 → dw/2 → 1×1.
+                layers.push(GemmLayer::new(
+                    format!("s{}.u{}.r.pw1", si, u),
+                    (out_hw * 2) * (out_hw * 2),
+                    cin,
+                    half,
+                ));
+                layers.push(GemmLayer::depthwise(
+                    format!("s{}.u{}.r.dw", si, u),
+                    out_hw,
+                    half,
+                    3,
+                ));
+                layers.push(GemmLayer::new(
+                    format!("s{}.u{}.r.pw2", si, u),
+                    h_out,
+                    half,
+                    half,
+                ));
+            } else {
+                // Stride-1 unit: split; only the right half (c/2) computes.
+                let h = out_hw * out_hw;
+                layers.push(GemmLayer::new(
+                    format!("s{}.u{}.pw1", si, u),
+                    h,
+                    half,
+                    half,
+                ));
+                layers.push(GemmLayer::depthwise(
+                    format!("s{}.u{}.dw", si, u),
+                    out_hw,
+                    half,
+                    3,
+                ));
+                layers.push(GemmLayer::new(
+                    format!("s{}.u{}.pw2", si, u),
+                    h,
+                    half,
+                    half,
+                ));
+            }
+        }
+        cin = cout;
+    }
+    layers.push(GemmLayer::new("conv5", 7 * 7, 464, 1024));
+    layers.push(GemmLayer::fc("fc", 1024, 1000));
+    Workload::new("shufflenet_v2", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_counts() {
+        let w = shufflenet_v2();
+        // stem + stage2 (5 + 3·3) + stage3 (5 + 7·3) + stage4 (5 + 3·3)
+        // + conv5 + fc.
+        let expect = 1 + (5 + 9) + (5 + 21) + (5 + 9) + 1 + 1;
+        assert_eq!(w.layers.len(), expect);
+    }
+
+    #[test]
+    fn total_macs_published() {
+        // Published: ≈ 146 MMACs for ShuffleNetV2 1×.
+        let g = shufflenet_v2().total_bitops() as f64;
+        assert!((g - 0.146e9).abs() / 0.146e9 < 0.2, "bitops = {}", g);
+    }
+
+    #[test]
+    fn lightest_of_the_four() {
+        let all = Workload::evaluation_set();
+        let shuffle = all.iter().find(|w| w.name == "shufflenet_v2").unwrap();
+        for other in &all {
+            assert!(shuffle.total_bitops() <= other.total_bitops());
+        }
+    }
+}

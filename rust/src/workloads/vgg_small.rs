@@ -1,0 +1,67 @@
+//! VGG-small (LQ-Nets variant for CIFAR-10, 32×32×3 input): six 3×3 convs
+//! (128,128,256,256,512,512) with 2×2 pooling after every pair, then a
+//! 10-way linear classifier. Geometry matches `python/compile/model.py`'s
+//! `vgg_small` ModelSpec exactly (pinned by `test_model.py` on the python
+//! side and the tests below on this side).
+
+use super::Workload;
+use crate::mapping::layer::GemmLayer;
+
+pub fn vgg_small() -> Workload {
+    let mut layers = Vec::new();
+    // (out_hw, in_c, out_c, pool) per conv.
+    let specs = [
+        (32, 3, 128, false),
+        (32, 128, 128, true),
+        (16, 128, 256, false),
+        (16, 256, 256, true),
+        (8, 256, 512, false),
+        (8, 512, 512, true),
+    ];
+    for (i, (hw, cin, cout, pool)) in specs.into_iter().enumerate() {
+        let mut l = GemmLayer::conv(format!("conv{}", i + 1), hw, cin, 3, cout);
+        if pool {
+            l = l.with_pool();
+        }
+        layers.push(l);
+    }
+    // After three pools: 4×4×512 = 8192 features.
+    layers.push(GemmLayer::fc("fc", 4 * 4 * 512, 10));
+    Workload::new("vgg_small", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_python_modelspec() {
+        let w = vgg_small();
+        let dims: Vec<(usize, usize, usize)> =
+            w.layers.iter().map(|l| (l.h, l.s, l.k)).collect();
+        assert_eq!(
+            dims,
+            vec![
+                (1024, 27, 128),
+                (1024, 1152, 128),
+                (256, 1152, 256),
+                (256, 2304, 256),
+                (64, 2304, 512),
+                (64, 4608, 512),
+                (1, 8192, 10),
+            ]
+        );
+    }
+
+    #[test]
+    fn max_conv_s_is_4608() {
+        // This workload realizes the paper's §IV-C extreme: S = 4608.
+        assert_eq!(vgg_small().max_conv_s(), 4608);
+    }
+
+    #[test]
+    fn total_macs_published() {
+        let g = vgg_small().total_bitops() as f64;
+        assert!((g - 0.57e9).abs() / 0.57e9 < 0.1, "bitops = {}", g);
+    }
+}

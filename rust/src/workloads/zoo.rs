@@ -1,0 +1,142 @@
+//! Extended CNN zoo for the paper's §IV-C claim.
+//!
+//! Section IV-C: "the maximum XNOR vector size is observed to be S = 4608
+//! across all major modern CNNs (e.g., ResNet18, ResNet50, DenseNet121,
+//! VGG16, VGG19, GoogleNet, ...)". The four evaluation BNNs live in their
+//! own modules; this zoo adds VGG16/VGG19 and ResNet50 geometry so the
+//! claim is checked over a broader population (E8).
+
+use super::Workload;
+use crate::mapping::layer::GemmLayer;
+
+/// VGG16 (224×224×3): thirteen 3×3 convs in five pooled stages + 3 FC.
+pub fn vgg16() -> Workload {
+    vgg(&[2, 2, 3, 3, 3], "vgg16")
+}
+
+/// VGG19: same stages with (2,2,4,4,4) convs.
+pub fn vgg19() -> Workload {
+    vgg(&[2, 2, 4, 4, 4], "vgg19")
+}
+
+fn vgg(stage_convs: &[usize], name: &str) -> Workload {
+    let widths = [64usize, 128, 256, 512, 512];
+    let mut layers = Vec::new();
+    let mut hw = 224usize;
+    let mut cin = 3usize;
+    for (si, (&n_convs, &width)) in stage_convs.iter().zip(&widths).enumerate() {
+        for ci in 0..n_convs {
+            let mut l = GemmLayer::conv(
+                format!("s{}.conv{}", si + 1, ci + 1),
+                hw,
+                cin,
+                3,
+                width,
+            );
+            if ci == n_convs - 1 {
+                l = l.with_pool();
+            }
+            layers.push(l);
+            cin = width;
+        }
+        hw /= 2;
+    }
+    // Classifier: 7·7·512 → 4096 → 4096 → 1000.
+    layers.push(GemmLayer::fc("fc1", 7 * 7 * 512, 4096));
+    layers.push(GemmLayer::fc("fc2", 4096, 4096));
+    layers.push(GemmLayer::fc("fc3", 4096, 1000));
+    Workload::new(name, layers)
+}
+
+/// ResNet50 (224×224×3): bottleneck blocks (1×1 reduce, 3×3, 1×1 expand)
+/// with stage widths (256, 512, 1024, 2048) and (3, 4, 6, 3) blocks.
+pub fn resnet50() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64).with_pool());
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (56, 64, 256, 3),
+        (28, 128, 512, 4),
+        (14, 256, 1024, 6),
+        (7, 512, 2048, 3),
+    ];
+    let mut cin = 64usize;
+    for (si, (hw, mid, cout, blocks)) in stages.into_iter().enumerate() {
+        let h = hw * hw;
+        for b in 0..blocks {
+            let block_in = if b == 0 { cin } else { cout };
+            layers.push(GemmLayer::new(
+                format!("s{}.b{}.conv1x1a", si + 2, b + 1),
+                h,
+                block_in,
+                mid,
+            ));
+            layers.push(GemmLayer::new(
+                format!("s{}.b{}.conv3x3", si + 2, b + 1),
+                h,
+                3 * 3 * mid,
+                mid,
+            ));
+            layers.push(GemmLayer::new(
+                format!("s{}.b{}.conv1x1b", si + 2, b + 1),
+                h,
+                mid,
+                cout,
+            ));
+            if b == 0 {
+                layers.push(GemmLayer::new(
+                    format!("s{}.b{}.down", si + 2, b + 1),
+                    h,
+                    block_in,
+                    cout,
+                ));
+            }
+        }
+        cin = cout;
+    }
+    layers.push(GemmLayer::fc("fc", 2048, 1000));
+    Workload::new("resnet50", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_macs_published() {
+        // Published: ≈ 15.5 GMACs.
+        let g = vgg16().total_bitops() as f64;
+        assert!((g - 15.5e9).abs() / 15.5e9 < 0.05, "bitops = {}", g);
+    }
+
+    #[test]
+    fn vgg19_macs_published() {
+        // Published: ≈ 19.6 GMACs.
+        let g = vgg19().total_bitops() as f64;
+        assert!((g - 19.6e9).abs() / 19.6e9 < 0.05, "bitops = {}", g);
+    }
+
+    #[test]
+    fn resnet50_macs_published() {
+        // Published: ≈ 4.1 GMACs.
+        let g = resnet50().total_bitops() as f64;
+        assert!((g - 4.1e9).abs() / 4.1e9 < 0.10, "bitops = {}", g);
+    }
+
+    #[test]
+    fn paper_s_max_claim_holds_across_zoo() {
+        // §IV-C: max conv S is exactly 4608 (3·3·512) across the zoo,
+        // below γ(50 GS/s) = 8503 — VGG16/19 and ResNet50 all peak there.
+        for w in [vgg16(), vgg19(), resnet50()] {
+            assert_eq!(w.max_conv_s(), 4608, "{}", w.name);
+            assert!(w.max_conv_s() < 8503);
+        }
+    }
+
+    #[test]
+    fn layer_counts() {
+        assert_eq!(vgg16().layers.len(), 13 + 3);
+        assert_eq!(vgg19().layers.len(), 16 + 3);
+        // 1 stem + (3+4+6+3) blocks × 3 convs + 4 downsamples + fc.
+        assert_eq!(resnet50().layers.len(), 1 + 16 * 3 + 4 + 1);
+    }
+}

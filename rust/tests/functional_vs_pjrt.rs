@@ -1,0 +1,100 @@
+//! End-to-end cross-validation: the AOT-compiled JAX/Pallas BNN (executed
+//! via PJRT) must agree bit-exactly with the independent rust functional
+//! engine on the same synthetic weights and inputs.
+//!
+//! This closes the three-layer loop: L1 Pallas kernel → L2 JAX graph →
+//! HLO text → rust PJRT runtime, checked against rust integer arithmetic.
+
+use oxbnn::coordinator::synthetic_weights;
+use oxbnn::functional::bnn;
+use oxbnn::runtime::{HostTensor, Manifest, Runtime};
+use oxbnn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+fn check_model(model: &str, frames: usize, seed: u64) {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let artifact = manifest.get(&format!("bnn_{}", model)).expect("artifact");
+    let rt = Runtime::cpu().expect("PJRT");
+    let exe = rt.load_artifact(artifact).expect("compile");
+
+    let weights = synthetic_weights(artifact, seed);
+    let weight_tensors: Vec<HostTensor> = weights
+        .iter()
+        .zip(&artifact.args[1..])
+        .map(|(bits, spec)| HostTensor::new(spec.shape.clone(), bits.clone()).unwrap())
+        .collect();
+
+    let input_len = artifact.args[0].element_count();
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    for frame in 0..frames {
+        let x: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        let mut args = vec![HostTensor::new(artifact.args[0].shape.clone(), x.clone()).unwrap()];
+        args.extend(weight_tensors.iter().cloned());
+        let pjrt_logits = exe.run(&args).expect("execute").data;
+        let rust_logits = bnn::forward(artifact, &x, &weights);
+        assert_eq!(
+            pjrt_logits, rust_logits,
+            "{} frame {}: PJRT vs rust functional mismatch",
+            model, frame
+        );
+    }
+}
+
+#[test]
+fn tiny_model_bit_exact() {
+    check_model("tiny", 4, 0xAB);
+}
+
+#[test]
+fn small_model_bit_exact() {
+    check_model("small", 2, 0xCD);
+}
+
+#[test]
+fn logits_are_bitcounts_in_range() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let artifact = manifest.get("bnn_tiny").expect("artifact");
+    let rt = Runtime::cpu().expect("PJRT");
+    let exe = rt.load_artifact(artifact).expect("compile");
+    let weights = synthetic_weights(artifact, 7);
+    let mut args = vec![HostTensor::zeros(artifact.args[0].shape.clone())];
+    args.extend(
+        weights
+            .iter()
+            .zip(&artifact.args[1..])
+            .map(|(b, s)| HostTensor::new(s.shape.clone(), b.clone()).unwrap()),
+    );
+    let out = exe.run(&args).expect("execute");
+    let fc_s = artifact.layers.last().unwrap().s as f32;
+    for &z in &out.data {
+        assert!(z >= 0.0 && z <= fc_s, "logit {} out of [0, {}]", z, fc_s);
+        assert_eq!(z.fract(), 0.0, "bitcount logits must be integers");
+    }
+}
+
+#[test]
+fn weights_are_deterministic_per_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let artifact = manifest.get("bnn_tiny").expect("artifact");
+    let a = synthetic_weights(artifact, 42);
+    let b = synthetic_weights(artifact, 42);
+    let c = synthetic_weights(artifact, 43);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    for (w, spec) in a.iter().zip(&artifact.args[1..]) {
+        assert_eq!(w.len(), spec.element_count());
+        assert!(w.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

@@ -1,0 +1,141 @@
+//! Property-based invariants across the coordinator, mapping and analysis
+//! layers (uses the in-repo quickcheck substrate).
+
+use oxbnn::analysis::pca_capacity::{alpha, gamma_calibrated};
+use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::arch::perf::layer_perf;
+use oxbnn::coordinator::Batcher;
+use oxbnn::coordinator::Router;
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::util::json::Json;
+use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+
+#[test]
+fn prop_json_roundtrip_numbers_and_strings() {
+    forall(Config::default().cases(200), |g| {
+        let n = g.usize_in(0, 1_000_000) as f64 / 97.0;
+        let s: String = (0..g.usize_in(0, 20))
+            .map(|_| char::from_u32(g.usize_in(32, 0x24F) as u32).unwrap_or('x'))
+            .collect();
+        let j = Json::obj(vec![
+            ("n", Json::Num(n)),
+            ("s", Json::Str(s.clone())),
+            ("a", Json::arr_usize(&[g.usize_in(0, 99), g.usize_in(0, 99)])),
+        ]);
+        let back = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        prop_assert_eq(back.get("s").and_then(Json::as_str), Some(s.as_str()))?;
+        let diff = (back.get("n").unwrap().as_f64().unwrap() - n).abs();
+        prop_assert(diff < 1e-9, "number roundtrip")
+    });
+}
+
+#[test]
+fn prop_scalability_n_monotone_in_dr() {
+    let solver = ScalabilitySolver::default();
+    forall(Config::default().cases(40), |g| {
+        let dr1 = g.f64_in(1.0, 50.0);
+        let dr2 = g.f64_in(1.0, 50.0);
+        let (lo, hi) = if dr1 < dr2 { (dr1, dr2) } else { (dr2, dr1) };
+        let row_lo = solver.solve(lo);
+        let row_hi = solver.solve(hi);
+        prop_assert(row_lo.n >= row_hi.n, "N must not grow with DR")?;
+        prop_assert(
+            row_lo.p_pd_opt_dbm <= row_hi.p_pd_opt_dbm + 1e-9,
+            "sensitivity must relax (grow) with DR",
+        )
+    });
+}
+
+#[test]
+fn prop_alpha_gamma_consistency() {
+    forall(Config::default().cases(100), |g| {
+        let dr = g.f64_in(3.0, 50.0);
+        let n = g.usize_in(1, 80);
+        let gamma = gamma_calibrated(dr);
+        let a = alpha(gamma, n);
+        prop_assert(a * n as u64 <= gamma, "alpha*N <= gamma")?;
+        prop_assert((a + 1) * n as u64 > gamma, "alpha maximal")
+    });
+}
+
+#[test]
+fn prop_layer_perf_latency_positive_and_pca_no_worse() {
+    // For any layer geometry, OXBNN (PCA) latency is <= the same photonic
+    // fabric with a reduction-network bitcount.
+    forall(Config::default().cases(60), |g| {
+        let layer = GemmLayer::new(
+            "p",
+            g.usize_in(1, 256),
+            g.usize_in(1, 2048),
+            g.usize_in(1, 64),
+        );
+        let mut pca = AcceleratorConfig::oxbnn_50();
+        pca.n = g.usize_in(4, 64);
+        pca.xpe_total = g.usize_in(8, 512);
+        pca.bitcount = BitcountMode::Pca { gamma: 8503 };
+        let mut red = pca.clone();
+        red.bitcount = BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+        let p = layer_perf(&pca, &layer);
+        let r = layer_perf(&red, &layer);
+        prop_assert(p.latency_s > 0.0, "positive latency")?;
+        prop_assert(
+            p.latency_s <= r.latency_s + 1e-15,
+            "PCA must never be slower than reduction on same fabric",
+        )?;
+        prop_assert(
+            p.dynamic_energy_j <= r.dynamic_energy_j + 1e-18,
+            "PCA must never burn more dynamic energy",
+        )
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_preserves_order() {
+    forall(Config::default().cases(80), |g| {
+        let max_batch = g.usize_in(1, 16);
+        let n = g.usize_in(0, 60);
+        let mut b: Batcher<usize> = Batcher::new(max_batch, 0.010);
+        let mut t = 0.0;
+        for i in 0..n {
+            t += g.f64_in(0.0, 0.005);
+            b.push(i, t);
+        }
+        let mut drained = Vec::new();
+        let mut now = t;
+        loop {
+            now += 0.02; // force deadline
+            match b.drain(now) {
+                Some(batch) => {
+                    prop_assert(batch.len() <= max_batch, "batch size bound")?;
+                    drained.extend(batch.into_iter().map(|p| p.item));
+                }
+                None => break,
+            }
+        }
+        prop_assert_eq(drained, (0..n).collect::<Vec<_>>())
+    });
+}
+
+#[test]
+fn prop_router_balances_outstanding() {
+    forall(Config::default().cases(60), |g| {
+        let replicas = g.usize_in(1, 6);
+        let requests = g.usize_in(0, 60);
+        let mut r = Router::default();
+        for i in 0..replicas {
+            r.register("m", i);
+        }
+        let mut counts = vec![0usize; replicas];
+        for _ in 0..requests {
+            let id = r.route("m").map_err(|e| e.to_string())?;
+            counts[id] += 1;
+        }
+        // Least-loaded routing with no completions → perfectly balanced
+        // within 1.
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        prop_assert(max - min <= 1, "outstanding imbalance > 1")?;
+        prop_assert_eq(r.outstanding("m"), requests)
+    });
+}

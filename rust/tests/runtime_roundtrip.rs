@@ -1,0 +1,121 @@
+//! Integration test: AOT HLO artifacts (python/jax/pallas) load, compile and
+//! execute through the rust PJRT runtime, and the numerics match a rust-side
+//! XNOR-bitcount oracle exactly.
+//!
+//! Requires `make artifacts` to have run (skipped with a message otherwise —
+//! CI always builds artifacts first via the Makefile).
+
+use oxbnn::runtime::{HostTensor, Manifest, Runtime};
+use oxbnn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+/// Rust oracle for the XNOR-bitcount GEMM with fused comparator.
+fn xnor_gemm_oracle(
+    inputs: &[f32],
+    weights: &[f32],
+    h: usize,
+    s: usize,
+    k: usize,
+    apply_activation: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * k];
+    for i in 0..h {
+        for j in 0..k {
+            let mut count = 0.0f32;
+            for t in 0..s {
+                let a = inputs[i * s + t];
+                let b = weights[t * k + j];
+                count += a * b + (1.0 - a) * (1.0 - b);
+            }
+            out[i * k + j] = if apply_activation {
+                if count > 0.5 * s as f32 {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                count
+            };
+        }
+    }
+    out
+}
+
+#[test]
+fn xnor_gemm_artifact_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest parses");
+    let art = manifest.get("xnor_gemm").expect("xnor_gemm artifact");
+    let (h, s) = (art.args[0].shape[0], art.args[0].shape[1]);
+    let k = art.args[1].shape[1];
+
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(rt.device_count() >= 1);
+    let exe = rt.load_artifact(art).expect("compile artifact");
+
+    let mut rng = Rng::new(0xA0B1);
+    let inputs = rng.bits(h * s);
+    let weights = rng.bits(s * k);
+    let got = exe
+        .run(&[
+            HostTensor::new(vec![h, s], inputs.clone()).unwrap(),
+            HostTensor::new(vec![s, k], weights.clone()).unwrap(),
+        ])
+        .expect("execute");
+
+    // aot.py exports xnor_gemm with apply_activation=True.
+    let want = xnor_gemm_oracle(&inputs, &weights, h, s, k, true);
+    assert_eq!(got.shape, vec![h, k]);
+    assert_eq!(got.data, want, "PJRT result must match rust oracle exactly");
+}
+
+#[test]
+fn xnor_gemm_bench_artifact_raw_counts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest parses");
+    let art = manifest.get("xnor_gemm_bench").expect("bench artifact");
+    let (h, s) = (art.args[0].shape[0], art.args[0].shape[1]);
+    let k = art.args[1].shape[1];
+
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt.load_artifact(art).expect("compile artifact");
+
+    let mut rng = Rng::new(0xC4FE);
+    let inputs = rng.bits(h * s);
+    let weights = rng.bits(s * k);
+    let got = exe
+        .run(&[
+            HostTensor::new(vec![h, s], inputs.clone()).unwrap(),
+            HostTensor::new(vec![s, k], weights.clone()).unwrap(),
+        ])
+        .expect("execute");
+
+    let want = xnor_gemm_oracle(&inputs, &weights, h, s, k, false);
+    assert_eq!(got.data, want);
+    // Counts live in [0, S].
+    assert!(got.data.iter().all(|&z| (0.0..=s as f32).contains(&z)));
+}
+
+#[test]
+fn executable_rejects_bad_args() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let art = manifest.get("xnor_gemm").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_artifact(art).unwrap();
+    // Wrong arity.
+    assert!(exe.run(&[]).is_err());
+    // Wrong shape.
+    let bad = HostTensor::zeros(vec![1, 1]);
+    let ok = HostTensor::zeros(art.args[1].shape.clone());
+    assert!(exe.run(&[bad, ok]).is_err());
+}

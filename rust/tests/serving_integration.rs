@@ -1,0 +1,127 @@
+//! Coordinator integration: start the real server (PJRT workers), push
+//! concurrent requests, verify responses against the functional engine,
+//! and check metrics plumbing.
+
+use oxbnn::coordinator::{
+    synthetic_weights, InferenceRequest, Server, ServerConfig,
+};
+use oxbnn::functional::bnn;
+use oxbnn::runtime::Manifest;
+use oxbnn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn serve_tiny_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig::new(&dir, &["tiny"]);
+    let seed = cfg.weight_seed;
+    let server = Server::start(cfg).expect("server starts");
+    let input_len = server.input_len("tiny").expect("model registered");
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let artifact = manifest.get("bnn_tiny").unwrap();
+    let weights = synthetic_weights(artifact, seed);
+
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..6 {
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        let resp = server
+            .infer_blocking(InferenceRequest { model: "tiny".into(), input: input.clone() })
+            .expect("inference succeeds");
+        // Server must return the same logits as the functional engine.
+        let want = bnn::forward(artifact, &input, &weights);
+        assert_eq!(resp.logits, want, "served logits mismatch functional engine");
+        assert!(resp.total_s >= resp.execute_s);
+        assert!(resp.simulated_photonic_s > 0.0);
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, 6);
+    assert!(m.batches >= 1);
+    drop(m);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_submissions_all_complete() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(ServerConfig::new(&dir, &["tiny"])).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(1);
+    // Fire-and-collect: submit all, then await all receivers.
+    let rxs: Vec<_> = (0..16)
+        .map(|_| {
+            let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32).collect();
+            server
+                .submit(InferenceRequest { model: "tiny".into(), input })
+                .expect("submit")
+                .1
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().expect("reply").expect("ok");
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.completed, 16);
+    // Dynamic batching should have grouped at least some requests.
+    assert!(m.mean_batch_size() >= 1.0);
+    drop(m);
+    server.shutdown();
+}
+
+#[test]
+fn invalid_requests_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(ServerConfig::new(&dir, &["tiny"])).expect("start");
+    // Unknown model.
+    assert!(server
+        .submit(InferenceRequest { model: "nope".into(), input: vec![] })
+        .is_err());
+    // Wrong input length.
+    assert!(server
+        .submit(InferenceRequest { model: "tiny".into(), input: vec![0.0; 3] })
+        .is_err());
+    server.shutdown();
+}
+
+#[test]
+fn multi_replica_serving_balances_and_completes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = ServerConfig::new(&dir, &["tiny"]);
+    cfg.replicas = 3;
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(2);
+    // Burst submit so the router spreads load across replicas.
+    let mut seen = std::collections::BTreeSet::new();
+    let mut rxs = Vec::new();
+    for _ in 0..12 {
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32).collect();
+        let (replica, rx) = server
+            .submit(InferenceRequest { model: "tiny".into(), input })
+            .expect("submit");
+        seen.insert(replica);
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    assert!(seen.len() >= 2, "burst should hit multiple replicas: {:?}", seen);
+    assert_eq!(server.metrics.lock().unwrap().completed, 12);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_model_at_start_fails() {
+    let Some(dir) = artifacts_dir() else { return };
+    assert!(Server::start(ServerConfig::new(&dir, &["does_not_exist"])).is_err());
+}

@@ -1,0 +1,122 @@
+//! Cross-validation of the two performance paths: the event-driven
+//! transaction-level simulator and the closed-form analytic model must
+//! agree on transaction counts exactly and on compute-bound latency
+//! closely (the analytic model folds pipeline-fill into a fixed term).
+
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::arch::event_sim::simulate_layer;
+use oxbnn::arch::perf::layer_perf;
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::mapping::scheduler::MappingPolicy;
+
+fn small(pca: bool, n: usize, xpes: usize) -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::oxbnn_5();
+    cfg.n = n;
+    cfg.xpe_total = xpes;
+    if !pca {
+        cfg.bitcount = BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+        cfg.energy = oxbnn::energy::power::EnergyModel::robin();
+    }
+    cfg
+}
+
+#[test]
+fn pass_counts_agree_pca() {
+    let layer = GemmLayer::new("t", 24, 123, 6);
+    let cfg = small(true, 16, 8);
+    let analytic = layer_perf(&cfg, &layer);
+    let event = simulate_layer(&cfg, &layer, MappingPolicy::PcaLocal);
+    assert_eq!(event.counter("passes"), analytic.passes);
+    assert_eq!(event.counter("pca_readouts") as usize, layer.vdp_count());
+}
+
+#[test]
+fn pass_and_psum_counts_agree_reduction() {
+    let layer = GemmLayer::new("t", 24, 123, 6);
+    let cfg = small(false, 16, 8);
+    let analytic = layer_perf(&cfg, &layer);
+    let event = simulate_layer(&cfg, &layer, MappingPolicy::SlicedSpread);
+    assert_eq!(event.counter("passes"), analytic.passes);
+    assert_eq!(event.counter("psums"), analytic.psums);
+}
+
+#[test]
+fn compute_bound_latency_within_tolerance() {
+    // A compute-bound layer (few psums, PCA): the event sim's end time
+    // should sit within 25% of the analytic estimate.
+    let layer = GemmLayer::new("t", 64, 160, 4);
+    let cfg = small(true, 16, 8);
+    let analytic = layer_perf(&cfg, &layer);
+    let event = simulate_layer(&cfg, &layer, MappingPolicy::PcaLocal);
+    let rel = (event.end_time_s - analytic.latency_s).abs() / analytic.latency_s;
+    assert!(
+        rel < 0.25,
+        "event {} vs analytic {} (rel {:.2})",
+        event.end_time_s,
+        analytic.latency_s,
+        rel
+    );
+}
+
+#[test]
+fn energy_categories_consistent() {
+    let layer = GemmLayer::new("t", 16, 96, 4);
+    let pca_cfg = small(true, 16, 8);
+    let red_cfg = small(false, 16, 8);
+    let pca = simulate_layer(&pca_cfg, &layer, MappingPolicy::PcaLocal);
+    let red = simulate_layer(&red_cfg, &layer, MappingPolicy::SlicedSpread);
+    // Same photonic work (n bits per pass, equal pass counts) → gate
+    // energy scales exactly with the per-bit constants (ROBIN's two-MRR
+    // gates cost 2x OXBNN's single-MRR OXGs).
+    let per_bit_ratio = red_cfg.energy.xnor_j_per_bit / pca_cfg.energy.xnor_j_per_bit;
+    let measured_ratio = red.energy_of("oxg") / pca.energy_of("oxg");
+    assert!(
+        (measured_ratio - per_bit_ratio).abs() < 1e-9,
+        "gate energy ratio {} vs {}",
+        measured_ratio,
+        per_bit_ratio
+    );
+    // Only the reduction design pays ADC+reduction energy; only the PCA
+    // design pays readout energy.
+    assert_eq!(pca.energy_of("adc+reduction"), 0.0);
+    assert!(red.energy_of("adc+reduction") > 0.0);
+    assert!(pca.energy_of("pca") > 0.0);
+    assert_eq!(red.energy_of("pca"), 0.0);
+}
+
+#[test]
+fn analytic_monotone_in_xpe_count() {
+    // More XPEs → never slower (analytic model sanity).
+    let layer = GemmLayer::new("t", 256, 1152, 32);
+    let mut last = f64::INFINITY;
+    for xpes in [50, 100, 200, 400, 800] {
+        let cfg = small(true, 19, xpes);
+        let perf = layer_perf(&cfg, &layer);
+        assert!(perf.latency_s <= last + 1e-15);
+        last = perf.latency_s;
+    }
+}
+
+#[test]
+fn fig5_mapping_gap_grows_with_slices() {
+    // The more slices per VDP, the bigger the PCA's advantage over the
+    // psum-reduction design — the core Fig. 5 story.
+    let cfg_pca = small(true, 9, 4);
+    let cfg_red = small(false, 9, 4);
+    let mut last_ratio = 0.0;
+    for s in [9, 45, 90, 180] {
+        let layer = GemmLayer::new("t", 8, s, 2);
+        let pca = simulate_layer(&cfg_pca, &layer, MappingPolicy::PcaLocal);
+        let red = simulate_layer(&cfg_red, &layer, MappingPolicy::SlicedSpread);
+        let ratio = red.end_time_s / pca.end_time_s;
+        assert!(
+            ratio >= last_ratio * 0.8,
+            "S={}: ratio {} vs last {}",
+            s,
+            ratio,
+            last_ratio
+        );
+        last_ratio = ratio;
+    }
+    assert!(last_ratio > 1.0, "reduction design must be slower at many slices");
+}
