@@ -13,8 +13,8 @@
 
 use std::time::Instant;
 
+use oxbnn::api::{BackendKind, Session};
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::perf::workload_perf;
 use oxbnn::coordinator::{
     synthetic_weights, workload_from_artifact, InferenceRequest, Server, ServerConfig,
 };
@@ -45,16 +45,22 @@ fn main() -> anyhow::Result<()> {
         artifact.args.len() - 1
     );
 
-    // Simulated photonic performance of this exact geometry.
+    // Simulated photonic performance of this exact geometry, through the
+    // unified Session facade.
     let workload = workload_from_artifact(&artifact);
     for acc in [AcceleratorConfig::oxbnn_50(), AcceleratorConfig::oxbnn_5()] {
-        let perf = workload_perf(&acc, &workload);
+        let report = Session::builder()
+            .accelerator(acc)
+            .workload(workload.clone())
+            .backend(BackendKind::Analytic)
+            .build()?
+            .run();
         println!(
             "  simulated {}: frame {} → {:.0} FPS, {:.2} FPS/W",
-            perf.accelerator,
-            fmt_time(perf.frame_latency_s),
-            perf.fps,
-            perf.fps_per_w
+            report.accelerator,
+            fmt_time(report.frame_latency_s),
+            report.fps,
+            report.fps_per_w
         );
     }
 

@@ -2,18 +2,20 @@
 //!
 //! 1. Regenerate one row of the paper's scalability analysis (Table II).
 //! 2. Load the AOT-compiled XNOR-GEMM artifact and run it through PJRT.
-//! 3. Simulate a conv layer on OXBNN_50 vs a psum-reduction baseline.
+//! 3. Compare a conv layer on OXBNN_50 vs a psum-reduction baseline
+//!    through the unified `api::Session` facade.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
 use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::api::analytic_report;
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::perf::layer_perf;
 use oxbnn::baselines::robin::robin_po;
 use oxbnn::mapping::layer::GemmLayer;
 use oxbnn::runtime::{HostTensor, Manifest, Runtime};
 use oxbnn::util::rng::Rng;
 use oxbnn::util::units::fmt_time;
+use oxbnn::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. Scalability analysis (paper Table II, DR = 50 GS/s row) ------
@@ -28,35 +30,36 @@ fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("artifacts/ missing — run `make artifacts` first");
-        return Ok(());
+    } else {
+        let manifest = Manifest::load(&dir)?;
+        let art = manifest.get("xnor_gemm")?;
+        let (h, s) = (art.args[0].shape[0], art.args[0].shape[1]);
+        let k = art.args[1].shape[1];
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_artifact(art)?;
+        let mut rng = Rng::new(1);
+        let out = exe.run(&[
+            HostTensor::new(vec![h, s], rng.bits(h * s))?,
+            HostTensor::new(vec![s, k], rng.bits(s * k))?,
+        ])?;
+        let ones: f32 = out.data.iter().sum();
+        println!(
+            "PJRT xnor_gemm ({}x{} · {}x{}): {} activations high of {}",
+            h, s, s, k, ones, out.data.len()
+        );
     }
-    let manifest = Manifest::load(&dir)?;
-    let art = manifest.get("xnor_gemm")?;
-    let (h, s) = (art.args[0].shape[0], art.args[0].shape[1]);
-    let k = art.args[1].shape[1];
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_artifact(art)?;
-    let mut rng = Rng::new(1);
-    let out = exe.run(&[
-        HostTensor::new(vec![h, s], rng.bits(h * s))?,
-        HostTensor::new(vec![s, k], rng.bits(s * k))?,
-    ])?;
-    let ones: f32 = out.data.iter().sum();
-    println!(
-        "PJRT xnor_gemm ({}x{} · {}x{}): {} activations high of {}",
-        h, s, s, k, ones, out.data.len()
-    );
 
-    // --- 3. OXBNN vs baseline on one conv layer --------------------------
+    // --- 3. OXBNN vs baseline on one conv layer (api facade) -------------
     let layer = GemmLayer::new("conv3x3_256", 1024, 1152, 128);
-    let ox = layer_perf(&AcceleratorConfig::oxbnn_50(), &layer);
-    let po = layer_perf(&robin_po(), &layer);
+    let probe = Workload::new("conv_probe", vec![layer.clone()]);
+    let ox = analytic_report(&AcceleratorConfig::oxbnn_50(), &probe);
+    let po = analytic_report(&robin_po(), &probe);
     println!(
         "layer {}: OXBNN_50 {} vs ROBIN_PO {} ({:.1}x faster, psums {} vs {})",
         layer.name,
-        fmt_time(ox.latency_s),
-        fmt_time(po.latency_s),
-        po.latency_s / ox.latency_s,
+        fmt_time(ox.frame_latency_s),
+        fmt_time(po.frame_latency_s),
+        po.frame_latency_s / ox.frame_latency_s,
         ox.psums,
         po.psums
     );

@@ -10,8 +10,8 @@
 //!
 //! Run: `cargo bench --bench bench_ablations`
 
+use oxbnn::api::analytic_report;
 use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
-use oxbnn::arch::perf::workload_perf;
 use oxbnn::devices::variation::{max_tolerated_offset_nm, monte_carlo};
 use oxbnn::util::bench::Table;
 use oxbnn::workloads::Workload;
@@ -25,7 +25,7 @@ fn main() {
     for bw_tbps in [0.5, 1.0, 2.0, 8.0, 32.0, 1e6] {
         let fps = |mut cfg: AcceleratorConfig| {
             cfg.mem_bw_bits_per_s = bw_tbps * 1e12;
-            workload_perf(&cfg, vgg).fps
+            analytic_report(&cfg, vgg).fps
         };
         t.row(&[
             if bw_tbps >= 1e5 { "infinite".into() } else { format!("{} Tb/s", bw_tbps) },
@@ -40,11 +40,11 @@ fn main() {
     // --- A2: reduction latency -------------------------------------------
     println!("A2 — psum reduction latency sweep (ROBIN_PO on vgg_small):\n");
     let mut t = Table::new(&["t_red", "FPS", "slowdown vs OXBNN_5"]);
-    let ox5 = workload_perf(&AcceleratorConfig::oxbnn_5(), vgg).fps;
+    let ox5 = analytic_report(&AcceleratorConfig::oxbnn_5(), vgg).fps;
     for t_red_ns in [0.0, 0.78, 1.5625, 3.125, 6.25, 12.5] {
         let mut cfg = oxbnn::baselines::robin_po();
         cfg.bitcount = BitcountMode::Reduction { latency_s: t_red_ns * 1e-9, psum_bits: 16 };
-        let fps = workload_perf(&cfg, vgg).fps;
+        let fps = analytic_report(&cfg, vgg).fps;
         t.row(&[
             format!("{} ns", t_red_ns),
             format!("{:.0}", fps),
@@ -61,12 +61,12 @@ fn main() {
     let base_fps = {
         let mut cfg = AcceleratorConfig::oxbnn_50();
         cfg.xpe_total = 64;
-        workload_perf(&cfg, resnet).fps
+        analytic_report(&cfg, resnet).fps
     };
     for xpes in [64usize, 128, 256, 512, 1123, 2246, 4492] {
         let mut cfg = AcceleratorConfig::oxbnn_50();
         cfg.xpe_total = xpes;
-        let p = workload_perf(&cfg, resnet);
+        let p = analytic_report(&cfg, resnet);
         let ideal = base_fps * xpes as f64 / 64.0;
         t.row(&[
             format!("{}", xpes),

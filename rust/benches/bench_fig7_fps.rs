@@ -4,8 +4,9 @@
 //!
 //! Run: `cargo bench --bench bench_fig7_fps`
 
+use oxbnn::api::analytic_report;
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::arch::perf::gmean;
 use oxbnn::util::bench::{Bencher, Table};
 use oxbnn::util::threadpool::parallel_map;
 use oxbnn::workloads::Workload;
@@ -22,7 +23,7 @@ fn main() {
             .iter()
             .flat_map(|a| workloads.iter().map(move |w| (a.clone(), w.clone())))
             .collect();
-        parallel_map(jobs, 8, |(a, w)| workload_perf(&a, &w).fps)
+        parallel_map(jobs, 8, |(a, w)| analytic_report(&a, &w).fps)
     });
     println!(
         "sweep time (20 accelerator x workload sims): median {} (n={})\n",
@@ -41,7 +42,7 @@ fn main() {
         "gmean",
     ]);
     for a in &accels {
-        let row: Vec<f64> = workloads.iter().map(|w| workload_perf(a, w).fps).collect();
+        let row: Vec<f64> = workloads.iter().map(|w| analytic_report(a, w).fps).collect();
         table.row(&[
             a.name.clone(),
             format!("{:.0}", row[0]),

@@ -5,8 +5,9 @@
 //!
 //! Run: `cargo bench --bench bench_fig7_fpsw`
 
+use oxbnn::api::analytic_report;
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::arch::perf::gmean;
 use oxbnn::util::bench::Table;
 use oxbnn::workloads::Workload;
 
@@ -26,7 +27,7 @@ fn main() {
     for a in &accels {
         let row: Vec<f64> = workloads
             .iter()
-            .map(|w| workload_perf(a, w).fps_per_w)
+            .map(|w| analytic_report(a, w).fps_per_w)
             .collect();
         table.row(&[
             a.name.clone(),
@@ -50,7 +51,7 @@ fn main() {
         "frame",
     ]);
     for a in &accels {
-        let p = workload_perf(a, &workloads[0]);
+        let p = analytic_report(a, &workloads[0]);
         pw.row(&[
             a.name.clone(),
             format!("{:.2}", p.static_power_w),

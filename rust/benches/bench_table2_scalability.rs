@@ -7,8 +7,8 @@
 
 use oxbnn::analysis::pca_capacity::{gamma_calibrated, PAPER_TABLE2};
 use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::api::analytic_report;
 use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
-use oxbnn::arch::perf::workload_perf;
 use oxbnn::util::bench::{Bencher, Table};
 use oxbnn::workloads::Workload;
 
@@ -66,7 +66,7 @@ fn main() {
             bitcount: BitcountMode::Pca { gamma: gamma_calibrated(row.dr_gsps) },
             ..AcceleratorConfig::oxbnn_5()
         };
-        let perf = workload_perf(&cfg, wl);
+        let perf = analytic_report(&cfg, wl);
         ab.row(&[
             format!("{}", row.dr_gsps),
             format!("{}", row.n),

@@ -1,0 +1,323 @@
+//! The [`Backend`] trait — one execution model behind the [`super::Session`]
+//! facade — and its three built-in implementations:
+//!
+//! * [`AnalyticBackend`] — the closed-form model ([`crate::arch::perf`]),
+//!   fast enough for full Fig. 7 sweeps;
+//! * [`EventSimBackend`] — the transaction-level event-driven simulator
+//!   ([`crate::arch::event_sim`] / [`crate::arch::workload_sim`]) with real
+//!   PCA saturation/discharge dynamics;
+//! * [`FunctionalBackend`] — the integer XNOR-bitcount reference
+//!   ([`crate::functional::bnn`]), carrying arithmetic correctness through
+//!   the same report shape (timing delegated to the analytic model).
+//!
+//! All three consume the same `(AcceleratorConfig, GemmLayer, MappingPolicy)`
+//! inputs and produce the same [`LayerReport`] / [`Report`], so any
+//! accelerator — OXBNN variants and the ROBIN/LIGHTBULB baselines alike —
+//! compares apples-to-apples across execution models.
+
+use std::collections::BTreeMap;
+
+use super::report::{LayerReport, Report};
+use super::session::ApiError;
+use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use crate::mapping::layer::GemmLayer;
+use crate::mapping::scheduler::MappingPolicy;
+use crate::workloads::Workload;
+
+/// Which execution model a session runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Closed-form analytic model (default; full-sweep fast path).
+    Analytic,
+    /// Event-driven transaction-level simulation (detailed, slower).
+    Event,
+    /// Integer functional reference (correctness-carrying).
+    Functional,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Analytic => "analytic",
+            BackendKind::Event => "event",
+            BackendKind::Functional => "functional",
+        }
+    }
+
+    /// All kinds, in documentation order.
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Analytic, BackendKind::Event, BackendKind::Functional]
+    }
+
+    /// Instantiate the built-in backend of this kind.
+    pub fn create(&self) -> Box<dyn Backend + Send> {
+        match self {
+            BackendKind::Analytic => Box::new(AnalyticBackend),
+            BackendKind::Event => Box::new(EventSimBackend),
+            BackendKind::Functional => Box::new(FunctionalBackend::default()),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = ApiError;
+
+    fn from_str(s: &str) -> Result<BackendKind, ApiError> {
+        match s {
+            "analytic" | "perf" => Ok(BackendKind::Analytic),
+            "event" | "event-driven" | "sim" => Ok(BackendKind::Event),
+            "functional" | "bnn" => Ok(BackendKind::Functional),
+            other => Err(ApiError::UnknownBackend(other.to_string())),
+        }
+    }
+}
+
+/// The mapping policy an accelerator's bitcount hardware implies: PCA
+/// designs keep every slice of a VDP on one XPE (Fig. 5(b)); psum-reduction
+/// designs spread slices across the XPC (Fig. 5(a)).
+pub fn default_policy(cfg: &AcceleratorConfig) -> MappingPolicy {
+    match cfg.bitcount {
+        BitcountMode::Pca { .. } => MappingPolicy::PcaLocal,
+        BitcountMode::Reduction { .. } => MappingPolicy::SlicedSpread,
+    }
+}
+
+/// One execution model. Implementations are configuration-free: the
+/// accelerator under evaluation arrives with every call, which is what
+/// lets one backend sweep many accelerators (and any accelerator run on
+/// many backends).
+pub trait Backend {
+    /// Which kind this backend is (stamped into reports).
+    fn kind(&self) -> BackendKind;
+
+    /// Evaluate one GEMM layer on one accelerator.
+    fn run_layer(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        layer: &GemmLayer,
+        policy: MappingPolicy,
+    ) -> LayerReport;
+
+    /// Evaluate a whole workload (one inference frame). The default runs
+    /// layers sequentially and sums their latencies; backends that model
+    /// cross-layer effects (fetch/compute overlap) override this.
+    fn run_workload(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+    ) -> Report {
+        let layers: Vec<LayerReport> = workload
+            .layers
+            .iter()
+            .map(|l| self.run_layer(cfg, l, policy))
+            .collect();
+        let frame: f64 = layers.iter().map(|l| l.latency_s).sum();
+        Report::from_layers(self.kind(), cfg, &workload.name, layers, frame)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic
+// ---------------------------------------------------------------------------
+
+/// Closed-form analytic model (wraps [`crate::arch::perf`]). The mapping
+/// policy is implied by the bitcount mode, so the `policy` argument does
+/// not change the result here.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticBackend;
+
+impl Backend for AnalyticBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Analytic
+    }
+
+    fn run_layer(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        layer: &GemmLayer,
+        _policy: MappingPolicy,
+    ) -> LayerReport {
+        let p = crate::arch::perf::layer_perf(cfg, layer);
+        let mut timing = BTreeMap::new();
+        timing.insert("compute_s".to_string(), p.compute_s);
+        timing.insert("memory_s".to_string(), p.memory_s);
+        timing.insert("reduce_s".to_string(), p.reduce_s);
+        timing.insert("fixed_s".to_string(), p.fixed_s);
+        LayerReport {
+            name: p.name,
+            latency_s: p.latency_s,
+            dynamic_energy_j: p.dynamic_energy_j,
+            passes: p.passes,
+            psums: p.psums,
+            timing,
+            counters: BTreeMap::new(),
+            energy_breakdown: BTreeMap::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-driven
+// ---------------------------------------------------------------------------
+
+/// Transaction-level event-driven simulation (wraps
+/// [`crate::arch::event_sim`]); whole-workload runs reproduce
+/// [`crate::arch::workload_sim::simulate_frame`]'s fetch/compute overlap
+/// (pinned by the `event_backend_matches_simulate_frame` test).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventSimBackend;
+
+impl Backend for EventSimBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Event
+    }
+
+    fn run_layer(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        layer: &GemmLayer,
+        policy: MappingPolicy,
+    ) -> LayerReport {
+        let stats = crate::arch::event_sim::simulate_layer(cfg, layer, policy);
+        let mut counters = stats.counters().clone();
+        counters.insert("events".to_string(), stats.events_processed);
+        LayerReport {
+            name: layer.name.clone(),
+            latency_s: stats.end_time_s,
+            dynamic_energy_j: stats.total_energy_j(),
+            passes: stats.counter("passes"),
+            psums: stats.counter("psums"),
+            timing: BTreeMap::new(),
+            counters,
+            energy_breakdown: stats.energy_breakdown().clone(),
+        }
+    }
+
+    /// Whole frames chain layers with eDRAM prefetch overlap through the
+    /// same [`crate::arch::workload_sim::OverlapChain`] recurrence that
+    /// [`crate::arch::workload_sim::simulate_frame`] uses (layers run in
+    /// separate event spaces there too, so per-layer stats are identical).
+    fn run_workload(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+    ) -> Report {
+        let layers: Vec<LayerReport> = workload
+            .layers
+            .iter()
+            .map(|l| self.run_layer(cfg, l, policy))
+            .collect();
+        let mut chain = crate::arch::workload_sim::OverlapChain::new(cfg, workload);
+        for lr in &layers {
+            chain.step(lr.latency_s);
+        }
+        Report::from_layers(
+            self.kind(),
+            cfg,
+            &workload.name,
+            layers,
+            chain.frame_latency_s(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional
+// ---------------------------------------------------------------------------
+
+/// Integer XNOR-bitcount reference: recomputes a deterministic sample of
+/// each layer's VDPs bit-exactly two ways — whole-vector popcount vs the
+/// sliced accumulation an XPE actually performs — and flags VDPs whose
+/// bitcount would saturate the PCA (γ). Timing and energy are delegated to
+/// the analytic model; the value carried here is the
+/// [`super::Correctness`] block in the report.
+#[derive(Debug, Clone)]
+pub struct FunctionalBackend {
+    /// Seed for the synthetic {0,1} operands (deterministic per layer).
+    pub seed: u64,
+    /// Cap on VDPs recomputed per layer (keeps big layers affordable).
+    pub max_checked_vdps: usize,
+}
+
+impl Default for FunctionalBackend {
+    fn default() -> Self {
+        FunctionalBackend { seed: 0xB17C0, max_checked_vdps: 256 }
+    }
+}
+
+impl Backend for FunctionalBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Functional
+    }
+
+    fn run_layer(
+        &mut self,
+        cfg: &AcceleratorConfig,
+        layer: &GemmLayer,
+        _policy: MappingPolicy,
+    ) -> LayerReport {
+        use crate::mapping::slicing::{slice_xnor_popcount, slices};
+
+        let analytic = crate::arch::perf::layer_perf(cfg, layer);
+        let mut rng = crate::util::rng::Rng::new(
+            self.seed
+                ^ (layer.h as u64).wrapping_mul(0x9E3779B9)
+                ^ (layer.s as u64).wrapping_mul(0x85EBCA6B)
+                ^ (layer.k as u64),
+        );
+        let gamma = match cfg.bitcount {
+            BitcountMode::Pca { gamma } => Some(gamma),
+            BitcountMode::Reduction { .. } => None,
+        };
+        let slice_plan = slices(layer.s, cfg.n);
+        let check = layer.vdp_count().min(self.max_checked_vdps.max(1));
+        let mut mismatches = 0u64;
+        let mut clamped = 0u64;
+        for _ in 0..check {
+            let input = rng.bits(layer.s);
+            let weight = rng.bits(layer.s);
+            let whole = slice_xnor_popcount(&input, &weight);
+            let sliced: u64 = slice_plan
+                .iter()
+                .map(|sl| {
+                    slice_xnor_popcount(
+                        &input[sl.start..sl.start + sl.len],
+                        &weight[sl.start..sl.start + sl.len],
+                    )
+                })
+                .sum();
+            if sliced != whole {
+                mismatches += 1;
+            }
+            if let Some(g) = gamma {
+                if whole > g {
+                    clamped += 1;
+                }
+            }
+        }
+        // `passes`/`psums` live in the dedicated LayerReport fields; the
+        // counters map carries only what this backend uniquely measures.
+        let mut counters = BTreeMap::new();
+        counters.insert("checked_vdps".to_string(), check as u64);
+        counters.insert("mismatches".to_string(), mismatches);
+        counters.insert("pca_clamped".to_string(), clamped);
+        LayerReport {
+            name: layer.name.clone(),
+            latency_s: analytic.latency_s,
+            dynamic_energy_j: analytic.dynamic_energy_j,
+            passes: analytic.passes,
+            psums: analytic.psums,
+            timing: BTreeMap::new(),
+            counters,
+            energy_breakdown: BTreeMap::new(),
+        }
+    }
+}

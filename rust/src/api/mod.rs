@@ -1,0 +1,389 @@
+//! # Unified execution facade: `Session` + `Backend`
+//!
+//! The paper's evaluation story rests on comparing the *same* workload
+//! across execution models — the closed-form analytic model (Fig. 7
+//! sweeps), the transaction-level event-driven simulator (Fig. 5, PCA
+//! dynamics), and the integer functional reference (correctness). This
+//! module is the one seam those models share:
+//!
+//! * [`Backend`] — the execution-model trait
+//!   (`run_layer` / `run_workload`), implemented by
+//!   [`AnalyticBackend`], [`EventSimBackend`] and [`FunctionalBackend`];
+//! * [`Session`] — a builder-configured accelerator × workload × backend
+//!   evaluation returning one unified [`Report`] (FPS, FPS/W, energy
+//!   breakdown, transaction counts, optional correctness block).
+//!
+//! ```no_run
+//! use oxbnn::api::{BackendKind, Session};
+//! use oxbnn::arch::accelerator::AcceleratorConfig;
+//! use oxbnn::workloads::Workload;
+//!
+//! let mut session = Session::builder()
+//!     .accelerator(AcceleratorConfig::oxbnn_50())
+//!     .workload(Workload::evaluation_set().remove(0)) // vgg_small
+//!     .backend(BackendKind::Analytic)
+//!     .batch(8)
+//!     .build()
+//!     .unwrap();
+//! let report = session.run();
+//! println!("{} on {}: {:.0} FPS ({} passes, {} psums)",
+//!     report.accelerator, report.workload, report.fps,
+//!     report.passes, report.psums);
+//! ```
+//!
+//! Every consumer — the `oxbnn` CLI subcommands, the serving coordinator's
+//! simulated-photonic-latency annotation, the Fig. 7 benches and the
+//! examples — goes through this facade; nothing outside this module calls
+//! `arch::perf::workload_perf` directly. New execution models (sharded
+//! sweeps, remote backends) plug in via [`SessionBuilder::backend_impl`]
+//! without touching those consumers.
+
+pub mod backend;
+pub mod report;
+pub mod session;
+
+pub use backend::{
+    default_policy, AnalyticBackend, Backend, BackendKind, EventSimBackend,
+    FunctionalBackend,
+};
+pub use report::{Correctness, LayerReport, Report};
+pub use session::{ApiError, Session, SessionBuilder};
+
+/// One-call fast path for the overwhelmingly common case: evaluate
+/// `workload` on `cfg` with the analytic backend and the accelerator's
+/// implied mapping policy. Equivalent to the full [`Session`] builder
+/// chain with [`BackendKind::Analytic`] and batch 1 — the Fig. 7 sweep
+/// path the benches and baselines use.
+///
+/// # Panics
+///
+/// If `workload` has no layers (the invariant [`Workload::new`] upholds;
+/// the builder path returns [`ApiError::EmptyWorkload`] instead).
+///
+/// [`Workload::new`]: crate::workloads::Workload::new
+pub fn analytic_report(
+    cfg: &crate::arch::accelerator::AcceleratorConfig,
+    workload: &crate::workloads::Workload,
+) -> Report {
+    assert!(
+        !workload.layers.is_empty(),
+        "workload '{}' has no layers",
+        workload.name
+    );
+    let mut backend = AnalyticBackend;
+    backend.run_workload(cfg, workload, default_policy(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
+    use crate::arch::perf::workload_perf;
+    use crate::arch::workload_sim::simulate_frame;
+    use crate::mapping::layer::GemmLayer;
+    use crate::mapping::scheduler::MappingPolicy;
+    use crate::workloads::Workload;
+
+    fn small_cfg() -> AcceleratorConfig {
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = 9;
+        cfg.xpe_total = 18;
+        cfg
+    }
+
+    fn tiny_workload() -> Workload {
+        Workload::new(
+            "tiny",
+            vec![
+                GemmLayer::new("c1", 16, 243, 8),
+                GemmLayer::new("c2", 16, 288, 8).with_pool(),
+                GemmLayer::fc("fc", 512, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn analytic_backend_matches_workload_perf_exactly() {
+        let cfg = AcceleratorConfig::oxbnn_50();
+        let wl = Workload::evaluation_set().remove(0);
+        let perf = workload_perf(&cfg, &wl);
+        let report = Session::builder()
+            .accelerator(cfg)
+            .workload(wl)
+            .backend(BackendKind::Analytic)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.frame_latency_s, perf.frame_latency_s);
+        assert_eq!(report.fps, perf.fps);
+        assert_eq!(report.fps_per_w, perf.fps_per_w);
+        assert_eq!(report.avg_power_w, perf.avg_power_w);
+        assert_eq!(report.static_power_w, perf.static_power_w);
+        assert_eq!(
+            report.dynamic_energy_per_frame_j,
+            perf.dynamic_energy_per_frame_j
+        );
+        assert_eq!(report.layers.len(), perf.layers.len());
+        let passes: u64 = perf.layers.iter().map(|l| l.passes).sum();
+        assert_eq!(report.passes, passes);
+    }
+
+    #[test]
+    fn event_backend_matches_simulate_frame() {
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let trace = simulate_frame(&cfg, &wl, MappingPolicy::PcaLocal);
+        let report = Session::builder()
+            .accelerator(cfg)
+            .workload(wl)
+            .backend(BackendKind::Event)
+            .build()
+            .unwrap()
+            .run();
+        assert!(
+            (report.frame_latency_s - trace.frame_latency_s).abs() < 1e-15,
+            "session {} vs simulate_frame {}",
+            report.frame_latency_s,
+            trace.frame_latency_s
+        );
+        assert_eq!(report.passes, trace.stats.counter("passes"));
+        assert_eq!(report.psums, trace.stats.counter("psums"));
+        let energy = (report.dynamic_energy_per_frame_j
+            - trace.stats.total_energy_j())
+        .abs();
+        assert!(energy < 1e-18, "energy ledger diverged by {} J", energy);
+    }
+
+    #[test]
+    fn functional_backend_carries_clean_correctness() {
+        let report = Session::builder()
+            .accelerator(small_cfg())
+            .workload(tiny_workload())
+            .backend(BackendKind::Functional)
+            .build()
+            .unwrap()
+            .run();
+        let c = report.correctness.as_ref().expect("functional correctness");
+        assert!(c.vdps_checked > 0);
+        assert_eq!(c.mismatches, 0, "sliced accumulation must be exact");
+        assert!(c.is_clean());
+        assert_eq!(c.pca_clamped, 0, "γ=29761 cannot clamp S ≤ 512 layers");
+        // Timing delegates to the analytic model.
+        let analytic = Session::builder()
+            .accelerator(small_cfg())
+            .workload(tiny_workload())
+            .backend(BackendKind::Analytic)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.frame_latency_s, analytic.frame_latency_s);
+        // Non-functional backends carry no correctness block.
+        assert!(analytic.correctness.is_none());
+    }
+
+    #[test]
+    fn functional_backend_flags_pca_clamping() {
+        let mut cfg = small_cfg();
+        cfg.bitcount = BitcountMode::Pca { gamma: 4 }; // absurdly small
+        let report = Session::builder()
+            .accelerator(cfg)
+            .workload(tiny_workload())
+            .backend(BackendKind::Functional)
+            .build()
+            .unwrap()
+            .run();
+        let c = report.correctness.unwrap();
+        assert!(c.pca_clamped > 0, "γ=4 must clamp ~half-ones vectors");
+        assert_eq!(c.mismatches, 0);
+    }
+
+    #[test]
+    fn builder_resolves_names_and_reports_errors() {
+        let mut s = Session::builder()
+            .accelerator_named("ROBIN_EO")
+            .workload_named("vgg_small")
+            .build()
+            .unwrap();
+        assert_eq!(s.accelerator().name, "ROBIN_EO");
+        assert_eq!(s.workload().name, "vgg_small");
+        assert_eq!(s.backend_kind(), BackendKind::Analytic);
+        assert_eq!(s.policy(), MappingPolicy::SlicedSpread); // implied
+        assert!(s.run().psums > 0);
+
+        assert!(matches!(
+            Session::builder().workload(tiny_workload()).build(),
+            Err(ApiError::MissingAccelerator)
+        ));
+        assert!(matches!(
+            Session::builder().accelerator(small_cfg()).build(),
+            Err(ApiError::MissingWorkload)
+        ));
+        assert!(matches!(
+            Session::builder()
+                .accelerator_named("WARP_CORE")
+                .workload(tiny_workload())
+                .build(),
+            Err(ApiError::UnknownAccelerator(_))
+        ));
+        assert!(matches!(
+            Session::builder()
+                .accelerator(small_cfg())
+                .workload_named("doom")
+                .build(),
+            Err(ApiError::UnknownWorkload(_))
+        ));
+        assert!(matches!(
+            Session::builder()
+                .accelerator(small_cfg())
+                .workload(tiny_workload())
+                .batch(0)
+                .build(),
+            Err(ApiError::ZeroBatch)
+        ));
+    }
+
+    #[test]
+    fn empty_workload_is_an_error_not_a_panic() {
+        // Workload::new asserts non-empty, but the struct fields are
+        // public — the facade must reject it instead of panicking (event
+        // backend) or reporting fps = inf (analytic).
+        let w = Workload { name: "empty".into(), layers: vec![] };
+        assert!(matches!(
+            Session::builder().accelerator(small_cfg()).workload(w).build(),
+            Err(ApiError::EmptyWorkload(_))
+        ));
+    }
+
+    #[test]
+    fn analytic_report_convenience_matches_session() {
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let quick = analytic_report(&cfg, &wl);
+        let full = Session::builder()
+            .accelerator(cfg)
+            .workload(wl)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(quick.frame_latency_s, full.frame_latency_s);
+        assert_eq!(quick.passes, full.passes);
+        assert_eq!(quick.fps_per_w, full.fps_per_w);
+    }
+
+    #[test]
+    fn backend_kind_parses_and_displays() {
+        use std::str::FromStr;
+        assert_eq!(BackendKind::from_str("analytic").unwrap(), BackendKind::Analytic);
+        assert_eq!(BackendKind::from_str("event").unwrap(), BackendKind::Event);
+        assert_eq!(
+            BackendKind::from_str("event-driven").unwrap(),
+            BackendKind::Event
+        );
+        assert_eq!(
+            BackendKind::from_str("functional").unwrap(),
+            BackendKind::Functional
+        );
+        assert!(BackendKind::from_str("quantum").is_err());
+        for kind in BackendKind::all() {
+            assert_eq!(BackendKind::from_str(kind.as_str()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn batch_scales_batch_latency_only() {
+        let report = Session::builder()
+            .accelerator(small_cfg())
+            .workload(tiny_workload())
+            .batch(4)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.batch, 4);
+        assert!(
+            (report.batch_latency_s - 4.0 * report.frame_latency_s).abs() < 1e-15
+        );
+        assert!((report.fps - 1.0 / report.frame_latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_layer_works_for_all_backends() {
+        let layer = GemmLayer::new("l", 16, 96, 4);
+        for kind in BackendKind::all() {
+            let mut s = Session::builder()
+                .accelerator(small_cfg())
+                .workload(tiny_workload())
+                .backend(kind)
+                .build()
+                .unwrap();
+            let lr = s.run_layer(&layer);
+            assert_eq!(lr.passes, layer.total_passes(9) as u64, "{}", kind);
+            assert!(lr.latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let report = Session::builder()
+            .accelerator(small_cfg())
+            .workload(tiny_workload())
+            .backend(BackendKind::Event)
+            .build()
+            .unwrap()
+            .run();
+        let j = report.to_json();
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("backend").and_then(crate::util::json::Json::as_str),
+            Some("event")
+        );
+        assert_eq!(
+            back.get("passes")
+                .and_then(crate::util::json::Json::as_usize),
+            Some(report.passes as usize)
+        );
+        assert_eq!(
+            back.get("layers")
+                .and_then(crate::util::json::Json::as_arr)
+                .map(|a| a.len()),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn custom_backend_plugs_in() {
+        /// A trivial fixed-latency model, standing in for future plug-in
+        /// execution models.
+        struct Flat;
+        impl Backend for Flat {
+            fn kind(&self) -> BackendKind {
+                BackendKind::Analytic
+            }
+            fn run_layer(
+                &mut self,
+                _cfg: &AcceleratorConfig,
+                layer: &GemmLayer,
+                _policy: MappingPolicy,
+            ) -> LayerReport {
+                LayerReport {
+                    name: layer.name.clone(),
+                    latency_s: 1e-6,
+                    dynamic_energy_j: 0.0,
+                    passes: 1,
+                    psums: 0,
+                    timing: Default::default(),
+                    counters: Default::default(),
+                    energy_breakdown: Default::default(),
+                }
+            }
+        }
+        let report = Session::builder()
+            .accelerator(small_cfg())
+            .workload(tiny_workload())
+            .backend_impl(Box::new(Flat))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.passes, 3);
+        assert!((report.frame_latency_s - 3e-6).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,207 @@
+//! The unified result type every [`super::Backend`] produces.
+//!
+//! A [`Report`] carries the full Fig. 7 metric set (FPS, FPS/W, energy
+//! breakdown) together with the transaction counts (PASSes, psums) that
+//! the event-driven simulator and the analytic model are cross-validated
+//! on — one shape regardless of which execution model produced it.
+
+use std::collections::BTreeMap;
+
+use super::backend::BackendKind;
+use crate::arch::accelerator::AcceleratorConfig;
+use crate::util::json::Json;
+
+/// Per-layer slice of a [`Report`].
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    /// Layer latency (s). Analytic: closed-form estimate; event: simulated
+    /// end time; functional: the analytic estimate (the functional engine
+    /// models arithmetic, not time).
+    pub latency_s: f64,
+    pub dynamic_energy_j: f64,
+    /// XPE PASS transactions in this layer.
+    pub passes: u64,
+    /// Electrical psums emitted (0 in PCA mode — the paper's headline).
+    pub psums: u64,
+    /// Latency decomposition (keys like `compute_s`, `memory_s`,
+    /// `reduce_s`, `fixed_s`); backends fill what they can attribute.
+    pub timing: BTreeMap<String, f64>,
+    /// Named transaction counters (event backend: the full SimStats
+    /// counter set; functional backend: `checked_vdps`, `mismatches`, ...).
+    pub counters: BTreeMap<String, u64>,
+    /// Dynamic-energy ledger by category (event backend only; the
+    /// analytic model attributes energy at layer granularity).
+    pub energy_breakdown: BTreeMap<String, f64>,
+}
+
+impl LayerReport {
+    /// Named counter, 0 when the backend did not record it.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+}
+
+/// Functional-backend correctness summary.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Correctness {
+    /// VDPs whose XNOR-bitcount arithmetic was recomputed bit-exactly.
+    pub vdps_checked: u64,
+    /// Sliced-accumulation vs whole-vector bitcount disagreements
+    /// (must be 0 — the invariant that makes the PCA mapping valid).
+    pub mismatches: u64,
+    /// VDPs whose bitcount exceeded the PCA capacity γ (would saturate
+    /// the TIR mid-VDP on real hardware).
+    pub pca_clamped: u64,
+}
+
+impl Correctness {
+    pub fn is_clean(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+/// Unified whole-workload result (one frame unless `batch > 1`).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub backend: BackendKind,
+    pub accelerator: String,
+    pub workload: String,
+    /// Frames evaluated back-to-back by the session.
+    pub batch: usize,
+    /// Latency of one inference frame (s).
+    pub frame_latency_s: f64,
+    /// Latency of the whole batch (frames are sequential on one device).
+    pub batch_latency_s: f64,
+    pub fps: f64,
+    pub dynamic_energy_per_frame_j: f64,
+    pub static_power_w: f64,
+    pub avg_power_w: f64,
+    pub fps_per_w: f64,
+    /// Total XPE PASS transactions per frame.
+    pub passes: u64,
+    /// Total electrical psums per frame (0 in PCA mode).
+    pub psums: u64,
+    /// Dynamic-energy ledger by category, summed over layers (may be
+    /// empty for backends that only attribute per-layer totals).
+    pub energy_breakdown: BTreeMap<String, f64>,
+    /// Present iff the backend carries correctness (functional).
+    pub correctness: Option<Correctness>,
+    pub layers: Vec<LayerReport>,
+}
+
+impl Report {
+    /// Assemble a report from per-layer results plus the frame latency the
+    /// backend attributes to the whole frame (which may be less than the
+    /// layer sum when fetch/compute overlap is modeled).
+    pub(crate) fn from_layers(
+        backend: BackendKind,
+        cfg: &AcceleratorConfig,
+        workload_name: &str,
+        layers: Vec<LayerReport>,
+        frame_latency_s: f64,
+    ) -> Report {
+        let dynamic: f64 = layers.iter().map(|l| l.dynamic_energy_j).sum();
+        let passes: u64 = layers.iter().map(|l| l.passes).sum();
+        let psums: u64 = layers.iter().map(|l| l.psums).sum();
+        let mut energy_breakdown: BTreeMap<String, f64> = BTreeMap::new();
+        for l in &layers {
+            for (k, v) in &l.energy_breakdown {
+                *energy_breakdown.entry(k.clone()).or_insert(0.0) += *v;
+            }
+        }
+        let correctness = if backend == BackendKind::Functional {
+            Some(Correctness {
+                vdps_checked: layers.iter().map(|l| l.counter("checked_vdps")).sum(),
+                mismatches: layers.iter().map(|l| l.counter("mismatches")).sum(),
+                pca_clamped: layers.iter().map(|l| l.counter("pca_clamped")).sum(),
+            })
+        } else {
+            None
+        };
+        let static_power_w = cfg.static_power_w();
+        let frame_energy = static_power_w * frame_latency_s + dynamic;
+        Report {
+            backend,
+            accelerator: cfg.name.clone(),
+            workload: workload_name.to_string(),
+            batch: 1,
+            frame_latency_s,
+            batch_latency_s: frame_latency_s,
+            fps: 1.0 / frame_latency_s,
+            dynamic_energy_per_frame_j: dynamic,
+            static_power_w,
+            avg_power_w: frame_energy / frame_latency_s,
+            fps_per_w: 1.0 / frame_energy,
+            passes,
+            psums,
+            energy_breakdown,
+            correctness,
+            layers,
+        }
+    }
+
+    /// Stamp the session's batch size (frames run back-to-back).
+    pub(crate) fn with_batch(mut self, batch: usize) -> Report {
+        self.batch = batch;
+        self.batch_latency_s = self.frame_latency_s * batch as f64;
+        self
+    }
+
+    /// Total wall-plug energy of one frame (static + dynamic), J.
+    pub fn total_energy_per_frame_j(&self) -> f64 {
+        self.static_power_w * self.frame_latency_s + self.dynamic_energy_per_frame_j
+    }
+
+    /// JSON rendering for result dumps and sweep outputs.
+    pub fn to_json(&self) -> Json {
+        let layers = Json::Arr(
+            self.layers
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("name", Json::Str(l.name.clone())),
+                        ("latency_s", Json::Num(l.latency_s)),
+                        ("dynamic_energy_j", Json::Num(l.dynamic_energy_j)),
+                        ("passes", Json::Num(l.passes as f64)),
+                        ("psums", Json::Num(l.psums as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let energy = Json::Obj(
+            self.energy_breakdown
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        let mut fields = vec![
+            ("backend", Json::Str(self.backend.as_str().to_string())),
+            ("accelerator", Json::Str(self.accelerator.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("frame_latency_s", Json::Num(self.frame_latency_s)),
+            ("batch_latency_s", Json::Num(self.batch_latency_s)),
+            ("fps", Json::Num(self.fps)),
+            ("fps_per_w", Json::Num(self.fps_per_w)),
+            ("dynamic_energy_per_frame_j", Json::Num(self.dynamic_energy_per_frame_j)),
+            ("static_power_w", Json::Num(self.static_power_w)),
+            ("avg_power_w", Json::Num(self.avg_power_w)),
+            ("passes", Json::Num(self.passes as f64)),
+            ("psums", Json::Num(self.psums as f64)),
+            ("energy_breakdown_j", energy),
+            ("layers", layers),
+        ];
+        if let Some(c) = &self.correctness {
+            fields.push((
+                "correctness",
+                Json::obj(vec![
+                    ("vdps_checked", Json::Num(c.vdps_checked as f64)),
+                    ("mismatches", Json::Num(c.mismatches as f64)),
+                    ("pca_clamped", Json::Num(c.pca_clamped as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}

@@ -1,0 +1,205 @@
+//! The [`Session`] facade: one builder-configured object that runs a
+//! workload on an accelerator through any [`Backend`] and returns the
+//! unified [`Report`].
+//!
+//! ```no_run
+//! use oxbnn::api::{BackendKind, Session};
+//!
+//! let report = Session::builder()
+//!     .accelerator_named("OXBNN_50")
+//!     .workload_named("vgg_small")
+//!     .backend(BackendKind::Event)
+//!     .batch(4)
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! println!("{:.1} FPS, {:.2} FPS/W", report.fps, report.fps_per_w);
+//! ```
+
+use super::backend::{default_policy, Backend, BackendKind};
+use super::report::{LayerReport, Report};
+use crate::arch::accelerator::AcceleratorConfig;
+use crate::mapping::layer::GemmLayer;
+use crate::mapping::scheduler::MappingPolicy;
+use crate::workloads::Workload;
+
+/// Errors from building a [`Session`].
+#[derive(Debug, thiserror::Error)]
+pub enum ApiError {
+    #[error("session needs an accelerator: call .accelerator(..) or .accelerator_named(..)")]
+    MissingAccelerator,
+    #[error("session needs a workload: call .workload(..) or .workload_named(..)")]
+    MissingWorkload,
+    #[error("unknown accelerator '{0}' (see `oxbnn info` for the built-ins)")]
+    UnknownAccelerator(String),
+    #[error("unknown workload '{0}' (built-ins: vgg_small|resnet18|mobilenet_v2|shufflenet_v2)")]
+    UnknownWorkload(String),
+    #[error("workload '{0}' has no layers")]
+    EmptyWorkload(String),
+    #[error("unknown backend '{0}' (expected analytic|event|functional)")]
+    UnknownBackend(String),
+    #[error("batch must be >= 1")]
+    ZeroBatch,
+    #[error(transparent)]
+    Config(#[from] crate::config::ConfigError),
+}
+
+enum BackendChoice {
+    Kind(BackendKind),
+    Custom(Box<dyn Backend + Send>),
+}
+
+/// Builder for [`Session`]; see the module docs for the usual call chain.
+pub struct SessionBuilder {
+    accelerator: Option<AcceleratorConfig>,
+    accelerator_name: Option<String>,
+    workload: Option<Workload>,
+    workload_name: Option<String>,
+    backend: BackendChoice,
+    policy: Option<MappingPolicy>,
+    batch: usize,
+}
+
+impl SessionBuilder {
+    /// Use this accelerator configuration (takes precedence over
+    /// [`SessionBuilder::accelerator_named`]).
+    pub fn accelerator(mut self, cfg: AcceleratorConfig) -> Self {
+        self.accelerator = Some(cfg);
+        self
+    }
+
+    /// Use a built-in accelerator by name (resolved at `build`):
+    /// `OXBNN_5|OXBNN_50|ROBIN_EO|ROBIN_PO|LIGHTBULB`.
+    pub fn accelerator_named(mut self, name: impl Into<String>) -> Self {
+        self.accelerator_name = Some(name.into());
+        self
+    }
+
+    /// Use this workload (takes precedence over
+    /// [`SessionBuilder::workload_named`]).
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Use a built-in evaluation workload by name (resolved at `build`).
+    pub fn workload_named(mut self, name: impl Into<String>) -> Self {
+        self.workload_name = Some(name.into());
+        self
+    }
+
+    /// Select the execution model (default: [`BackendKind::Analytic`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = BackendChoice::Kind(kind);
+        self
+    }
+
+    /// Inject a custom [`Backend`] implementation (future accelerator
+    /// models plug in here without touching the consumers).
+    pub fn backend_impl(mut self, backend: Box<dyn Backend + Send>) -> Self {
+        self.backend = BackendChoice::Custom(backend);
+        self
+    }
+
+    /// Override the VDP-to-XPE mapping policy (default: implied by the
+    /// accelerator's bitcount mode — see [`default_policy`]).
+    pub fn policy(mut self, policy: MappingPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Frames to evaluate back-to-back (default 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Resolve names and assemble the session.
+    pub fn build(self) -> Result<Session, ApiError> {
+        if self.batch == 0 {
+            return Err(ApiError::ZeroBatch);
+        }
+        let accelerator = match (self.accelerator, self.accelerator_name) {
+            (Some(cfg), _) => cfg,
+            (None, Some(name)) => crate::config::builtin(&name)
+                .ok_or(ApiError::UnknownAccelerator(name))?,
+            (None, None) => return Err(ApiError::MissingAccelerator),
+        };
+        let workload = match (self.workload, self.workload_name) {
+            (Some(w), _) => w,
+            (None, Some(name)) => Workload::evaluation_set()
+                .into_iter()
+                .find(|w| w.name == name)
+                .ok_or(ApiError::UnknownWorkload(name))?,
+            (None, None) => return Err(ApiError::MissingWorkload),
+        };
+        // `Workload::new` asserts this, but the struct's fields are public;
+        // guard here so the library API errors instead of panicking (or
+        // dividing by an empty frame) later.
+        if workload.layers.is_empty() {
+            return Err(ApiError::EmptyWorkload(workload.name));
+        }
+        let policy = self.policy.unwrap_or_else(|| default_policy(&accelerator));
+        let backend = match self.backend {
+            BackendChoice::Kind(kind) => kind.create(),
+            BackendChoice::Custom(b) => b,
+        };
+        Ok(Session { accelerator, workload, backend, policy, batch: self.batch })
+    }
+}
+
+/// A configured accelerator × workload × backend evaluation.
+pub struct Session {
+    accelerator: AcceleratorConfig,
+    workload: Workload,
+    backend: Box<dyn Backend + Send>,
+    policy: MappingPolicy,
+    batch: usize,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            accelerator: None,
+            accelerator_name: None,
+            workload: None,
+            workload_name: None,
+            backend: BackendChoice::Kind(BackendKind::Analytic),
+            policy: None,
+            batch: 1,
+        }
+    }
+
+    /// Run the configured workload and return the unified report.
+    pub fn run(&mut self) -> Report {
+        self.backend
+            .run_workload(&self.accelerator, &self.workload, self.policy)
+            .with_batch(self.batch)
+    }
+
+    /// Run a single layer (not necessarily from the configured workload)
+    /// on the session's accelerator and backend.
+    pub fn run_layer(&mut self, layer: &GemmLayer) -> LayerReport {
+        self.backend.run_layer(&self.accelerator, layer, self.policy)
+    }
+
+    pub fn accelerator(&self) -> &AcceleratorConfig {
+        &self.accelerator
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    pub fn policy(&self) -> MappingPolicy {
+        self.policy
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}

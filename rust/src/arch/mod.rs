@@ -11,4 +11,4 @@ pub use accelerator::{AcceleratorConfig, BitcountMode, DEFAULT_MEM_BW};
 pub use event_sim::{simulate_layer, LayerWorld};
 pub use perf::{gmean, layer_perf, workload_perf, LayerPerf, WorkloadPerf};
 pub use reduction::ReductionNetwork;
-pub use workload_sim::{simulate_frame, FrameTrace, LayerTrace};
+pub use workload_sim::{simulate_frame, FrameTrace, LayerTrace, OverlapChain};

@@ -42,6 +42,55 @@ impl FrameTrace {
     }
 }
 
+/// Double-buffered fetch/compute overlap chaining for one frame: layer
+/// l+1's operand fetch starts when layer l starts computing. This is the
+/// single home of the frame-latency recurrence, shared by
+/// [`simulate_frame`] and the api facade's event backend
+/// (`api::EventSimBackend::run_workload`) so the two cannot drift.
+pub struct OverlapChain<'a> {
+    cfg: &'a AcceleratorConfig,
+    workload: &'a Workload,
+    now: f64,
+    pending_fetch_done: f64,
+    idx: usize,
+}
+
+impl<'a> OverlapChain<'a> {
+    pub fn new(cfg: &'a AcceleratorConfig, workload: &'a Workload) -> OverlapChain<'a> {
+        OverlapChain {
+            cfg,
+            workload,
+            now: 0.0,
+            // First layer cannot overlap its fetch with anything.
+            pending_fetch_done: first_fetch_time(cfg, workload),
+            idx: 0,
+        }
+    }
+
+    /// Advance past the next layer given its compute (event end) time.
+    /// Returns `(start_s, next_fetch_s)` for trace recording.
+    pub fn step(&mut self, compute_s: f64) -> (f64, f64) {
+        let start = self.now.max(self.pending_fetch_done);
+        // Next layer's operands prefetch while this layer computes.
+        let next_fetch = self
+            .workload
+            .layers
+            .get(self.idx + 1)
+            .map(|l| l.operand_bits() as f64 / self.cfg.mem_bw_bits_per_s)
+            .unwrap_or(0.0);
+        self.pending_fetch_done =
+            start + next_fetch + self.cfg.peripherals.edram.latency_s;
+        self.now = start + compute_s + self.cfg.peripherals.bus.latency_s;
+        self.idx += 1;
+        (start, next_fetch)
+    }
+
+    /// Frame latency after the layers stepped so far.
+    pub fn frame_latency_s(&self) -> f64 {
+        self.now
+    }
+}
+
 /// Event-simulate one frame of `workload` on `cfg`.
 ///
 /// Each layer runs in its own event space (layers are strictly dependent,
@@ -55,21 +104,12 @@ pub fn simulate_frame(
 ) -> FrameTrace {
     let mut total = SimStats::default();
     let mut layers = Vec::with_capacity(workload.layers.len());
-    let mut now = 0.0f64;
-    // First layer cannot overlap its fetch with anything.
-    let mut pending_fetch_done = first_fetch_time(cfg, workload);
-    for (i, layer) in workload.layers.iter().enumerate() {
-        let start = now.max(pending_fetch_done);
+    let mut chain = OverlapChain::new(cfg, workload);
+    for layer in workload.layers.iter() {
         let mut world = LayerWorld::new(cfg.clone(), layer.clone(), policy);
         let budget = (layer.total_passes(cfg.n) as u64) * 8 + 10_000;
         let stats = crate::sim::engine::run(&mut world, budget);
-        // Next layer's operands prefetch while this layer computes.
-        let next_fetch = workload
-            .layers
-            .get(i + 1)
-            .map(|l| l.operand_bits() as f64 / cfg.mem_bw_bits_per_s)
-            .unwrap_or(0.0);
-        pending_fetch_done = start + next_fetch + cfg.peripherals.edram.latency_s;
+        let (start, next_fetch) = chain.step(stats.end_time_s);
         layers.push(LayerTrace {
             name: layer.name.clone(),
             start_s: start,
@@ -77,9 +117,9 @@ pub fn simulate_frame(
             fetch_s: next_fetch,
             events: stats.events_processed,
         });
-        now = start + stats.end_time_s + cfg.peripherals.bus.latency_s;
         merge(&mut total, &stats);
     }
+    let now = chain.frame_latency_s();
     total.end_time_s = now;
     FrameTrace {
         accelerator: cfg.name.clone(),
@@ -108,8 +148,8 @@ fn merge(total: &mut SimStats, part: &SimStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{BackendKind, Session};
     use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
-    use crate::arch::perf::workload_perf;
     use crate::mapping::layer::GemmLayer;
 
     /// Layers with >= 26 slices/VDP at N=9 so that VDP readouts arrive
@@ -165,7 +205,13 @@ mod tests {
         let cfg = small_cfg();
         let wl = tiny_workload();
         let event = simulate_frame(&cfg, &wl, MappingPolicy::PcaLocal);
-        let analytic = workload_perf(&cfg, &wl);
+        let analytic = Session::builder()
+            .accelerator(cfg)
+            .workload(wl)
+            .backend(BackendKind::Analytic)
+            .build()
+            .unwrap()
+            .run();
         let rel = (event.frame_latency_s - analytic.frame_latency_s).abs()
             / analytic.frame_latency_s;
         assert!(

@@ -61,6 +61,19 @@ mod tests {
     }
 
     #[test]
+    fn fig7_ordering_holds_through_session_facade() {
+        // Same facade, same backend, same workload: OXBNN_50 (the matched
+        // 50 GS/s variant) must beat LIGHTBULB on FPS and FPS/W.
+        use crate::api::analytic_report;
+        let vgg = crate::workloads::Workload::evaluation_set().remove(0);
+        let ox = analytic_report(&AcceleratorConfig::oxbnn_50(), &vgg);
+        let lb = analytic_report(&lightbulb(), &vgg);
+        assert!(ox.fps > lb.fps);
+        assert!(ox.fps_per_w > lb.fps_per_w);
+        assert!(lb.psums > 0 && ox.psums == 0);
+    }
+
+    #[test]
     fn pcm_weights_reduce_tuning_power() {
         // Non-volatile PCM weight cells need no static hold power; modeled
         // as half the tuning population of an all-MRR design.

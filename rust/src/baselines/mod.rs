@@ -1,8 +1,39 @@
 //! Baseline photonic BNN accelerators the paper compares against
 //! (Section V-B): ROBIN (EO/PO) and LIGHTBULB.
+//!
+//! Baselines are plain [`AcceleratorConfig`]s, so every [`crate::api`]
+//! backend (analytic, event-driven, functional) runs them through the same
+//! [`crate::api::Session`] facade as the OXBNN variants — the Fig. 7
+//! comparison is apples-to-apples by construction. Each baseline module
+//! pins that property with a facade-level test.
+
+use crate::arch::accelerator::AcceleratorConfig;
 
 pub mod lightbulb;
 pub mod robin;
 
 pub use lightbulb::lightbulb;
 pub use robin::{robin_eo, robin_po};
+
+/// The three baseline configurations, in the paper's figure order.
+pub fn baseline_set() -> Vec<AcceleratorConfig> {
+    vec![robin_eo(), robin_po(), lightbulb()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_set_matches_evaluation_set_tail() {
+        let names: Vec<String> =
+            baseline_set().into_iter().map(|c| c.name).collect();
+        assert_eq!(names, vec!["ROBIN_EO", "ROBIN_PO", "LIGHTBULB"]);
+        // The evaluation set is exactly [OXBNN_5, OXBNN_50] + baselines.
+        let eval: Vec<String> = AcceleratorConfig::evaluation_set()
+            .into_iter()
+            .map(|c| c.name)
+            .collect();
+        assert_eq!(&eval[2..], names.as_slice());
+    }
+}

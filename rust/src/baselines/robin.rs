@@ -70,6 +70,24 @@ mod tests {
     }
 
     #[test]
+    fn fig7_ordering_holds_through_session_facade() {
+        // Apples-to-apples: the same api facade that evaluates OXBNN
+        // evaluates ROBIN; on the Fig. 7 metrics OXBNN_5 (same 5 GS/s data
+        // rate) must win both FPS and FPS/W against both variants.
+        use crate::api::analytic_report;
+        let vgg = crate::workloads::Workload::evaluation_set().remove(0);
+        let ox = analytic_report(&AcceleratorConfig::oxbnn_5(), &vgg);
+        for baseline in [robin_eo(), robin_po()] {
+            let name = baseline.name.clone();
+            let b = analytic_report(&baseline, &vgg);
+            assert!(ox.fps > b.fps, "OXBNN_5 FPS vs {}", name);
+            assert!(ox.fps_per_w > b.fps_per_w, "OXBNN_5 FPS/W vs {}", name);
+            assert!(b.psums > 0, "{} must pay the psum path", name);
+            assert_eq!(ox.psums, 0, "PCA emits no electrical psums");
+        }
+    }
+
+    #[test]
     fn eo_variant_draws_less_power_than_po() {
         // EO's rings are smaller/slower; with identical per-device tuning
         // power its win comes from fewer lasers per XPC (N=10 vs N=50

@@ -83,7 +83,13 @@ pub fn builtin(name: &str) -> Option<AcceleratorConfig> {
 /// Parse an accelerator config from JSON text. Unspecified fields default
 /// to the `base` config (default base: OXBNN_50).
 pub fn from_json_text(text: &str) -> Result<AcceleratorConfig, ConfigError> {
-    let j = Json::parse(text)?;
+    from_json(&Json::parse(text)?)
+}
+
+/// Parse an accelerator config from an already-parsed JSON value — the
+/// inverse of [`to_json`] (round-trip identity is pinned by
+/// `rust/tests/config_roundtrip.rs`).
+pub fn from_json(j: &Json) -> Result<AcceleratorConfig, ConfigError> {
     let base_name = j.get("base").and_then(Json::as_str).unwrap_or("OXBNN_50");
     let mut cfg =
         builtin(base_name).ok_or_else(|| schema(format!("unknown base '{}'", base_name)))?;

@@ -28,8 +28,8 @@ use anyhow::{anyhow, Context, Result};
 use super::batcher::Batcher;
 use super::metrics::ServerMetrics;
 use super::router::Router;
+use crate::api::{BackendKind, Session};
 use crate::arch::accelerator::AcceleratorConfig;
-use crate::arch::perf::workload_perf;
 use crate::mapping::layer::GemmLayer;
 use crate::runtime::manifest::{Artifact, Manifest};
 use crate::runtime::{HostTensor, Runtime};
@@ -72,6 +72,10 @@ pub struct ServerConfig {
     pub replicas: usize,
     /// Accelerator whose simulated latency is attached to responses.
     pub accelerator: AcceleratorConfig,
+    /// Execution model used for that simulated latency (analytic by
+    /// default; the event backend is far more detailed and far slower —
+    /// it runs once per worker at startup, not per request).
+    pub sim_backend: BackendKind,
     pub weight_seed: u64,
 }
 
@@ -84,6 +88,7 @@ impl ServerConfig {
             max_wait: Duration::from_millis(2),
             replicas: 1,
             accelerator: AcceleratorConfig::oxbnn_50(),
+            sim_backend: BackendKind::Analytic,
             weight_seed: 0x0B17,
         }
     }
@@ -252,8 +257,14 @@ fn worker_loop(
                 runtime.to_device(&host).expect("weight upload")
             })
             .collect();
-    let simulated_s =
-        workload_perf(&cfg.accelerator, &workload_from_artifact(&artifact)).frame_latency_s;
+    let simulated_s = Session::builder()
+        .accelerator(cfg.accelerator.clone())
+        .workload(workload_from_artifact(&artifact))
+        .backend(cfg.sim_backend)
+        .build()
+        .expect("accelerator and workload are set, the session cannot fail")
+        .run()
+        .frame_latency_s;
     let input_shape = artifact.args[0].shape.clone();
     crate::log_info!(
         "{}: worker ready (compile {:.3}s, simulated photonic frame {})",

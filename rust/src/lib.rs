@@ -4,7 +4,39 @@
 //! XNOR-Bitcount Based Accelerator for Efficient Inference of Binary Neural
 //! Networks"* (Sri Vatsavai, Karempudi, Thakkar — IEEE ISQED 2023).
 //!
-//! Layers (see DESIGN.md):
+//! ## Library API
+//!
+//! The front door is [`api`]: a [`api::Session`] runs one accelerator ×
+//! workload pair through any execution model ([`api::Backend`]) and returns
+//! one unified [`api::Report`] — FPS, FPS/W, energy breakdown, transaction
+//! counts, and (for the functional backend) a correctness block:
+//!
+//! ```no_run
+//! use oxbnn::api::{BackendKind, Session};
+//!
+//! // Analytic sweep numbers, event-driven dynamics, or functional
+//! // correctness — same builder, same report shape.
+//! for kind in BackendKind::all() {
+//!     let report = Session::builder()
+//!         .accelerator_named("OXBNN_50")
+//!         .workload_named("vgg_small")
+//!         .backend(kind)
+//!         .build()
+//!         .unwrap()
+//!         .run();
+//!     println!("[{}] {:.0} FPS, {:.2} FPS/W, {} passes, {} psums",
+//!         report.backend, report.fps, report.fps_per_w,
+//!         report.passes, report.psums);
+//! }
+//! ```
+//!
+//! Custom accelerators come from [`config`] (JSON), custom execution models
+//! plug in via [`api::SessionBuilder::backend_impl`]. The `oxbnn` CLI
+//! (`simulate`, `fps`, `sweep` — each with `--backend`), the serving
+//! coordinator and the Fig. 7 benches are all thin layers over this facade.
+//!
+//! ## Layers (see DESIGN.md)
+//!
 //! * [`util`] — offline substrates (JSON, CLI, PRNG, bench, quickcheck, ...)
 //! * [`runtime`] — PJRT client executing AOT-lowered JAX/Pallas artifacts
 //! * `devices` — photonic device models (OXG MRR, PCA, photodetector, laser)
@@ -17,8 +49,10 @@
 //! * `energy` — power/energy accounting (paper Table III)
 //! * `functional` — integer reference BNN engine for cross-validation
 //! * `coordinator` — inference serving: router, batcher, scheduler
+//! * [`api`] — the `Session`/`Backend` facade unifying the execution models
 
 pub mod analysis;
+pub mod api;
 pub mod arch;
 pub mod baselines;
 pub mod config;

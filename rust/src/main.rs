@@ -3,21 +3,26 @@
 //! Subcommands:
 //!   table2      regenerate paper Table II (scalability analysis)
 //!   fps         regenerate paper Fig. 7(a)/(b) (FPS and FPS/W sweep)
-//!   simulate    run one accelerator × workload (analytic or event-driven)
+//!   simulate    run one accelerator × workload through the Session facade
 //!   oxg         OXG device study (truth table / transient, paper Fig. 3)
 //!   serve       start the inference server on AOT artifacts
 //!   info        dump accelerator configurations
+//!
+//! `simulate`, `fps` and `sweep` accept `--backend analytic|event|functional`
+//! and all route through [`oxbnn::api::Session`], so every execution model
+//! produces the same unified report shape.
 
 use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::api::{BackendKind, Session};
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::perf::{gmean, workload_perf};
+use oxbnn::arch::perf::gmean;
 use oxbnn::coordinator::{InferenceRequest, Server, ServerConfig};
 use oxbnn::devices::oxg::Oxg;
-use oxbnn::mapping::scheduler::MappingPolicy;
 use oxbnn::util::bench::Table;
 use oxbnn::util::cli::{CliError, Command};
 use oxbnn::util::logging;
 use oxbnn::util::rng::Rng;
+use oxbnn::util::units::fmt_time;
 use oxbnn::workloads::Workload;
 
 fn main() {
@@ -51,8 +56,8 @@ fn print_usage() {
          USAGE: oxbnn <subcommand> [options]\n\n\
          SUBCOMMANDS:\n\
            table2     regenerate paper Table II (N, P_PD-opt, gamma, alpha per DR)\n\
-           fps        regenerate paper Fig. 7 FPS / FPS-per-W comparison\n\
-           simulate   one accelerator x workload run (--event-driven for TLM sim)\n\
+           fps        regenerate paper Fig. 7 FPS / FPS-per-W comparison (--backend)\n\
+           simulate   one accelerator x workload run (--backend analytic|event|functional)\n\
            oxg        OXG device study (paper Fig. 3 truth table + transient)\n\
            serve      run the inference server over AOT artifacts\n\
            info        dump the five evaluation accelerator configurations\n\
@@ -73,6 +78,14 @@ fn handle_cli(err: CliError) -> i32 {
             2
         }
     }
+}
+
+/// Parse a `--backend` value, reporting api errors CLI-style.
+fn parse_backend(s: &str) -> Result<BackendKind, i32> {
+    s.parse().map_err(|e| {
+        eprintln!("error: {}", e);
+        2
+    })
 }
 
 fn cmd_table2() -> i32 {
@@ -108,10 +121,19 @@ fn cmd_table2() -> i32 {
 
 fn cmd_fps(args: &[String]) -> i32 {
     let cmd = Command::new("oxbnn fps", "Fig. 7 FPS and FPS/W sweep")
+        .opt(
+            "backend",
+            "analytic",
+            "analytic|event|functional (event is detailed but much slower)",
+        )
         .flag("json", "emit JSON instead of tables");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
+    };
+    let backend = match parse_backend(parsed.get("backend")) {
+        Ok(b) => b,
+        Err(code) => return code,
     };
     let accels = AcceleratorConfig::evaluation_set();
     let workloads = Workload::evaluation_set();
@@ -127,9 +149,20 @@ fn cmd_fps(args: &[String]) -> i32 {
     let mut fpsw_table = fps_table_clone_headers();
     let mut results = Vec::new();
     for acc in &accels {
-        let perfs: Vec<_> = workloads.iter().map(|w| workload_perf(acc, w)).collect();
-        let fps: Vec<f64> = perfs.iter().map(|p| p.fps).collect();
-        let fpsw: Vec<f64> = perfs.iter().map(|p| p.fps_per_w).collect();
+        let reports: Vec<oxbnn::api::Report> = workloads
+            .iter()
+            .map(|w| {
+                Session::builder()
+                    .accelerator(acc.clone())
+                    .workload(w.clone())
+                    .backend(backend)
+                    .build()
+                    .expect("session over built-in configs")
+                    .run()
+            })
+            .collect();
+        let fps: Vec<f64> = reports.iter().map(|r| r.fps).collect();
+        let fpsw: Vec<f64> = reports.iter().map(|r| r.fps_per_w).collect();
         fps_table.row(&[
             acc.name.clone(),
             format!("{:.1}", fps[0]),
@@ -150,7 +183,7 @@ fn cmd_fps(args: &[String]) -> i32 {
     }
     if parsed.has_flag("json") {
         use oxbnn::util::json::Json;
-        let obj = Json::Obj(
+        let accelerators = Json::Obj(
             results
                 .into_iter()
                 .map(|(name, fps, fpsw)| {
@@ -164,11 +197,15 @@ fn cmd_fps(args: &[String]) -> i32 {
                 })
                 .collect(),
         );
+        let obj = Json::obj(vec![
+            ("backend", Json::Str(backend.as_str().to_string())),
+            ("accelerators", accelerators),
+        ]);
         println!("{}", obj.to_string_pretty());
     } else {
-        println!("Fig. 7(a) — FPS (higher is better)\n");
+        println!("Fig. 7(a) — FPS (higher is better, {} backend)\n", backend);
         fps_table.print();
-        println!("\nFig. 7(b) — FPS/W (higher is better)\n");
+        println!("\nFig. 7(b) — FPS/W (higher is better, {} backend)\n", backend);
         fpsw_table.print();
     }
     0
@@ -186,13 +223,22 @@ fn fps_table_clone_headers() -> Table {
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {
-    let cmd = Command::new("oxbnn simulate", "simulate one accelerator x workload")
-        .opt("accelerator", "OXBNN_50", "OXBNN_5|OXBNN_50|ROBIN_EO|ROBIN_PO|LIGHTBULB")
-        .opt("workload", "vgg_small", "vgg_small|resnet18|mobilenet_v2|shufflenet_v2")
-        .opt("config", "", "JSON accelerator config file (overrides --accelerator)")
-        .opt("workload-file", "", "JSON workload geometry file (overrides --workload)")
-        .flag("event-driven", "run the per-layer event-driven simulator too")
-        .flag("layers", "print per-layer breakdown");
+    let cmd = Command::new(
+        "oxbnn simulate",
+        "run one accelerator x workload through the Session facade",
+    )
+    .opt("accelerator", "OXBNN_50", "OXBNN_5|OXBNN_50|ROBIN_EO|ROBIN_PO|LIGHTBULB")
+    .opt("workload", "vgg_small", "vgg_small|resnet18|mobilenet_v2|shufflenet_v2")
+    .opt("config", "", "JSON accelerator config file (overrides --accelerator)")
+    .opt("workload-file", "", "JSON workload geometry file (overrides --workload)")
+    .opt(
+        "backend",
+        "analytic",
+        "analytic|event|functional (event simulates every PASS — slow on full BNNs)",
+    )
+    .opt("batch", "1", "frames to evaluate back-to-back")
+    .flag("json", "emit the unified report as JSON")
+    .flag("layers", "print per-layer breakdown");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
@@ -237,48 +283,92 @@ fn cmd_simulate(args: &[String]) -> i32 {
             }
         }
     };
-    let perf = workload_perf(&acc, &workload);
-    println!(
-        "{} on {}: frame latency {} → {:.1} FPS, avg power {:.2} W, {:.2} FPS/W",
-        perf.accelerator,
-        perf.workload,
-        oxbnn::util::units::fmt_time(perf.frame_latency_s),
-        perf.fps,
-        perf.avg_power_w,
-        perf.fps_per_w
-    );
-    if parsed.has_flag("layers") {
-        let mut t = Table::new(&["layer", "latency", "compute", "memory", "reduce", "passes"]);
-        for l in &perf.layers {
-            t.row(&[
-                l.name.clone(),
-                oxbnn::util::units::fmt_time(l.latency_s),
-                oxbnn::util::units::fmt_time(l.compute_s),
-                oxbnn::util::units::fmt_time(l.memory_s),
-                oxbnn::util::units::fmt_time(l.reduce_s),
-                format!("{}", l.passes),
-            ]);
+    let backend = match parse_backend(parsed.get("backend")) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let batch = match parsed.get_usize("batch") {
+        Ok(b) => b,
+        Err(e) => return handle_cli(e),
+    };
+    let mut session = match Session::builder()
+        .accelerator(acc)
+        .workload(workload)
+        .backend(backend)
+        .batch(batch)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            return 2;
         }
-        t.print();
-    }
-    if parsed.has_flag("event-driven") {
-        // Event-driven validation on the first conv layer (full workloads
-        // are analytic; the TLM path is per-layer).
-        let layer = &workload.layers[0];
-        let policy = match acc.bitcount {
-            oxbnn::arch::BitcountMode::Pca { .. } => MappingPolicy::PcaLocal,
-            _ => MappingPolicy::SlicedSpread,
-        };
-        let stats = oxbnn::arch::simulate_layer(&acc, layer, policy);
+    };
+    let report = session.run();
+    if parsed.has_flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
         println!(
-            "event-driven [{}]: {} events, latency {}, energy {:.3e} J",
-            layer.name,
-            stats.events_processed,
-            oxbnn::util::units::fmt_time(stats.end_time_s),
-            stats.total_energy_j()
+            "[{}] {} on {}: frame latency {} → {:.1} FPS, avg power {:.2} W, {:.2} FPS/W",
+            report.backend,
+            report.accelerator,
+            report.workload,
+            fmt_time(report.frame_latency_s),
+            report.fps,
+            report.avg_power_w,
+            report.fps_per_w
         );
+        println!(
+            "  passes {}, psums {}, dynamic energy {:.3e} J/frame",
+            report.passes, report.psums, report.dynamic_energy_per_frame_j
+        );
+        if report.batch > 1 {
+            println!(
+                "  batch of {} frames: {}",
+                report.batch,
+                fmt_time(report.batch_latency_s)
+            );
+        }
+        if !report.energy_breakdown.is_empty() {
+            let parts: Vec<String> = report
+                .energy_breakdown
+                .iter()
+                .map(|(k, v)| format!("{} {:.3e} J", k, v))
+                .collect();
+            println!("  energy ledger: {}", parts.join(", "));
+        }
+        if let Some(c) = &report.correctness {
+            println!(
+                "  functional check: {} VDPs recomputed, {} mismatches, {} PCA clamps",
+                c.vdps_checked, c.mismatches, c.pca_clamped
+            );
+        }
+        if parsed.has_flag("layers") {
+            let t = |m: &std::collections::BTreeMap<String, f64>, k: &str| {
+                m.get(k).map(|v| fmt_time(*v)).unwrap_or_else(|| "-".into())
+            };
+            let mut tbl = Table::new(&[
+                "layer", "latency", "compute", "memory", "reduce", "passes", "psums",
+            ]);
+            for l in &report.layers {
+                tbl.row(&[
+                    l.name.clone(),
+                    fmt_time(l.latency_s),
+                    t(&l.timing, "compute_s"),
+                    t(&l.timing, "memory_s"),
+                    t(&l.timing, "reduce_s"),
+                    format!("{}", l.passes),
+                    format!("{}", l.psums),
+                ]);
+            }
+            tbl.print();
+        }
     }
-    0
+    // A functional run that found arithmetic mismatches is a failure.
+    match &report.correctness {
+        Some(c) if !c.is_clean() => 1,
+        _ => 0,
+    }
 }
 
 fn cmd_oxg(args: &[String]) -> i32 {
@@ -377,6 +467,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
     )
     .opt("workload", "vgg_small", "workload name")
     .opt("xpes", "100,250,500,1000,2000", "comma-separated XPE counts")
+    .opt(
+        "backend",
+        "analytic",
+        "analytic|event|functional (analytic recommended for sweeps)",
+    )
     .opt("out", "-", "output CSV path ('-' for stdout)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -389,6 +484,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
         eprintln!("unknown workload '{}'", parsed.get("workload"));
         return 2;
     };
+    let backend = match parse_backend(parsed.get("backend")) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
     let xpes: Vec<usize> = parsed
         .get("xpes")
         .split(',')
@@ -399,8 +498,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
         return 2;
     }
     let solver = ScalabilitySolver::default();
-    let mut csv = String::from("dr_gsps,n,gamma,xpe_total,fps,fps_per_w,static_w
-");
+    let mut csv = String::from("dr_gsps,n,gamma,xpe_total,fps,fps_per_w,static_w\n");
     for row in solver.table2() {
         for &x in &xpes {
             let cfg = AcceleratorConfig {
@@ -411,11 +509,22 @@ fn cmd_sweep(args: &[String]) -> i32 {
                 bitcount: oxbnn::arch::BitcountMode::Pca { gamma: row.gamma },
                 ..AcceleratorConfig::oxbnn_50()
             };
-            let p = workload_perf(&cfg, &workload);
+            let report = Session::builder()
+                .accelerator(cfg)
+                .workload(workload.clone())
+                .backend(backend)
+                .build()
+                .expect("sweep session")
+                .run();
             csv.push_str(&format!(
-                "{},{},{},{},{:.1},{:.2},{:.2}
-",
-                row.dr_gsps, row.n, row.gamma, x, p.fps, p.fps_per_w, p.static_power_w
+                "{},{},{},{},{:.1},{:.2},{:.2}\n",
+                row.dr_gsps,
+                row.n,
+                row.gamma,
+                x,
+                report.fps,
+                report.fps_per_w,
+                report.static_power_w
             ));
         }
     }

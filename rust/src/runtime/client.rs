@@ -12,6 +12,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+// Offline builds (the default) bind the PJRT names to the in-repo stub;
+// with `--features xla-runtime` (plus the `xla` dependency) the same paths
+// resolve to the real crate. See rust/src/runtime/xla_stub.rs.
+#[cfg(not(feature = "xla-runtime"))]
+use super::xla_stub as xla;
+
 use super::manifest::Artifact;
 
 /// A host-side f32 tensor (row-major).

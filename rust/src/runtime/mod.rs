@@ -6,6 +6,8 @@
 
 pub mod client;
 pub mod manifest;
+#[cfg(not(feature = "xla-runtime"))]
+pub(crate) mod xla_stub;
 
 pub use client::{Executable, HostTensor, Runtime};
 pub use manifest::{ArgSpec, Artifact, LayerDim, Manifest, ManifestError};

@@ -1,0 +1,122 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The PJRT client in [`super::client`] is written against the `xla`
+//! crate's API, but that crate (and the XLA C++ runtime it links) is not
+//! part of the offline toolchain. This module mirrors the exact API
+//! surface `client.rs` uses so the whole crate — coordinator, serving
+//! examples, benches — compiles and tests everywhere; any attempt to
+//! actually construct the PJRT client reports a clear error instead.
+//!
+//! Every artifact-dependent test and example already skips gracefully when
+//! `artifacts/manifest.json` is absent, so the stub is never reached in a
+//! default checkout. To execute real AOT artifacts, add `xla = "0.1"` to
+//! `[dependencies]` and build with `--features xla-runtime`; `client.rs`
+//! then binds to the real crate and this module is compiled out.
+
+/// Error returned by every stub entry point.
+#[derive(Debug, thiserror::Error)]
+#[error(
+    "PJRT is unavailable: built without the `xla` crate (enable the \
+     `xla-runtime` feature and add the dependency to run AOT artifacts)"
+)]
+pub struct XlaError;
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError)
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        Err(XlaError)
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError)
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(XlaError)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(XlaError)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(XlaError)
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError)
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError)
+    }
+
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError)
+    }
+}

@@ -1,0 +1,103 @@
+//! Config round-trip property: `config::from_json(config::to_json(cfg))`
+//! is the identity on every serialized field — for the five evaluation
+//! configs (both `BitcountMode` variants) and for randomly perturbed
+//! configs drawn by the in-repo quickcheck substrate.
+
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::config;
+use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+
+/// Field-by-field identity over everything `to_json` serializes.
+fn assert_identity(cfg: &AcceleratorConfig) {
+    let back = config::from_json(&config::to_json(cfg)).expect("round-trip parse");
+    assert_eq!(back.name, cfg.name);
+    assert_eq!(back.dr_gsps, cfg.dr_gsps);
+    assert_eq!(back.n, cfg.n);
+    assert_eq!(back.xpe_total, cfg.xpe_total);
+    assert_eq!(back.bitcount, cfg.bitcount);
+    assert_eq!(back.mem_bw_bits_per_s, cfg.mem_bw_bits_per_s);
+    let (a, b) = (&back.energy, &cfg.energy);
+    assert_eq!(a.xnor_j_per_bit, b.xnor_j_per_bit);
+    assert_eq!(a.receiver_j_per_pass, b.receiver_j_per_pass);
+    assert_eq!(a.pca_readout_j, b.pca_readout_j);
+    assert_eq!(a.adc_j_per_psum, b.adc_j_per_psum);
+    assert_eq!(a.reduction_j_per_psum, b.reduction_j_per_psum);
+    assert_eq!(a.sram_j_per_bit, b.sram_j_per_bit);
+    assert_eq!(a.tuning_w_per_mrr, b.tuning_w_per_mrr);
+    assert_eq!(a.mrrs_per_gate, b.mrrs_per_gate);
+}
+
+#[test]
+fn evaluation_set_roundtrips_exactly() {
+    let set = AcceleratorConfig::evaluation_set();
+    // Both bitcount variants are represented in the evaluation set, so
+    // this covers the PCA and the psum-reduction schema branches.
+    assert!(set.iter().any(|c| matches!(c.bitcount, BitcountMode::Pca { .. })));
+    assert!(set
+        .iter()
+        .any(|c| matches!(c.bitcount, BitcountMode::Reduction { .. })));
+    for cfg in &set {
+        assert_identity(cfg);
+    }
+}
+
+#[test]
+fn prop_perturbed_configs_roundtrip() {
+    forall(Config::default().cases(120), |g| {
+        let set = AcceleratorConfig::evaluation_set();
+        let mut cfg = set[g.usize_in(0, set.len() - 1)].clone();
+        cfg.name = format!("rand_{}", g.usize_in(0, 99999));
+        cfg.dr_gsps = g.usize_in(1, 200) as f64 / 2.0;
+        cfg.n = g.usize_in(1, 128);
+        cfg.xpe_total = g.usize_in(1, 8192);
+        cfg.mem_bw_bits_per_s = g.usize_in(1, 1_000_000) as f64 * 1.1e9;
+        cfg.bitcount = if g.bool() {
+            BitcountMode::Pca { gamma: g.usize_in(1, 1_000_000) as u64 }
+        } else {
+            BitcountMode::Reduction {
+                latency_s: g.usize_in(1, 100_000) as f64 * 3.7e-12,
+                psum_bits: g.usize_in(1, 64) as u32,
+            }
+        };
+        cfg.energy.xnor_j_per_bit = g.usize_in(1, 100_000) as f64 * 1.3e-17;
+        cfg.energy.adc_j_per_psum = g.usize_in(0, 100_000) as f64 * 2.9e-15;
+        cfg.energy.tuning_w_per_mrr = g.usize_in(0, 10_000) as f64 * 7.7e-7;
+
+        let back =
+            config::from_json(&config::to_json(&cfg)).map_err(|e| e.to_string())?;
+        prop_assert_eq(back.name.clone(), cfg.name.clone())?;
+        prop_assert(back.dr_gsps == cfg.dr_gsps, "dr_gsps drifted")?;
+        prop_assert_eq(back.n, cfg.n)?;
+        prop_assert_eq(back.xpe_total, cfg.xpe_total)?;
+        prop_assert(back.bitcount == cfg.bitcount, "bitcount drifted")?;
+        prop_assert(
+            back.mem_bw_bits_per_s == cfg.mem_bw_bits_per_s,
+            "mem bandwidth drifted",
+        )?;
+        prop_assert(
+            back.energy.xnor_j_per_bit == cfg.energy.xnor_j_per_bit,
+            "xnor energy drifted",
+        )?;
+        prop_assert(
+            back.energy.adc_j_per_psum == cfg.energy.adc_j_per_psum,
+            "adc energy drifted",
+        )?;
+        prop_assert(
+            back.energy.tuning_w_per_mrr == cfg.energy.tuning_w_per_mrr,
+            "tuning power drifted",
+        )
+    });
+}
+
+#[test]
+fn roundtrip_survives_text_and_pretty_printing() {
+    // The CLI writes configs with to_string_pretty and reads them back
+    // with from_json_text; that longer path must be lossless too.
+    for cfg in AcceleratorConfig::evaluation_set() {
+        let text = config::to_json(&cfg).to_string_pretty();
+        let back = config::from_json_text(&text).expect("pretty round-trip");
+        assert_eq!(back.bitcount, cfg.bitcount);
+        assert_eq!(back.xpe_total, cfg.xpe_total);
+        assert_eq!(back.energy.mrrs_per_gate, cfg.energy.mrrs_per_gate);
+    }
+}

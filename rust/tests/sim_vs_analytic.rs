@@ -3,11 +3,13 @@
 //! agree on transaction counts exactly and on compute-bound latency
 //! closely (the analytic model folds pipeline-fill into a fixed term).
 
+use oxbnn::api::{BackendKind, Report, Session};
 use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use oxbnn::arch::event_sim::simulate_layer;
 use oxbnn::arch::perf::layer_perf;
 use oxbnn::mapping::layer::GemmLayer;
 use oxbnn::mapping::scheduler::MappingPolicy;
+use oxbnn::workloads::Workload;
 
 fn small(pca: bool, n: usize, xpes: usize) -> AcceleratorConfig {
     let mut cfg = AcceleratorConfig::oxbnn_5();
@@ -95,6 +97,72 @@ fn analytic_monotone_in_xpe_count() {
         assert!(perf.latency_s <= last + 1e-15);
         last = perf.latency_s;
     }
+}
+
+/// Run one layer as a single-layer workload through the unified facade.
+fn session_report(cfg: &AcceleratorConfig, layer: &GemmLayer, kind: BackendKind) -> Report {
+    Session::builder()
+        .accelerator(cfg.clone())
+        .workload(Workload::new("probe", vec![layer.clone()]))
+        .backend(kind)
+        .build()
+        .expect("probe session")
+        .run()
+}
+
+#[test]
+fn session_analytic_vs_event_agree_on_vgg_conv_geometry() {
+    // The acceptance check for the api facade: VGG-small's conv2 vector
+    // geometry (S = 1152 → 128 slices/VDP at N = 9) on a cropped 12×12
+    // output map, on a scaled-down OXBNN_5 whose 18 XPEs divide both the
+    // XPC size (M = N = 9) and the VDP count (1152) evenly. The analytic
+    // and event-driven backends must report identical PASS counts and
+    // frame latencies within 5%.
+    let layer = GemmLayer::new("vgg_conv2_crop", 144, 1152, 8);
+    let cfg = small(true, 9, 18);
+    let analytic = session_report(&cfg, &layer, BackendKind::Analytic);
+    let event = session_report(&cfg, &layer, BackendKind::Event);
+    assert_eq!(analytic.passes, event.passes, "PASS counts must match exactly");
+    assert_eq!(analytic.passes, layer.total_passes(9) as u64);
+    assert_eq!((analytic.psums, event.psums), (0, 0), "PCA emits no psums");
+    let rel = (analytic.frame_latency_s - event.frame_latency_s).abs()
+        / analytic.frame_latency_s;
+    assert!(
+        rel < 0.05,
+        "analytic {} vs event {} (rel {:.3})",
+        analytic.frame_latency_s,
+        event.frame_latency_s,
+        rel
+    );
+}
+
+#[test]
+fn session_analytic_vs_event_counts_agree_in_reduction_mode() {
+    // Same facade, baseline-style psum-reduction accelerator: PASS and
+    // psum transaction counts must agree exactly across backends.
+    let layer = GemmLayer::new("t", 24, 123, 6);
+    let cfg = small(false, 9, 18);
+    let analytic = session_report(&cfg, &layer, BackendKind::Analytic);
+    let event = session_report(&cfg, &layer, BackendKind::Event);
+    assert_eq!(analytic.passes, event.passes);
+    assert_eq!(analytic.psums, event.psums);
+    assert!(analytic.psums > 0, "reduction mode must pay the psum path");
+}
+
+#[test]
+fn session_functional_agrees_with_analytic_and_is_clean() {
+    // The functional backend carries correctness and delegates timing to
+    // the analytic model — through the facade the two must report the
+    // same latency and transaction counts.
+    let layer = GemmLayer::new("t", 24, 123, 6);
+    let cfg = small(true, 9, 18);
+    let analytic = session_report(&cfg, &layer, BackendKind::Analytic);
+    let functional = session_report(&cfg, &layer, BackendKind::Functional);
+    assert_eq!(functional.frame_latency_s, analytic.frame_latency_s);
+    assert_eq!(functional.passes, analytic.passes);
+    let c = functional.correctness.expect("functional carries correctness");
+    assert!(c.vdps_checked > 0);
+    assert_eq!(c.mismatches, 0);
 }
 
 #[test]
