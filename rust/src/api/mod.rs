@@ -74,6 +74,26 @@ pub fn analytic_report(
     backend.run_workload(cfg, workload, default_policy(cfg))
 }
 
+/// One-call form of "what frame latency would this geometry have on that
+/// accelerator under this execution model?" — the annotation the serving
+/// coordinator attaches to every response, and the photonic reference
+/// `serve-bench` prints next to achieved serving FPS. Equivalent to the
+/// full [`Session`] builder chain with batch 1, returning only
+/// `frame_latency_s`.
+pub fn simulated_frame_latency(
+    cfg: &crate::arch::accelerator::AcceleratorConfig,
+    workload: &crate::workloads::Workload,
+    kind: BackendKind,
+) -> Result<f64, ApiError> {
+    Ok(Session::builder()
+        .accelerator(cfg.clone())
+        .workload(workload.clone())
+        .backend(kind)
+        .build()?
+        .run()
+        .frame_latency_s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +270,29 @@ mod tests {
         let w = Workload { name: "empty".into(), layers: vec![] };
         assert!(matches!(
             Session::builder().accelerator(small_cfg()).workload(w).build(),
+            Err(ApiError::EmptyWorkload(_))
+        ));
+    }
+
+    #[test]
+    fn simulated_frame_latency_matches_session() {
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        for kind in [BackendKind::Analytic, BackendKind::Event] {
+            let quick = simulated_frame_latency(&cfg, &wl, kind).unwrap();
+            let full = Session::builder()
+                .accelerator(cfg.clone())
+                .workload(wl.clone())
+                .backend(kind)
+                .build()
+                .unwrap()
+                .run();
+            assert_eq!(quick, full.frame_latency_s, "{}", kind);
+            assert!(quick > 0.0);
+        }
+        let empty = Workload { name: "empty".into(), layers: vec![] };
+        assert!(matches!(
+            simulated_frame_latency(&cfg, &empty, BackendKind::Analytic),
             Err(ApiError::EmptyWorkload(_))
         ));
     }

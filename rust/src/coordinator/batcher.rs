@@ -1,9 +1,19 @@
 //! Dynamic request batcher.
 //!
 //! Groups pending inference requests into batches bounded by `max_batch`
-//! and `max_wait`: a batch closes when full OR when its oldest member has
-//! waited `max_wait`. Pure data structure (no threads) so the policy is
-//! unit-testable; the server's worker loop drives it with real time.
+//! and `max_wait`. Pure data structure (no threads) so the policy is
+//! unit-testable; the server's worker loop drives it with real time,
+//! selecting one of two cut policies (`ServerConfig::policy`):
+//!
+//! * [`Batcher::drain_now`] — `BatchPolicy::Immediate` continuous
+//!   batching: take whatever is queued, never wait.
+//! * [`Batcher::ready`] / [`Batcher::drain`] — `BatchPolicy::Deadline`:
+//!   a batch closes when full OR when its oldest member has waited
+//!   `max_wait`.
+//!
+//! Arrival times are each job's own submit instant (worker-epoch
+//! relative), so queue-time metrics and deadlines stay truthful even when
+//! the worker absorbs a backlog in one gulp.
 
 use std::collections::VecDeque;
 

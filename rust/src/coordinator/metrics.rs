@@ -89,8 +89,14 @@ pub struct ServerMetrics {
     pub execute: LatencyHistogram,
     pub end_to_end: LatencyHistogram,
     pub completed: u64,
+    /// Requests that reached a worker but whose execution errored.
+    pub failed: u64,
+    /// Requests refused at admission (replica queue full — back-pressure).
+    pub rejected: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    /// Batch-size distribution: cut batch size → number of batches.
+    pub batch_sizes: std::collections::BTreeMap<usize, u64>,
 }
 
 impl ServerMetrics {
@@ -102,26 +108,51 @@ impl ServerMetrics {
         }
     }
 
+    /// Record one cut batch of `size` requests.
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_requests += size as u64;
+        *self.batch_sizes.entry(size).or_insert(0) += 1;
+    }
+
+    /// Largest batch size cut so far.
+    pub fn max_batch_size(&self) -> usize {
+        self.batch_sizes.keys().next_back().copied().unwrap_or(0)
+    }
+
     pub fn report(&self) -> String {
-        format!(
-            "completed={} batches={} mean_batch={:.2}\n\
-             queue:     p50={} p95={} mean={}\n\
-             execute:   p50={} p95={} mean={}\n\
+        let mut s = format!(
+            "completed={} failed={} rejected={} batches={} mean_batch={:.2}\n\
+             queue:     p50={} p95={} p99={} mean={}\n\
+             execute:   p50={} p95={} p99={} mean={}\n\
              end2end:   p50={} p95={} p99={} mean={}",
             self.completed,
+            self.failed,
+            self.rejected,
             self.batches,
             self.mean_batch_size(),
             crate::util::units::fmt_time(self.queue.p50()),
             crate::util::units::fmt_time(self.queue.p95()),
+            crate::util::units::fmt_time(self.queue.p99()),
             crate::util::units::fmt_time(self.queue.mean()),
             crate::util::units::fmt_time(self.execute.p50()),
             crate::util::units::fmt_time(self.execute.p95()),
+            crate::util::units::fmt_time(self.execute.p99()),
             crate::util::units::fmt_time(self.execute.mean()),
             crate::util::units::fmt_time(self.end_to_end.p50()),
             crate::util::units::fmt_time(self.end_to_end.p95()),
             crate::util::units::fmt_time(self.end_to_end.p99()),
             crate::util::units::fmt_time(self.end_to_end.mean()),
-        )
+        );
+        if !self.batch_sizes.is_empty() {
+            let dist: Vec<String> = self
+                .batch_sizes
+                .iter()
+                .map(|(size, count)| format!("{}x{}", size, count))
+                .collect();
+            s.push_str(&format!("\nbatch sizes (size x count): {}", dist.join(" ")));
+        }
+        s
     }
 }
 
@@ -166,5 +197,21 @@ mod tests {
         m.batched_requests = 10;
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
         assert!(m.report().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn batch_size_distribution() {
+        let mut m = ServerMetrics::default();
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.batches, 4);
+        assert_eq!(m.batched_requests, 17);
+        assert_eq!(m.batch_sizes.get(&4), Some(&2));
+        assert_eq!(m.max_batch_size(), 8);
+        let r = m.report();
+        assert!(r.contains("4x2"), "{}", r);
+        assert!(r.contains("failed=0"));
     }
 }

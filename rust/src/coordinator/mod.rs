@@ -1,7 +1,14 @@
 //! L3 coordinator: request routing, dynamic batching, serving loop and
 //! metrics. Python never appears here — the workers execute AOT-compiled
-//! artifacts through PJRT and attach simulated photonic latencies from the
-//! analytic accelerator model.
+//! artifacts through the runtime engine (PJRT, or the offline functional
+//! sim engine) and attach simulated photonic latencies from the analytic
+//! accelerator model.
+//!
+//! The serving hot path is genuinely batched: a cut batch of N frames is
+//! stacked into one leading batch dimension and dispatched as ONE
+//! executable invocation (`runtime::BatchRunner`), with bounded
+//! per-replica queues providing admission-control back-pressure
+//! (`SubmitError::QueueFull`).
 
 pub mod batcher;
 pub mod metrics;
@@ -12,6 +19,6 @@ pub use batcher::Batcher;
 pub use metrics::{LatencyHistogram, ServerMetrics};
 pub use router::{RouteError, Router};
 pub use server::{
-    synthetic_weights, workload_from_artifact, InferenceRequest, InferenceResponse, Server,
-    ServerConfig,
+    synthetic_manifest, synthetic_weights, workload_from_artifact, BatchPolicy,
+    InferenceRequest, InferenceResponse, Server, ServerConfig, SubmitError,
 };

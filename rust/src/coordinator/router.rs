@@ -74,6 +74,15 @@ impl Router {
         Ok(self.replicas[pick].replica_id)
     }
 
+    /// Remove a replica from routing entirely (a worker that failed to
+    /// start quarantines itself with this; leaving it registered would
+    /// make the dead replica the *preferred* least-loaded target, since
+    /// it errors instantly and never accumulates outstanding work).
+    pub fn deregister(&mut self, model: &str, replica_id: usize) {
+        self.replicas
+            .retain(|r| !(r.model == model && r.replica_id == replica_id));
+    }
+
     /// Mark completion on a replica.
     pub fn complete(&mut self, model: &str, replica_id: usize) {
         if let Some(r) = self
@@ -143,6 +152,20 @@ mod tests {
         assert_eq!(r.outstanding("m"), 2);
         r.complete("m", 0);
         assert_eq!(r.outstanding("m"), 1);
+    }
+
+    #[test]
+    fn deregistered_replica_never_routed() {
+        let mut r = Router::default();
+        r.register("m", 0);
+        r.register("m", 1);
+        r.deregister("m", 0);
+        for _ in 0..4 {
+            assert_eq!(r.route("m").unwrap(), 1, "only the live replica routes");
+        }
+        // Deregistering the last replica makes the model unroutable.
+        r.deregister("m", 1);
+        assert_eq!(r.route("m"), Err(RouteError::UnknownModel("m".into())));
     }
 
     #[test]

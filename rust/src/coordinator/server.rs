@@ -1,14 +1,25 @@
 //! Inference server: the L3 coordinator's serving loop.
 //!
-//! One worker thread per registered model owns a PJRT runtime and the
-//! model's compiled AOT artifact (executables are not `Send`, so they are
+//! One worker thread per (model, replica) owns a runtime engine and the
+//! model's compiled artifact (executables are not `Send`, so they are
 //! constructed inside their worker). Requests flow:
 //!
 //! ```text
-//! submit() → Router (least-loaded replica) → worker channel →
-//!   Batcher (max_batch / max_wait) → Executable::run per frame →
-//!   response channel (+ metrics)
+//! submit() → Router (least-loaded replica) → bounded worker queue →
+//!   Batcher (policy: Immediate | Deadline) → BatchRunner (N frames,
+//!   ONE executable invocation) → response channel (+ metrics)
 //! ```
+//!
+//! Back-pressure: each replica queue is a bounded `sync_channel` of
+//! `queue_depth` slots; when it is full `submit` fails fast with
+//! [`SubmitError::QueueFull`] instead of growing an unbounded backlog.
+//! Total in-flight work per replica is therefore bounded by
+//! `queue_depth + max_batch + one executing batch`.
+//!
+//! Router accounting: `route` increments a replica's outstanding count;
+//! the owning worker decrements it on the reply path (success, failure,
+//! or shutdown flush), so counts return to zero no matter how the caller
+//! consumes (or drops) the reply receiver.
 //!
 //! Each response also carries the *simulated photonic latency* the frame
 //! would have on the configured OXBNN accelerator (from the analytic
@@ -18,6 +29,7 @@
 //! correctness is validated against the independent rust engine).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -25,15 +37,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, Pending};
 use super::metrics::ServerMetrics;
-use super::router::Router;
-use crate::api::{BackendKind, Session};
+use super::router::{RouteError, Router};
+use crate::api::BackendKind;
 use crate::arch::accelerator::AcceleratorConfig;
 use crate::mapping::layer::GemmLayer;
-use crate::runtime::manifest::{Artifact, Manifest};
-use crate::runtime::{HostTensor, Runtime};
-use crate::util::rng::Rng;
+use crate::runtime::manifest::{ArgSpec, Artifact, LayerDim, Manifest};
+use crate::runtime::{BatchRunner, Runtime};
 use crate::workloads::Workload;
 
 /// An inference request (one frame, batch = 1 artifacts).
@@ -54,6 +65,61 @@ pub struct InferenceResponse {
     pub simulated_photonic_s: f64,
 }
 
+/// Admission/routing errors from [`Server::submit`]. `QueueFull` is the
+/// back-pressure signal: the chosen replica's bounded queue had no free
+/// slot, and the request was NOT enqueued — callers retry later or shed.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("unknown model '{0}'")]
+    UnknownModel(String),
+    #[error("model '{model}' expects {expect} input values, got {got}")]
+    InvalidInput { model: String, expect: usize, got: usize },
+    #[error(
+        "model '{model}' replica {replica}: queue full ({depth} requests \
+         deep) — back-pressure, retry later"
+    )]
+    QueueFull { model: String, replica: usize, depth: usize },
+    #[error("worker for '{0}' is gone")]
+    WorkerGone(String),
+}
+
+/// How the worker loop cuts batches from its queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Continuous batching (vLLM-style): execute whatever is queued right
+    /// away; backlog under load forms real batches, a lone request never
+    /// waits. `max_wait` is not consulted.
+    Immediate,
+    /// Deadline batching: hold requests until the batch is full OR the
+    /// oldest has waited `max_wait`, maximizing batch occupancy at the
+    /// cost of bounded added latency.
+    Deadline,
+}
+
+impl std::str::FromStr for BatchPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<BatchPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "immediate" | "continuous" => Ok(BatchPolicy::Immediate),
+            "deadline" | "max-wait" => Ok(BatchPolicy::Deadline),
+            other => Err(format!(
+                "unknown batch policy '{}' (expected immediate|deadline)",
+                other
+            )),
+        }
+    }
+}
+
+impl fmt::Display for BatchPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BatchPolicy::Immediate => "immediate",
+            BatchPolicy::Deadline => "deadline",
+        })
+    }
+}
+
 struct Job {
     input: Vec<f32>,
     submitted: Instant,
@@ -66,8 +132,15 @@ pub struct ServerConfig {
     pub artifacts_dir: std::path::PathBuf,
     pub models: Vec<String>,
     pub max_batch: usize,
+    /// Oldest-request deadline for [`BatchPolicy::Deadline`] (ignored by
+    /// `Immediate`).
     pub max_wait: Duration,
-    /// Worker replicas per model (each owns its own PJRT runtime +
+    /// Batch-cut policy (default `Immediate`).
+    pub policy: BatchPolicy,
+    /// Bounded per-replica queue depth; a full queue rejects at admission
+    /// with [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+    /// Worker replicas per model (each owns its own runtime engine +
     /// compiled executable; the router load-balances across them).
     pub replicas: usize,
     /// Accelerator whose simulated latency is attached to responses.
@@ -77,6 +150,13 @@ pub struct ServerConfig {
     /// it runs once per worker at startup, not per request).
     pub sim_backend: BackendKind,
     pub weight_seed: u64,
+    /// Extra per-batch execution delay (test/chaos knob for emulating a
+    /// slow backend; zero in production).
+    pub execute_delay: Duration,
+    /// In-memory manifest override: serve without an artifacts directory
+    /// (see [`synthetic_manifest`]). When `None`, the manifest is loaded
+    /// from `artifacts_dir`.
+    pub manifest: Option<Manifest>,
 }
 
 impl ServerConfig {
@@ -86,27 +166,55 @@ impl ServerConfig {
             models: models.iter().map(|m| m.to_string()).collect(),
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            policy: BatchPolicy::Immediate,
+            queue_depth: 1024,
             replicas: 1,
             accelerator: AcceleratorConfig::oxbnn_50(),
             sim_backend: BackendKind::Analytic,
             weight_seed: 0x0B17,
+            execute_delay: Duration::ZERO,
+            manifest: None,
         }
+    }
+
+    /// Serve `models` from an in-memory synthetic manifest (no artifacts
+    /// directory needed — the offline "stub backend" serving path).
+    pub fn synthetic(models: &[&str]) -> ServerConfig {
+        let mut cfg = ServerConfig::new("<synthetic>", models);
+        cfg.manifest = Some(synthetic_manifest(models));
+        cfg
     }
 }
 
 /// Running server handle.
 pub struct Server {
-    /// Keyed by (model, replica id).
-    senders: BTreeMap<(String, usize), mpsc::Sender<Job>>,
-    router: Mutex<Router>,
+    /// Keyed by (model, replica id). Bounded: this is the back-pressure
+    /// surface.
+    senders: BTreeMap<(String, usize), mpsc::SyncSender<Job>>,
+    router: Arc<Mutex<Router>>,
     pub metrics: Arc<Mutex<ServerMetrics>>,
     workers: Vec<thread::JoinHandle<()>>,
     input_lens: BTreeMap<String, usize>,
+    queue_depth: usize,
 }
 
-/// Generate the deterministic synthetic weights for an artifact.
+/// FNV-1a over a byte string (weight-seed derivation: the full artifact
+/// name must contribute, not a length-collision-prone digest of it).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+/// Generate the deterministic synthetic weights for an artifact. The RNG
+/// stream is keyed by `seed` and an FNV-1a hash of the artifact name, so
+/// distinct models get distinct weights even when their names are the
+/// same length.
 pub fn synthetic_weights(artifact: &Artifact, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Rng::new(seed ^ artifact.name.len() as u64);
+    let mut rng = crate::util::rng::Rng::new(seed ^ fnv1a(artifact.name.as_bytes()));
     artifact.args[1..]
         .iter()
         .map(|a| rng.bits(a.element_count()))
@@ -124,44 +232,166 @@ pub fn workload_from_artifact(artifact: &Artifact) -> Workload {
     Workload::new(artifact.name.clone(), layers)
 }
 
+/// An in-memory manifest of `bnn_<model>` artifacts over a small fixed
+/// BNN geometry (8×8×3 input → 3×3 conv ×8 → 2×2 pool → FC 10), one per
+/// requested model name. The sim engine executes these without any HLO
+/// files on disk, so the full serving stack — and `serve-bench` — runs in
+/// a bare checkout.
+pub fn synthetic_manifest(models: &[&str]) -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    for model in models {
+        let name = format!("bnn_{}", model);
+        artifacts.insert(
+            name.clone(),
+            Artifact {
+                name: name.clone(),
+                kind: "bnn_forward".to_string(),
+                file: std::path::PathBuf::from(format!("<synthetic>/{}.hlo.txt", name)),
+                args: vec![
+                    ArgSpec {
+                        name: "x".to_string(),
+                        shape: vec![1, 8, 8, 3],
+                        dtype: "f32".to_string(),
+                    },
+                    ArgSpec {
+                        name: "w0".to_string(),
+                        shape: vec![27, 8],
+                        dtype: "f32".to_string(),
+                    },
+                    ArgSpec {
+                        name: "w1".to_string(),
+                        shape: vec![128, 10],
+                        dtype: "f32".to_string(),
+                    },
+                ],
+                output_shape: vec![1, 10],
+                layers: vec![
+                    LayerDim {
+                        kind: "conv".to_string(),
+                        h: 64,
+                        s: 27,
+                        k: 8,
+                        fmap_hw: 8,
+                    },
+                    LayerDim {
+                        kind: "fc".to_string(),
+                        h: 1,
+                        s: 128,
+                        k: 10,
+                        fmap_hw: 1,
+                    },
+                ],
+                model: Some(model.to_string()),
+                input_hw: Some(8),
+                input_channels: Some(3),
+                num_classes: Some(10),
+                apply_activation: None,
+            },
+        );
+    }
+    Manifest { dir: std::path::PathBuf::from("<synthetic>"), artifacts }
+}
+
+/// Reject malformed bnn_forward artifacts up front: the functional
+/// engine asserts on this geometry, and a worker-thread panic would
+/// strand queued requests (dropped replies, leaked router accounting).
+fn validate_artifact(artifact: &Artifact) -> Result<()> {
+    let name = &artifact.name;
+    if artifact.kind != "bnn_forward" {
+        return Err(anyhow!("artifact {} is not a bnn_forward", name));
+    }
+    if artifact.layers.is_empty() {
+        return Err(anyhow!("artifact {} has no layer table", name));
+    }
+    if artifact.args.len() != artifact.layers.len() + 1 {
+        return Err(anyhow!(
+            "artifact {}: {} args for {} layers (want input + one weight per layer)",
+            name,
+            artifact.args.len(),
+            artifact.layers.len()
+        ));
+    }
+    let hw = artifact
+        .input_hw
+        .ok_or_else(|| anyhow!("artifact {} missing input_hw", name))?;
+    let c = artifact
+        .input_channels
+        .ok_or_else(|| anyhow!("artifact {} missing input_channels", name))?;
+    if artifact.args[0].element_count() != hw * hw * c {
+        return Err(anyhow!(
+            "artifact {}: input arg has {} elements, geometry says {}x{}x{}",
+            name,
+            artifact.args[0].element_count(),
+            hw,
+            hw,
+            c
+        ));
+    }
+    for (spec, layer) in artifact.args[1..].iter().zip(&artifact.layers) {
+        if spec.element_count() != layer.s * layer.k {
+            return Err(anyhow!(
+                "artifact {}: weight arg '{}' has {} elements, layer wants S*K = {}",
+                name,
+                spec.name,
+                spec.element_count(),
+                layer.s * layer.k
+            ));
+        }
+    }
+    Ok(())
+}
+
 impl Server {
     /// Start workers for every configured model.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let manifest = Manifest::load(&cfg.artifacts_dir).context("loading manifest")?;
+        // Normalize the knobs once so workers can trust them (a zero
+        // max_batch would panic Batcher::new inside the worker thread,
+        // after start() already returned Ok).
+        let mut cfg = cfg;
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.queue_depth = cfg.queue_depth.max(1);
+        cfg.replicas = cfg.replicas.max(1);
+        let manifest = match &cfg.manifest {
+            Some(m) => m.clone(),
+            None => Manifest::load(&cfg.artifacts_dir).context("loading manifest")?,
+        };
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let router = Arc::new(Mutex::new(Router::default()));
         let mut senders = BTreeMap::new();
         let mut workers = Vec::new();
-        let mut router = Router::default();
         let mut input_lens = BTreeMap::new();
+        let queue_depth = cfg.queue_depth;
 
         for model in &cfg.models {
             let artifact_name = format!("bnn_{}", model);
             let artifact = manifest.get(&artifact_name)?.clone();
-            if artifact.kind != "bnn_forward" {
-                return Err(anyhow!("artifact {} is not a bnn_forward", artifact_name));
-            }
+            validate_artifact(&artifact)?;
             input_lens.insert(model.clone(), artifact.args[0].element_count());
-            for replica in 0..cfg.replicas.max(1) {
-                let (tx, rx) = mpsc::channel::<Job>();
+            for replica in 0..cfg.replicas {
+                let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
                 senders.insert((model.clone(), replica), tx);
-                router.register(model, replica);
+                router.lock().unwrap().register(model, replica);
                 let metrics = Arc::clone(&metrics);
+                let router = Arc::clone(&router);
                 let cfg2 = cfg.clone();
                 let model2 = model.clone();
                 let artifact2 = artifact.clone();
                 let handle = thread::Builder::new()
                     .name(format!("oxbnn-serve-{}-{}", model, replica))
-                    .spawn(move || worker_loop(cfg2, model2, artifact2, rx, metrics))
+                    .spawn(move || {
+                        worker_loop(cfg2, model2, replica, artifact2, rx, router, metrics)
+                    })
                     .context("spawning worker")?;
                 workers.push(handle);
             }
         }
         Ok(Server {
             senders,
-            router: Mutex::new(router),
+            router,
             metrics,
             workers,
             input_lens,
+            queue_depth,
         })
     }
 
@@ -170,51 +400,88 @@ impl Server {
         self.input_lens.get(model).copied()
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Served model names.
+    pub fn models(&self) -> Vec<String> {
+        self.input_lens.keys().cloned().collect()
+    }
+
+    /// Outstanding (queued + executing) requests across a model's
+    /// replicas. Returns to zero once all replies have been issued.
+    pub fn outstanding(&self, model: &str) -> usize {
+        self.router.lock().unwrap().outstanding(model)
+    }
+
+    /// Bounded per-replica queue depth (the admission-control limit).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Submit a request; returns the chosen replica and a receiver for
+    /// the response. Fails fast with [`SubmitError::QueueFull`] when the
+    /// replica's bounded queue has no free slot (back-pressure).
     pub fn submit(
         &self,
         req: InferenceRequest,
-    ) -> Result<(usize, mpsc::Receiver<Result<InferenceResponse>>)> {
+    ) -> std::result::Result<(usize, mpsc::Receiver<Result<InferenceResponse>>), SubmitError>
+    {
         let expect = self
-            .input_len(&req.model)
-            .ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+            .input_lens
+            .get(&req.model)
+            .copied()
+            .ok_or_else(|| SubmitError::UnknownModel(req.model.clone()))?;
         if req.input.len() != expect {
-            return Err(anyhow!(
-                "model '{}' expects {} input values, got {}",
-                req.model,
+            return Err(SubmitError::InvalidInput {
+                model: req.model.clone(),
                 expect,
-                req.input.len()
-            ));
+                got: req.input.len(),
+            });
         }
-        // Route to the least-loaded replica of the model.
+        // Route to the least-loaded replica of the model. The router's
+        // outstanding count is decremented by the worker on the reply
+        // path (or right below, if admission fails).
         let replica = self
             .router
             .lock()
             .unwrap()
             .route(&req.model)
-            .map_err(|e| anyhow!(e))?;
+            .map_err(|e| match e {
+                RouteError::UnknownModel(m) => SubmitError::UnknownModel(m),
+            })?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let job = Job { input: req.input, submitted: Instant::now(), reply: reply_tx };
-        self.senders
+        let sender = self
+            .senders
             .get(&(req.model.clone(), replica))
-            .expect("router only returns registered replicas")
-            .send(job)
-            .map_err(|_| anyhow!("worker for '{}' is gone", req.model))?;
-        Ok((replica, reply_rx))
+            .expect("router only returns registered replicas");
+        match sender.try_send(job) {
+            Ok(()) => Ok((replica, reply_rx)),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.router.lock().unwrap().complete(&req.model, replica);
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(SubmitError::QueueFull {
+                    model: req.model,
+                    replica,
+                    depth: self.queue_depth,
+                })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.router.lock().unwrap().complete(&req.model, replica);
+                Err(SubmitError::WorkerGone(req.model))
+            }
+        }
     }
 
     /// Convenience: submit and wait.
     pub fn infer_blocking(&self, req: InferenceRequest) -> Result<InferenceResponse> {
-        let model = req.model.clone();
-        let (replica, rx) = self.submit(req)?;
+        let (_replica, rx) = self.submit(req)?;
         let resp = rx
             .recv()
             .map_err(|_| anyhow!("worker dropped the reply channel"))??;
-        self.router.lock().unwrap().complete(&model, replica);
         Ok(resp)
     }
 
-    /// Graceful shutdown: close queues and join workers.
+    /// Graceful shutdown: close queues, flush in-flight work, join
+    /// workers. Every accepted request receives its reply first.
     pub fn shutdown(mut self) {
         self.senders.clear(); // drop all senders → workers drain and exit
         for w in self.workers.drain(..) {
@@ -223,138 +490,306 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     cfg: ServerConfig,
     model: String,
+    replica: usize,
     artifact: Artifact,
     rx: mpsc::Receiver<Job>,
+    router: Arc<Mutex<Router>>,
     metrics: Arc<Mutex<ServerMetrics>>,
 ) {
-    // Heavy setup inside the worker: PJRT client + compile + weights.
+    // Heavy setup inside the worker: engine init + compile + weights.
     let runtime = match Runtime::cpu() {
         Ok(r) => r,
         Err(e) => {
-            crate::log_error!("{}: PJRT init failed: {:#}", model, e);
-            return;
+            crate::log_error!("{}[{}]: engine init failed: {:#}", model, replica, e);
+            return fail_all(rx, &router, &model, replica, &metrics, &format!("{:#}", e));
         }
     };
-    let exe = match runtime.load_artifact(&artifact) {
-        Ok(e) => e,
+    let mut runner = match BatchRunner::new(
+        runtime,
+        artifact.clone(),
+        synthetic_weights(&artifact, cfg.weight_seed),
+    ) {
+        Ok(r) => r,
         Err(e) => {
-            crate::log_error!("{}: artifact compile failed: {:#}", model, e);
-            return;
+            crate::log_error!("{}[{}]: artifact compile failed: {:#}", model, replica, e);
+            return fail_all(rx, &router, &model, replica, &metrics, &format!("{:#}", e));
         }
     };
-    // Weights are staged on the device ONCE; the request hot path only
-    // uploads the input frame (EXPERIMENTS.md §Perf L3).
-    let weights: Vec<crate::runtime::client::DeviceTensor> =
-        synthetic_weights(&artifact, cfg.weight_seed)
-            .into_iter()
-            .zip(&artifact.args[1..])
-            .map(|(bits, spec)| {
-                let host =
-                    HostTensor::new(spec.shape.clone(), bits).expect("weight shape");
-                runtime.to_device(&host).expect("weight upload")
-            })
-            .collect();
-    let simulated_s = Session::builder()
-        .accelerator(cfg.accelerator.clone())
-        .workload(workload_from_artifact(&artifact))
-        .backend(cfg.sim_backend)
-        .build()
-        .expect("accelerator and workload are set, the session cannot fail")
-        .run()
-        .frame_latency_s;
-    let input_shape = artifact.args[0].shape.clone();
+    let simulated_s = crate::api::simulated_frame_latency(
+        &cfg.accelerator,
+        &workload_from_artifact(&artifact),
+        cfg.sim_backend,
+    )
+    .expect("bnn_forward artifacts always yield a non-empty workload");
     crate::log_info!(
-        "{}: worker ready (compile {:.3}s, simulated photonic frame {})",
+        "{}[{}]: worker ready (compile {:.3}s, {} policy, simulated photonic frame {})",
         model,
-        exe.compile_seconds,
+        replica,
+        runner.compile_seconds,
+        cfg.policy,
         crate::util::units::fmt_time(simulated_s)
     );
 
+    // Sleep bound while idle (no deadline pending).
+    const IDLE_POLL: Duration = Duration::from_millis(50);
     let epoch = Instant::now();
     let mut batcher: Batcher<Job> = Batcher::new(cfg.max_batch, cfg.max_wait.as_secs_f64());
+    let push_job = |batcher: &mut Batcher<Job>, job: Job| {
+        // Each job keeps its OWN arrival time (epoch-relative) so queue
+        // metrics and deadline cuts stay truthful for absorbed backlogs.
+        let arrived = job.submitted.saturating_duration_since(epoch).as_secs_f64();
+        batcher.push(job, arrived);
+    };
     loop {
-        // Wait bounded by the batcher's next deadline.
-        let now = epoch.elapsed().as_secs_f64();
-        let timeout = batcher
-            .next_deadline_in(now)
-            .map(Duration::from_secs_f64)
-            .unwrap_or(Duration::from_millis(50));
+        let timeout = match cfg.policy {
+            BatchPolicy::Deadline => {
+                let now = epoch.elapsed().as_secs_f64();
+                batcher
+                    .next_deadline_in(now)
+                    .map(Duration::from_secs_f64)
+                    .unwrap_or(IDLE_POLL)
+            }
+            // Immediate drains the batcher every iteration, so any wait
+            // here only happens while empty.
+            BatchPolicy::Immediate => IDLE_POLL,
+        };
         match rx.recv_timeout(timeout) {
             Ok(job) => {
-                let now = epoch.elapsed().as_secs_f64();
-                batcher.push(job, now);
-                // Opportunistically absorb everything already queued.
+                push_job(&mut batcher, job);
+                // Opportunistically absorb everything already queued, up
+                // to one full batch.
                 while batcher.len() < batcher.max_batch {
                     match rx.try_recv() {
-                        Ok(j) => batcher.push(j, now),
+                        Ok(j) => push_job(&mut batcher, j),
                         Err(_) => break,
                     }
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Shutdown: flush what's left, then exit.
-                let rest = batcher.flush();
-                if !rest.is_empty() {
-                    run_batch(&runtime, &exe, &weights, &input_shape, rest, simulated_s, &metrics);
+                // Shutdown: flush what's left in max_batch chunks, then
+                // exit. Buffered channel jobs were already returned by
+                // recv_timeout before Disconnected fired.
+                while let Some(batch) = batcher.drain_now() {
+                    run_batch(
+                        &mut runner, batch, simulated_s, cfg.execute_delay, &model,
+                        replica, &router, &metrics,
+                    );
                 }
                 return;
             }
         }
-        // Continuous batching: execute whatever is queued right away.
-        // Backlog under load forms real batches; a lone request never
-        // waits on the max_wait timer (EXPERIMENTS.md §Perf L3).
-        if let Some(batch) = batcher.drain_now() {
-            run_batch(&runtime, &exe, &weights, &input_shape, batch, simulated_s, &metrics);
+        match cfg.policy {
+            BatchPolicy::Immediate => {
+                while let Some(batch) = batcher.drain_now() {
+                    run_batch(
+                        &mut runner, batch, simulated_s, cfg.execute_delay, &model,
+                        replica, &router, &metrics,
+                    );
+                }
+            }
+            BatchPolicy::Deadline => {
+                let now = epoch.elapsed().as_secs_f64();
+                while let Some(batch) = batcher.drain(now) {
+                    run_batch(
+                        &mut runner, batch, simulated_s, cfg.execute_delay, &model,
+                        replica, &router, &metrics,
+                    );
+                }
+            }
         }
     }
 }
 
+/// Worker-startup failure path: quarantine the replica (so least-loaded
+/// routing stops preferring a dead-but-instantly-erroring target), then
+/// give every already-queued job an error reply until shutdown.
+fn fail_all(
+    rx: mpsc::Receiver<Job>,
+    router: &Arc<Mutex<Router>>,
+    model: &str,
+    replica: usize,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+    why: &str,
+) {
+    // Deregistration also forgets this replica's outstanding counts, so
+    // the jobs drained below need no complete() calls.
+    router.lock().unwrap().deregister(model, replica);
+    while let Ok(job) = rx.recv() {
+        metrics.lock().unwrap().failed += 1;
+        let _ = job
+            .reply
+            .send(Err(anyhow!("{}[{}]: worker failed to start: {}", model, replica, why)));
+    }
+}
+
+/// Execute one cut batch: N frames → one `BatchRunner::run` call (one
+/// executable invocation on a batch-capable engine), then split replies.
+/// Router accounting is released per job BEFORE its reply is sent, so
+/// observers never see a completed request still counted as outstanding.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
-    runtime: &Runtime,
-    exe: &crate::runtime::Executable,
-    weights: &[crate::runtime::client::DeviceTensor],
-    input_shape: &[usize],
-    batch: Vec<super::batcher::Pending<Job>>,
+    runner: &mut BatchRunner,
+    batch: Vec<Pending<Job>>,
     simulated_s: f64,
+    execute_delay: Duration,
+    model: &str,
+    replica: usize,
+    router: &Arc<Mutex<Router>>,
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) {
     let size = batch.len();
-    for pending in batch {
-        let job = pending.item;
-        let queue_s = job.submitted.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        let result = (|| -> Result<InferenceResponse> {
-            // Only the input frame crosses host->device per request.
-            let input = runtime
-                .to_device(&HostTensor::new(input_shape.to_vec(), job.input.clone())?)?;
-            let mut args: Vec<&crate::runtime::client::DeviceTensor> =
-                Vec::with_capacity(1 + weights.len());
-            args.push(&input);
-            args.extend(weights.iter());
-            let out = exe.run_device(&args)?;
-            let execute_s = t0.elapsed().as_secs_f64();
-            Ok(InferenceResponse {
-                logits: out.data,
-                queue_s,
-                execute_s,
-                total_s: job.submitted.elapsed().as_secs_f64(),
-                simulated_photonic_s: simulated_s,
-            })
-        })();
-        if let Ok(resp) = &result {
-            let mut m = metrics.lock().unwrap();
-            m.queue.record(resp.queue_s);
-            m.execute.record(resp.execute_s);
-            m.end_to_end.record(resp.total_s);
-            m.completed += 1;
-        }
-        let _ = job.reply.send(result);
+    if size == 0 {
+        return;
     }
-    let mut m = metrics.lock().unwrap();
-    m.batches += 1;
-    m.batched_requests += size as u64;
+    let cut = Instant::now();
+    let jobs: Vec<Job> = batch.into_iter().map(|p| p.item).collect();
+    let queue_s: Vec<f64> = jobs
+        .iter()
+        .map(|j| cut.saturating_duration_since(j.submitted).as_secs_f64())
+        .collect();
+    let frames: Vec<&[f32]> = jobs.iter().map(|j| j.input.as_slice()).collect();
+    let t0 = Instant::now();
+    if !execute_delay.is_zero() {
+        thread::sleep(execute_delay);
+    }
+    // A panicking executable (e.g. geometry the functional engine
+    // rejects) must not kill the worker: that would strand every queued
+    // request and leak router accounting. Contain it as a failed batch.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        runner.run(&frames)
+    }))
+    .unwrap_or_else(|_| Err(anyhow!("executable panicked")));
+    let execute_s = t0.elapsed().as_secs_f64();
+    // Release router accounting for the WHOLE batch before any reply is
+    // sent (one lock), so observers never see a completed request still
+    // counted as outstanding.
+    {
+        let mut r = router.lock().unwrap();
+        for _ in 0..size {
+            r.complete(model, replica);
+        }
+    }
+    match result {
+        Ok(outputs) => {
+            debug_assert_eq!(outputs.len(), size);
+            let total_s: Vec<f64> = jobs
+                .iter()
+                .map(|j| j.submitted.elapsed().as_secs_f64())
+                .collect();
+            {
+                let mut m = metrics.lock().unwrap();
+                for (q, t) in queue_s.iter().zip(&total_s) {
+                    m.queue.record(*q);
+                    m.execute.record(execute_s);
+                    m.end_to_end.record(*t);
+                    m.completed += 1;
+                }
+                m.record_batch(size);
+            }
+            for ((job, logits), (q, t)) in jobs
+                .into_iter()
+                .zip(outputs)
+                .zip(queue_s.into_iter().zip(total_s))
+            {
+                let _ = job.reply.send(Ok(InferenceResponse {
+                    logits,
+                    queue_s: q,
+                    execute_s,
+                    total_s: t,
+                    simulated_photonic_s: simulated_s,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("executing batch of {}: {:#}", size, e);
+            crate::log_error!("{}[{}]: {}", model, replica, msg);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.failed += size as u64;
+                m.record_batch(size);
+            }
+            for job in jobs {
+                let _ = job.reply.send(Err(anyhow!("{}", msg)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_named(name: &str) -> Artifact {
+        let mut m = synthetic_manifest(&["x"]);
+        let mut a = m.artifacts.remove("bnn_x").unwrap();
+        a.name = name.to_string();
+        a
+    }
+
+    #[test]
+    fn synthetic_weights_diverge_for_equal_length_names() {
+        // Regression: seeding by name *length* gave identical weights to
+        // any two models with same-length names.
+        let a = synthetic_weights(&artifact_named("bnn_alpha"), 7);
+        let b = synthetic_weights(&artifact_named("bnn_betaa"), 7);
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b, "equal-length names must still diverge");
+        // Deterministic per (name, seed).
+        let a2 = synthetic_weights(&artifact_named("bnn_alpha"), 7);
+        assert_eq!(a, a2);
+        let a3 = synthetic_weights(&artifact_named("bnn_alpha"), 8);
+        assert_ne!(a, a3);
+    }
+
+    #[test]
+    fn batch_policy_parses() {
+        assert_eq!("immediate".parse::<BatchPolicy>().unwrap(), BatchPolicy::Immediate);
+        assert_eq!("Deadline".parse::<BatchPolicy>().unwrap(), BatchPolicy::Deadline);
+        assert_eq!("continuous".parse::<BatchPolicy>().unwrap(), BatchPolicy::Immediate);
+        assert!("sometimes".parse::<BatchPolicy>().is_err());
+        assert_eq!(BatchPolicy::Deadline.to_string(), "deadline");
+    }
+
+    #[test]
+    fn malformed_artifacts_rejected_at_start() {
+        // Well-formed baseline passes.
+        assert!(validate_artifact(&artifact_named("bnn_ok")).is_ok());
+        // The functional engine would panic on these inside a worker
+        // thread; they must be rejected up front instead.
+        let mut a = artifact_named("bnn_bad");
+        a.input_hw = None;
+        assert!(validate_artifact(&a).is_err());
+        let mut a = artifact_named("bnn_bad");
+        a.args.pop();
+        assert!(validate_artifact(&a).is_err());
+        let mut a = artifact_named("bnn_bad");
+        a.layers[0].s = 99;
+        assert!(validate_artifact(&a).is_err());
+        let mut a = artifact_named("bnn_bad");
+        a.kind = "xnor_gemm".into();
+        assert!(validate_artifact(&a).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_geometry_is_consistent() {
+        let m = synthetic_manifest(&["tiny", "other"]);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("bnn_tiny").unwrap();
+        assert_eq!(a.kind, "bnn_forward");
+        assert_eq!(a.args[0].element_count(), 8 * 8 * 3);
+        // Weight shapes must match the layer table (S × K).
+        for (w, l) in a.args[1..].iter().zip(&a.layers) {
+            assert_eq!(w.shape, vec![l.s, l.k]);
+        }
+        // The functional engine accepts the geometry end to end.
+        let weights = synthetic_weights(a, 1);
+        let x = vec![0.25f32; a.args[0].element_count()];
+        let logits = crate::functional::bnn::forward(a, &x, &weights);
+        assert_eq!(logits.len(), 10);
+    }
 }

@@ -112,8 +112,10 @@ pub fn maxpool2(map: &FeatureMap) -> FeatureMap {
 }
 
 /// Full forward pass following the manifest's layer table. `weights[l]`
-/// is the (S, K) row-major weight matrix of layer l (conv layers then FC).
-pub fn forward(artifact: &Artifact, x: &[f32], weights: &[Vec<f32>]) -> Vec<f32> {
+/// is the (S, K) row-major weight matrix of layer l (conv layers then FC);
+/// any slice-of-slices shape works (`&[Vec<f32>]`, `&[&[f32]]`, ...) so
+/// callers holding staged device tensors never have to copy.
+pub fn forward(artifact: &Artifact, x: &[f32], weights: &[impl AsRef<[f32]>]) -> Vec<f32> {
     let input_hw = artifact.input_hw.expect("bnn artifact has input_hw");
     let input_c = artifact.input_channels.expect("input_channels");
     assert_eq!(x.len(), input_hw * input_hw * input_c);
@@ -123,7 +125,7 @@ pub fn forward(artifact: &Artifact, x: &[f32], weights: &[Vec<f32>]) -> Vec<f32>
     let conv_layers: Vec<&LayerDim> =
         artifact.layers.iter().filter(|l| l.kind == "conv").collect();
     for (li, dim) in conv_layers.iter().enumerate() {
-        let w = &weights[li];
+        let w = weights[li].as_ref();
         assert_eq!(w.len(), dim.s * dim.k, "layer {} weight size", li);
         let rows = im2col(&map, 3, 1);
         assert_eq!(rows.len(), dim.h, "layer {} H", li);
@@ -164,7 +166,7 @@ pub fn forward(artifact: &Artifact, x: &[f32], weights: &[Vec<f32>]) -> Vec<f32>
     }
     // Final FC: raw bitcount logits (no activation).
     let fc = artifact.layers.last().expect("fc layer");
-    let w = &weights[weights.len() - 1];
+    let w = weights[weights.len() - 1].as_ref();
     assert_eq!(w.len(), fc.s * fc.k);
     assert_eq!(map.data.len(), fc.s, "flattened features");
     let mut logits = vec![0.0f32; fc.k];

@@ -38,7 +38,9 @@
 //! ## Layers (see DESIGN.md)
 //!
 //! * [`util`] — offline substrates (JSON, CLI, PRNG, bench, quickcheck, ...)
-//! * [`runtime`] — PJRT client executing AOT-lowered JAX/Pallas artifacts
+//! * [`runtime`] — execution engine for AOT-lowered JAX/Pallas artifacts:
+//!   PJRT (feature `xla-runtime`) or the offline functional sim engine,
+//!   with true batched dispatch via [`runtime::BatchRunner`]
 //! * `devices` — photonic device models (OXG MRR, PCA, photodetector, laser)
 //! * `analysis` — scalability solver (paper Eqs. 3–5 → Table II)
 //! * `sim` — event-driven transaction-level simulation engine
@@ -48,7 +50,8 @@
 //! * `workloads` — the four evaluated BNNs (layer geometry)
 //! * `energy` — power/energy accounting (paper Table III)
 //! * `functional` — integer reference BNN engine for cross-validation
-//! * `coordinator` — inference serving: router, batcher, scheduler
+//! * `coordinator` — inference serving: router, batched back-pressured
+//!   worker loop, admission control, metrics
 //! * [`api`] — the `Session`/`Backend` facade unifying the execution models
 
 pub mod analysis;

@@ -16,7 +16,9 @@ use oxbnn::analysis::scalability::ScalabilitySolver;
 use oxbnn::api::{BackendKind, Session};
 use oxbnn::arch::accelerator::AcceleratorConfig;
 use oxbnn::arch::perf::gmean;
-use oxbnn::coordinator::{InferenceRequest, Server, ServerConfig};
+use oxbnn::coordinator::{
+    BatchPolicy, InferenceRequest, Server, ServerConfig, SubmitError,
+};
 use oxbnn::devices::oxg::Oxg;
 use oxbnn::util::bench::Table;
 use oxbnn::util::cli::{CliError, Command};
@@ -34,6 +36,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("oxg") => cmd_oxg(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("serve-bench") => cmd_serve_bench(&args[1..]),
         Some("info") => cmd_info(),
         Some("dump-config") => cmd_dump_config(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
@@ -60,6 +63,7 @@ fn print_usage() {
            simulate   one accelerator x workload run (--backend analytic|event|functional)\n\
            oxg        OXG device study (paper Fig. 3 truth table + transient)\n\
            serve      run the inference server over AOT artifacts\n\
+           serve-bench closed/open-loop load benchmark of the serving path\n\
            info        dump the five evaluation accelerator configurations\n\
            dump-config emit a built-in accelerator config as editable JSON\n\
            sweep       CSV sweep of FPS over the Table II DR points x XPE counts\n\n\
@@ -412,19 +416,55 @@ fn cmd_oxg(args: &[String]) -> i32 {
     (!ok) as i32
 }
 
+/// Build a ServerConfig from the shared serve/serve-bench options:
+/// artifacts dir (synthetic stub model when the manifest is absent),
+/// batching policy, bounded queue depth, replicas.
+fn server_config_from_args(
+    parsed: &oxbnn::util::cli::Parsed,
+    model: &str,
+) -> Result<ServerConfig, i32> {
+    let dir = std::path::PathBuf::from(parsed.get("artifacts"));
+    let mut cfg = if dir.join("manifest.json").exists() {
+        ServerConfig::new(&dir, &[model])
+    } else {
+        println!(
+            "artifacts manifest missing — serving the synthetic stub model '{}' \
+             on the sim engine",
+            model
+        );
+        ServerConfig::synthetic(&[model])
+    };
+    cfg.max_batch = parsed.get_usize("batch").map_err(handle_cli)?.max(1);
+    cfg.policy = parsed.get("policy").parse::<BatchPolicy>().map_err(|e| {
+        eprintln!("error: {}", e);
+        2
+    })?;
+    let wait_ms = parsed.get_f64("max-wait-ms").map_err(handle_cli)?;
+    cfg.max_wait = std::time::Duration::from_secs_f64((wait_ms / 1e3).max(0.0));
+    cfg.queue_depth = parsed.get_usize("queue-depth").map_err(handle_cli)?.max(1);
+    cfg.replicas = parsed.get_usize("replicas").map_err(handle_cli)?.max(1);
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     let cmd = Command::new("oxbnn serve", "inference server demo over AOT artifacts")
-        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("artifacts", "artifacts", "artifacts directory (synthetic stub model if missing)")
         .opt("model", "tiny", "model to serve (tiny|small|vgg_small)")
         .opt("requests", "32", "number of requests to issue")
-        .opt("batch", "8", "max dynamic batch size");
+        .opt("batch", "8", "max dynamic batch size")
+        .opt("policy", "immediate", "batch-cut policy: immediate|deadline")
+        .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
+        .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
+        .opt("replicas", "1", "worker replicas for the model");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
     };
     let model = parsed.get("model").to_string();
-    let mut cfg = ServerConfig::new(parsed.get("artifacts"), &[&model]);
-    cfg.max_batch = parsed.get_usize("batch").unwrap_or(8);
+    let cfg = match server_config_from_args(&parsed, &model) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
     let n = parsed.get_usize("requests").unwrap_or(32);
     let server = match Server::start(cfg) {
         Ok(s) => s,
@@ -458,6 +498,216 @@ fn cmd_serve(args: &[String]) -> i32 {
     println!("{}", server.metrics.lock().unwrap().report());
     server.shutdown();
     (ok != n) as i32
+}
+
+#[derive(Default)]
+struct LoadStats {
+    ok: u64,
+    failed: u64,
+    rejected: u64,
+    photonic_s: f64,
+}
+
+impl LoadStats {
+    fn absorb(&mut self, other: LoadStats) {
+        self.ok += other.ok;
+        self.failed += other.failed;
+        self.rejected += other.rejected;
+        if other.photonic_s > 0.0 {
+            self.photonic_s = other.photonic_s;
+        }
+    }
+}
+
+fn is_queue_full(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<SubmitError>(),
+        Some(SubmitError::QueueFull { .. })
+    )
+}
+
+/// Closed/open-loop load benchmark of the serving coordinator: reports
+/// p50/p95/p99 queue/execute/end-to-end latency plus achieved FPS next to
+/// the Session-simulated photonic FPS, and verifies the router leaks no
+/// outstanding accounting.
+fn cmd_serve_bench(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "oxbnn serve-bench",
+        "closed/open-loop load benchmark of the serving path",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory (synthetic stub model if missing)")
+    .opt("model", "tiny", "model to serve")
+    .opt("mode", "closed", "closed (clients issue back-to-back) | open (Poisson arrivals)")
+    .opt("concurrency", "32", "client threads")
+    .opt("duration", "2", "seconds of load (when --requests is 0)")
+    .opt("requests", "0", "total request budget (0 = run for --duration)")
+    .opt("rate", "2000", "open mode: target total arrival rate (req/s)")
+    .opt("batch", "8", "max dynamic batch size")
+    .opt("policy", "immediate", "batch-cut policy: immediate|deadline")
+    .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
+    .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
+    .opt("replicas", "1", "worker replicas for the model");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let model = parsed.get("model").to_string();
+    let mode = parsed.get("mode").to_string();
+    if mode != "closed" && mode != "open" {
+        eprintln!("error: --mode must be closed|open, got '{}'", mode);
+        return 2;
+    }
+    let concurrency = parsed.get_usize("concurrency").unwrap_or(32).max(1);
+    let duration = parsed.get_f64("duration").unwrap_or(2.0).max(0.01);
+    let total_requests = parsed.get_usize("requests").unwrap_or(0);
+    let rate = parsed.get_f64("rate").unwrap_or(2000.0).max(1.0);
+    let cfg = match server_config_from_args(&parsed, &model) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    let (max_batch, policy, queue_depth, replicas) =
+        (cfg.max_batch, cfg.policy, cfg.queue_depth, cfg.replicas);
+    let (accel_name, sim_backend) = (cfg.accelerator.name.clone(), cfg.sim_backend);
+    let server = match Server::start(cfg) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("server start failed: {:#}", e);
+            return 1;
+        }
+    };
+    let input_len = server.input_len(&model).expect("model registered");
+    println!(
+        "serve-bench: model={} mode={} concurrency={} max_batch={} policy={} \
+         queue_depth={} replicas={}",
+        model, mode, concurrency, max_batch, policy, queue_depth, replicas
+    );
+
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs_f64(duration);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..concurrency {
+        let server = std::sync::Arc::clone(&server);
+        let model = model.clone();
+        let mode = mode.clone();
+        // Per-client request budget (None = run until the deadline). A
+        // client whose share rounds to zero must issue nothing.
+        let budget = if total_requests > 0 {
+            Some(total_requests / concurrency + usize::from(c < total_requests % concurrency))
+        } else {
+            None
+        };
+        let client_rate = rate / concurrency as f64;
+        handles.push(std::thread::spawn(move || -> LoadStats {
+            let mut rng = Rng::new(0xBE7C4 + c as u64);
+            let mut stats = LoadStats::default();
+            let mut issued = 0usize;
+            let mut pending = Vec::new();
+            loop {
+                match budget {
+                    Some(b) if issued >= b => break,
+                    Some(_) => {}
+                    None if std::time::Instant::now() >= deadline => break,
+                    None => {}
+                }
+                let input: Vec<f32> =
+                    (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+                let req = InferenceRequest { model: model.clone(), input };
+                if mode == "closed" {
+                    // Closed loop: at most one in-flight request per client.
+                    match server.infer_blocking(req) {
+                        Ok(resp) => {
+                            issued += 1;
+                            stats.ok += 1;
+                            stats.photonic_s = resp.simulated_photonic_s;
+                        }
+                        Err(e) if is_queue_full(&e) => {
+                            // Back-pressure: retry shortly WITHOUT consuming
+                            // budget — the request was shed, not served.
+                            stats.rejected += 1;
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(_) => {
+                            issued += 1;
+                            stats.failed += 1;
+                        }
+                    }
+                } else {
+                    // Open loop: fire-and-forget at Poisson arrivals,
+                    // collect replies at the end. Every arrival — even a
+                    // shed one — is one unit of offered load.
+                    issued += 1;
+                    match server.submit(req) {
+                        Ok((_replica, rx)) => pending.push(rx),
+                        Err(SubmitError::QueueFull { .. }) => stats.rejected += 1,
+                        Err(_) => stats.failed += 1,
+                    }
+                    // Honest Poisson inter-arrival at the requested rate;
+                    // in duration mode, never sleep past the deadline.
+                    let mut wait =
+                        std::time::Duration::from_secs_f64(rng.exp(client_rate));
+                    if budget.is_none() {
+                        let remaining = deadline
+                            .saturating_duration_since(std::time::Instant::now());
+                        wait = wait.min(remaining);
+                    }
+                    std::thread::sleep(wait);
+                }
+            }
+            for rx in pending {
+                match rx.recv() {
+                    Ok(Ok(resp)) => {
+                        stats.ok += 1;
+                        stats.photonic_s = resp.simulated_photonic_s;
+                    }
+                    _ => stats.failed += 1,
+                }
+            }
+            stats
+        }));
+    }
+    let mut stats = LoadStats::default();
+    for h in handles {
+        match h.join() {
+            Ok(s) => stats.absorb(s),
+            Err(_) => eprintln!("client thread panicked"),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let achieved_fps = stats.ok as f64 / elapsed;
+    println!(
+        "\ncompleted {} requests in {:.3}s → achieved {:.1} FPS ({} failed, \
+         {} rejected by back-pressure)",
+        stats.ok, elapsed, achieved_fps, stats.failed, stats.rejected
+    );
+    if stats.photonic_s > 0.0 {
+        let photonic_fps = 1.0 / stats.photonic_s;
+        println!(
+            "simulated photonic frame ({} / {} backend): {} → {:.1} FPS; \
+             serving achieves {:.2}% of photonic",
+            accel_name,
+            sim_backend,
+            fmt_time(stats.photonic_s),
+            photonic_fps,
+            100.0 * achieved_fps / photonic_fps
+        );
+    }
+    println!("\n{}", server.metrics.lock().unwrap().report());
+    // Accounting invariant: every routed request must have completed.
+    let mut leaked = 0usize;
+    for m in server.models() {
+        leaked += server.outstanding(&m);
+    }
+    println!("router outstanding after drain: {}", leaked);
+    match std::sync::Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => unreachable!("clients joined"),
+    }
+    if leaked > 0 {
+        eprintln!("error: router leaked {} outstanding slots", leaked);
+        return 1;
+    }
+    (stats.ok == 0) as i32
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {

@@ -1,0 +1,174 @@
+//! True batched execution over a compiled artifact: stack N frames into
+//! one leading batch dimension, ONE host→device upload, ONE executable
+//! invocation, split the outputs on the way out.
+//!
+//! [`BatchRunner`] owns the runtime, the staged weights, and a
+//! compiled-batch-size cache: the first time a batch of size N is cut it
+//! compiles (or, on the sim engine, instantiates) an executable whose
+//! argument 0 and output carry a leading dim of N, then reuses it for
+//! every later batch of that size. Batch sizes are bounded by the
+//! server's `max_batch`, so the cache holds at most `max_batch` entries.
+//!
+//! If the engine cannot provide a batched executable (the PJRT path
+//! compiles fixed-shape batch-1 AOT artifacts), the runner falls back to
+//! per-frame dispatch — the pre-batching behaviour — and remembers the
+//! failure so it never re-attempts the compile on the hot path.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::{DeviceTensor, Executable, HostTensor, Runtime};
+use super::manifest::Artifact;
+
+/// Owns everything one serving worker needs to execute cut batches.
+pub struct BatchRunner {
+    runtime: Runtime,
+    artifact: Artifact,
+    /// Weights staged on the device ONCE; the hot path only uploads the
+    /// stacked input frames (EXPERIMENTS.md §Perf L3).
+    weights: Vec<DeviceTensor>,
+    /// Compiled-batch-size cache: batch size → executable.
+    exes: BTreeMap<usize, Executable>,
+    /// Set after a batched compile fails; all later batches run frame by
+    /// frame without re-attempting the compile.
+    batched_unsupported: bool,
+    /// Wall-clock spent compiling the base (batch = 1) executable.
+    pub compile_seconds: f64,
+}
+
+impl BatchRunner {
+    /// Stage `weight_bits` (one {0,1} tensor per weight argument) and
+    /// compile the base batch-1 executable.
+    pub fn new(
+        runtime: Runtime,
+        artifact: Artifact,
+        weight_bits: Vec<Vec<f32>>,
+    ) -> Result<BatchRunner> {
+        let weights = weight_bits
+            .into_iter()
+            .zip(&artifact.args[1..])
+            .map(|(bits, spec)| {
+                let host = HostTensor::new(spec.shape.clone(), bits)
+                    .context("weight shape")?;
+                runtime.to_device(&host).context("weight upload")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let base = runtime
+            .load_artifact(&artifact)
+            .with_context(|| format!("compiling {}", artifact.name))?;
+        let compile_seconds = base.compile_seconds;
+        let mut exes = BTreeMap::new();
+        exes.insert(1, base);
+        Ok(BatchRunner {
+            runtime,
+            artifact,
+            weights,
+            exes,
+            batched_unsupported: false,
+            compile_seconds,
+        })
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// True when batches of `n > 1` frames execute as one invocation (vs
+    /// the per-frame fallback).
+    pub fn supports_batched(&self) -> bool {
+        !self.batched_unsupported
+    }
+
+    /// Distinct batch sizes an executable has been built for.
+    pub fn compiled_batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    fn ensure_exe(&mut self, batch: usize) -> Result<()> {
+        if self.exes.contains_key(&batch) {
+            return Ok(());
+        }
+        let exe = self.runtime.load_artifact_batched(&self.artifact, batch)?;
+        self.exes.insert(batch, exe);
+        Ok(())
+    }
+
+    /// Execute `frames` (each one flat frame of input values) and return
+    /// one logits vector per frame, in order. A batch of N frames issues
+    /// exactly one executable invocation (or N on the per-frame fallback).
+    pub fn run(&mut self, frames: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let n = frames.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let frame_shape = self.artifact.args[0].shape.clone();
+        let frame_len: usize = frame_shape.iter().product();
+        for (i, f) in frames.iter().enumerate() {
+            if f.len() != frame_len {
+                return Err(anyhow!(
+                    "{}: frame {} has {} values, expected {}",
+                    self.artifact.name,
+                    i,
+                    f.len(),
+                    frame_len
+                ));
+            }
+        }
+        if n > 1 && !self.batched_unsupported {
+            if let Err(e) = self.ensure_exe(n) {
+                crate::log_warn!(
+                    "{}: batched executable unavailable ({:#}); falling back \
+                     to per-frame dispatch",
+                    self.artifact.name,
+                    e
+                );
+                self.batched_unsupported = true;
+            }
+        }
+        if n == 1 || self.batched_unsupported {
+            return self.run_per_frame(frames, &frame_shape);
+        }
+
+        // Stack into one [N, ...frame] tensor: one upload, one invocation.
+        let mut stacked = Vec::with_capacity(n * frame_len);
+        for f in frames {
+            stacked.extend_from_slice(f);
+        }
+        let mut shape = frame_shape;
+        shape[0] = n; // manifest frames carry a leading batch-1 dim
+        let input = self.runtime.to_device(&HostTensor::new(shape, stacked)?)?;
+        let mut args: Vec<&DeviceTensor> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&input);
+        args.extend(self.weights.iter());
+        let exe = self.exes.get(&n).expect("ensured above");
+        let out = exe.run_device(&args)?;
+        let per_frame = out.data.len() / n;
+        Ok(out
+            .data
+            .chunks(per_frame)
+            .map(|chunk| chunk.to_vec())
+            .collect())
+    }
+
+    /// Pre-batching behaviour: one upload + one invocation per frame.
+    fn run_per_frame(
+        &self,
+        frames: &[&[f32]],
+        frame_shape: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exes.get(&1).expect("base executable");
+        let mut outputs = Vec::with_capacity(frames.len());
+        for f in frames {
+            let input = self
+                .runtime
+                .to_device(&HostTensor::new(frame_shape.to_vec(), f.to_vec())?)?;
+            let mut args: Vec<&DeviceTensor> =
+                Vec::with_capacity(1 + self.weights.len());
+            args.push(&input);
+            args.extend(self.weights.iter());
+            outputs.push(exe.run_device(&args)?.data);
+        }
+        Ok(outputs)
+    }
+}

@@ -6,6 +6,26 @@
 //! at runtime.  Pattern follows /opt/xla-example/load_hlo (HLO *text*
 //! interchange; `return_tuple=True` on the python side so results unwrap
 //! with `to_tuple1`).
+//!
+//! # Engines
+//!
+//! [`Runtime`] fronts one of two engines:
+//!
+//! * **PJRT** (`--features xla-runtime` + the `xla` crate): compiles the
+//!   artifact's HLO text and dispatches on the CPU PJRT device.
+//! * **Sim** (the offline default): a functional interpreter over the
+//!   manifest geometry — `bnn_forward` artifacts evaluate through
+//!   [`crate::functional::bnn`], `xnor_gemm` artifacts through the same
+//!   arithmetic the Pallas kernel lowers to. Bit-exact with the PJRT
+//!   path by construction, so the serving stack, benches and tests run
+//!   everywhere. Each dispatch charges a small fixed overhead
+//!   ([`SIM_DISPATCH_OVERHEAD`]) emulating the real per-invocation launch
+//!   cost, which is what batched execution amortizes.
+//!
+//! Both engines support a leading batch dimension via
+//! [`Runtime::load_artifact_batched`]: N frames stack into one argument,
+//! one upload, ONE executable invocation (counted by
+//! [`super::xla_stub::executable_invocations`]).
 
 use std::path::Path;
 use std::time::Instant;
@@ -19,6 +39,16 @@ use anyhow::{bail, Context, Result};
 use super::xla_stub as xla;
 
 use super::manifest::Artifact;
+use super::xla_stub::record_invocation;
+
+/// Fixed per-dispatch overhead charged by the sim engine, emulating the
+/// host-side launch cost (buffer hand-off, executable dispatch, result
+/// fetch) a real PJRT invocation pays. This is the fixed cost that true
+/// batching amortizes: N frames in one invocation pay it once, N separate
+/// invocations pay it N times — mirroring the measured PJRT behaviour the
+/// serving layer's batch path exists to exploit.
+pub const SIM_DISPATCH_OVERHEAD: std::time::Duration =
+    std::time::Duration::from_micros(50);
 
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -52,44 +82,91 @@ impl HostTensor {
     }
 }
 
-/// Wraps the process-wide PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
+// Which engine a Runtime / Executable / DeviceTensor belongs to. Variant
+// liveness depends on the `xla-runtime` feature (PJRT variants are never
+// constructed offline; Sim is never constructed with a real PJRT client).
+#[allow(dead_code)]
+enum RuntimeImpl {
+    Pjrt(xla::PjRtClient),
+    Sim,
 }
 
-/// A tensor resident on the PJRT device (pre-staged weights stay here so
-/// the hot path never re-converts them — EXPERIMENTS.md §Perf L3).
+/// Wraps the process-wide PJRT CPU client (or the offline sim engine).
+pub struct Runtime {
+    imp: RuntimeImpl,
+}
+
+#[allow(dead_code)]
+enum TensorRepr {
+    Pjrt(xla::PjRtBuffer),
+    Host(Vec<f32>),
+}
+
+/// A tensor resident on the execution device (pre-staged weights stay here
+/// so the hot path never re-converts them — EXPERIMENTS.md §Perf L3).
 pub struct DeviceTensor {
-    buffer: xla::PjRtBuffer,
+    repr: TensorRepr,
     pub shape: Vec<usize>,
 }
 
-/// One compiled executable (an AOT artifact after `client.compile`).
+#[allow(dead_code)]
+enum ExecImpl {
+    Pjrt(xla::PjRtLoadedExecutable),
+    /// Functional interpreter over the artifact's manifest geometry.
+    Sim(Artifact),
+}
+
+/// One compiled executable (an AOT artifact after `client.compile`, or a
+/// sim-engine program). `batch` is the leading batch dimension it was
+/// built for: one invocation evaluates `batch` frames.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    imp: ExecImpl,
     pub name: String,
     pub arg_shapes: Vec<Vec<usize>>,
     pub output_shape: Vec<usize>,
+    /// Frames evaluated per invocation (leading batch dimension).
+    pub batch: usize,
     /// Wall-clock spent in compile (for EXPERIMENTS.md §Perf accounting).
     pub compile_seconds: f64,
 }
 
 impl Runtime {
-    /// Create the CPU PJRT client.
+    /// Create the CPU PJRT client (with `--features xla-runtime`), or the
+    /// offline sim engine otherwise.
+    #[cfg(feature = "xla-runtime")]
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        Ok(Runtime { imp: RuntimeImpl::Pjrt(client) })
+    }
+
+    /// Create the CPU PJRT client (with `--features xla-runtime`), or the
+    /// offline sim engine otherwise.
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { imp: RuntimeImpl::Sim })
+    }
+
+    /// True when this runtime is the offline functional sim engine.
+    pub fn is_sim(&self) -> bool {
+        matches!(self.imp, RuntimeImpl::Sim)
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.imp {
+            RuntimeImpl::Pjrt(client) => client.platform_name(),
+            RuntimeImpl::Sim => "sim-functional".to_string(),
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        match &self.imp {
+            RuntimeImpl::Pjrt(client) => client.device_count(),
+            RuntimeImpl::Sim => 1,
+        }
     }
 
-    /// Load an HLO-text file and compile it.
+    /// Load an HLO-text file and compile it (PJRT engine only; the sim
+    /// engine interprets manifest geometry and has no HLO parser).
     pub fn load_hlo_text(
         &self,
         path: impl AsRef<Path>,
@@ -98,84 +175,199 @@ impl Runtime {
         output_shape: Vec<usize>,
     ) -> Result<Executable> {
         let path = path.as_ref();
+        let client = match &self.imp {
+            RuntimeImpl::Pjrt(client) => client,
+            RuntimeImpl::Sim => bail!(
+                "the sim engine executes manifest artifacts only (no HLO \
+                 parser) — use load_artifact for {}",
+                path.display()
+            ),
+        };
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
         Ok(Executable {
-            exe,
+            imp: ExecImpl::Pjrt(exe),
             name: name.to_string(),
             arg_shapes,
             output_shape,
+            batch: 1,
             compile_seconds: t0.elapsed().as_secs_f64(),
         })
     }
 
     /// Upload a host tensor to the device once; reuse across executes.
     pub fn to_device(&self, t: &HostTensor) -> Result<DeviceTensor> {
-        let buffer = self
-            .client
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-            .context("host->device transfer")?;
-        Ok(DeviceTensor { buffer, shape: t.shape.clone() })
+        let repr = match &self.imp {
+            RuntimeImpl::Pjrt(client) => TensorRepr::Pjrt(
+                client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .context("host->device transfer")?,
+            ),
+            RuntimeImpl::Sim => TensorRepr::Host(t.data.clone()),
+        };
+        Ok(DeviceTensor { repr, shape: t.shape.clone() })
     }
 
-    /// Load an artifact described by the manifest.
+    /// Load an artifact described by the manifest (batch = 1).
     pub fn load_artifact(&self, artifact: &Artifact) -> Result<Executable> {
-        self.load_hlo_text(
-            &artifact.file,
-            &artifact.name,
-            artifact.args.iter().map(|a| a.shape.clone()).collect(),
-            artifact.output_shape.clone(),
-        )
+        self.load_artifact_batched(artifact, 1)
+    }
+
+    /// Load an artifact with a leading batch dimension of `batch` frames:
+    /// argument 0 and the output get their leading dim scaled from 1 to
+    /// `batch`; weights are unchanged. One `run`/`run_device` call then
+    /// evaluates the whole batch in a single invocation.
+    ///
+    /// The PJRT engine compiles fixed-shape AOT artifacts, so it only
+    /// supports `batch == 1` today (callers fall back to per-frame
+    /// dispatch); the sim engine supports any batch.
+    pub fn load_artifact_batched(
+        &self,
+        artifact: &Artifact,
+        batch: usize,
+    ) -> Result<Executable> {
+        if batch == 0 {
+            bail!("{}: batch must be >= 1", artifact.name);
+        }
+        let mut arg_shapes: Vec<Vec<usize>> =
+            artifact.args.iter().map(|a| a.shape.clone()).collect();
+        let mut output_shape = artifact.output_shape.clone();
+        if batch > 1 {
+            if artifact.kind != "bnn_forward" {
+                bail!(
+                    "{}: batched execution supports bnn_forward artifacts, \
+                     not '{}'",
+                    artifact.name,
+                    artifact.kind
+                );
+            }
+            if arg_shapes[0].first() != Some(&1) || output_shape.first() != Some(&1) {
+                bail!(
+                    "{}: artifact lacks a leading batch-1 dimension to scale",
+                    artifact.name
+                );
+            }
+            arg_shapes[0][0] = batch;
+            output_shape[0] = batch;
+        }
+        match &self.imp {
+            RuntimeImpl::Pjrt(_) => {
+                if batch > 1 {
+                    bail!(
+                        "{}: AOT HLO is compiled for batch=1; re-export a \
+                         batched artifact to use batch={} on PJRT",
+                        artifact.name,
+                        batch
+                    );
+                }
+                self.load_hlo_text(
+                    &artifact.file,
+                    &artifact.name,
+                    arg_shapes,
+                    output_shape,
+                )
+            }
+            RuntimeImpl::Sim => Ok(Executable {
+                imp: ExecImpl::Sim(artifact.clone()),
+                name: artifact.name.clone(),
+                arg_shapes,
+                output_shape,
+                batch,
+                compile_seconds: 0.0,
+            }),
+        }
+    }
+}
+
+/// Evaluate a sim-engine program: `args[i]` is the raw data of positional
+/// argument i (argument 0 carries `batch` stacked frames).
+fn sim_execute(artifact: &Artifact, batch: usize, args: &[&[f32]]) -> Result<Vec<f32>> {
+    // Charge the per-invocation dispatch overhead once per call (see
+    // SIM_DISPATCH_OVERHEAD) so invocation-count effects are observable.
+    std::thread::sleep(SIM_DISPATCH_OVERHEAD);
+    match artifact.kind.as_str() {
+        "bnn_forward" => {
+            let frame_len = artifact.args[0].element_count();
+            let classes: usize = artifact.output_shape.iter().product();
+            let mut out = Vec::with_capacity(batch * classes);
+            for f in 0..batch {
+                let x = &args[0][f * frame_len..(f + 1) * frame_len];
+                // Weight slices are borrowed straight from the staged
+                // device tensors — no per-dispatch copies.
+                out.extend(crate::functional::bnn::forward(artifact, x, &args[1..]));
+            }
+            Ok(out)
+        }
+        "xnor_gemm" => {
+            // Same arithmetic the Pallas kernel lowers to:
+            // count = Σ a·b + (1-a)(1-b), optionally fused comparator.
+            let h = artifact.args[0].shape[0];
+            let s = artifact.args[0].shape[1];
+            let k = artifact.args[1].shape[1];
+            let apply = artifact.apply_activation.unwrap_or(false);
+            let (inputs, weights) = (args[0], args[1]);
+            let mut out = vec![0.0f32; h * k];
+            for i in 0..h {
+                for j in 0..k {
+                    let mut count = 0.0f32;
+                    for t in 0..s {
+                        let a = inputs[i * s + t];
+                        let b = weights[t * k + j];
+                        count += a * b + (1.0 - a) * (1.0 - b);
+                    }
+                    out[i * k + j] = if apply {
+                        if count > 0.5 * s as f32 {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    } else {
+                        count
+                    };
+                }
+            }
+            Ok(out)
+        }
+        other => bail!(
+            "{}: sim engine cannot interpret artifact kind '{}'",
+            artifact.name,
+            other
+        ),
     }
 }
 
 impl Executable {
-    /// Execute with positional f32 tensors; returns the single (tupled)
-    /// output as a host tensor.
-    pub fn run(&self, args: &[HostTensor]) -> Result<HostTensor> {
-        if args.len() != self.arg_shapes.len() {
+    fn check_args(&self, shapes: &[&Vec<usize>]) -> Result<()> {
+        if shapes.len() != self.arg_shapes.len() {
             bail!(
                 "{}: expected {} args, got {}",
                 self.name,
                 self.arg_shapes.len(),
-                args.len()
+                shapes.len()
             );
         }
-        let mut literals = Vec::with_capacity(args.len());
-        for (i, (arg, want)) in args.iter().zip(&self.arg_shapes).enumerate() {
-            if &arg.shape != want {
+        for (i, (got, want)) in shapes.iter().zip(&self.arg_shapes).enumerate() {
+            if *got != want {
                 bail!(
                     "{}: arg {} shape {:?} != manifest {:?}",
                     self.name,
                     i,
-                    arg.shape,
+                    got,
                     want
                 );
             }
-            let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&arg.data)
-                .reshape(&dims)
-                .with_context(|| format!("{}: reshaping arg {}", self.name, i))?;
-            literals.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // python lowers with return_tuple=True → single-element tuple.
-        let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
-        let data = out.to_vec::<f32>().context("reading f32 result")?;
+        Ok(())
+    }
+
+    fn check_output(&self, data: &[f32]) -> Result<()> {
         let expect: usize = self.output_shape.iter().product();
         if data.len() != expect {
             bail!(
@@ -185,52 +377,87 @@ impl Executable {
                 self.output_shape
             );
         }
+        Ok(())
+    }
+
+    /// Execute with positional f32 host tensors; returns the single
+    /// (tupled) output as a host tensor. One call = one invocation.
+    pub fn run(&self, args: &[HostTensor]) -> Result<HostTensor> {
+        let shapes: Vec<&Vec<usize>> = args.iter().map(|a| &a.shape).collect();
+        self.check_args(&shapes)?;
+        record_invocation();
+        let data = match &self.imp {
+            ExecImpl::Sim(artifact) => {
+                let raw: Vec<&[f32]> = args.iter().map(|a| a.data.as_slice()).collect();
+                sim_execute(artifact, self.batch, &raw)?
+            }
+            ExecImpl::Pjrt(exe) => {
+                let mut literals = Vec::with_capacity(args.len());
+                for (i, arg) in args.iter().enumerate() {
+                    let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+                    let lit = xla::Literal::vec1(&arg.data)
+                        .reshape(&dims)
+                        .with_context(|| format!("{}: reshaping arg {}", self.name, i))?;
+                    literals.push(lit);
+                }
+                let result = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing {}", self.name))?;
+                let literal = result[0][0]
+                    .to_literal_sync()
+                    .context("fetching result literal")?;
+                // python lowers with return_tuple=True → single-element tuple.
+                let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
+                out.to_vec::<f32>().context("reading f32 result")?
+            }
+        };
+        self.check_output(&data)?;
         Ok(HostTensor { shape: self.output_shape.clone(), data })
     }
-}
 
-impl Executable {
     /// Execute with device-resident arguments (zero host conversion on
-    /// the hot path). Shapes are checked against the manifest.
+    /// the hot path). Shapes are checked against the manifest. One call =
+    /// one invocation regardless of the batch dimension.
     pub fn run_device(&self, args: &[&DeviceTensor]) -> Result<HostTensor> {
-        if args.len() != self.arg_shapes.len() {
-            bail!(
-                "{}: expected {} args, got {}",
-                self.name,
-                self.arg_shapes.len(),
-                args.len()
-            );
-        }
-        for (i, (arg, want)) in args.iter().zip(&self.arg_shapes).enumerate() {
-            if &arg.shape != want {
-                bail!(
-                    "{}: device arg {} shape {:?} != manifest {:?}",
-                    self.name,
-                    i,
-                    arg.shape,
-                    want
-                );
+        let shapes: Vec<&Vec<usize>> = args.iter().map(|a| &a.shape).collect();
+        self.check_args(&shapes)?;
+        record_invocation();
+        let data = match &self.imp {
+            ExecImpl::Sim(artifact) => {
+                let raw: Vec<&[f32]> = args
+                    .iter()
+                    .map(|a| match &a.repr {
+                        TensorRepr::Host(data) => Ok(data.as_slice()),
+                        TensorRepr::Pjrt(_) => Err(anyhow::anyhow!(
+                            "{}: PJRT buffer passed to the sim engine",
+                            self.name
+                        )),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                sim_execute(artifact, self.batch, &raw)?
             }
-        }
-        let buffers: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buffer).collect();
-        let result = self
-            .exe
-            .execute_b(&buffers)
-            .with_context(|| format!("executing {} (device args)", self.name))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
-        let data = out.to_vec::<f32>().context("reading f32 result")?;
-        let expect: usize = self.output_shape.iter().product();
-        if data.len() != expect {
-            bail!(
-                "{}: output has {} elements, manifest says {:?}",
-                self.name,
-                data.len(),
-                self.output_shape
-            );
-        }
+            ExecImpl::Pjrt(exe) => {
+                let buffers: Vec<&xla::PjRtBuffer> = args
+                    .iter()
+                    .map(|a| match &a.repr {
+                        TensorRepr::Pjrt(buffer) => Ok(buffer),
+                        TensorRepr::Host(_) => Err(anyhow::anyhow!(
+                            "{}: sim tensor passed to the PJRT engine",
+                            self.name
+                        )),
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let result = exe
+                    .execute_b(&buffers)
+                    .with_context(|| format!("executing {} (device args)", self.name))?;
+                let literal = result[0][0]
+                    .to_literal_sync()
+                    .context("fetching result literal")?;
+                let out = literal.to_tuple1().context("unwrapping 1-tuple result")?;
+                out.to_vec::<f32>().context("reading f32 result")?
+            }
+        };
+        self.check_output(&data)?;
         Ok(HostTensor { shape: self.output_shape.clone(), data })
     }
 }
@@ -252,5 +479,87 @@ mod tests {
         assert_eq!(t.at2(1, 0), 3.0);
         assert_eq!(t.element_count(), 4);
         assert_eq!(HostTensor::zeros(vec![3, 4]).element_count(), 12);
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    mod sim_engine {
+        use super::*;
+        use crate::runtime::manifest::{ArgSpec, Artifact};
+
+        fn gemm_artifact(h: usize, s: usize, k: usize, apply: bool) -> Artifact {
+            Artifact {
+                name: "g".into(),
+                kind: "xnor_gemm".into(),
+                file: std::path::PathBuf::from("<none>"),
+                args: vec![
+                    ArgSpec { name: "i".into(), shape: vec![h, s], dtype: "f32".into() },
+                    ArgSpec { name: "w".into(), shape: vec![s, k], dtype: "f32".into() },
+                ],
+                output_shape: vec![h, k],
+                layers: Vec::new(),
+                model: None,
+                input_hw: None,
+                input_channels: None,
+                num_classes: None,
+                apply_activation: Some(apply),
+            }
+        }
+
+        #[test]
+        fn sim_runtime_reports_itself() {
+            let rt = Runtime::cpu().unwrap();
+            assert!(rt.is_sim());
+            assert_eq!(rt.platform(), "sim-functional");
+            assert_eq!(rt.device_count(), 1);
+        }
+
+        #[test]
+        fn sim_gemm_matches_xnor_popcount() {
+            let (h, s, k) = (4, 6, 3);
+            let art = gemm_artifact(h, s, k, false);
+            let rt = Runtime::cpu().unwrap();
+            let exe = rt.load_artifact(&art).unwrap();
+            let mut rng = crate::util::rng::Rng::new(0x51);
+            let a = rng.bits(h * s);
+            let b = rng.bits(s * k);
+            let got = exe
+                .run(&[
+                    HostTensor::new(vec![h, s], a.clone()).unwrap(),
+                    HostTensor::new(vec![s, k], b.clone()).unwrap(),
+                ])
+                .unwrap();
+            for i in 0..h {
+                for j in 0..k {
+                    let row = &a[i * s..(i + 1) * s];
+                    let col: Vec<f32> = (0..s).map(|t| b[t * k + j]).collect();
+                    let want = crate::functional::bnn::xnor_popcount(row, &col);
+                    assert_eq!(got.at2(i, j), want, "({}, {})", i, j);
+                }
+            }
+        }
+
+        #[test]
+        fn sim_rejects_bad_args_and_counts_invocations() {
+            let art = gemm_artifact(2, 4, 2, true);
+            let rt = Runtime::cpu().unwrap();
+            let exe = rt.load_artifact(&art).unwrap();
+            assert!(exe.run(&[]).is_err());
+            let bad = HostTensor::zeros(vec![1, 1]);
+            let ok = HostTensor::zeros(vec![4, 2]);
+            assert!(exe.run(&[bad, ok]).is_err());
+            let before = crate::runtime::xla_stub::executable_invocations();
+            let a = HostTensor::zeros(vec![2, 4]);
+            let b = HostTensor::zeros(vec![4, 2]);
+            exe.run(&[a, b]).unwrap();
+            assert!(crate::runtime::xla_stub::executable_invocations() > before);
+        }
+
+        #[test]
+        fn batched_load_rejected_for_gemm_kind() {
+            let art = gemm_artifact(2, 4, 2, true);
+            let rt = Runtime::cpu().unwrap();
+            assert!(rt.load_artifact_batched(&art, 2).is_err());
+            assert!(rt.load_artifact_batched(&art, 0).is_err());
+        }
     }
 }

@@ -47,6 +47,10 @@ pub struct Artifact {
     pub input_hw: Option<usize>,
     pub input_channels: Option<usize>,
     pub num_classes: Option<usize>,
+    /// For `xnor_gemm` kinds: whether the comparator activation is fused
+    /// into the kernel (aot.py exports both variants; the sim engine in
+    /// `runtime::client` needs this to reproduce the artifact's output).
+    pub apply_activation: Option<bool>,
 }
 
 /// Parsed manifest.
@@ -188,6 +192,7 @@ impl Manifest {
                     input_hw: a.get("input_hw").and_then(Json::as_usize),
                     input_channels: a.get("input_channels").and_then(Json::as_usize),
                     num_classes: a.get("num_classes").and_then(Json::as_usize),
+                    apply_activation: a.get("apply_activation").and_then(Json::as_bool),
                 },
             );
         }
@@ -243,6 +248,7 @@ mod tests {
         assert_eq!(g.args[0].element_count(), 64 * 288);
         assert_eq!(g.output_shape, vec![64, 64]);
         assert_eq!(g.file, PathBuf::from("/art/xnor_gemm.hlo.txt"));
+        assert_eq!(g.apply_activation, Some(true));
         let b = m.get("bnn_tiny").unwrap();
         assert_eq!(b.layers.len(), 2);
         assert_eq!(b.layers[0].s, 27);

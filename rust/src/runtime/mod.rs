@@ -1,13 +1,20 @@
-//! Runtime layer: PJRT client + AOT artifact manifest.
+//! Runtime layer: PJRT client + AOT artifact manifest + batched execution.
 //!
-//! `Runtime` owns the PJRT CPU client; `Manifest` describes the artifacts
-//! produced by `make artifacts`; `Executable::run` is the only place model
-//! compute happens at serving time (python is build-time only).
+//! `Runtime` owns the execution engine (the PJRT CPU client with
+//! `--features xla-runtime`, the offline functional sim engine otherwise);
+//! `Manifest` describes the artifacts produced by `make artifacts`;
+//! `Executable::run`/`run_device` is the only place model compute happens
+//! at serving time (python is build-time only). `BatchRunner` stacks N
+//! frames into one leading batch dimension so a cut batch costs one
+//! upload and ONE executable invocation; `xla_stub::executable_invocations`
+//! counts dispatches so tests can assert that.
 
+pub mod batch;
 pub mod client;
 pub mod manifest;
-#[cfg(not(feature = "xla-runtime"))]
-pub(crate) mod xla_stub;
+pub mod xla_stub;
 
+pub use batch::BatchRunner;
 pub use client::{Executable, HostTensor, Runtime};
 pub use manifest::{ArgSpec, Artifact, LayerDim, Manifest, ManifestError};
+pub use xla_stub::{executable_invocations, reset_executable_invocations};

@@ -1,19 +1,50 @@
-//! Offline stand-in for the `xla` crate (PJRT bindings).
+//! Offline stand-in for the `xla` crate (PJRT bindings), plus the
+//! process-wide executable invocation counter.
 //!
 //! The PJRT client in [`super::client`] is written against the `xla`
 //! crate's API, but that crate (and the XLA C++ runtime it links) is not
 //! part of the offline toolchain. This module mirrors the exact API
 //! surface `client.rs` uses so the whole crate — coordinator, serving
-//! examples, benches — compiles and tests everywhere; any attempt to
-//! actually construct the PJRT client reports a clear error instead.
+//! examples, benches — compiles and tests everywhere. When the `xla`
+//! crate is absent, [`super::client::Runtime`] falls back to a functional
+//! *sim engine* that interprets manifest artifacts directly (see
+//! `client.rs`); the stub types below exist purely so the PJRT code paths
+//! type-check.
 //!
-//! Every artifact-dependent test and example already skips gracefully when
-//! `artifacts/manifest.json` is absent, so the stub is never reached in a
-//! default checkout. To execute real AOT artifacts, add `xla = "0.1"` to
-//! `[dependencies]` and build with `--features xla-runtime`; `client.rs`
-//! then binds to the real crate and this module is compiled out.
+//! To execute real AOT artifacts, add `xla = "0.1"` to `[dependencies]`
+//! and build with `--features xla-runtime`; `client.rs` then binds to the
+//! real crate and the stub types here are compiled out. The invocation
+//! counter is compiled unconditionally so serving tests can assert
+//! "one executable invocation per cut batch" on either engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of `Executable` invocations (one per `run` /
+/// `run_device` call, i.e. one per compiled-graph dispatch — a batched
+/// execution of N frames counts once). Tests use this to assert the
+/// serving hot path issues exactly one invocation per cut batch.
+static INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one executable dispatch (called by `client.rs` on every run).
+pub fn record_invocation() {
+    INVOCATIONS.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Total executable dispatches since process start (or the last reset).
+///
+/// The counter is process-wide: tests that assert on deltas must
+/// serialize against other executable-running tests in the same binary.
+pub fn executable_invocations() -> u64 {
+    INVOCATIONS.load(Ordering::SeqCst)
+}
+
+/// Reset the invocation counter to zero (test helper).
+pub fn reset_executable_invocations() {
+    INVOCATIONS.store(0, Ordering::SeqCst);
+}
 
 /// Error returned by every stub entry point.
+#[cfg(not(feature = "xla-runtime"))]
 #[derive(Debug, thiserror::Error)]
 #[error(
     "PJRT is unavailable: built without the `xla` crate (enable the \
@@ -22,8 +53,11 @@
 pub struct XlaError;
 
 /// Stub of `xla::PjRtClient`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct PjRtClient;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient, XlaError> {
         Err(XlaError)
@@ -55,8 +89,11 @@ impl PjRtClient {
 }
 
 /// Stub of `xla::HloModuleProto`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct HloModuleProto;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl HloModuleProto {
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
         Err(XlaError)
@@ -64,8 +101,11 @@ impl HloModuleProto {
 }
 
 /// Stub of `xla::XlaComputation`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct XlaComputation;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl XlaComputation {
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
@@ -73,8 +113,11 @@ impl XlaComputation {
 }
 
 /// Stub of `xla::Literal`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct Literal;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl Literal {
     pub fn vec1(_data: &[f32]) -> Literal {
         Literal
@@ -94,8 +137,11 @@ impl Literal {
 }
 
 /// Stub of `xla::PjRtBuffer`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct PjRtBuffer;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Err(XlaError)
@@ -103,8 +149,11 @@ impl PjRtBuffer {
 }
 
 /// Stub of `xla::PjRtLoadedExecutable`.
+#[cfg(not(feature = "xla-runtime"))]
 pub struct PjRtLoadedExecutable;
 
+#[cfg(not(feature = "xla-runtime"))]
+#[allow(dead_code)]
 impl PjRtLoadedExecutable {
     pub fn execute<L: std::borrow::Borrow<Literal>>(
         &self,
@@ -118,5 +167,18 @@ impl PjRtLoadedExecutable {
         _args: &[&PjRtBuffer],
     ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         Err(XlaError)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invocation_counter_counts() {
+        let before = executable_invocations();
+        record_invocation();
+        record_invocation();
+        assert!(executable_invocations() >= before + 2);
     }
 }

@@ -1,0 +1,315 @@
+//! Serving-path integration tests that need NO artifacts directory: the
+//! coordinator serves a synthetic in-memory manifest on the offline sim
+//! engine. Covers the batched hot path (one executable invocation per cut
+//! batch), both batch-cut policies, bounded-queue admission control,
+//! router accounting, and shutdown flushing.
+//!
+//! Only meaningful on the sim engine — with `--features xla-runtime` the
+//! synthetic manifest has no HLO files to compile, so the whole file is
+//! compiled out.
+#![cfg(not(feature = "xla-runtime"))]
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use oxbnn::coordinator::{
+    synthetic_manifest, synthetic_weights, BatchPolicy, InferenceRequest, Server,
+    ServerConfig, SubmitError,
+};
+use oxbnn::functional::bnn;
+use oxbnn::runtime::executable_invocations;
+use oxbnn::util::rng::Rng;
+
+/// The executable invocation counter is process-wide, and several tests
+/// here depend on timing (execute_delay); run them one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_input(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+fn req(input: Vec<f32>) -> InferenceRequest {
+    InferenceRequest { model: "tiny".into(), input }
+}
+
+#[test]
+fn synthetic_serving_matches_functional_engine() {
+    let _guard = serial();
+    let cfg = ServerConfig::synthetic(&["tiny"]);
+    let seed = cfg.weight_seed;
+    let server = Server::start(cfg).expect("server starts without artifacts");
+    let input_len = server.input_len("tiny").expect("model registered");
+
+    let manifest = synthetic_manifest(&["tiny"]);
+    let artifact = manifest.get("bnn_tiny").unwrap();
+    let weights = synthetic_weights(artifact, seed);
+
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..4 {
+        let input = random_input(&mut rng, input_len);
+        let resp = server.infer_blocking(req(input.clone())).expect("inference");
+        let want = bnn::forward(artifact, &input, &weights);
+        assert_eq!(resp.logits, want, "served logits mismatch functional engine");
+        assert!(resp.total_s >= resp.execute_s);
+        assert!(resp.simulated_photonic_s > 0.0);
+    }
+    assert_eq!(server.outstanding("tiny"), 0);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_policy_cuts_one_full_batch_with_one_invocation() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.policy = BatchPolicy::Deadline;
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_secs(2);
+    let seed = cfg.weight_seed;
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+
+    let manifest = synthetic_manifest(&["tiny"]);
+    let artifact = manifest.get("bnn_tiny").unwrap();
+    let weights = synthetic_weights(artifact, seed);
+
+    let before = executable_invocations();
+    let mut rng = Rng::new(0xBA7C);
+    let inputs: Vec<Vec<f32>> = (0..8).map(|_| random_input(&mut rng, input_len)).collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|input| server.submit(req(input.clone())).expect("submit").1)
+        .collect();
+    // Each reply must carry the logits of ITS OWN frame (catches
+    // mis-splits/reorders of the stacked batch output).
+    for (input, rx) in inputs.iter().zip(rxs) {
+        let resp = rx.recv().expect("reply").expect("ok");
+        assert_eq!(resp.logits, bnn::forward(artifact, input, &weights));
+    }
+    let delta = executable_invocations() - before;
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, 8);
+    assert_eq!(
+        delta, m.batches,
+        "exactly one executable invocation per cut batch"
+    );
+    // Deadline policy holds sub-max batches until full: the burst of
+    // exactly max_batch requests cuts as ONE batch of 8.
+    assert_eq!(m.batches, 1, "batch sizes seen: {:?}", m.batch_sizes);
+    assert_eq!(m.batch_sizes.get(&8), Some(&1));
+    assert_eq!(server.outstanding("tiny"), 0);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_policy_honors_max_wait_for_partial_batches() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.policy = BatchPolicy::Deadline;
+    cfg.max_batch = 64;
+    cfg.max_wait = Duration::from_millis(30);
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(3);
+    // A lone request can never fill the batch; it must still complete
+    // once max_wait elapses (the old loop ignored max_wait entirely only
+    // via drain_now — under Deadline this is the deadline cut).
+    let t0 = Instant::now();
+    let resp = server
+        .infer_blocking(req(random_input(&mut rng, input_len)))
+        .expect("deadline cut releases the lone request");
+    let waited = t0.elapsed();
+    assert!(
+        waited >= Duration::from_millis(25),
+        "deadline policy should hold ~max_wait, waited {:?}",
+        waited
+    );
+    assert!(resp.queue_s >= 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn immediate_policy_forms_batches_under_backlog() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.policy = BatchPolicy::Immediate;
+    cfg.max_batch = 8;
+    cfg.execute_delay = Duration::from_millis(30);
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(7);
+    let before = executable_invocations();
+    let rxs: Vec<_> = (0..24)
+        .map(|_| {
+            server
+                .submit(req(random_input(&mut rng, input_len)))
+                .expect("submit")
+                .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    let delta = executable_invocations() - before;
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, 24);
+    assert_eq!(delta, m.batches, "one invocation per cut batch");
+    // While the first (possibly small) batch executed for 30ms, the rest
+    // of the burst queued up — continuous batching must have cut at least
+    // one full batch of 8.
+    assert!(m.batch_sizes.contains_key(&8), "sizes: {:?}", m.batch_sizes);
+    assert!(m.mean_batch_size() > 1.0, "batching was cosmetic: {:?}", m.batch_sizes);
+    assert_eq!(server.outstanding("tiny"), 0);
+    server.shutdown();
+}
+
+#[test]
+fn bounded_queue_rejects_at_admission_and_recovers() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.max_batch = 1;
+    cfg.queue_depth = 1;
+    cfg.execute_delay = Duration::from_millis(200);
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..10 {
+        match server.submit(req(random_input(&mut rng, input_len))) {
+            Ok((_replica, rx)) => rxs.push(rx),
+            Err(SubmitError::QueueFull { depth, .. }) => {
+                assert_eq!(depth, 1);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {}", e),
+        }
+    }
+    assert!(
+        rejected >= 5,
+        "depth-1 queue with a 200ms-per-batch worker must shed a rapid \
+         burst of 10 (only {} rejected)",
+        rejected
+    );
+    // Accepted requests still complete, rejected ones never consumed a
+    // router slot or a metric.
+    let accepted = rxs.len() as u64;
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, accepted);
+    assert_eq!(m.rejected, rejected as u64);
+    assert_eq!(m.failed, 0);
+    assert_eq!(server.outstanding("tiny"), 0, "rejections must not leak load");
+    server.shutdown();
+}
+
+#[test]
+fn router_outstanding_drains_even_when_receivers_are_dropped() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.replicas = 2;
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(13);
+    for _ in 0..6 {
+        // Regression: completion used to live only in infer_blocking, so
+        // submit() callers (and dropped replies) leaked outstanding
+        // counts forever, permanently skewing least-loaded routing.
+        let (_replica, rx) = server
+            .submit(req(random_input(&mut rng, input_len)))
+            .expect("submit");
+        drop(rx);
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.outstanding("tiny") != 0 {
+        assert!(
+            Instant::now() < deadline,
+            "outstanding stuck at {} — router leak",
+            server.outstanding("tiny")
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_flushes_every_accepted_request() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.max_batch = 4;
+    cfg.execute_delay = Duration::from_millis(20);
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(17);
+    let metrics = std::sync::Arc::clone(&server.metrics);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| {
+            server
+                .submit(req(random_input(&mut rng, input_len)))
+                .expect("submit")
+                .1
+        })
+        .collect();
+    // Immediate shutdown: every accepted request must still be answered
+    // (workers drain their queue and flush the batcher before exiting).
+    server.shutdown();
+    for rx in rxs {
+        let resp = rx.recv().expect("flushed reply").expect("ok");
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn batched_serving_beats_per_frame_serving() {
+    let _guard = serial();
+    // Same closed-loop load, only max_batch differs: true batching
+    // amortizes the per-invocation dispatch overhead, so achieved
+    // throughput must be strictly higher with max_batch=8.
+    let fps = |max_batch: usize| -> f64 {
+        let mut cfg = ServerConfig::synthetic(&["tiny"]);
+        cfg.max_batch = max_batch;
+        let server = std::sync::Arc::new(Server::start(cfg).expect("start"));
+        let input_len = server.input_len("tiny").unwrap();
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..8u64 {
+            let server = std::sync::Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xF00 + c);
+                for _ in 0..40 {
+                    server
+                        .infer_blocking(req(random_input(&mut rng, input_len)))
+                        .expect("ok");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client");
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let completed = server.metrics.lock().unwrap().completed;
+        assert_eq!(completed, 320);
+        assert_eq!(server.outstanding("tiny"), 0);
+        match std::sync::Arc::try_unwrap(server) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("clients joined"),
+        }
+        completed as f64 / elapsed
+    };
+    let fps1 = fps(1);
+    let fps8 = fps(8);
+    assert!(
+        fps8 > fps1,
+        "batched serving must beat per-frame serving: {:.0} vs {:.0} FPS",
+        fps8,
+        fps1
+    );
+}

@@ -45,8 +45,10 @@ fn serve_tiny_end_to_end() {
     }
     let m = server.metrics.lock().unwrap().clone();
     assert_eq!(m.completed, 6);
+    assert_eq!(m.failed, 0);
     assert!(m.batches >= 1);
     drop(m);
+    assert_eq!(server.outstanding("tiny"), 0, "router accounting must drain");
     server.shutdown();
 }
 
@@ -75,6 +77,8 @@ fn concurrent_submissions_all_complete() {
     // Dynamic batching should have grouped at least some requests.
     assert!(m.mean_batch_size() >= 1.0);
     drop(m);
+    // submit() callers (no infer_blocking) must not leak router load.
+    assert_eq!(server.outstanding("tiny"), 0, "router accounting must drain");
     server.shutdown();
 }
 
