@@ -1,0 +1,168 @@
+//! Event-sim hot-path benchmark (the PR-3 perf trajectory): execution-plan
+//! compile vs the legacy materialized `Schedule::plan`, streamed layer
+//! simulation wall-clock and passes/sec on a VGG-scale conv layer, peak
+//! per-XPE queue length, and the live-state memory ratio of streaming vs
+//! materializing. Emits `BENCH_event_sim.json` (path overridable via
+//! `OXBNN_BENCH_OUT`) so CI can track the numbers over time.
+//!
+//! Run: `cargo bench --bench bench_event_sim`
+//! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_event_sim`
+
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::event_sim::simulate_layer_planned;
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::mapping::scheduler::{MappingPolicy, Schedule};
+use oxbnn::plan::{ExecutionPlan, LayerPlan};
+use oxbnn::util::bench::{fmt_secs, Bencher, Table};
+use oxbnn::util::json::Json;
+use oxbnn::workloads::Workload;
+
+/// Peak resident set size (VmHWM) in bytes from /proc/self/status (None
+/// off-Linux). Used to MEASURE the peak-memory gap rather than model it:
+/// VmHWM is a monotone high-water mark, so a regression that transiently
+/// re-materializes per-pass state on the hot path shows up here even if
+/// it frees everything before returning (and even if the closed-form
+/// byte formulas are left stale).
+fn peak_rss_bytes() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: usize = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let cfg = AcceleratorConfig::oxbnn_5();
+    // VGG-small conv2: 1024 output positions × 128 channels × 22 slices
+    // at N = 53 — the layer whose materialized schedule used to cost
+    // millions of heap structs (and a full clone of every queue).
+    let layer = GemmLayer::new("vgg_conv2", 1024, 1152, 128);
+    let policy = MappingPolicy::PcaLocal;
+    let (n, m, xpcs) = (cfg.n, cfg.m(), cfg.xpc_count());
+
+    println!("event-sim hot path — {} on {}\n", layer.name, cfg.name);
+
+    let compile = bencher.run("plan_compile", || {
+        LayerPlan::compile(&layer, policy, n, m, xpcs)
+    });
+    let plan = LayerPlan::compile(&layer, policy, n, m, xpcs);
+
+    // Measured peak memory, streamed sim FIRST (small) so the
+    // materialized baseline afterwards raises the high-water mark by its
+    // own allocation, not the sim's.
+    let hwm_base = peak_rss_bytes();
+    let stats = simulate_layer_planned(&cfg, &plan);
+    let hwm_after_sim = peak_rss_bytes();
+    let sched = Schedule::plan(&layer, policy, n, m, xpcs);
+    let sched_clone = sched.queues.clone(); // what LayerWorld used to hold
+    let hwm_after_mat = peak_rss_bytes();
+    let measured_sim_b = hwm_after_sim.zip(hwm_base).map(|(a, b)| a.saturating_sub(b));
+    let measured_mat_b =
+        hwm_after_mat.zip(hwm_after_sim).map(|(a, b)| a.saturating_sub(b));
+    drop(sched_clone);
+    drop(sched);
+
+    let materialize = bencher.run("schedule_materialize_legacy", || {
+        Schedule::plan(&layer, policy, n, m, xpcs)
+    });
+    let sim = bencher.run("streamed_layer_sim", || simulate_layer_planned(&cfg, &plan));
+
+    // Whole-network plan compile, for the compile→cache→stream story.
+    let wl = Workload::evaluation_set().remove(0); // vgg_small
+    let frame_compile = bencher.run("frame_plan_compile_vgg_small", || {
+        ExecutionPlan::compile(&cfg, &wl, policy)
+    });
+
+    let total_passes = plan.total_passes();
+    let passes_per_sec = total_passes as f64 / sim.median;
+    let peak_queue = plan.max_queue_len();
+    // Modeled (closed-form) live state, for the trajectory record…
+    let mem_streamed = plan.streamed_state_bytes();
+    let mem_materialized = plan.materialized_bytes();
+    let mem_ratio = mem_materialized as f64 / mem_streamed as f64;
+    // …and the measured peak-RSS deltas, which are what the gate trusts.
+    // A 64 KiB floor on the sim delta avoids a meaningless ratio when the
+    // streamed sim fits entirely under the process's existing peak.
+    let measured_ratio = measured_mat_b.zip(measured_sim_b).map(|(mat, sim_b)| {
+        mat as f64 / (sim_b.max(64 * 1024)) as f64
+    });
+
+    let fmt_opt = |b: Option<usize>| {
+        b.map(|v| format!("{} B", v)).unwrap_or_else(|| "n/a".to_string())
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["layer passes".into(), format!("{}", total_passes)]);
+    t.row(&["events processed".into(), format!("{}", stats.events_processed)]);
+    t.row(&["plan compile (streamed)".into(), fmt_secs(compile.median)]);
+    t.row(&["schedule materialize (legacy)".into(), fmt_secs(materialize.median)]);
+    t.row(&["frame plan compile (vgg_small)".into(), fmt_secs(frame_compile.median)]);
+    t.row(&["layer sim wall-clock".into(), fmt_secs(sim.median)]);
+    t.row(&["passes/sec".into(), format!("{:.3e}", passes_per_sec)]);
+    t.row(&["peak per-XPE queue".into(), format!("{}", peak_queue)]);
+    t.row(&["modeled state streamed".into(), format!("{} B", mem_streamed)]);
+    t.row(&["modeled state materialized".into(), format!("{} B", mem_materialized)]);
+    t.row(&["measured peak-RSS sim".into(), fmt_opt(measured_sim_b)]);
+    t.row(&["measured peak-RSS materialized".into(), fmt_opt(measured_mat_b)]);
+    t.row(&[
+        "peak-memory ratio".into(),
+        measured_ratio
+            .map(|r| format!("{:.1}x (measured)", r))
+            .unwrap_or_else(|| format!("{:.1}x (modeled)", mem_ratio)),
+    ]);
+    t.print();
+
+    // Acceptance gates: the streamed sim's peak-memory growth must be
+    // ≥10× below the materialized baseline (no per-pass allocation on
+    // the hot path) — measured via VmHWM where available, modeled
+    // otherwise — and the simulation must process every planned pass.
+    match measured_ratio {
+        Some(r) => assert!(
+            r >= 10.0,
+            "measured peak-RSS: streaming {:?} B vs materialized {:?} B — \
+             want >= 10x, got {:.1}x (per-pass state crept back onto the hot path?)",
+            measured_sim_b,
+            measured_mat_b,
+            r
+        ),
+        None => assert!(
+            mem_ratio >= 10.0,
+            "modeled live state: want >= 10x, got {:.1}x",
+            mem_ratio
+        ),
+    }
+    assert_eq!(stats.counter("passes"), total_passes as u64);
+    assert!(
+        compile.median <= materialize.median,
+        "plan compile ({}) must not cost more than legacy materialization ({})",
+        fmt_secs(compile.median),
+        fmt_secs(materialize.median)
+    );
+    println!("\nshape check OK: streamed plan beats materialized baseline");
+
+    let opt_num = |b: Option<usize>| Json::Num(b.map(|v| v as f64).unwrap_or(-1.0));
+    let json = Json::obj(vec![
+        ("layer", Json::Str(layer.name.clone())),
+        ("accelerator", Json::Str(cfg.name.clone())),
+        ("total_passes", Json::Num(total_passes as f64)),
+        ("events_processed", Json::Num(stats.events_processed as f64)),
+        ("plan_compile_s", Json::Num(compile.median)),
+        ("schedule_materialize_s", Json::Num(materialize.median)),
+        ("frame_plan_compile_s", Json::Num(frame_compile.median)),
+        ("layer_sim_wall_s", Json::Num(sim.median)),
+        ("passes_per_sec", Json::Num(passes_per_sec)),
+        ("peak_queue_len", Json::Num(peak_queue as f64)),
+        ("modeled_streamed_state_bytes", Json::Num(mem_streamed as f64)),
+        ("modeled_materialized_bytes", Json::Num(mem_materialized as f64)),
+        ("modeled_mem_ratio", Json::Num(mem_ratio)),
+        ("measured_peak_rss_sim_bytes", opt_num(measured_sim_b)),
+        ("measured_peak_rss_materialized_bytes", opt_num(measured_mat_b)),
+        (
+            "measured_peak_rss_ratio",
+            Json::Num(measured_ratio.unwrap_or(-1.0)),
+        ),
+    ]);
+    let out = std::env::var("OXBNN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_event_sim.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", out);
+}

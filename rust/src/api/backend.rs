@@ -22,6 +22,8 @@ use super::session::ApiError;
 use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
+use crate::plan::ExecutionPlan;
+use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
 /// Which execution model a session runs.
@@ -121,6 +123,16 @@ pub trait Backend {
         let frame: f64 = layers.iter().map(|l| l.latency_s).sum();
         Report::from_layers(self.kind(), cfg, &workload.name, layers, frame)
     }
+
+    /// Evaluate a pre-compiled [`ExecutionPlan`] (the [`super::Session`]
+    /// entry point — plans come from the session's
+    /// [`crate::plan::PlanCache`]). The default ignores the compiled
+    /// mapping and delegates to [`Backend::run_workload`]; backends that
+    /// consume the mapping itself (the event simulator) override this to
+    /// stream it instead of recompiling.
+    fn run_planned(&mut self, plan: &ExecutionPlan) -> Report {
+        self.run_workload(&plan.accelerator, &plan.workload, plan.policy)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -174,6 +186,22 @@ impl Backend for AnalyticBackend {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EventSimBackend;
 
+/// Shape a finished layer's event stats into the unified report slice.
+fn layer_report_from_stats(name: &str, stats: &SimStats) -> LayerReport {
+    let mut counters = stats.counters().clone();
+    counters.insert("events".to_string(), stats.events_processed);
+    LayerReport {
+        name: name.to_string(),
+        latency_s: stats.end_time_s,
+        dynamic_energy_j: stats.total_energy_j(),
+        passes: stats.counter("passes"),
+        psums: stats.counter("psums"),
+        timing: BTreeMap::new(),
+        counters,
+        energy_breakdown: stats.energy_breakdown().clone(),
+    }
+}
+
 impl Backend for EventSimBackend {
     fn kind(&self) -> BackendKind {
         BackendKind::Event
@@ -186,39 +214,40 @@ impl Backend for EventSimBackend {
         policy: MappingPolicy,
     ) -> LayerReport {
         let stats = crate::arch::event_sim::simulate_layer(cfg, layer, policy);
-        let mut counters = stats.counters().clone();
-        counters.insert("events".to_string(), stats.events_processed);
-        LayerReport {
-            name: layer.name.clone(),
-            latency_s: stats.end_time_s,
-            dynamic_energy_j: stats.total_energy_j(),
-            passes: stats.counter("passes"),
-            psums: stats.counter("psums"),
-            timing: BTreeMap::new(),
-            counters,
-            energy_breakdown: stats.energy_breakdown().clone(),
-        }
+        layer_report_from_stats(&layer.name, &stats)
     }
 
-    /// Whole frames chain layers with eDRAM prefetch overlap through the
-    /// same [`crate::arch::workload_sim::OverlapChain`] recurrence that
-    /// [`crate::arch::workload_sim::simulate_frame`] uses (layers run in
-    /// separate event spaces there too, so per-layer stats are identical).
+    /// Whole frames compile (or receive) an [`ExecutionPlan`] and stream
+    /// it — see [`EventSimBackend::run_planned`].
     fn run_workload(
         &mut self,
         cfg: &AcceleratorConfig,
         workload: &Workload,
         policy: MappingPolicy,
     ) -> Report {
-        let layers: Vec<LayerReport> = workload
+        self.run_planned(&ExecutionPlan::compile(cfg, workload, policy))
+    }
+
+    /// The plan-driven path: every layer streams its compiled pass map
+    /// (no schedule materialization, no recompilation on cache hits), and
+    /// layers chain with eDRAM prefetch overlap through the same
+    /// [`crate::arch::workload_sim::OverlapChain`] recurrence that
+    /// [`crate::arch::workload_sim::simulate_frame`] uses (layers run in
+    /// separate event spaces there too, so per-layer stats are identical).
+    fn run_planned(&mut self, plan: &ExecutionPlan) -> Report {
+        let cfg = &plan.accelerator;
+        let workload = &plan.workload;
+        let mut chain = crate::arch::workload_sim::OverlapChain::new(cfg, workload);
+        let layers: Vec<LayerReport> = plan
             .layers
             .iter()
-            .map(|l| self.run_layer(cfg, l, policy))
+            .map(|lp| {
+                let stats = crate::arch::event_sim::simulate_layer_planned(cfg, lp);
+                let lr = layer_report_from_stats(&lp.layer.name, &stats);
+                chain.step(lr.latency_s);
+                lr
+            })
             .collect();
-        let mut chain = crate::arch::workload_sim::OverlapChain::new(cfg, workload);
-        for lr in &layers {
-            chain.step(lr.latency_s);
-        }
         Report::from_layers(
             self.kind(),
             cfg,

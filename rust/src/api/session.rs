@@ -16,11 +16,14 @@
 //! println!("{:.1} FPS, {:.2} FPS/W", report.fps, report.fps_per_w);
 //! ```
 
+use std::sync::Arc;
+
 use super::backend::{default_policy, Backend, BackendKind};
 use super::report::{LayerReport, Report};
 use crate::arch::accelerator::AcceleratorConfig;
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
+use crate::plan::{ExecutionPlan, PlanCache};
 use crate::workloads::Workload;
 
 /// Errors from building a [`Session`].
@@ -58,6 +61,7 @@ pub struct SessionBuilder {
     backend: BackendChoice,
     policy: Option<MappingPolicy>,
     batch: usize,
+    plan_cache: Option<Arc<PlanCache>>,
 }
 
 impl SessionBuilder {
@@ -114,6 +118,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Share a [`PlanCache`] with other sessions (parallel sweep cells,
+    /// serving replicas): the `(accelerator, workload, policy)` mapping
+    /// is compiled once and streamed by every session that hits the same
+    /// key. Default: a private cache per session.
+    pub fn plan_cache(mut self, cache: Arc<PlanCache>) -> Self {
+        self.plan_cache = Some(cache);
+        self
+    }
+
     /// Resolve names and assemble the session.
     pub fn build(self) -> Result<Session, ApiError> {
         if self.batch == 0 {
@@ -144,7 +157,17 @@ impl SessionBuilder {
             BackendChoice::Kind(kind) => kind.create(),
             BackendChoice::Custom(b) => b,
         };
-        Ok(Session { accelerator, workload, backend, policy, batch: self.batch })
+        let plan_cache = self
+            .plan_cache
+            .unwrap_or_else(|| Arc::new(PlanCache::default()));
+        Ok(Session {
+            accelerator,
+            workload,
+            backend,
+            policy,
+            batch: self.batch,
+            plan_cache,
+        })
     }
 }
 
@@ -155,6 +178,7 @@ pub struct Session {
     backend: Box<dyn Backend + Send>,
     policy: MappingPolicy,
     batch: usize,
+    plan_cache: Arc<PlanCache>,
 }
 
 impl Session {
@@ -167,14 +191,23 @@ impl Session {
             backend: BackendChoice::Kind(BackendKind::Analytic),
             policy: None,
             batch: 1,
+            plan_cache: None,
         }
     }
 
-    /// Run the configured workload and return the unified report.
+    /// Run the configured workload and return the unified report. The
+    /// execution plan is fetched from (or compiled into) the session's
+    /// [`PlanCache`], so repeated runs — and other sessions sharing the
+    /// cache — never recompile the mapping.
     pub fn run(&mut self) -> Report {
-        self.backend
-            .run_workload(&self.accelerator, &self.workload, self.policy)
-            .with_batch(self.batch)
+        let plan = self.plan();
+        self.backend.run_planned(&plan).with_batch(self.batch)
+    }
+
+    /// The compiled execution plan for this session's triple (cached).
+    pub fn plan(&self) -> Arc<ExecutionPlan> {
+        self.plan_cache
+            .get_or_compile(&self.accelerator, &self.workload, self.policy)
     }
 
     /// Run a single layer (not necessarily from the configured workload)
@@ -201,5 +234,11 @@ impl Session {
 
     pub fn batch(&self) -> usize {
         self.batch
+    }
+
+    /// The session's plan cache (shared when built with
+    /// [`SessionBuilder::plan_cache`]).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
     }
 }

@@ -10,33 +10,34 @@
 //! ends"), and to validate the analytic model (exact transaction counts,
 //! close latency).
 //!
-//! Hot-loop structure (EXPERIMENTS.md §Perf L3-sim): XPE state lives in a
-//! flat `Vec` indexed by XPE id, and counters/energy accumulate in plain
-//! fields flushed once via `World::finalize` — no per-event string-keyed
-//! map traffic.
+//! Hot-loop structure (EXPERIMENTS.md §Perf L3-sim): the schedule is a
+//! compiled [`LayerPlan`] streamed through a [`PassStream`] — each XPE's
+//! next pass is computed in O(1), so the world's live state is O(#XPEs)
+//! cursors + O(#VDPs) completion counters instead of one heap struct per
+//! pass (a VGG conv layer has millions). Counters/energy accumulate in
+//! plain fields flushed once via `World::finalize` — no per-event
+//! string-keyed map traffic.
 
 use super::accelerator::{AcceleratorConfig, BitcountMode};
 use crate::devices::pca::{Pca, PcaParams};
 use crate::mapping::layer::GemmLayer;
-use crate::mapping::scheduler::{MappingPolicy, Schedule, ScheduledPass};
-use crate::sim::engine::{Scheduler, World};
+use crate::mapping::scheduler::MappingPolicy;
+use crate::plan::{LayerPlan, PassStream};
+use crate::sim::engine::{RunOutcome, Scheduler, World};
 use crate::sim::event::{EventKind, XpeId};
 use crate::sim::stats::SimStats;
 
-/// Per-XPE run state.
-struct XpeState {
-    queue: Vec<ScheduledPass>,
-    next: usize,
-    pca: Option<Pca>,
-}
-
-/// One-layer event-driven world.
-pub struct LayerWorld {
-    cfg: AcceleratorConfig,
+/// One-layer event-driven world, driven by a compiled [`LayerPlan`].
+pub struct LayerWorld<'a> {
+    cfg: &'a AcceleratorConfig,
+    plan: &'a LayerPlan,
+    /// O(#XPEs) streaming cursor over the plan — replaces the old
+    /// materialized (and cloned) per-XPE pass queues.
+    stream: PassStream,
     slices: usize,
     m: usize,
-    /// Flat XPE states, indexed by xpc * m + xpe.
-    xpes: Vec<XpeState>,
+    /// Per-XPE PCA state (None in reduction mode), indexed flat.
+    pcas: Vec<Option<Pca>>,
     /// Remaining slices per VDP (reduction-mode completion tracking).
     vdp_remaining: Vec<usize>,
     vdps_done: usize,
@@ -62,36 +63,44 @@ pub struct LayerWorld {
     e_adc_red: f64,
 }
 
-impl LayerWorld {
-    pub fn new(cfg: AcceleratorConfig, layer: GemmLayer, policy: MappingPolicy) -> LayerWorld {
-        let schedule = Schedule::plan(&layer, policy, cfg.n, cfg.m(), cfg.xpc_count());
+impl<'a> LayerWorld<'a> {
+    /// Build the world over a plan compiled for exactly this accelerator
+    /// geometry.
+    pub fn new(cfg: &'a AcceleratorConfig, plan: &'a LayerPlan) -> LayerWorld<'a> {
+        assert!(
+            plan.n == cfg.n && plan.m == cfg.m() && plan.xpc_count == cfg.xpc_count(),
+            "plan geometry (N={}, M={}, XPCs={}) does not match accelerator '{}' \
+             (N={}, M={}, XPCs={})",
+            plan.n,
+            plan.m,
+            plan.xpc_count,
+            cfg.name,
+            cfg.n,
+            cfg.m(),
+            cfg.xpc_count()
+        );
         let gamma = match cfg.bitcount {
             BitcountMode::Pca { gamma } => gamma,
             _ => 0,
         };
         let m = cfg.m();
-        let total = m * cfg.xpc_count();
-        let mut xpes: Vec<XpeState> = (0..total)
-            .map(|_| XpeState {
-                queue: Vec::new(),
-                next: 0,
-                pca: match cfg.bitcount {
-                    BitcountMode::Pca { .. } => Some(Pca::new(PcaParams::default(), gamma)),
-                    _ => None,
-                },
+        let total = plan.total_xpes();
+        let pcas: Vec<Option<Pca>> = (0..total)
+            .map(|_| match cfg.bitcount {
+                BitcountMode::Pca { .. } => Some(Pca::new(PcaParams::default(), gamma)),
+                _ => None,
             })
             .collect();
-        for (id, queue) in schedule.iter_queues() {
-            xpes[id.xpc * m + id.xpe].queue = queue.clone();
-        }
-        let vdp_total = layer.vdp_count();
-        let slices = layer.slices(cfg.n);
+        let vdp_total = plan.vdp_count();
+        let slices = plan.slices();
         let xpcs = cfg.xpc_count();
         LayerWorld {
             cfg,
+            plan,
+            stream: PassStream::new(plan),
             slices,
             m,
-            xpes,
+            pcas,
             vdp_remaining: vec![slices; vdp_total],
             vdps_done: 0,
             vdp_total,
@@ -118,16 +127,14 @@ impl LayerWorld {
         id.xpc * self.m + id.xpe
     }
 
-    /// Issue the next queued pass on `id` after `extra_delay`.
+    /// Stream the next planned pass on `id` and issue it after
+    /// `extra_delay` — O(1), no queue lookup.
     fn start_next_pass(&mut self, id: XpeId, extra_delay: f64, sched: &mut Scheduler) {
-        let tau = self.cfg.tau_s();
         let flat = self.flat(id);
-        let st = &mut self.xpes[flat];
-        if st.next >= st.queue.len() {
+        let Some(pass) = self.stream.next_for(self.plan, flat) else {
             return;
-        }
-        let pass = st.queue[st.next];
-        st.next += 1;
+        };
+        let tau = self.cfg.tau_s();
         let ones = (pass.slice_len as f64 * self.ones_density).round() as u64;
         sched.after(
             extra_delay + tau,
@@ -136,11 +143,11 @@ impl LayerWorld {
     }
 
     fn all_passes_issued(&self) -> bool {
-        self.xpes.iter().all(|s| s.next >= s.queue.len())
+        self.stream.all_issued()
     }
 }
 
-impl World for LayerWorld {
+impl World for LayerWorld<'_> {
     fn init(&mut self, sched: &mut Scheduler, _stats: &mut SimStats) {
         for xpc in 0..self.red_pending.len() {
             for xpe in 0..self.m {
@@ -159,7 +166,7 @@ impl World for LayerWorld {
                 if is_pca {
                     let last = *slice_idx == self.slices - 1;
                     let flat = self.flat(*xpe);
-                    let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                    let pca = self.pcas[flat].as_mut().expect("pca mode");
                     let saturated = pca.accumulate(*ones);
                     if saturated {
                         self.n_saturations += 1;
@@ -175,7 +182,7 @@ impl World for LayerWorld {
                         self.n_mid_vdp_readouts += 1;
                         self.e_pca += self.cfg.energy.pca_readout_j;
                         let now = sched.now();
-                        let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                        let pca = self.pcas[flat].as_mut().expect("pca mode");
                         let (_r, stall) = pca.readout(now);
                         if stall > 0.0 {
                             self.n_discharge_stalls += 1;
@@ -198,7 +205,7 @@ impl World for LayerWorld {
                 self.e_pca += self.cfg.energy.pca_readout_j;
                 let now = sched.now();
                 let flat = self.flat(*xpe);
-                let pca = self.xpes[flat].pca.as_mut().expect("pca mode");
+                let pca = self.pcas[flat].as_mut().expect("pca mode");
                 let (_result, stall) = pca.readout(now);
                 if stall > 0.0 {
                     self.n_discharge_stalls += 1;
@@ -233,7 +240,8 @@ impl World for LayerWorld {
                 self.vdp_remaining[v] -= 1;
                 if self.vdp_remaining[v] == 0 {
                     let act = self.cfg.peripherals.activation_unit.latency_s;
-                    let done_at = self.red_free_at[xpc].max(sched.now()) + lat + act;
+                    let lat_now = sched.now();
+                    let done_at = self.red_free_at[xpc].max(lat_now) + lat + act;
                     sched.at(done_at, EventKind::ActivationDone { vdp: *vdp });
                 }
             }
@@ -269,15 +277,29 @@ impl World for LayerWorld {
     }
 }
 
-/// Convenience: run a layer to completion, returning stats.
+/// Run one pre-compiled layer plan to completion on `cfg`, without
+/// panicking on truncation — the caller inspects `completed`.
+pub fn simulate_layer_outcome(cfg: &AcceleratorConfig, plan: &LayerPlan) -> RunOutcome {
+    let mut world = LayerWorld::new(cfg, plan);
+    crate::sim::engine::run(&mut world, plan.event_budget())
+}
+
+/// Run one pre-compiled layer plan to completion, returning stats.
+/// Panics if the event budget truncated the run (a truncated latency is
+/// bogus; the generous budget means truncation is a scheduling bug).
+pub fn simulate_layer_planned(cfg: &AcceleratorConfig, plan: &LayerPlan) -> SimStats {
+    simulate_layer_outcome(cfg, plan)
+        .expect_complete(&format!("layer '{}'", plan.layer.name))
+}
+
+/// Convenience: compile a single-layer plan and run it to completion.
 pub fn simulate_layer(
     cfg: &AcceleratorConfig,
     layer: &GemmLayer,
     policy: MappingPolicy,
 ) -> SimStats {
-    let mut world = LayerWorld::new(cfg.clone(), layer.clone(), policy);
-    let budget = (layer.total_passes(cfg.n) as u64) * 8 + 10_000;
-    crate::sim::engine::run(&mut world, budget)
+    let plan = LayerPlan::compile(layer, policy, cfg.n, cfg.m(), cfg.xpc_count());
+    simulate_layer_planned(cfg, &plan)
 }
 
 #[cfg(test)]
@@ -375,5 +397,31 @@ mod tests {
             slow.end_time_s,
             fast.end_time_s
         );
+    }
+
+    #[test]
+    fn planned_and_convenience_paths_agree() {
+        // simulate_layer compiles the same plan simulate_layer_planned
+        // receives — identical stats either way.
+        let cfg = small_cfg(true);
+        let layer = GemmLayer::new("t", 8, 30, 4);
+        let plan =
+            LayerPlan::compile(&layer, MappingPolicy::PcaLocal, cfg.n, cfg.m(), cfg.xpc_count());
+        let a = simulate_layer_planned(&cfg, &plan);
+        let b = simulate_layer(&cfg, &layer, MappingPolicy::PcaLocal);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.end_time_s, b.end_time_s);
+        assert_eq!(a.counters(), b.counters());
+        assert_eq!(a.counter("clamped_events"), 0, "no past-time scheduling");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match accelerator")]
+    fn mismatched_plan_geometry_rejected() {
+        let cfg = small_cfg(true);
+        let layer = GemmLayer::new("t", 8, 30, 4);
+        // Compiled for a different N than the accelerator's.
+        let plan = LayerPlan::compile(&layer, MappingPolicy::PcaLocal, 7, 7, 1);
+        let _ = LayerWorld::new(&cfg, &plan);
     }
 }

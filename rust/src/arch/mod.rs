@@ -8,7 +8,11 @@ pub mod reduction;
 pub mod workload_sim;
 
 pub use accelerator::{AcceleratorConfig, BitcountMode, DEFAULT_MEM_BW};
-pub use event_sim::{simulate_layer, LayerWorld};
+pub use event_sim::{
+    simulate_layer, simulate_layer_outcome, simulate_layer_planned, LayerWorld,
+};
 pub use perf::{gmean, layer_perf, workload_perf, LayerPerf, WorkloadPerf};
 pub use reduction::ReductionNetwork;
-pub use workload_sim::{simulate_frame, FrameTrace, LayerTrace, OverlapChain};
+pub use workload_sim::{
+    simulate_frame, simulate_frame_planned, FrameTrace, LayerTrace, OverlapChain,
+};

@@ -11,8 +11,9 @@
 //! per layer.
 
 use super::accelerator::AcceleratorConfig;
-use super::event_sim::LayerWorld;
+use super::event_sim::simulate_layer_planned;
 use crate::mapping::scheduler::MappingPolicy;
+use crate::plan::ExecutionPlan;
 use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
@@ -91,27 +92,36 @@ impl<'a> OverlapChain<'a> {
     }
 }
 
-/// Event-simulate one frame of `workload` on `cfg`.
-///
-/// Each layer runs in its own event space (layers are strictly dependent,
-/// so no cross-layer event interleaving is lost); fetch/compute overlap is
-/// applied when chaining. Counters and the energy ledger accumulate across
-/// layers into one `SimStats`.
+/// Event-simulate one frame of `workload` on `cfg`, compiling a
+/// throwaway [`ExecutionPlan`]. Callers with a plan in hand (the api
+/// facade, sweeps) use [`simulate_frame_planned`] and skip recompiling.
 pub fn simulate_frame(
     cfg: &AcceleratorConfig,
     workload: &Workload,
     policy: MappingPolicy,
 ) -> FrameTrace {
+    simulate_frame_planned(&ExecutionPlan::compile(cfg, workload, policy))
+}
+
+/// Event-simulate one frame from a compiled [`ExecutionPlan`].
+///
+/// Each layer runs in its own event space (layers are strictly dependent,
+/// so no cross-layer event interleaving is lost); fetch/compute overlap is
+/// applied when chaining. Counters and the energy ledger accumulate across
+/// layers into one `SimStats`. A layer whose event budget truncates panics
+/// (via [`simulate_layer_planned`]) instead of contributing a bogus
+/// shorter latency to the frame.
+pub fn simulate_frame_planned(plan: &ExecutionPlan) -> FrameTrace {
+    let cfg = &plan.accelerator;
+    let workload = &plan.workload;
     let mut total = SimStats::default();
-    let mut layers = Vec::with_capacity(workload.layers.len());
+    let mut layers = Vec::with_capacity(plan.layers.len());
     let mut chain = OverlapChain::new(cfg, workload);
-    for layer in workload.layers.iter() {
-        let mut world = LayerWorld::new(cfg.clone(), layer.clone(), policy);
-        let budget = (layer.total_passes(cfg.n) as u64) * 8 + 10_000;
-        let stats = crate::sim::engine::run(&mut world, budget);
+    for layer_plan in plan.layers.iter() {
+        let stats = simulate_layer_planned(cfg, layer_plan);
         let (start, next_fetch) = chain.step(stats.end_time_s);
         layers.push(LayerTrace {
-            name: layer.name.clone(),
+            name: layer_plan.layer.name.clone(),
             start_s: start,
             compute_s: stats.end_time_s,
             fetch_s: next_fetch,
@@ -237,6 +247,20 @@ mod tests {
         assert!(trace.stats.counter("pca_discharge_stalls") > 0);
         let long = simulate_frame(&small_cfg(), &tiny_workload(), MappingPolicy::PcaLocal);
         assert_eq!(long.stats.counter("pca_discharge_stalls"), 0);
+    }
+
+    #[test]
+    fn planned_frame_matches_adhoc_frame() {
+        // simulate_frame is just "compile + simulate_frame_planned"; a
+        // cached plan must produce bit-identical results.
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let a = simulate_frame_planned(&plan);
+        let b = simulate_frame(&cfg, &wl, MappingPolicy::PcaLocal);
+        assert_eq!(a.frame_latency_s, b.frame_latency_s);
+        assert_eq!(a.stats.events_processed, b.stats.events_processed);
+        assert_eq!(a.stats.counters(), b.stats.counters());
     }
 
     #[test]

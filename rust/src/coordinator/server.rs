@@ -157,6 +157,11 @@ pub struct ServerConfig {
     /// (see [`synthetic_manifest`]). When `None`, the manifest is loaded
     /// from `artifacts_dir`.
     pub manifest: Option<Manifest>,
+    /// Shared execution-plan cache: every worker replica computing the
+    /// simulated photonic latency of the same (accelerator, model
+    /// geometry) pair reuses one compiled mapping. Share one cache
+    /// across servers (or with api sessions) by cloning the `Arc`.
+    pub plan_cache: Arc<crate::plan::PlanCache>,
 }
 
 impl ServerConfig {
@@ -174,6 +179,7 @@ impl ServerConfig {
             weight_seed: 0x0B17,
             execute_delay: Duration::ZERO,
             manifest: None,
+            plan_cache: Arc::new(crate::plan::PlanCache::default()),
         }
     }
 
@@ -519,7 +525,8 @@ fn worker_loop(
             return fail_all(rx, &router, &model, replica, &metrics, &format!("{:#}", e));
         }
     };
-    let simulated_s = crate::api::simulated_frame_latency(
+    let simulated_s = crate::api::simulated_frame_latency_cached(
+        &cfg.plan_cache,
         &cfg.accelerator,
         &workload_from_artifact(&artifact),
         cfg.sim_backend,
@@ -773,6 +780,26 @@ mod tests {
         let mut a = artifact_named("bnn_bad");
         a.kind = "xnor_gemm".into();
         assert!(validate_artifact(&a).is_err());
+    }
+
+    #[test]
+    fn replicas_share_one_plan_compile() {
+        // Both replicas simulate the same model geometry on the same
+        // accelerator: the shared PlanCache must hold exactly one plan.
+        let mut cfg = ServerConfig::synthetic(&["tiny"]);
+        cfg.replicas = 2;
+        let cache = Arc::clone(&cfg.plan_cache);
+        let server = Server::start(cfg).unwrap();
+        let input_len = server.input_len("tiny").unwrap();
+        let resp = server
+            .infer_blocking(InferenceRequest {
+                model: "tiny".into(),
+                input: vec![0.25; input_len],
+            })
+            .unwrap();
+        assert!(resp.simulated_photonic_s > 0.0);
+        assert_eq!(cache.len(), 1, "replicas must share one compiled plan");
+        server.shutdown();
     }
 
     #[test]

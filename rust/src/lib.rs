@@ -46,6 +46,8 @@
 //! * `sim` — event-driven transaction-level simulation engine
 //! * `arch` — XPE / XPC / tile / accelerator architecture model
 //! * `mapping` — convolution flattening, slicing, scheduling (paper Fig. 5)
+//! * [`plan`] — compiled execution plans: compile → cache → stream (the
+//!   event backend's O(#XPEs)-memory schedule representation)
 //! * `baselines` — ROBIN and LIGHTBULB accelerator models
 //! * `workloads` — the four evaluated BNNs (layer geometry)
 //! * `energy` — power/energy accounting (paper Table III)
@@ -63,6 +65,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod functional;
 pub mod mapping;
+pub mod plan;
 pub mod sim;
 pub mod workloads;
 pub mod devices;

@@ -23,6 +23,7 @@ use oxbnn::devices::oxg::Oxg;
 use oxbnn::util::bench::Table;
 use oxbnn::util::cli::{CliError, Command};
 use oxbnn::util::logging;
+use oxbnn::util::threadpool::{host_threads, parallel_map};
 use oxbnn::util::rng::Rng;
 use oxbnn::util::units::fmt_time;
 use oxbnn::workloads::Workload;
@@ -142,6 +143,25 @@ fn cmd_fps(args: &[String]) -> i32 {
     let accels = AcceleratorConfig::evaluation_set();
     let workloads = Workload::evaluation_set();
 
+    // Fan every (accelerator × workload) cell across the host's cores.
+    // Cells are independent simulations (each a distinct plan-cache key),
+    // so the grid scales with threads — which is what lets the event
+    // backend complete the full Fig. 7 grid. `OXBNN_THREADS` overrides.
+    let jobs: Vec<(AcceleratorConfig, Workload)> = accels
+        .iter()
+        .flat_map(|a| workloads.iter().map(move |w| (a.clone(), w.clone())))
+        .collect();
+    let cell_reports: Vec<oxbnn::api::Report> =
+        parallel_map(jobs, host_threads(), |(a, w)| {
+            Session::builder()
+                .accelerator(a)
+                .workload(w)
+                .backend(backend)
+                .build()
+                .expect("session over built-in configs")
+                .run()
+        });
+
     let mut fps_table = Table::new(&[
         "accelerator",
         "vgg_small",
@@ -152,19 +172,8 @@ fn cmd_fps(args: &[String]) -> i32 {
     ]);
     let mut fpsw_table = fps_table_clone_headers();
     let mut results = Vec::new();
-    for acc in &accels {
-        let reports: Vec<oxbnn::api::Report> = workloads
-            .iter()
-            .map(|w| {
-                Session::builder()
-                    .accelerator(acc.clone())
-                    .workload(w.clone())
-                    .backend(backend)
-                    .build()
-                    .expect("session over built-in configs")
-                    .run()
-            })
-            .collect();
+    for (i, acc) in accels.iter().enumerate() {
+        let reports = &cell_reports[i * workloads.len()..(i + 1) * workloads.len()];
         let fps: Vec<f64> = reports.iter().map(|r| r.fps).collect();
         let fpsw: Vec<f64> = reports.iter().map(|r| r.fps_per_w).collect();
         fps_table.row(&[
@@ -748,35 +757,38 @@ fn cmd_sweep(args: &[String]) -> i32 {
         return 2;
     }
     let solver = ScalabilitySolver::default();
+    // All (DR × XPE-count) cells run in parallel; each cell is an
+    // independent simulation of a distinct accelerator config, so the
+    // sweep scales with cores even on the event backend.
+    let cells: Vec<(f64, usize, u64, usize)> = solver
+        .table2()
+        .iter()
+        .flat_map(|row| xpes.iter().map(move |&x| (row.dr_gsps, row.n, row.gamma, x)))
+        .collect();
+    let lines: Vec<String> = parallel_map(cells, host_threads(), |(dr, n, gamma, x)| {
+        let cfg = AcceleratorConfig {
+            name: format!("OXBNN_{}x{}", dr, x),
+            dr_gsps: dr,
+            n,
+            xpe_total: x,
+            bitcount: oxbnn::arch::BitcountMode::Pca { gamma },
+            ..AcceleratorConfig::oxbnn_50()
+        };
+        let report = Session::builder()
+            .accelerator(cfg)
+            .workload(workload.clone())
+            .backend(backend)
+            .build()
+            .expect("sweep session")
+            .run();
+        format!(
+            "{},{},{},{},{:.1},{:.2},{:.2}\n",
+            dr, n, gamma, x, report.fps, report.fps_per_w, report.static_power_w
+        )
+    });
     let mut csv = String::from("dr_gsps,n,gamma,xpe_total,fps,fps_per_w,static_w\n");
-    for row in solver.table2() {
-        for &x in &xpes {
-            let cfg = AcceleratorConfig {
-                name: format!("OXBNN_{}x{}", row.dr_gsps, x),
-                dr_gsps: row.dr_gsps,
-                n: row.n,
-                xpe_total: x,
-                bitcount: oxbnn::arch::BitcountMode::Pca { gamma: row.gamma },
-                ..AcceleratorConfig::oxbnn_50()
-            };
-            let report = Session::builder()
-                .accelerator(cfg)
-                .workload(workload.clone())
-                .backend(backend)
-                .build()
-                .expect("sweep session")
-                .run();
-            csv.push_str(&format!(
-                "{},{},{},{},{:.1},{:.2},{:.2}\n",
-                row.dr_gsps,
-                row.n,
-                row.gamma,
-                x,
-                report.fps,
-                report.fps_per_w,
-                report.static_power_w
-            ));
-        }
+    for line in &lines {
+        csv.push_str(line);
     }
     if parsed.get("out") == "-" {
         print!("{}", csv);

@@ -27,7 +27,15 @@ pub struct ScheduledPass {
     pub slice_len: usize,
 }
 
-/// A complete schedule: per-XPE FIFO queues of passes.
+/// A complete **materialized** schedule: per-XPE FIFO queues of passes.
+///
+/// Production simulation does NOT materialize schedules any more — the
+/// event path streams the equivalent mapping in O(1)/pass through
+/// [`crate::plan::LayerPlan`] (one cursor per XPE instead of one heap
+/// struct per pass). `Schedule::plan` remains as the independently
+/// written reference implementation: tests and
+/// [`crate::plan::LayerPlan::materialize`] use it to prove the streamed
+/// enumeration yields exactly these queues.
 #[derive(Debug, Clone)]
 pub struct Schedule {
     pub policy: MappingPolicy,

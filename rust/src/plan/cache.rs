@@ -1,0 +1,210 @@
+//! Memoized plan compilation: one [`ExecutionPlan`] per distinct
+//! `(accelerator, workload, policy)` triple, shared across sessions,
+//! sweep cells and serving replicas via `Arc`.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::ExecutionPlan;
+use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use crate::mapping::scheduler::MappingPolicy;
+use crate::workloads::Workload;
+
+/// Thread-safe compile-once cache of [`ExecutionPlan`]s.
+///
+/// The key covers every field that shapes the plan or its timing:
+/// accelerator identity (name, DR, N, XPE count, bitcount mode, memory
+/// bandwidth), the workload's full layer geometry, and the mapping
+/// policy. Compilation is cheap (no materialization), so on a rare
+/// concurrent miss two threads may compile the same plan; the first
+/// insert wins and both get the same `Arc` afterwards.
+pub struct PlanCache {
+    inner: Mutex<HashMap<String, Arc<ExecutionPlan>>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(256)
+    }
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` plans; when full, the whole
+    /// cache is flushed (sweeps re-warm it in one pass, and plans are
+    /// cheap to recompile — simplicity beats an eviction policy here).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(HashMap::new()),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the plan for this triple, compiling it on first use.
+    pub fn get_or_compile(
+        &self,
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+    ) -> Arc<ExecutionPlan> {
+        let key = fingerprint(cfg, workload, policy);
+        if let Some(plan) = self.inner.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compile outside the lock: parallel sweep cells must not
+        // serialize on each other's compilations.
+        let plan = Arc::new(ExecutionPlan::compile(cfg, workload, policy));
+        let mut map = self.inner.lock().unwrap();
+        if map.len() >= self.capacity {
+            map.clear();
+        }
+        Arc::clone(map.entry(key).or_insert(plan))
+    }
+
+    /// Plans currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= compilations attempted) since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("entries", &self.len())
+            .field("capacity", &self.capacity)
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+/// Stable identity string for a `(accelerator, workload, policy)` triple.
+///
+/// Must cover EVERY field the cached plan's embedded accelerator/workload
+/// can influence downstream: the mapping geometry (N, XPE count), the
+/// timing scalars (DR, bitcount, memory bandwidth), and — because the
+/// event backend simulates with `plan.accelerator` — the energy model,
+/// peripherals and loss budget too (two configs differing only in, say,
+/// `activation_unit.latency_s` must not share a plan). The `Debug`
+/// renderings of those structs are plain scalar field dumps, which makes
+/// them stable, deterministic keys.
+fn fingerprint(
+    cfg: &AcceleratorConfig,
+    workload: &Workload,
+    policy: MappingPolicy,
+) -> String {
+    use fmt::Write;
+    let mut s = String::with_capacity(256 + 32 * workload.layers.len());
+    let bitcount = match &cfg.bitcount {
+        BitcountMode::Pca { gamma } => format!("pca:{}", gamma),
+        BitcountMode::Reduction { latency_s, psum_bits } => {
+            format!("red:{}:{}", latency_s, psum_bits)
+        }
+    };
+    let _ = write!(
+        s,
+        "{}|{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{}",
+        cfg.name,
+        cfg.dr_gsps,
+        cfg.n,
+        cfg.xpe_total,
+        bitcount,
+        cfg.mem_bw_bits_per_s,
+        cfg.energy,
+        cfg.peripherals,
+        cfg.loss_budget,
+        policy,
+        workload.name
+    );
+    for l in &workload.layers {
+        let _ = write!(s, "|{}:{},{},{},{}", l.name, l.h, l.s, l.k, u8::from(l.pool));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::layer::GemmLayer;
+
+    fn wl(name: &str) -> Workload {
+        Workload::new(name, vec![GemmLayer::new("l", 4, 30, 2)])
+    }
+
+    #[test]
+    fn same_triple_shares_one_plan() {
+        let cache = PlanCache::default();
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let a = cache.get_or_compile(&cfg, &wl("w"), MappingPolicy::PcaLocal);
+        let b = cache.get_or_compile(&cfg, &wl("w"), MappingPolicy::PcaLocal);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn distinct_inputs_get_distinct_plans() {
+        let cache = PlanCache::default();
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let a = cache.get_or_compile(&cfg, &wl("w"), MappingPolicy::PcaLocal);
+        let b = cache.get_or_compile(&cfg, &wl("w"), MappingPolicy::SlicedSpread);
+        assert!(!Arc::ptr_eq(&a, &b));
+        let mut cfg2 = cfg.clone();
+        cfg2.xpe_total += 1;
+        let c = cache.get_or_compile(&cfg2, &wl("w"), MappingPolicy::PcaLocal);
+        assert!(!Arc::ptr_eq(&a, &c));
+        // Same name but different geometry must not collide.
+        let mut wl2 = wl("w");
+        wl2.layers[0].s = 31;
+        let d = cache.get_or_compile(&cfg, &wl2, MappingPolicy::PcaLocal);
+        assert!(!Arc::ptr_eq(&a, &d));
+        // Same mapping geometry but a different energy/peripheral model
+        // must not collide either: the event backend simulates with the
+        // plan's embedded accelerator.
+        let mut cfg3 = cfg.clone();
+        cfg3.energy = crate::energy::power::EnergyModel::robin();
+        let e = cache.get_or_compile(&cfg3, &wl("w"), MappingPolicy::PcaLocal);
+        assert!(!Arc::ptr_eq(&a, &e));
+        let mut cfg4 = cfg.clone();
+        cfg4.peripherals.activation_unit.latency_s *= 2.0;
+        let f = cache.get_or_compile(&cfg4, &wl("w"), MappingPolicy::PcaLocal);
+        assert!(!Arc::ptr_eq(&a, &f));
+        assert_eq!(cache.len(), 6);
+    }
+
+    #[test]
+    fn overflow_flushes_and_recovers() {
+        let cache = PlanCache::with_capacity(2);
+        let cfg = AcceleratorConfig::oxbnn_5();
+        for i in 0..5 {
+            let _ = cache.get_or_compile(&cfg, &wl(&format!("w{}", i)), MappingPolicy::PcaLocal);
+        }
+        assert!(cache.len() <= 2);
+        // Still functional after the flush.
+        let a = cache.get_or_compile(&cfg, &wl("w4"), MappingPolicy::PcaLocal);
+        let b = cache.get_or_compile(&cfg, &wl("w4"), MappingPolicy::PcaLocal);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,131 @@
+//! # Compiled execution plans
+//!
+//! The event-driven simulator used to rebuild — and materialize — the
+//! full VDP-to-XPE schedule for every layer of every run: one heap
+//! struct per PASS (~millions for a real VGG conv layer), cloned again
+//! into the per-XPE queues. This module replaces that with a compile →
+//! cache → stream lifecycle:
+//!
+//! 1. **Compile** ([`ExecutionPlan::compile`]): resolve the mapping of a
+//!    whole workload onto an accelerator once. Both mapping policies are
+//!    pure index maps, so a [`LayerPlan`] stores only the geometry and
+//!    slice table — O(slices) per layer, no per-pass state.
+//! 2. **Cache** ([`PlanCache`]): plans are memoized by
+//!    `(accelerator, workload, policy)` and shared via `Arc` across
+//!    [`crate::api::Session`]s, parallel sweep cells, and the serving
+//!    coordinator's replicas.
+//! 3. **Stream** ([`PassStream`]): during simulation each XPE pulls its
+//!    next [`crate::mapping::scheduler::ScheduledPass`] in O(1); total
+//!    live state is one cursor per XPE.
+//!
+//! The legacy materializer `Schedule::plan` remains as the independent
+//! reference implementation — [`LayerPlan::materialize`] exposes it for
+//! the property tests that prove stream/materialized equivalence.
+
+pub mod cache;
+pub mod stream;
+
+pub use cache::PlanCache;
+pub use stream::{LayerPlan, PassStream};
+
+use crate::arch::accelerator::AcceleratorConfig;
+use crate::mapping::scheduler::MappingPolicy;
+use crate::workloads::Workload;
+
+/// A whole workload compiled onto one accelerator under one mapping
+/// policy: the unit the event backend simulates and the [`PlanCache`]
+/// shares.
+///
+/// Invariant: `layers[i].layer` is a copy of `workload.layers[i]` — the
+/// frame chain reads `workload`, the per-layer simulation reads
+/// `layers[i]`, and [`ExecutionPlan::compile`] (the only intended
+/// constructor) keeps the two views identical. Don't assemble one by
+/// hand from mismatched parts.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// The accelerator the plan was compiled for (timing + energy come
+    /// from here; the mapping uses its N / M / XPC geometry).
+    pub accelerator: AcceleratorConfig,
+    /// The workload's layer geometry (layer order defines frame order).
+    pub workload: Workload,
+    pub policy: MappingPolicy,
+    /// One compiled pass map per workload layer, in frame order.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ExecutionPlan {
+    /// Compile `workload` onto `cfg` under `policy`. Cheap: O(layers ·
+    /// slices), no per-pass allocation.
+    pub fn compile(
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+    ) -> ExecutionPlan {
+        let (n, m, xpcs) = (cfg.n, cfg.m(), cfg.xpc_count());
+        let layers = workload
+            .layers
+            .iter()
+            .map(|l| LayerPlan::compile(l, policy, n, m, xpcs))
+            .collect();
+        ExecutionPlan {
+            accelerator: cfg.clone(),
+            workload: workload.clone(),
+            policy,
+            layers,
+        }
+    }
+
+    /// Total passes across the frame.
+    pub fn total_passes(&self) -> usize {
+        self.layers.iter().map(|l| l.total_passes()).sum()
+    }
+
+    /// Longest per-XPE queue across all layers (peak queue length).
+    pub fn max_queue_len(&self) -> usize {
+        self.layers.iter().map(|l| l.max_queue_len()).max().unwrap_or(0)
+    }
+
+    /// Peak live simulator state under streaming (layers run one at a
+    /// time, so the peak is the largest layer's state).
+    pub fn streamed_state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.streamed_state_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak live state the old materialized path held (largest layer's
+    /// schedule + cloned queues).
+    pub fn materialized_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.materialized_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::layer::GemmLayer;
+
+    #[test]
+    fn compile_covers_every_layer() {
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let wl = Workload::new(
+            "t",
+            vec![GemmLayer::new("a", 4, 120, 3), GemmLayer::fc("b", 64, 10)],
+        );
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!(
+            plan.total_passes(),
+            wl.layers.iter().map(|l| l.total_passes(cfg.n)).sum::<usize>()
+        );
+        assert!(plan.max_queue_len() > 0);
+        assert!(plan.streamed_state_bytes() > 0);
+        assert!(plan.materialized_bytes() >= plan.streamed_state_bytes());
+    }
+}

@@ -1,0 +1,302 @@
+//! Per-layer compiled pass maps and the streaming cursor over them.
+//!
+//! Both mapping policies are pure index maps (paper Fig. 5):
+//!
+//! * [`MappingPolicy::PcaLocal`] — VDP `v` lives on XPE `v % T`; its
+//!   slices run back-to-back, so the k-th pass on XPE `x` is slice
+//!   `k % slices` of VDP `x + (k / slices)·T`.
+//! * [`MappingPolicy::SlicedSpread`] — global slice id `g = v·slices + j`
+//!   lives on XPE `g % T`, so the k-th pass on XPE `x` is global slice
+//!   `x + k·T`.
+//!
+//! Nothing therefore needs materializing: [`LayerPlan::pass_at`] computes
+//! any XPE's next pass in O(1), and [`PassStream`] keeps only one cursor
+//! per XPE — O(#XPEs) state for a layer of millions of passes, where the
+//! old `Schedule::plan` heap-allocated one `ScheduledPass` per pass (and
+//! `LayerWorld` then *cloned* every queue). `Schedule::plan` survives as
+//! the independently-written materialized reference that the property
+//! tests check this module against.
+
+use crate::mapping::layer::GemmLayer;
+use crate::mapping::scheduler::{MappingPolicy, Schedule, ScheduledPass};
+use crate::sim::event::{VdpId, XpeId};
+
+/// One layer's compiled mapping onto an accelerator's XPE grid: geometry
+/// plus the closed-form pass map. Cheap to build (O(slices) for the slice
+/// length table) and cheap to hold.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// The GEMM geometry this plan maps (kept for names/operand sizes).
+    pub layer: GemmLayer,
+    pub policy: MappingPolicy,
+    /// XPE size N the slicing was computed for.
+    pub n: usize,
+    /// XPEs per XPC (M).
+    pub m: usize,
+    /// XPC count; the pass map spans `m * xpc_count` XPE slots (the last
+    /// XPC may be partially populated, matching `Schedule::plan`).
+    pub xpc_count: usize,
+    /// Slice lengths per VDP: all N except a possibly-smaller tail.
+    slice_lens: Vec<usize>,
+}
+
+impl LayerPlan {
+    /// Compile the pass map for `layer` on an accelerator with
+    /// `xpc_count` XPCs of `m` XPEs each, XPE size `n`.
+    pub fn compile(
+        layer: &GemmLayer,
+        policy: MappingPolicy,
+        n: usize,
+        m: usize,
+        xpc_count: usize,
+    ) -> LayerPlan {
+        assert!(n > 0 && m > 0 && xpc_count > 0);
+        LayerPlan {
+            layer: layer.clone(),
+            policy,
+            n,
+            m,
+            xpc_count,
+            slice_lens: crate::mapping::slicing::slice_sizes(layer.s, n),
+        }
+    }
+
+    /// XPE slots the pass map spans (`m * xpc_count`).
+    pub fn total_xpes(&self) -> usize {
+        self.m * self.xpc_count
+    }
+
+    /// Slices per VDP (`ceil(S/N)`).
+    pub fn slices(&self) -> usize {
+        self.slice_lens.len()
+    }
+
+    /// VDPs in the layer.
+    pub fn vdp_count(&self) -> usize {
+        self.layer.vdp_count()
+    }
+
+    /// Total passes across all XPEs (`VDPs · slices`).
+    pub fn total_passes(&self) -> usize {
+        self.vdp_count() * self.slices()
+    }
+
+    /// Flat index of an XPE id.
+    pub fn flat(&self, id: XpeId) -> usize {
+        id.xpc * self.m + id.xpe
+    }
+
+    /// XPE id of a flat index.
+    pub fn xpe_id(&self, flat: usize) -> XpeId {
+        XpeId { xpc: flat / self.m, xpe: flat % self.m }
+    }
+
+    /// Number of passes queued on the XPE at `flat` — O(1).
+    pub fn queue_len(&self, flat: usize) -> usize {
+        let t = self.total_xpes();
+        match self.policy {
+            MappingPolicy::PcaLocal => {
+                // VDPs v ≡ flat (mod T), each contributing all slices.
+                let v = self.vdp_count();
+                if flat >= v {
+                    0
+                } else {
+                    (v - flat).div_ceil(t) * self.slices()
+                }
+            }
+            MappingPolicy::SlicedSpread => {
+                // Global slice ids g ≡ flat (mod T).
+                let g = self.total_passes();
+                if flat >= g {
+                    0
+                } else {
+                    (g - flat).div_ceil(t)
+                }
+            }
+        }
+    }
+
+    /// Longest single-XPE queue — the critical path in PASS counts. XPE 0
+    /// always has the (possibly tied) longest queue under both modular
+    /// assignments.
+    pub fn max_queue_len(&self) -> usize {
+        self.queue_len(0)
+    }
+
+    /// The k-th pass on the XPE at `flat`, or `None` past the end of its
+    /// queue — O(1), allocation-free.
+    pub fn pass_at(&self, flat: usize, k: usize) -> Option<ScheduledPass> {
+        if k >= self.queue_len(flat) {
+            return None;
+        }
+        let t = self.total_xpes();
+        let slices = self.slices();
+        let (vdp, slice_idx) = match self.policy {
+            MappingPolicy::PcaLocal => (flat + (k / slices) * t, k % slices),
+            MappingPolicy::SlicedSpread => {
+                let g = flat + k * t;
+                (g / slices, g % slices)
+            }
+        };
+        Some(ScheduledPass {
+            vdp: VdpId(vdp),
+            slice_idx,
+            slice_len: self.slice_lens[slice_idx],
+        })
+    }
+
+    /// Event budget generous enough for any well-formed run of this layer
+    /// (each pass triggers at most a handful of follow-up events).
+    pub fn event_budget(&self) -> u64 {
+        self.total_passes() as u64 * 8 + 10_000
+    }
+
+    /// Materialize the full per-XPE queues via the legacy
+    /// [`Schedule::plan`] — test/debug only; this allocates one struct
+    /// per pass, which is exactly what the streaming path avoids.
+    pub fn materialize(&self) -> Schedule {
+        Schedule::plan(&self.layer, self.policy, self.n, self.m, self.xpc_count)
+    }
+
+    /// Heap bytes the old materialized path held live for this layer
+    /// (the `Schedule` plus `LayerWorld`'s clone of every queue).
+    pub fn materialized_bytes(&self) -> usize {
+        2 * self.total_passes() * std::mem::size_of::<ScheduledPass>()
+    }
+
+    /// Heap bytes the streaming path holds live for this layer: one
+    /// cursor per XPE, one completion counter per VDP, the slice table.
+    pub fn streamed_state_bytes(&self) -> usize {
+        (self.total_xpes() + self.vdp_count() + self.slices())
+            * std::mem::size_of::<usize>()
+    }
+}
+
+/// Streaming cursor over a [`LayerPlan`]: yields each XPE's next pass in
+/// O(1) and tracks global completion in O(1). Total state: one `usize`
+/// per XPE.
+#[derive(Debug, Clone)]
+pub struct PassStream {
+    cursor: Vec<usize>,
+    issued: usize,
+    total: usize,
+}
+
+impl PassStream {
+    pub fn new(plan: &LayerPlan) -> PassStream {
+        PassStream {
+            cursor: vec![0; plan.total_xpes()],
+            issued: 0,
+            total: plan.total_passes(),
+        }
+    }
+
+    /// The next pass for the XPE at `flat`, advancing its cursor.
+    pub fn next_for(&mut self, plan: &LayerPlan, flat: usize) -> Option<ScheduledPass> {
+        let k = self.cursor[flat];
+        let pass = plan.pass_at(flat, k)?;
+        self.cursor[flat] = k + 1;
+        self.issued += 1;
+        Some(pass)
+    }
+
+    /// Passes handed out so far.
+    pub fn issued(&self) -> usize {
+        self.issued
+    }
+
+    /// True once every XPE's queue is exhausted — O(1) (the old
+    /// materialized world scanned every XPE per psum event).
+    pub fn all_issued(&self) -> bool {
+        self.issued >= self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(plan: &LayerPlan, flat: usize) -> Vec<ScheduledPass> {
+        let mut out = Vec::new();
+        let mut k = 0;
+        while let Some(p) = plan.pass_at(flat, k) {
+            out.push(p);
+            k += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn fig5b_pca_local_matches_materialized() {
+        // Fig. 5(b): M=2, H=2, N=9, S=15 — both slices of each VDP stay
+        // on one XPE, identically to Schedule::plan.
+        let layer = GemmLayer::new("fig5", 2, 15, 1);
+        let plan = LayerPlan::compile(&layer, MappingPolicy::PcaLocal, 9, 2, 1);
+        let sched = plan.materialize();
+        assert_eq!(drain(&plan, 0), sched.queues[0][0]);
+        assert_eq!(drain(&plan, 1), sched.queues[0][1]);
+        assert_eq!(plan.queue_len(0), 2);
+        assert_eq!(plan.total_passes(), 4);
+    }
+
+    #[test]
+    fn fig5a_sliced_spread_matches_materialized() {
+        let layer = GemmLayer::new("fig5", 2, 15, 1);
+        let plan = LayerPlan::compile(&layer, MappingPolicy::SlicedSpread, 9, 2, 1);
+        let sched = plan.materialize();
+        for (id, q) in sched.iter_queues() {
+            assert_eq!(&drain(&plan, plan.flat(id)), q);
+        }
+    }
+
+    #[test]
+    fn queue_lens_sum_to_total_passes() {
+        for policy in [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread] {
+            let layer = GemmLayer::new("t", 13, 200, 7);
+            let plan = LayerPlan::compile(&layer, policy, 9, 4, 3);
+            let sum: usize = (0..plan.total_xpes()).map(|x| plan.queue_len(x)).sum();
+            assert_eq!(sum, plan.total_passes(), "{:?}", policy);
+            assert_eq!(plan.max_queue_len(), plan.queue_len(0));
+            assert!((0..plan.total_xpes())
+                .all(|x| plan.queue_len(x) <= plan.max_queue_len()));
+        }
+    }
+
+    #[test]
+    fn stream_drains_exactly_once() {
+        let layer = GemmLayer::new("t", 5, 40, 3);
+        let plan = LayerPlan::compile(&layer, MappingPolicy::PcaLocal, 9, 3, 2);
+        let mut stream = PassStream::new(&plan);
+        let mut n = 0;
+        // Round-robin over XPEs, as the event loop effectively does.
+        loop {
+            let before = n;
+            for x in 0..plan.total_xpes() {
+                if stream.next_for(&plan, x).is_some() {
+                    n += 1;
+                }
+            }
+            if n == before {
+                break;
+            }
+        }
+        assert_eq!(n, plan.total_passes());
+        assert!(stream.all_issued());
+        assert!(stream.next_for(&plan, 0).is_none());
+    }
+
+    #[test]
+    fn vgg_scale_plan_is_small() {
+        // The motivating case: a VGG conv layer that used to cost ~2.9M
+        // heap structs (×2 for the cloned queues) now costs ~1 MB of
+        // cursors + VDP counters.
+        let layer = GemmLayer::new("vgg_conv2", 1024, 1152, 128);
+        let plan = LayerPlan::compile(&layer, MappingPolicy::PcaLocal, 53, 53, 2);
+        assert_eq!(plan.total_passes(), 1024 * 128 * 22);
+        assert!(plan.materialized_bytes() / plan.streamed_state_bytes() >= 10);
+        // Spot-check a deep pass without materializing anything.
+        let p = plan.pass_at(0, 22 * 100 + 7).unwrap();
+        assert_eq!(p.vdp, VdpId(100 * plan.total_xpes()));
+        assert_eq!(p.slice_idx, 7);
+    }
+}

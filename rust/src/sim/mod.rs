@@ -5,6 +5,6 @@ pub mod engine;
 pub mod event;
 pub mod stats;
 
-pub use engine::{run, Scheduler, World};
+pub use engine::{run, RunOutcome, Scheduler, World};
 pub use event::{Event, EventKind, VdpId, XpeId};
 pub use stats::SimStats;

@@ -52,13 +52,7 @@ impl ThreadPool {
 
     /// Pool sized to the machine (with an override for tests/benches).
     pub fn for_host() -> ThreadPool {
-        let n = std::env::var("OXBNN_THREADS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or_else(|| {
-                thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-            });
-        ThreadPool::new(n)
+        ThreadPool::new(host_threads())
     }
 
     /// Submit a job.
@@ -88,6 +82,17 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// Worker count for this host: the `OXBNN_THREADS` override when set,
+/// else the available hardware parallelism. Shared by [`ThreadPool`],
+/// the CLI sweep fan-out and the benches so one knob tunes them all.
+pub fn host_threads() -> usize {
+    std::env::var("OXBNN_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+        .max(1)
 }
 
 /// Map `f` over `items` in parallel, preserving order. Spawns scoped

@@ -8,8 +8,62 @@ use oxbnn::arch::perf::layer_perf;
 use oxbnn::coordinator::Batcher;
 use oxbnn::coordinator::Router;
 use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::mapping::scheduler::MappingPolicy;
+use oxbnn::plan::{LayerPlan, PassStream};
 use oxbnn::util::json::Json;
 use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+
+/// The PR-3 tentpole invariant: for random layers, geometries and both
+/// mapping policies, the streaming `LayerPlan`/`PassStream` enumerates
+/// exactly the same (XPE, vdp, slice_idx, slice_len) sequence — same
+/// multiset AND same per-XPE order — as the independently implemented
+/// materialized `Schedule::plan`.
+#[test]
+fn prop_stream_matches_materialized_schedule() {
+    forall(Config::default().cases(80), |g| {
+        let layer = GemmLayer::new(
+            "p",
+            g.usize_in(1, 24),
+            g.usize_in(1, 400),
+            g.usize_in(1, 12),
+        );
+        let n = g.usize_in(1, 64);
+        let m = g.usize_in(1, 9);
+        let xpcs = g.usize_in(1, 4);
+        let policy = if g.bool() {
+            MappingPolicy::PcaLocal
+        } else {
+            MappingPolicy::SlicedSpread
+        };
+        let plan = LayerPlan::compile(&layer, policy, n, m, xpcs);
+        let sched = plan.materialize();
+        let mut stream = PassStream::new(&plan);
+        let mut streamed_total = 0usize;
+        for (id, queue) in sched.iter_queues() {
+            let flat = plan.flat(id);
+            prop_assert_eq(plan.queue_len(flat), queue.len())?;
+            // Drain this XPE through the stream: pass-for-pass identical,
+            // in order.
+            for (k, expect) in queue.iter().enumerate() {
+                let got = stream
+                    .next_for(&plan, flat)
+                    .ok_or_else(|| format!("stream dry at {:?}[{}]", id, k))?;
+                prop_assert_eq(got, *expect)?;
+                // Random access agrees with sequential streaming.
+                prop_assert_eq(plan.pass_at(flat, k), Some(*expect))?;
+                streamed_total += 1;
+            }
+            prop_assert(
+                stream.next_for(&plan, flat).is_none(),
+                "stream yields beyond the materialized queue",
+            )?;
+        }
+        prop_assert_eq(streamed_total, plan.total_passes())?;
+        prop_assert_eq(streamed_total, sched.total_passes())?;
+        prop_assert(stream.all_issued(), "all_issued after full drain")?;
+        prop_assert_eq(plan.max_queue_len(), sched.max_queue_len())
+    });
+}
 
 #[test]
 fn prop_json_roundtrip_numbers_and_strings() {

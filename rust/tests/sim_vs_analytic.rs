@@ -166,6 +166,71 @@ fn session_functional_agrees_with_analytic_and_is_clean() {
 }
 
 #[test]
+fn full_multilayer_workload_event_vs_analytic_at_scale() {
+    // PR-3 satellite: event-vs-analytic agreement on a full multi-layer
+    // workload at realistic scale (hundreds of thousands of PASSes), not
+    // just single small layers. VGG-family vector geometries (S = 1152 /
+    // 2304 → 128 / 256 slices per VDP at N = 9) with VDP counts that
+    // divide the 18 XPEs evenly, plus a deliberately unbalanced FC tail.
+    let cfg = small(true, 9, 18);
+    let wl = Workload::new(
+        "vgg_crop_stack",
+        vec![
+            GemmLayer::new("conv2", 144, 1152, 8),  // 1152 VDPs × 128 slices
+            GemmLayer::new("conv3", 72, 1152, 16),  // 1152 VDPs × 128 slices
+            GemmLayer::new("conv4", 36, 2304, 32),  // 1152 VDPs × 256 slices
+            GemmLayer::fc("fc", 2048, 10),          // 10 VDPs × 228 slices
+        ],
+    );
+    let run = |kind| {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(kind)
+            .build()
+            .expect("scale session")
+            .run()
+    };
+    let analytic = run(BackendKind::Analytic);
+    let event = run(BackendKind::Event);
+
+    // Exact transaction counts on both models, whole frame and per layer.
+    let expect_passes: u64 = wl.layers.iter().map(|l| l.total_passes(9) as u64).sum();
+    assert!(expect_passes > 500_000, "this test must exercise real scale");
+    assert_eq!(analytic.passes, expect_passes);
+    assert_eq!(event.passes, expect_passes);
+    assert_eq!((analytic.psums, event.psums), (0, 0), "PCA emits no psums");
+    for (lr, l) in event.layers.iter().zip(&wl.layers) {
+        assert_eq!(lr.passes, l.total_passes(9) as u64, "layer {}", lr.name);
+    }
+
+    // Exactly one PCA readout and one activation per VDP (γ is healthy,
+    // so no mid-VDP readouts inflate the count).
+    let vdps: u64 = wl.layers.iter().map(|l| l.vdp_count() as u64).sum();
+    let readouts: u64 = event.layers.iter().map(|l| l.counter("pca_readouts")).sum();
+    let activations: u64 = event.layers.iter().map(|l| l.counter("activations")).sum();
+    let mid: u64 = event.layers.iter().map(|l| l.counter("mid_vdp_readouts")).sum();
+    assert_eq!(readouts, vdps);
+    assert_eq!(activations, vdps);
+    assert_eq!(mid, 0);
+    // No event may ever be scheduled into the past at scale — the clamp
+    // counter doubles as the debug-time tripwire for modeling errors.
+    let clamped: u64 = event.layers.iter().map(|l| l.counter("clamped_events")).sum();
+    assert_eq!(clamped, 0, "past-time scheduling clamps detected");
+
+    // Frame latency within 5% of the closed-form model.
+    let rel = (analytic.frame_latency_s - event.frame_latency_s).abs()
+        / analytic.frame_latency_s;
+    assert!(
+        rel < 0.05,
+        "analytic {} vs event {} (rel {:.3})",
+        analytic.frame_latency_s,
+        event.frame_latency_s,
+        rel
+    );
+}
+
+#[test]
 fn fig5_mapping_gap_grows_with_slices() {
     // The more slices per VDP, the bigger the PCA's advantage over the
     // psum-reduction design — the core Fig. 5 story.
