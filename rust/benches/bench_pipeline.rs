@@ -1,0 +1,177 @@
+//! Whole-frame pipelined event space vs the sequential `with_batch`
+//! multiply (the PR-4 perf trajectory): batched FPS, XPE idle fraction,
+//! and the conservation gates that make the speedup honest — identical
+//! PASS/readout counts and zero past-time clamps. Emits
+//! `BENCH_pipeline.json` (path overridable via `OXBNN_BENCH_OUT`) so CI
+//! can track the numbers over time.
+//!
+//! Run: `cargo bench --bench bench_pipeline`
+//! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_pipeline`
+
+use oxbnn::api::{BackendKind, Report, Session};
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::workload_sim::simulate_frames_pipelined;
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::plan::ExecutionPlan;
+use oxbnn::util::bench::{fmt_secs, Bencher, Table};
+use oxbnn::util::json::Json;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let fast = std::env::var("OXBNN_BENCH_FAST").is_ok();
+    let frames: usize = if fast { 4 } else { 8 };
+
+    // Scaled-down OXBNN (N = 9, 18 XPEs) on a VGG-family conv stack with a
+    // deliberately unbalanced FC tail: the tail strands most XPEs idle,
+    // which is exactly the gap multi-frame pipelining exists to fill.
+    let mut cfg = AcceleratorConfig::oxbnn_5();
+    cfg.n = 9;
+    cfg.xpe_total = 18;
+    let scale = if fast { 2 } else { 1 };
+    let wl = Workload::new(
+        "vgg_crop_pipeline",
+        vec![
+            GemmLayer::new("conv2", 144 / scale, 1152, 8),
+            GemmLayer::new("conv3", 72 / scale, 1152, 16),
+            GemmLayer::new("conv4", 36 / scale, 2304, 32),
+            GemmLayer::fc("fc", 2048, 10),
+        ],
+    );
+    println!(
+        "pipeline bench — {} frames of {} on {} ({} XPEs)\n",
+        frames, wl.name, cfg.name, cfg.xpe_total
+    );
+
+    let session = |pipelined: bool| -> Report {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(BackendKind::Event)
+            .batch(frames)
+            .pipeline(pipelined)
+            .build()
+            .expect("pipeline bench session")
+            .run()
+    };
+
+    let bencher = Bencher::from_env();
+    let seq_stats = bencher.run("sequential_batch", || session(false));
+    let pipe_stats = bencher.run("pipelined_batch", || session(true));
+    let seq = session(false);
+    let pipe = session(true);
+
+    // The raw pipelined trace carries the idle-fraction and event-space
+    // shape metrics the report doesn't.
+    let plan = ExecutionPlan::compile(&cfg, &wl, oxbnn::api::default_policy(&cfg));
+    let trace = simulate_frames_pipelined(&plan, frames);
+    let tau = cfg.tau_s();
+    let total_xpes = plan.layers[0].total_xpes();
+    // Sequential idle fraction from first principles: the same photonic
+    // work spread over the serial `frames × frame` makespan.
+    let busy_total = seq.passes as f64 * frames as f64 * tau;
+    let seq_idle = 1.0 - busy_total / (total_xpes as f64 * seq.batch_latency_s);
+    let pipe_idle = trace.xpe_idle_fraction();
+    let speedup = pipe.batched_fps() / seq.batched_fps();
+
+    let count = |r: &Report, key: &str| -> u64 {
+        r.layers.iter().map(|l| l.counter(key)).sum()
+    };
+    let readouts_seq = count(&seq, "pca_readouts");
+    let readouts_pipe = count(&pipe, "pca_readouts");
+
+    let mut t = Table::new(&["metric", "sequential", "pipelined"]);
+    t.row(&[
+        "batched FPS".into(),
+        format!("{:.1}", seq.batched_fps()),
+        format!("{:.1}", pipe.batched_fps()),
+    ]);
+    t.row(&[
+        "batch latency".into(),
+        fmt_secs(seq.batch_latency_s),
+        fmt_secs(pipe.batch_latency_s),
+    ]);
+    t.row(&[
+        "first-frame latency".into(),
+        fmt_secs(seq.frame_latency_s),
+        fmt_secs(pipe.frame_latency_s),
+    ]);
+    t.row(&[
+        "XPE idle fraction".into(),
+        format!("{:.3}", seq_idle),
+        format!("{:.3}", pipe_idle),
+    ]);
+    t.row(&[
+        "passes / frame".into(),
+        format!("{}", seq.passes),
+        format!("{}", pipe.passes),
+    ]);
+    t.row(&[
+        "PCA readouts / frame".into(),
+        format!("{}", readouts_seq),
+        format!("{}", readouts_pipe),
+    ]);
+    t.row(&[
+        "sim wall-clock".into(),
+        fmt_secs(seq_stats.median),
+        fmt_secs(pipe_stats.median),
+    ]);
+    t.print();
+    println!(
+        "\npipelined batched FPS speedup: {:.2}x (idle {:.1}% → {:.1}%)",
+        speedup,
+        100.0 * seq_idle,
+        100.0 * pipe_idle
+    );
+
+    // Acceptance gates (ISSUE 4): the pipelined speedup must be real AND
+    // conservative — strictly higher batched FPS with the exact same
+    // transaction multiset and no past-time clamps.
+    assert!(
+        pipe.batched_fps() > seq.batched_fps(),
+        "pipelined batched FPS {} must strictly beat sequential {}",
+        pipe.batched_fps(),
+        seq.batched_fps()
+    );
+    assert_eq!(pipe.passes, seq.passes, "per-frame PASS count must be conserved");
+    assert_eq!(readouts_pipe, readouts_seq, "per-frame readouts must be conserved");
+    assert_eq!(
+        trace.stats.counter("passes"),
+        frames as u64 * seq.passes,
+        "whole-batch PASS conservation"
+    );
+    assert_eq!(trace.stats.counter("clamped_events"), 0, "no past-time clamps");
+    assert!(
+        pipe_idle < seq_idle,
+        "pipelining must reduce XPE idle time ({:.3} vs {:.3})",
+        pipe_idle,
+        seq_idle
+    );
+    println!("\nshape check OK: pipelined batch beats sequential with identical transactions");
+
+    let json = Json::obj(vec![
+        ("workload", Json::Str(wl.name.clone())),
+        ("accelerator", Json::Str(cfg.name.clone())),
+        ("frames", Json::Num(frames as f64)),
+        ("sequential_batched_fps", Json::Num(seq.batched_fps())),
+        ("pipelined_batched_fps", Json::Num(pipe.batched_fps())),
+        ("speedup", Json::Num(speedup)),
+        ("sequential_batch_latency_s", Json::Num(seq.batch_latency_s)),
+        ("pipelined_batch_latency_s", Json::Num(pipe.batch_latency_s)),
+        ("sequential_frame_latency_s", Json::Num(seq.frame_latency_s)),
+        ("pipelined_frame_latency_s", Json::Num(pipe.frame_latency_s)),
+        ("sequential_xpe_idle_fraction", Json::Num(seq_idle)),
+        ("pipelined_xpe_idle_fraction", Json::Num(pipe_idle)),
+        ("passes_per_frame", Json::Num(seq.passes as f64)),
+        (
+            "peak_pending_events",
+            Json::Num(trace.stats.counter("peak_pending_events") as f64),
+        ),
+        ("clamped_events", Json::Num(trace.stats.counter("clamped_events") as f64)),
+        ("sequential_sim_wall_s", Json::Num(seq_stats.median)),
+        ("pipelined_sim_wall_s", Json::Num(pipe_stats.median)),
+    ]);
+    let out = std::env::var("OXBNN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", out);
+}

@@ -111,6 +111,33 @@ pub fn simulated_frame_latency_cached(
         .frame_latency_s)
 }
 
+/// Effective per-frame latency of a `batch`-frame run: `batch_latency /
+/// batch`. With `pipelined` set and the event backend, frames overlap in
+/// one whole-frame event space, so this is *smaller* than the single-frame
+/// latency — the photonic reference the serving coordinator attaches when
+/// it batches requests anyway ([`crate::coordinator::ServerConfig`]'s
+/// `sim_pipeline`). Sequential (or non-event) runs return the plain frame
+/// latency.
+pub fn simulated_effective_latency_cached(
+    cache: &std::sync::Arc<crate::plan::PlanCache>,
+    cfg: &crate::arch::accelerator::AcceleratorConfig,
+    workload: &crate::workloads::Workload,
+    kind: BackendKind,
+    batch: usize,
+    pipelined: bool,
+) -> Result<f64, ApiError> {
+    let report = Session::builder()
+        .accelerator(cfg.clone())
+        .workload(workload.clone())
+        .backend(kind)
+        .batch(batch)
+        .pipeline(pipelined)
+        .plan_cache(std::sync::Arc::clone(cache))
+        .build()?
+        .run();
+    Ok(report.batch_latency_s / report.batch as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,16 +168,11 @@ mod tests {
 
     #[test]
     fn analytic_backend_matches_workload_perf_exactly() {
+        // The planless convenience path IS the closed-form model, exactly.
         let cfg = AcceleratorConfig::oxbnn_50();
         let wl = Workload::evaluation_set().remove(0);
         let perf = workload_perf(&cfg, &wl);
-        let report = Session::builder()
-            .accelerator(cfg)
-            .workload(wl)
-            .backend(BackendKind::Analytic)
-            .build()
-            .unwrap()
-            .run();
+        let report = analytic_report(&cfg, &wl);
         assert_eq!(report.frame_latency_s, perf.frame_latency_s);
         assert_eq!(report.fps, perf.fps);
         assert_eq!(report.fps_per_w, perf.fps_per_w);
@@ -163,6 +185,44 @@ mod tests {
         assert_eq!(report.layers.len(), perf.layers.len());
         let passes: u64 = perf.layers.iter().map(|l| l.passes).sum();
         assert_eq!(report.passes, passes);
+
+        // The Session path is PLAN-AWARE: same transaction counts and
+        // energy, but each layer's compute term is the compiled plan's
+        // longest per-XPE queue (`max_queue_len · τ`) instead of the
+        // perfect-balance `ceil(passes / xpe_total) · τ`. (The two can
+        // differ in either direction: unbalanced tails lengthen the
+        // critical path, while the plan's padded XPE grid — the last XPC
+        // may be partially populated — can shorten it slightly.)
+        let cfg2 = AcceleratorConfig::oxbnn_50();
+        let wl2 = Workload::evaluation_set().remove(0);
+        let session = Session::builder()
+            .accelerator(cfg2.clone())
+            .workload(wl2.clone())
+            .backend(BackendKind::Analytic)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(session.passes, report.passes);
+        assert_eq!(session.psums, report.psums);
+        assert_eq!(
+            session.dynamic_energy_per_frame_j,
+            report.dynamic_energy_per_frame_j
+        );
+        let plan = crate::plan::ExecutionPlan::compile(
+            &cfg2,
+            &wl2,
+            default_policy(&cfg2),
+        );
+        let tau = cfg2.tau_s();
+        for (s, lp) in session.layers.iter().zip(&plan.layers) {
+            let expect = lp.max_queue_len() as f64 * tau;
+            assert_eq!(
+                s.timing.get("compute_s").copied(),
+                Some(expect),
+                "layer {} must use the plan's critical-path compute term",
+                s.name
+            );
+        }
     }
 
     #[test]
@@ -382,6 +442,86 @@ mod tests {
         for kind in BackendKind::all() {
             assert_eq!(BackendKind::from_str(kind.as_str()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn pipelined_event_batch_beats_sequential_multiply() {
+        let run = |pipeline: bool| {
+            Session::builder()
+                .accelerator(small_cfg())
+                .workload(tiny_workload())
+                .backend(BackendKind::Event)
+                .batch(4)
+                .pipeline(pipeline)
+                .build()
+                .unwrap()
+                .run()
+        };
+        let seq = run(false);
+        let pipe = run(true);
+        assert!(!seq.pipelined && pipe.pipelined);
+        // Per-frame transaction counts are conserved exactly.
+        assert_eq!(pipe.passes, seq.passes);
+        assert_eq!(pipe.psums, seq.psums);
+        let e_rel = (pipe.dynamic_energy_per_frame_j - seq.dynamic_energy_per_frame_j)
+            .abs()
+            / seq.dynamic_energy_per_frame_j;
+        assert!(e_rel < 1e-9, "per-frame energy diverged by rel {}", e_rel);
+        // Cross-layer overlap: the pipelined first frame is no slower.
+        assert!(pipe.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9));
+        // Multi-frame overlap: the batch strictly beats the multiply.
+        assert!(
+            pipe.batch_latency_s < seq.batch_latency_s,
+            "pipelined batch {} vs sequential {}",
+            pipe.batch_latency_s,
+            seq.batch_latency_s
+        );
+        assert!(pipe.batched_fps() > seq.batched_fps());
+        assert!(pipe.fps > seq.fps, "pipelined fps must report the throughput win");
+        assert!(pipe.fps_per_w > seq.fps_per_w, "static power amortizes over the makespan");
+    }
+
+    #[test]
+    fn pipeline_knob_is_noop_for_sequential_backends() {
+        let run = |pipeline: bool| {
+            Session::builder()
+                .accelerator(small_cfg())
+                .workload(tiny_workload())
+                .backend(BackendKind::Analytic)
+                .batch(4)
+                .pipeline(pipeline)
+                .build()
+                .unwrap()
+                .run()
+        };
+        let plain = run(false);
+        let piped = run(true);
+        assert!(!piped.pipelined, "analytic has no frame-overlap model");
+        assert_eq!(plain.frame_latency_s, piped.frame_latency_s);
+        assert_eq!(plain.batch_latency_s, piped.batch_latency_s);
+        assert_eq!(plain.fps, piped.fps);
+    }
+
+    #[test]
+    fn effective_latency_helper_reflects_pipelining() {
+        use std::sync::Arc;
+        let cache = Arc::new(crate::plan::PlanCache::default());
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let seq = simulated_effective_latency_cached(
+            &cache, &cfg, &wl, BackendKind::Event, 4, false,
+        )
+        .unwrap();
+        let frame =
+            simulated_frame_latency_cached(&cache, &cfg, &wl, BackendKind::Event)
+                .unwrap();
+        assert!((seq - frame).abs() < 1e-15, "sequential effective == frame latency");
+        let pipe = simulated_effective_latency_cached(
+            &cache, &cfg, &wl, BackendKind::Event, 4, true,
+        )
+        .unwrap();
+        assert!(pipe < seq, "pipelined effective {} vs sequential {}", pipe, seq);
+        assert_eq!(cache.misses(), 1, "all helpers share one compiled plan");
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub struct SessionBuilder {
     backend: BackendChoice,
     policy: Option<MappingPolicy>,
     batch: usize,
+    pipeline: bool,
     plan_cache: Option<Arc<PlanCache>>,
 }
 
@@ -118,6 +119,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Run the batch through the whole-frame pipelined event space
+    /// (cross-layer + multi-frame overlap) instead of multiplying one
+    /// frame's latency. Honored by the event backend; backends without a
+    /// frame-overlap model fall back to the sequential multiply. Default
+    /// off.
+    pub fn pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
     /// Share a [`PlanCache`] with other sessions (parallel sweep cells,
     /// serving replicas): the `(accelerator, workload, policy)` mapping
     /// is compiled once and streamed by every session that hits the same
@@ -166,6 +177,7 @@ impl SessionBuilder {
             backend,
             policy,
             batch: self.batch,
+            pipeline: self.pipeline,
             plan_cache,
         })
     }
@@ -178,6 +190,7 @@ pub struct Session {
     backend: Box<dyn Backend + Send>,
     policy: MappingPolicy,
     batch: usize,
+    pipeline: bool,
     plan_cache: Arc<PlanCache>,
 }
 
@@ -191,6 +204,7 @@ impl Session {
             backend: BackendChoice::Kind(BackendKind::Analytic),
             policy: None,
             batch: 1,
+            pipeline: false,
             plan_cache: None,
         }
     }
@@ -198,10 +212,12 @@ impl Session {
     /// Run the configured workload and return the unified report. The
     /// execution plan is fetched from (or compiled into) the session's
     /// [`PlanCache`], so repeated runs — and other sessions sharing the
-    /// cache — never recompile the mapping.
+    /// cache — never recompile the mapping. With
+    /// [`SessionBuilder::pipeline`] set, the event backend runs the batch
+    /// through one whole-frame pipelined event space.
     pub fn run(&mut self) -> Report {
         let plan = self.plan();
-        self.backend.run_planned(&plan).with_batch(self.batch)
+        self.backend.run_planned_batched(&plan, self.batch, self.pipeline)
     }
 
     /// The compiled execution plan for this session's triple (cached).
@@ -234,6 +250,11 @@ impl Session {
 
     pub fn batch(&self) -> usize {
         self.batch
+    }
+
+    /// Whether batches run through the pipelined whole-frame event space.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline
     }
 
     /// The session's plan cache (shared when built with

@@ -22,9 +22,9 @@ use super::accelerator::{AcceleratorConfig, BitcountMode};
 use crate::devices::pca::{Pca, PcaParams};
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::{LayerPlan, PassStream};
+use crate::plan::{FramePlan, FrameStream, LayerPlan, PassStream};
 use crate::sim::engine::{RunOutcome, Scheduler, World};
-use crate::sim::event::{EventKind, XpeId};
+use crate::sim::event::{EventKind, VdpId, XpeId};
 use crate::sim::stats::SimStats;
 
 /// One-layer event-driven world, driven by a compiled [`LayerPlan`].
@@ -301,6 +301,448 @@ pub fn simulate_layer(
     let plan = LayerPlan::compile(layer, policy, cfg.n, cfg.m(), cfg.xpc_count());
     simulate_layer_planned(cfg, &plan)
 }
+
+// ---------------------------------------------------------------------------
+// Whole-frame pipelined event space
+// ---------------------------------------------------------------------------
+
+/// Dynamic-energy ledger implied by a set of transaction counts on `cfg`
+/// — the single home of the per-event energy formulas shared by
+/// [`FrameWorld`]'s finalize and the pipelined report path (the two must
+/// not drift).
+pub fn energy_ledger(
+    cfg: &AcceleratorConfig,
+    passes: u64,
+    pca_readouts: u64,
+    mid_vdp_readouts: u64,
+    psums: u64,
+) -> [(&'static str, f64); 4] {
+    let e = &cfg.energy;
+    [
+        ("oxg", passes as f64 * cfg.n as f64 * e.xnor_j_per_bit),
+        ("receiver", passes as f64 * e.receiver_j_per_pass),
+        ("pca", (pca_readouts + mid_vdp_readouts) as f64 * e.pca_readout_j),
+        (
+            "adc+reduction",
+            psums as f64 * (e.adc_j_per_psum + e.reduction_j_per_psum),
+        ),
+    ]
+}
+
+/// Live state of one `(frame, layer)` unit inside a [`FrameWorld`].
+#[derive(Debug, Clone, Default)]
+pub struct UnitState {
+    /// First pass issued (triggers the successor's double-buffered fetch).
+    pub started: bool,
+    fetch_requested: bool,
+    fetch_done: bool,
+    fetch_ready_s: f64,
+    /// Activations drained so far — the quantity successor admission
+    /// ([`FramePlan::need_acts`]) gates on.
+    pub acts_done: usize,
+    /// Remaining psum slices per local VDP (reduction mode only).
+    vdp_remaining: Vec<usize>,
+    /// Time of this unit's first issued pass.
+    pub start_s: f64,
+    /// Time of this unit's last drained activation.
+    pub done_s: f64,
+    pub passes: u64,
+    pub pca_readouts: u64,
+    pub mid_vdp_readouts: u64,
+    pub psums: u64,
+    pub activations: u64,
+}
+
+/// Whole-frame (and multi-frame) pipelined event world: every layer of
+/// every frame in the batch shares ONE event space, replacing the
+/// per-layer spaces chained by [`crate::arch::workload_sim::OverlapChain`].
+///
+/// * **Cross-layer interleaving** — layer `l+1`'s first PASSes are
+///   admitted as soon as the raster prefix of layer `l`'s activations they
+///   read has drained ([`FramePlan::need_acts`]), rather than after layer
+///   `l` fully completes.
+/// * **Multi-frame pipelining** — the [`FrameStream`] cursors carry a
+///   frame index, so frame `f+1`'s early layers stream into XPEs idled by
+///   frame `f`'s tail. XPEs prefer work in frame-major unit order, so an
+///   older frame is never starved by a newer one.
+///
+/// Shared hardware stays shared: one memory channel serializes operand
+/// fetches (double-buffered: a unit's fetch is requested when its
+/// predecessor starts computing), the per-XPC reduction networks and the
+/// per-XPE PCAs service whichever unit's work reaches them. PCA state is
+/// re-armed when an XPE switches units — the operand re-staging gap covers
+/// the TIR discharge — so a unit's analog accumulation never mixes frames
+/// or layers.
+pub struct FrameWorld<'a> {
+    cfg: &'a AcceleratorConfig,
+    fp: &'a FramePlan<'a>,
+    stream: FrameStream,
+    m: usize,
+    pca_mode: bool,
+    gamma: u64,
+    pcas: Vec<Option<Pca>>,
+    /// Unit whose operands are staged on each XPE (usize::MAX = none yet).
+    staged_unit: Vec<usize>,
+    idle: Vec<bool>,
+    busy_s: Vec<f64>,
+    units: Vec<UnitState>,
+    red_pending: Vec<usize>,
+    red_free_at: Vec<f64>,
+    mem_free_at: f64,
+    ones_density: f64,
+    frames_done: usize,
+    frame_done_s: Vec<f64>,
+    n_reduction_inits: u64,
+    n_reductions_done: u64,
+    n_discharge_stalls: u64,
+    n_saturations: u64,
+}
+
+impl<'a> FrameWorld<'a> {
+    pub fn new(cfg: &'a AcceleratorConfig, fp: &'a FramePlan<'a>) -> FrameWorld<'a> {
+        let first = fp.layer_plan(0);
+        assert!(
+            first.n == cfg.n && first.m == cfg.m() && first.xpc_count == cfg.xpc_count(),
+            "frame plan geometry (N={}, M={}, XPCs={}) does not match accelerator '{}' \
+             (N={}, M={}, XPCs={})",
+            first.n,
+            first.m,
+            first.xpc_count,
+            cfg.name,
+            cfg.n,
+            cfg.m(),
+            cfg.xpc_count()
+        );
+        let pca_mode = matches!(cfg.bitcount, BitcountMode::Pca { .. });
+        let gamma = match cfg.bitcount {
+            BitcountMode::Pca { gamma } => gamma,
+            _ => 0,
+        };
+        let total = fp.total_xpes();
+        let xpcs = cfg.xpc_count();
+        let units: Vec<UnitState> = (0..fp.units())
+            .map(|u| {
+                let mut s = UnitState::default();
+                if !pca_mode {
+                    let lp = fp.layer_plan(u);
+                    s.vdp_remaining = vec![lp.slices(); lp.vdp_count()];
+                }
+                s
+            })
+            .collect();
+        FrameWorld {
+            cfg,
+            fp,
+            stream: FrameStream::new(fp),
+            m: cfg.m(),
+            pca_mode,
+            gamma,
+            pcas: vec![None; total],
+            staged_unit: vec![usize::MAX; total],
+            idle: vec![true; total],
+            busy_s: vec![0.0; total],
+            units,
+            red_pending: vec![0; xpcs],
+            red_free_at: vec![0.0; xpcs],
+            mem_free_at: 0.0,
+            ones_density: 0.5,
+            frames_done: 0,
+            frame_done_s: vec![0.0; fp.frames()],
+            n_reduction_inits: 0,
+            n_reductions_done: 0,
+            n_discharge_stalls: 0,
+            n_saturations: 0,
+        }
+    }
+
+    fn flat(&self, id: XpeId) -> usize {
+        id.xpc * self.m + id.xpe
+    }
+
+    fn xpe_id(&self, flat: usize) -> XpeId {
+        XpeId { xpc: flat / self.m, xpe: flat % self.m }
+    }
+
+    /// Completion times of each frame (last activation + output bus hop).
+    pub fn frame_done_s(&self) -> &[f64] {
+        &self.frame_done_s
+    }
+
+    /// Per-XPE accumulated PASS occupancy (seconds of photonic work).
+    pub fn busy_s(&self) -> &[f64] {
+        &self.busy_s
+    }
+
+    /// Per-unit state snapshot (frame-major order).
+    pub fn units(&self) -> &[UnitState] {
+        &self.units
+    }
+
+    /// Serialize a unit's operand fetch onto the shared memory channel and
+    /// schedule its readiness event. Requested once, when the predecessor
+    /// unit starts computing (double-buffered staging).
+    fn request_fetch(&mut self, u: usize, sched: &mut Scheduler) {
+        if self.units[u].fetch_requested {
+            return;
+        }
+        self.units[u].fetch_requested = true;
+        let bits = self.fp.layer_plan(u).layer.operand_bits() as f64;
+        let start = sched.now().max(self.mem_free_at);
+        let done = start + bits / self.cfg.mem_bw_bits_per_s;
+        self.mem_free_at = done;
+        let ready = done + self.cfg.peripherals.edram.latency_s;
+        self.units[u].fetch_ready_s = ready;
+        sched.at(ready, EventKind::FetchDone { unit: u });
+    }
+
+    /// May XPE `flat`'s next pass of `unit` start now? Operands must be
+    /// staged, and for layer > 0 the producer must have drained the
+    /// activation prefix the pass's VDP reads.
+    fn admissible(&self, unit: usize, flat: usize) -> bool {
+        if !self.units[unit].fetch_done {
+            return false;
+        }
+        match self.fp.producer(unit) {
+            None => true,
+            Some(p) => {
+                let pass = self
+                    .stream
+                    .peek_for(self.fp, unit, flat)
+                    .expect("caller checked the unit is not exhausted here");
+                self.units[p].acts_done >= self.fp.need_acts(unit, pass.vdp.0)
+            }
+        }
+    }
+
+    /// Find and issue the next pass for XPE `flat`: the locked (mid-VDP)
+    /// unit if any, else the earliest unit in frame-major order that still
+    /// has passes for this XPE — **if** it is admissible.
+    ///
+    /// An XPE skips permanently *exhausted* units (that is what lets it
+    /// stream into a later frame when it holds none of this frame's tail)
+    /// but never skips past a unit whose work is merely *blocked* on
+    /// admission: stealing later work there could leave the XPE mid-VDP at
+    /// the exact moment the earlier unit unblocks, delaying the older
+    /// frame's critical path beyond its sequential baseline. Idle-waiting
+    /// instead keeps every XPE's schedule a concatenation of its unit
+    /// queues in frame-major order, which is what makes "pipelined is
+    /// never slower than sequential" provable (and property-tested).
+    fn dispatch(&mut self, flat: usize, extra_delay: f64, sched: &mut Scheduler) {
+        let unit = match self.stream.locked(flat) {
+            Some(u) => Some(u),
+            None => {
+                self.stream.advance_first_open(self.fp, flat);
+                let next = self.stream.first_open(flat);
+                (next < self.fp.units() && self.admissible(next, flat)).then_some(next)
+            }
+        };
+        match unit {
+            Some(u) => self.issue(u, flat, extra_delay, sched),
+            None => self.idle[flat] = true,
+        }
+    }
+
+    fn issue(&mut self, u: usize, flat: usize, extra_delay: f64, sched: &mut Scheduler) {
+        let lp = self.fp.layer_plan(u);
+        let pass = self
+            .stream
+            .next_for(self.fp, u, flat)
+            .expect("dispatch only picks units with passes left");
+        if self.pca_mode && self.staged_unit[flat] != u {
+            // Unit switch re-stages operands; the staging gap covers the
+            // TIR discharge, so the XPE starts the unit on a fresh PCA.
+            self.pcas[flat] = Some(Pca::new(PcaParams::default(), self.gamma));
+        }
+        self.staged_unit[flat] = u;
+        // Under PcaLocal all slices of a VDP run back-to-back on this XPE
+        // (analog accumulation) — lock the XPE to the unit mid-VDP.
+        let mid_vdp =
+            lp.policy == MappingPolicy::PcaLocal && pass.slice_idx + 1 < lp.slices();
+        self.stream.set_locked(flat, mid_vdp.then_some(u));
+        if !self.units[u].started {
+            self.units[u].started = true;
+            self.units[u].start_s = sched.now();
+            // Double-buffered staging: fetch the successor layer's operands
+            // (and the next frame's first layer) while this unit computes.
+            if self.fp.unit_layer(u) + 1 < self.fp.layers() {
+                self.request_fetch(u + 1, sched);
+            }
+            if self.fp.unit_layer(u) == 0 && self.fp.unit_frame(u) + 1 < self.fp.frames()
+            {
+                self.request_fetch(u + self.fp.layers(), sched);
+            }
+        }
+        let tau = self.cfg.tau_s();
+        let ones = (pass.slice_len as f64 * self.ones_density).round() as u64;
+        self.idle[flat] = false;
+        self.busy_s[flat] += tau;
+        sched.after(
+            extra_delay + tau,
+            EventKind::PassComplete {
+                xpe: self.xpe_id(flat),
+                vdp: VdpId(self.fp.global_vdp(u, pass.vdp.0)),
+                slice_idx: pass.slice_idx,
+                ones,
+            },
+        );
+    }
+
+    /// Re-dispatch every idle XPE (admission state changed: a fetch
+    /// completed or an activation drained). `extra_delay` models the bus
+    /// hop activations take to the consumer's buffers.
+    fn wake_idle(&mut self, extra_delay: f64, sched: &mut Scheduler) {
+        for flat in 0..self.idle.len() {
+            if self.idle[flat] {
+                self.dispatch(flat, extra_delay, sched);
+            }
+        }
+    }
+}
+
+impl World for FrameWorld<'_> {
+    fn init(&mut self, sched: &mut Scheduler, _stats: &mut SimStats) {
+        // Everything is gated on the first unit's operand staging; XPEs
+        // wake on its FetchDone.
+        self.request_fetch(0, sched);
+    }
+
+    fn handle(&mut self, event: &EventKind, sched: &mut Scheduler, _stats: &mut SimStats) {
+        match event {
+            EventKind::FetchDone { unit } => {
+                self.units[*unit].fetch_done = true;
+                self.wake_idle(0.0, sched);
+            }
+            EventKind::PassComplete { xpe, vdp, slice_idx, ones } => {
+                let (u, _local) = self.fp.unit_of_vdp(vdp.0);
+                self.units[u].passes += 1;
+                let flat = self.flat(*xpe);
+                if self.pca_mode {
+                    let slices = self.fp.layer_plan(u).slices();
+                    let last = *slice_idx == slices - 1;
+                    let pca = self.pcas[flat].as_mut().expect("pca mode");
+                    let saturated = pca.accumulate(*ones);
+                    if saturated {
+                        self.n_saturations += 1;
+                    }
+                    if last {
+                        sched.after(0.0, EventKind::PcaReadout { xpe: *xpe, vdp: *vdp });
+                    } else if saturated {
+                        // Paper Section III-B2: a railed TIR ends the
+                        // accumulation phase — read out mid-VDP and continue
+                        // on the swapped capacitor.
+                        self.units[u].mid_vdp_readouts += 1;
+                        let now = sched.now();
+                        let pca = self.pcas[flat].as_mut().expect("pca mode");
+                        let (_r, stall) = pca.readout(now);
+                        if stall > 0.0 {
+                            self.n_discharge_stalls += 1;
+                        }
+                        self.dispatch(flat, stall, sched);
+                    } else {
+                        self.dispatch(flat, 0.0, sched);
+                    }
+                } else {
+                    sched.after(0.0, EventKind::PsumReady {
+                        xpe: *xpe,
+                        vdp: *vdp,
+                        slice_idx: *slice_idx,
+                    });
+                    self.dispatch(flat, 0.0, sched);
+                }
+            }
+            EventKind::PcaReadout { xpe, vdp } => {
+                let (u, _local) = self.fp.unit_of_vdp(vdp.0);
+                self.units[u].pca_readouts += 1;
+                let flat = self.flat(*xpe);
+                let now = sched.now();
+                let pca = self.pcas[flat].as_mut().expect("pca mode");
+                let (_result, stall) = pca.readout(now);
+                if stall > 0.0 {
+                    self.n_discharge_stalls += 1;
+                }
+                let act = self.cfg.peripherals.activation_unit.latency_s;
+                sched.after(stall + act, EventKind::ActivationDone { vdp: *vdp });
+                self.dispatch(flat, stall, sched);
+            }
+            EventKind::PsumReady { xpe, vdp, .. } => {
+                let (u, local) = self.fp.unit_of_vdp(vdp.0);
+                self.units[u].psums += 1;
+                let xpc = xpe.xpc;
+                self.red_pending[xpc] += 1;
+                let (lat, width) = match self.cfg.bitcount {
+                    BitcountMode::Reduction { latency_s, .. } => (latency_s, self.m),
+                    _ => unreachable!("psum in PCA mode"),
+                };
+                // Group psums M-wide per initiation of the XPC's network; a
+                // unit that has issued its last pass flushes the remainder.
+                if self.red_pending[xpc] >= width || self.stream.all_issued(u) {
+                    let start = sched.now().max(self.red_free_at[xpc]);
+                    self.red_free_at[xpc] = start + lat;
+                    self.red_pending[xpc] = 0;
+                    self.n_reduction_inits += 1;
+                    sched.at(start + lat, EventKind::ReductionDone { vdp: *vdp });
+                }
+                self.units[u].vdp_remaining[local] -= 1;
+                if self.units[u].vdp_remaining[local] == 0 {
+                    let act = self.cfg.peripherals.activation_unit.latency_s;
+                    let done_at = self.red_free_at[xpc].max(sched.now()) + lat + act;
+                    sched.at(done_at, EventKind::ActivationDone { vdp: *vdp });
+                }
+            }
+            EventKind::ReductionDone { .. } => {
+                self.n_reductions_done += 1;
+            }
+            EventKind::ActivationDone { vdp } => {
+                let (u, _local) = self.fp.unit_of_vdp(vdp.0);
+                self.units[u].activations += 1;
+                self.units[u].acts_done += 1;
+                let vdps = self.fp.layer_plan(u).vdp_count();
+                if self.units[u].acts_done == vdps {
+                    self.units[u].done_s = sched.now();
+                    if self.fp.unit_layer(u) + 1 == self.fp.layers() {
+                        let frame = self.fp.unit_frame(u);
+                        self.frame_done_s[frame] =
+                            sched.now() + self.cfg.peripherals.bus.latency_s;
+                        self.frames_done += 1;
+                    }
+                }
+                // A drained activation may admit successor passes; the bus
+                // hop carries it to the consumer's tile buffers.
+                self.wake_idle(self.cfg.peripherals.bus.latency_s, sched);
+            }
+            _ => {}
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.frames_done >= self.fp.frames()
+    }
+
+    fn finalize(&mut self, stats: &mut SimStats) {
+        let (mut passes, mut readouts, mut mid, mut psums, mut acts) = (0, 0, 0, 0, 0);
+        for s in &self.units {
+            passes += s.passes;
+            readouts += s.pca_readouts;
+            mid += s.mid_vdp_readouts;
+            psums += s.psums;
+            acts += s.activations;
+        }
+        stats.count("passes", passes);
+        stats.count("pca_readouts", readouts);
+        stats.count("mid_vdp_readouts", mid);
+        stats.count("pca_saturations", self.n_saturations);
+        stats.count("pca_discharge_stalls", self.n_discharge_stalls);
+        stats.count("psums", psums);
+        stats.count("reduction_inits", self.n_reduction_inits);
+        stats.count("reductions_done", self.n_reductions_done);
+        stats.count("activations", acts);
+        for (category, joules) in energy_ledger(self.cfg, passes, readouts, mid, psums)
+        {
+            stats.energy(category, joules);
+        }
+    }
+}
+
 
 #[cfg(test)]
 mod tests {

@@ -11,9 +11,9 @@
 //! per layer.
 
 use super::accelerator::AcceleratorConfig;
-use super::event_sim::simulate_layer_planned;
+use super::event_sim::{simulate_layer_planned, FrameWorld};
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::ExecutionPlan;
+use crate::plan::{ExecutionPlan, FramePlan};
 use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
@@ -140,6 +140,106 @@ pub fn simulate_frame_planned(plan: &ExecutionPlan) -> FrameTrace {
     }
 }
 
+/// Per-layer record of the frame-0 units of a pipelined batch.
+#[derive(Debug, Clone)]
+pub struct PipelinedLayerTrace {
+    pub name: String,
+    /// Time the unit's first pass was issued.
+    pub start_s: f64,
+    /// Time the unit's last activation drained.
+    pub done_s: f64,
+    pub passes: u64,
+    pub psums: u64,
+    pub pca_readouts: u64,
+    pub mid_vdp_readouts: u64,
+    pub activations: u64,
+}
+
+/// Result of a whole-frame pipelined batch: every layer of every frame in
+/// ONE event space (see [`FrameWorld`]), so cross-layer and cross-frame
+/// overlap are simulated rather than multiplied.
+#[derive(Debug, Clone)]
+pub struct PipelineTrace {
+    pub accelerator: String,
+    pub workload: String,
+    /// Frames simulated back-to-back through the shared event space.
+    pub frames: usize,
+    /// Completion time of the first frame (the pipelined frame latency).
+    pub frame_latency_s: f64,
+    /// Completion time of the last frame — the batch makespan.
+    pub batch_latency_s: f64,
+    /// Per-frame completion times (monotone: frame-major XPE priority).
+    pub frame_done_s: Vec<f64>,
+    /// Whole-batch stats (counters/energy cover all frames).
+    pub stats: SimStats,
+    /// Per-XPE accumulated PASS occupancy (s).
+    pub busy_s: Vec<f64>,
+    /// Frame-0 unit records, in layer order (per-frame counts/energy come
+    /// from these — every frame runs the identical compiled plan).
+    pub layers: Vec<PipelinedLayerTrace>,
+}
+
+impl PipelineTrace {
+    /// Pipelined throughput: frames per batch makespan.
+    pub fn fps(&self) -> f64 {
+        self.frames as f64 / self.batch_latency_s
+    }
+
+    /// Mean fraction of the makespan each XPE spent idle (not running a
+    /// PASS) — the quantity multi-frame pipelining exists to shrink.
+    pub fn xpe_idle_fraction(&self) -> f64 {
+        if self.busy_s.is_empty() || self.batch_latency_s <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.busy_s.iter().sum();
+        1.0 - busy / (self.busy_s.len() as f64 * self.batch_latency_s)
+    }
+}
+
+/// Event-simulate `frames` back-to-back frames of a compiled plan through
+/// one whole-frame pipelined event space. Layer `l+1`'s passes start as
+/// soon as their input activation prefix has drained; frame `f+1`'s early
+/// layers fill XPEs idled by frame `f`'s tail. Panics if the (generous)
+/// event budget truncates the run.
+pub fn simulate_frames_pipelined(plan: &ExecutionPlan, frames: usize) -> PipelineTrace {
+    let fp = FramePlan::new(plan, frames);
+    let mut world = FrameWorld::new(&plan.accelerator, &fp);
+    let outcome = crate::sim::engine::run(&mut world, fp.event_budget());
+    let mut stats = outcome.expect_complete(&format!(
+        "pipelined batch of {} frame(s) of '{}'",
+        frames, plan.workload.name
+    ));
+    let frame_done_s = world.frame_done_s().to_vec();
+    let batch_latency_s =
+        frame_done_s.iter().cloned().fold(0.0_f64, f64::max);
+    stats.end_time_s = batch_latency_s;
+    let layers = world.units()[..plan.layers.len()]
+        .iter()
+        .zip(&plan.layers)
+        .map(|(u, lp)| PipelinedLayerTrace {
+            name: lp.layer.name.clone(),
+            start_s: u.start_s,
+            done_s: u.done_s,
+            passes: u.passes,
+            psums: u.psums,
+            pca_readouts: u.pca_readouts,
+            mid_vdp_readouts: u.mid_vdp_readouts,
+            activations: u.activations,
+        })
+        .collect();
+    PipelineTrace {
+        accelerator: plan.accelerator.name.clone(),
+        workload: plan.workload.name.clone(),
+        frames,
+        frame_latency_s: frame_done_s[0],
+        batch_latency_s,
+        frame_done_s,
+        busy_s: world.busy_s().to_vec(),
+        stats,
+        layers,
+    }
+}
+
 fn first_fetch_time(cfg: &AcceleratorConfig, workload: &Workload) -> f64 {
     workload.layers[0].operand_bits() as f64 / cfg.mem_bw_bits_per_s
         + cfg.peripherals.edram.latency_s
@@ -148,7 +248,13 @@ fn first_fetch_time(cfg: &AcceleratorConfig, workload: &Workload) -> f64 {
 fn merge(total: &mut SimStats, part: &SimStats) {
     total.events_processed += part.events_processed;
     for (k, v) in part.counters() {
-        total.count(k, *v);
+        // Peak stats don't add across layers run in separate event spaces
+        // — the frame-level live-queue footprint is the largest layer's.
+        if k == "peak_pending_events" {
+            total.set_counter_max(k, *v);
+        } else {
+            total.count(k, *v);
+        }
     }
     for (k, v) in part.energy_breakdown() {
         total.energy(k, *v);
@@ -261,6 +367,106 @@ mod tests {
         assert_eq!(a.frame_latency_s, b.frame_latency_s);
         assert_eq!(a.stats.events_processed, b.stats.events_processed);
         assert_eq!(a.stats.counters(), b.stats.counters());
+    }
+
+    #[test]
+    fn pipelined_single_frame_conserves_and_is_no_slower() {
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let seq = simulate_frame_planned(&plan);
+        let pipe = simulate_frames_pipelined(&plan, 1);
+        // Same compiled plan streamed either way: the transaction multiset
+        // is conserved exactly.
+        for key in ["passes", "pca_readouts", "activations", "psums"] {
+            assert_eq!(
+                pipe.stats.counter(key),
+                seq.stats.counter(key),
+                "counter '{}' diverged",
+                key
+            );
+        }
+        assert_eq!(pipe.stats.counter("clamped_events"), 0);
+        // Cross-layer overlap can only help a frame, never hurt it.
+        assert!(
+            pipe.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9),
+            "pipelined {} vs sequential {}",
+            pipe.frame_latency_s,
+            seq.frame_latency_s
+        );
+        assert!(pipe.frame_latency_s > 0.0);
+        assert_eq!(pipe.layers.len(), wl.layers.len());
+        for (lt, l) in pipe.layers.iter().zip(&wl.layers) {
+            assert_eq!(lt.passes, l.total_passes(cfg.n) as u64, "layer {}", lt.name);
+            assert_eq!(lt.activations, l.vdp_count() as u64);
+            assert!(lt.done_s >= lt.start_s);
+        }
+    }
+
+    #[test]
+    fn pipelined_layers_overlap_within_a_frame() {
+        // The tentpole behavior: layer l+1's first passes start before
+        // layer l's last activation drains (sequential chaining forbids
+        // exactly this).
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let pipe = simulate_frames_pipelined(&plan, 1);
+        let overlap = pipe
+            .layers
+            .windows(2)
+            .any(|w| w[1].start_s < w[0].done_s);
+        assert!(overlap, "no cross-layer overlap observed: {:?}", pipe.layers);
+    }
+
+    #[test]
+    fn pipelined_batch_beats_sequential_multiply() {
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let seq = simulate_frame_planned(&plan);
+        let n = 4;
+        let pipe = simulate_frames_pipelined(&plan, n);
+        assert_eq!(
+            pipe.stats.counter("passes"),
+            n as u64 * seq.stats.counter("passes"),
+            "batch must run every frame's every pass"
+        );
+        assert_eq!(pipe.stats.counter("clamped_events"), 0);
+        // Frames complete in order (frame-major XPE priority).
+        for w in pipe.frame_done_s.windows(2) {
+            assert!(
+                w[1] >= w[0] - 1e-12,
+                "frame completions out of order: {:?}",
+                pipe.frame_done_s
+            );
+        }
+        // Multi-frame overlap strictly beats the with_batch multiply.
+        let sequential_batch = n as f64 * seq.frame_latency_s;
+        assert!(
+            pipe.batch_latency_s < sequential_batch,
+            "pipelined batch {} vs sequential {}",
+            pipe.batch_latency_s,
+            sequential_batch
+        );
+        assert!(pipe.fps() > 1.0 / seq.frame_latency_s);
+        let idle = pipe.xpe_idle_fraction();
+        assert!((0.0..1.0).contains(&idle), "idle fraction {}", idle);
+    }
+
+    #[test]
+    fn pipelined_reduction_mode_conserves_psums() {
+        let wl = tiny_workload();
+        let mut cfg = small_cfg();
+        cfg.bitcount = BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+        cfg.energy = crate::energy::power::EnergyModel::robin();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::SlicedSpread);
+        let seq = simulate_frame_planned(&plan);
+        let pipe = simulate_frames_pipelined(&plan, 2);
+        assert_eq!(pipe.stats.counter("psums"), 2 * seq.stats.counter("psums"));
+        assert_eq!(pipe.stats.counter("activations"), 2 * seq.stats.counter("activations"));
+        assert_eq!(pipe.stats.counter("clamped_events"), 0);
+        assert!(pipe.batch_latency_s < 2.0 * seq.frame_latency_s);
     }
 
     #[test]

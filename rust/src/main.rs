@@ -131,6 +131,11 @@ fn cmd_fps(args: &[String]) -> i32 {
             "analytic",
             "analytic|event|functional (event is detailed but much slower)",
         )
+        .opt("batch", "1", "frames per cell (pipelined batches report batched FPS)")
+        .flag(
+            "pipeline",
+            "whole-frame pipelined event space per cell (event backend only)",
+        )
         .flag("json", "emit JSON instead of tables");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -140,6 +145,11 @@ fn cmd_fps(args: &[String]) -> i32 {
         Ok(b) => b,
         Err(code) => return code,
     };
+    let batch = match parsed.get_usize("batch") {
+        Ok(b) => b.max(1),
+        Err(e) => return handle_cli(e),
+    };
+    let pipeline = parsed.has_flag("pipeline");
     let accels = AcceleratorConfig::evaluation_set();
     let workloads = Workload::evaluation_set();
 
@@ -152,11 +162,13 @@ fn cmd_fps(args: &[String]) -> i32 {
         .flat_map(|a| workloads.iter().map(move |w| (a.clone(), w.clone())))
         .collect();
     let cell_reports: Vec<oxbnn::api::Report> =
-        parallel_map(jobs, host_threads(), |(a, w)| {
+        parallel_map(jobs, host_threads(), move |(a, w)| {
             Session::builder()
                 .accelerator(a)
                 .workload(w)
                 .backend(backend)
+                .batch(batch)
+                .pipeline(pipeline)
                 .build()
                 .expect("session over built-in configs")
                 .run()
@@ -250,6 +262,11 @@ fn cmd_simulate(args: &[String]) -> i32 {
         "analytic|event|functional (event simulates every PASS — slow on full BNNs)",
     )
     .opt("batch", "1", "frames to evaluate back-to-back")
+    .flag(
+        "pipeline",
+        "whole-frame pipelined event space: cross-layer + multi-frame overlap \
+         (event backend; others fall back to sequential)",
+    )
     .flag("json", "emit the unified report as JSON")
     .flag("layers", "print per-layer breakdown");
     let parsed = match cmd.parse(args) {
@@ -309,6 +326,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
         .workload(workload)
         .backend(backend)
         .batch(batch)
+        .pipeline(parsed.has_flag("pipeline"))
         .build()
     {
         Ok(s) => s,
@@ -337,9 +355,11 @@ fn cmd_simulate(args: &[String]) -> i32 {
         );
         if report.batch > 1 {
             println!(
-                "  batch of {} frames: {}",
+                "  batch of {} frames{}: {} → {:.1} FPS batched",
                 report.batch,
-                fmt_time(report.batch_latency_s)
+                if report.pipelined { " (pipelined)" } else { "" },
+                fmt_time(report.batch_latency_s),
+                report.batched_fps()
             );
         }
         if !report.energy_breakdown.is_empty() {
@@ -452,6 +472,12 @@ fn server_config_from_args(
     cfg.max_wait = std::time::Duration::from_secs_f64((wait_ms / 1e3).max(0.0));
     cfg.queue_depth = parsed.get_usize("queue-depth").map_err(handle_cli)?.max(1);
     cfg.replicas = parsed.get_usize("replicas").map_err(handle_cli)?.max(1);
+    if parsed.has_flag("sim-pipeline") {
+        // Photonic reference = pipelined batch of max_batch frames through
+        // the whole-frame event space (needs the event backend).
+        cfg.sim_backend = BackendKind::Event;
+        cfg.sim_pipeline = true;
+    }
     Ok(cfg)
 }
 
@@ -464,7 +490,11 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("policy", "immediate", "batch-cut policy: immediate|deadline")
         .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
         .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
-        .opt("replicas", "1", "worker replicas for the model");
+        .opt("replicas", "1", "worker replicas for the model")
+        .flag(
+            "sim-pipeline",
+            "photonic reference: pipelined batch of max-batch frames (event backend)",
+        );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
@@ -555,7 +585,11 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
     .opt("policy", "immediate", "batch-cut policy: immediate|deadline")
     .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
     .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
-    .opt("replicas", "1", "worker replicas for the model");
+    .opt("replicas", "1", "worker replicas for the model")
+    .flag(
+        "sim-pipeline",
+        "photonic reference: pipelined batch of max-batch frames (event backend)",
+    );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
@@ -731,6 +765,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
         "analytic",
         "analytic|event|functional (analytic recommended for sweeps)",
     )
+    .opt("batch", "1", "frames per cell (pipelined batches report batched FPS)")
+    .flag(
+        "pipeline",
+        "whole-frame pipelined event space per cell (event backend only)",
+    )
     .opt("out", "-", "output CSV path ('-' for stdout)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -747,6 +786,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
         Ok(b) => b,
         Err(code) => return code,
     };
+    let batch = match parsed.get_usize("batch") {
+        Ok(b) => b.max(1),
+        Err(e) => return handle_cli(e),
+    };
+    let pipeline = parsed.has_flag("pipeline");
     let xpes: Vec<usize> = parsed
         .get("xpes")
         .split(',')
@@ -778,6 +822,8 @@ fn cmd_sweep(args: &[String]) -> i32 {
             .accelerator(cfg)
             .workload(workload.clone())
             .backend(backend)
+            .batch(batch)
+            .pipeline(pipeline)
             .build()
             .expect("sweep session")
             .run();

@@ -12,7 +12,8 @@ use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use crate::mapping::scheduler::MappingPolicy;
 use crate::workloads::Workload;
 
-/// Thread-safe compile-once cache of [`ExecutionPlan`]s.
+/// Thread-safe compile-once cache of [`ExecutionPlan`]s with LRU
+/// eviction.
 ///
 /// The key covers every field that shapes the plan or its timing:
 /// accelerator identity (name, DR, N, XPE count, bitcount mode, memory
@@ -20,11 +21,25 @@ use crate::workloads::Workload;
 /// policy. Compilation is cheap (no materialization), so on a rare
 /// concurrent miss two threads may compile the same plan; the first
 /// insert wins and both get the same `Arc` afterwards.
+///
+/// Eviction is least-recently-used: at capacity, the single entry with
+/// the stalest access tick is dropped — a hot serving model's plan
+/// survives any amount of cold-key churn (sweeps rotating hundreds of
+/// throwaway geometries through a shared cache), where the previous
+/// flush-everything policy evicted the hot plan along with the cold ones.
 pub struct PlanCache {
-    inner: Mutex<HashMap<String, Arc<ExecutionPlan>>>,
+    inner: Mutex<HashMap<String, CacheEntry>>,
     capacity: usize,
+    /// Monotone access clock for LRU ordering (ticks on hit and insert).
+    clock: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct CacheEntry {
+    plan: Arc<ExecutionPlan>,
+    last_used: u64,
 }
 
 impl Default for PlanCache {
@@ -34,16 +49,21 @@ impl Default for PlanCache {
 }
 
 impl PlanCache {
-    /// A cache holding at most `capacity` plans; when full, the whole
-    /// cache is flushed (sweeps re-warm it in one pass, and plans are
-    /// cheap to recompile — simplicity beats an eviction policy here).
+    /// A cache holding at most `capacity` plans, evicting the
+    /// least-recently-used entry when full.
     pub fn with_capacity(capacity: usize) -> PlanCache {
         PlanCache {
             inner: Mutex::new(HashMap::new()),
             capacity: capacity.max(1),
+            clock: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Fetch the plan for this triple, compiling it on first use.
@@ -54,19 +74,35 @@ impl PlanCache {
         policy: MappingPolicy,
     ) -> Arc<ExecutionPlan> {
         let key = fingerprint(cfg, workload, policy);
-        if let Some(plan) = self.inner.lock().unwrap().get(&key) {
+        if let Some(entry) = self.inner.lock().unwrap().get_mut(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(plan);
+            entry.last_used = self.tick();
+            return Arc::clone(&entry.plan);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Compile outside the lock: parallel sweep cells must not
         // serialize on each other's compilations.
         let plan = Arc::new(ExecutionPlan::compile(cfg, workload, policy));
         let mut map = self.inner.lock().unwrap();
-        if map.len() >= self.capacity {
-            map.clear();
+        // Evict the least-recently-used entry (O(n) scan — capacity is
+        // small and eviction only runs on a miss at capacity). Re-check
+        // presence first: a concurrent miss may have inserted this key.
+        if !map.contains_key(&key) && map.len() >= self.capacity {
+            if let Some(stalest) = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                map.remove(&stalest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        Arc::clone(map.entry(key).or_insert(plan))
+        let last_used = self.tick();
+        let entry = map
+            .entry(key)
+            .or_insert(CacheEntry { plan, last_used });
+        entry.last_used = last_used;
+        Arc::clone(&entry.plan)
     }
 
     /// Plans currently cached.
@@ -87,6 +123,25 @@ impl PlanCache {
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
+
+    /// LRU evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// True if the plan for this triple is currently resident (test/ops
+    /// introspection; does not count as an access).
+    pub fn contains(
+        &self,
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+    ) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .contains_key(&fingerprint(cfg, workload, policy))
+    }
 }
 
 impl fmt::Debug for PlanCache {
@@ -96,6 +151,7 @@ impl fmt::Debug for PlanCache {
             .field("capacity", &self.capacity)
             .field("hits", &self.hits())
             .field("misses", &self.misses())
+            .field("evictions", &self.evictions())
             .finish()
     }
 }
@@ -195,16 +251,55 @@ mod tests {
     }
 
     #[test]
-    fn overflow_flushes_and_recovers() {
+    fn overflow_evicts_one_lru_entry_and_recovers() {
         let cache = PlanCache::with_capacity(2);
         let cfg = AcceleratorConfig::oxbnn_5();
         for i in 0..5 {
             let _ = cache.get_or_compile(&cfg, &wl(&format!("w{}", i)), MappingPolicy::PcaLocal);
         }
-        assert!(cache.len() <= 2);
-        // Still functional after the flush.
+        // LRU keeps the cache full (never a wholesale flush) and evicts
+        // exactly one entry per overflowing insert.
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 3);
+        // The most recent entries survive.
         let a = cache.get_or_compile(&cfg, &wl("w4"), MappingPolicy::PcaLocal);
         let b = cache.get_or_compile(&cfg, &wl("w4"), MappingPolicy::PcaLocal);
         assert!(Arc::ptr_eq(&a, &b));
+        assert!(cache.contains(&cfg, &wl("w3"), MappingPolicy::PcaLocal));
+    }
+
+    #[test]
+    fn hot_plan_survives_cold_key_churn() {
+        // The serving scenario the LRU exists for: one hot model geometry
+        // interleaved with a long rotation of cold sweep geometries must
+        // keep its compiled plan resident throughout.
+        let cache = PlanCache::with_capacity(8);
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let hot = wl("hot_model");
+        let first = cache.get_or_compile(&cfg, &hot, MappingPolicy::PcaLocal);
+        for i in 0..64 {
+            let _ = cache.get_or_compile(
+                &cfg,
+                &wl(&format!("cold{}", i)),
+                MappingPolicy::PcaLocal,
+            );
+            // The hot plan is touched between cold misses (a serving
+            // replica answering traffic) — every touch must be a hit on
+            // the SAME compiled plan.
+            let again = cache.get_or_compile(&cfg, &hot, MappingPolicy::PcaLocal);
+            assert!(
+                Arc::ptr_eq(&first, &again),
+                "hot plan recompiled after {} cold keys",
+                i + 1
+            );
+        }
+        assert_eq!(cache.len(), 8);
+        assert_eq!(
+            cache.misses(),
+            1 + 64,
+            "exactly one compile for the hot plan, one per cold key"
+        );
+        assert!(cache.evictions() >= 64 - 7, "cold keys churn through the LRU");
+        assert!(cache.contains(&cfg, &hot, MappingPolicy::PcaLocal));
     }
 }

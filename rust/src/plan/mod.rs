@@ -26,7 +26,7 @@ pub mod cache;
 pub mod stream;
 
 pub use cache::PlanCache;
-pub use stream::{LayerPlan, PassStream};
+pub use stream::{FrameStream, LayerPlan, PassStream};
 
 use crate::arch::accelerator::AcceleratorConfig;
 use crate::mapping::scheduler::MappingPolicy;
@@ -106,6 +106,150 @@ impl ExecutionPlan {
     }
 }
 
+/// Receptive-field lookahead for cross-layer pass admission, as a fraction
+/// of the producer layer's output feature map: a consumer VDP at spatial
+/// fraction `f` of its own map may start once the producer has drained
+/// activations up to fraction `min(1, f + HALO)`. The halo stands in for
+/// the kernel rows a conv window reaches beyond its own raster position
+/// (the flattened [`crate::mapping::layer::GemmLayer`] geometry no longer
+/// knows the kernel extent, so the plan uses a conservative fixed
+/// fraction).
+pub const RECEPTIVE_HALO: f64 = 0.125;
+
+/// A whole *batch of frames* laid over one [`ExecutionPlan`]: the unit
+/// table the frame-scoped event world simulates in a single event space.
+///
+/// Each `(frame, layer)` pair is one **unit**, numbered frame-major
+/// (`u = frame · layers + layer`) — the order XPEs prefer work in, so an
+/// earlier frame's tail is never starved by a later frame. Units share one
+/// global VDP id space (unit `u`'s VDPs occupy `[base_vdp(u),
+/// base_vdp(u) + vdps)`), which lets every existing event variant carry
+/// frame/layer identity through its `VdpId` untouched.
+///
+/// The plan also owns the **cross-layer admission rule** ([`Self::need_acts`]):
+/// how many of the producer layer's activations must have drained before a
+/// given consumer VDP's passes may be admitted. VDP indices are spatial-major
+/// (`vdp / K` = output raster position), so admission thresholds are
+/// monotone along every XPE's queue under both mapping policies.
+#[derive(Debug, Clone)]
+pub struct FramePlan<'a> {
+    plan: &'a ExecutionPlan,
+    frames: usize,
+    /// Per-layer VDP base within one frame (prefix sums), plus the total.
+    layer_vdp_base: Vec<usize>,
+    frame_vdps: usize,
+}
+
+impl<'a> FramePlan<'a> {
+    /// Lay `frames` back-to-back frames over `plan`.
+    pub fn new(plan: &'a ExecutionPlan, frames: usize) -> FramePlan<'a> {
+        assert!(frames > 0, "a frame plan needs at least one frame");
+        let mut layer_vdp_base = Vec::with_capacity(plan.layers.len());
+        let mut acc = 0usize;
+        for lp in &plan.layers {
+            layer_vdp_base.push(acc);
+            acc += lp.vdp_count();
+        }
+        FramePlan { plan, frames, layer_vdp_base, frame_vdps: acc }
+    }
+
+    pub fn plan(&self) -> &'a ExecutionPlan {
+        self.plan
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    pub fn layers(&self) -> usize {
+        self.plan.layers.len()
+    }
+
+    /// Units in the batch (`frames · layers`).
+    pub fn units(&self) -> usize {
+        self.frames * self.layers()
+    }
+
+    pub fn unit_frame(&self, unit: usize) -> usize {
+        unit / self.layers()
+    }
+
+    pub fn unit_layer(&self, unit: usize) -> usize {
+        unit % self.layers()
+    }
+
+    /// The unit that produces this unit's input feature map (same frame,
+    /// previous layer), or `None` for first layers.
+    pub fn producer(&self, unit: usize) -> Option<usize> {
+        (self.unit_layer(unit) > 0).then(|| unit - 1)
+    }
+
+    pub fn layer_plan(&self, unit: usize) -> &'a LayerPlan {
+        &self.plan.layers[self.unit_layer(unit)]
+    }
+
+    /// XPE slots the batch runs on (same physical grid for every unit).
+    pub fn total_xpes(&self) -> usize {
+        self.plan.layers.first().map(|l| l.total_xpes()).unwrap_or(0)
+    }
+
+    /// First global VDP id of `unit`.
+    pub fn base_vdp(&self, unit: usize) -> usize {
+        self.unit_frame(unit) * self.frame_vdps
+            + self.layer_vdp_base[self.unit_layer(unit)]
+    }
+
+    /// Global VDP id of `unit`'s local VDP `v`.
+    pub fn global_vdp(&self, unit: usize, v: usize) -> usize {
+        self.base_vdp(unit) + v
+    }
+
+    /// Map a global VDP id back to `(unit, local vdp)`.
+    pub fn unit_of_vdp(&self, global: usize) -> (usize, usize) {
+        let frame = global / self.frame_vdps;
+        let rem = global % self.frame_vdps;
+        let layer = self.layer_vdp_base.partition_point(|&b| b <= rem) - 1;
+        (frame * self.layers() + layer, rem - self.layer_vdp_base[layer])
+    }
+
+    /// Producer activations that must have drained before `unit`'s local
+    /// VDP `v` may be admitted. 0 for first layers (no producer). FC
+    /// consumers (`H == 1`) need the whole input map; conv consumers need
+    /// the raster prefix up to their own spatial fraction plus
+    /// [`RECEPTIVE_HALO`]. Monotone in `v`, so per-XPE queues under both
+    /// mapping policies block and unblock in order.
+    pub fn need_acts(&self, unit: usize, v: usize) -> usize {
+        let Some(prev) = self.producer(unit) else {
+            return 0;
+        };
+        let consumer = &self.layer_plan(unit).layer;
+        let produced = self.layer_plan(prev).vdp_count();
+        if consumer.h == 1 {
+            return produced; // FC: every VDP reads the whole flattened map
+        }
+        let position = v / consumer.k;
+        let frac = (position + 1) as f64 / consumer.h as f64;
+        (((frac + RECEPTIVE_HALO).min(1.0) * produced as f64).ceil() as usize)
+            .min(produced)
+    }
+
+    /// Total passes across the whole batch.
+    pub fn total_passes(&self) -> usize {
+        self.frames * self.plan.total_passes()
+    }
+
+    /// Event budget generous enough for any well-formed run of the batch.
+    pub fn event_budget(&self) -> u64 {
+        self.plan
+            .layers
+            .iter()
+            .map(|l| l.event_budget())
+            .sum::<u64>()
+            .saturating_mul(self.frames as u64)
+            + 10_000
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +271,82 @@ mod tests {
         assert!(plan.max_queue_len() > 0);
         assert!(plan.streamed_state_bytes() > 0);
         assert!(plan.materialized_bytes() >= plan.streamed_state_bytes());
+    }
+
+    fn frame_plan_fixture() -> ExecutionPlan {
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let wl = Workload::new(
+            "fp",
+            vec![
+                GemmLayer::new("c1", 6, 40, 4),  // 24 VDPs
+                GemmLayer::new("c2", 4, 30, 3),  // 12 VDPs
+                GemmLayer::fc("fc", 64, 10),     // 10 VDPs
+            ],
+        );
+        ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal)
+    }
+
+    #[test]
+    fn frame_plan_vdp_ids_roundtrip() {
+        let plan = frame_plan_fixture();
+        let fp = FramePlan::new(&plan, 3);
+        assert_eq!(fp.units(), 9);
+        assert_eq!(fp.total_passes(), 3 * plan.total_passes());
+        for unit in 0..fp.units() {
+            let vdps = fp.layer_plan(unit).vdp_count();
+            for v in [0, vdps / 2, vdps - 1] {
+                let g = fp.global_vdp(unit, v);
+                assert_eq!(fp.unit_of_vdp(g), (unit, v), "unit {} vdp {}", unit, v);
+            }
+        }
+        // Frame-major unit order: frame 1's first layer follows frame 0's
+        // last layer.
+        assert_eq!(fp.unit_frame(3), 1);
+        assert_eq!(fp.unit_layer(3), 0);
+        assert_eq!(fp.producer(3), None);
+        assert_eq!(fp.producer(4), Some(3));
+    }
+
+    #[test]
+    fn frame_plan_admission_thresholds() {
+        let plan = frame_plan_fixture();
+        let fp = FramePlan::new(&plan, 2);
+        // First layers need nothing.
+        assert_eq!(fp.need_acts(0, 0), 0);
+        assert_eq!(fp.need_acts(3, 0), 0);
+        // Conv consumer: monotone in VDP index, never above the producer's
+        // activation count, and strictly positive (can't start on nothing).
+        let produced = fp.layer_plan(0).vdp_count();
+        let mut last = 0;
+        for v in 0..fp.layer_plan(1).vdp_count() {
+            let need = fp.need_acts(1, v);
+            assert!(need >= last, "admission must be monotone");
+            assert!(need >= 1 && need <= produced);
+            last = need;
+        }
+        assert_eq!(last, produced, "last raster position drains the map");
+        // FC consumer reads the whole input map.
+        let c2_vdps = fp.layer_plan(1).vdp_count();
+        assert_eq!(fp.need_acts(2, 0), c2_vdps);
+    }
+
+    #[test]
+    fn frame_stream_carries_frame_indexed_cursors() {
+        let plan = frame_plan_fixture();
+        let fp = FramePlan::new(&plan, 2);
+        let mut fs = FrameStream::new(&fp);
+        // Same layer, different frames: independent cursors.
+        let a = fs.next_for(&fp, 0, 0).unwrap();
+        let b = fs.next_for(&fp, 3, 0).unwrap();
+        assert_eq!(a, b, "frame 1 re-streams the same compiled layer");
+        assert_eq!(fs.issued(0), 1);
+        assert_eq!(fs.issued(3), 1);
+        assert_eq!(fs.peek_for(&fp, 0, 0), fs.peek_for(&fp, 3, 0));
+        // Draining unit 0 on one XPE advances first_open past it.
+        let flat = 0;
+        while fs.next_for(&fp, 0, flat).is_some() {}
+        assert!(fs.exhausted_for(&fp, 0, flat));
+        fs.advance_first_open(&fp, flat);
+        assert!(fs.first_open(flat) >= 1);
     }
 }

@@ -200,6 +200,18 @@ impl PassStream {
         Some(pass)
     }
 
+    /// The next pass for the XPE at `flat` WITHOUT advancing its cursor —
+    /// the frame-scoped world peeks to decide admission (is this pass's
+    /// input feature-map prefix drained yet?) before committing the XPE.
+    pub fn peek_for(&self, plan: &LayerPlan, flat: usize) -> Option<ScheduledPass> {
+        plan.pass_at(flat, self.cursor[flat])
+    }
+
+    /// True once the XPE at `flat` has drained its whole queue.
+    pub fn exhausted_for(&self, plan: &LayerPlan, flat: usize) -> bool {
+        self.cursor[flat] >= plan.queue_len(flat)
+    }
+
     /// Passes handed out so far.
     pub fn issued(&self) -> usize {
         self.issued
@@ -209,6 +221,98 @@ impl PassStream {
     /// materialized world scanned every XPE per psum event).
     pub fn all_issued(&self) -> bool {
         self.issued >= self.total
+    }
+}
+
+/// Streaming cursors over a whole [`super::FramePlan`]: one [`PassStream`]
+/// per `(frame, layer)` unit — the cursor set therefore carries a frame
+/// index, which is what lets frame `f+1`'s early layers stream into XPEs
+/// idled by frame `f`'s tail — plus the per-XPE scheduling residue the
+/// frame-scoped event world needs:
+///
+/// * `locked[x]` — the unit whose VDP is mid-flight on XPE `x`. Under
+///   [`MappingPolicy::PcaLocal`] an XPE must finish all slices of a VDP
+///   back-to-back (the PCA accumulates them in the analog domain), so the
+///   XPE may not switch units between slices.
+/// * `first_open[x]` — the earliest unit (in frame-major order) that still
+///   has passes queued for XPE `x`; units fully drained on an XPE are
+///   skipped permanently, keeping the per-dispatch unit scan short.
+///
+/// Total state: `O(units · XPEs)` cursors — still no per-pass allocation.
+#[derive(Debug, Clone)]
+pub struct FrameStream {
+    streams: Vec<PassStream>,
+    locked: Vec<Option<usize>>,
+    first_open: Vec<usize>,
+}
+
+impl FrameStream {
+    /// One cursor set per unit of `fp`, all XPEs unlocked.
+    pub fn new(fp: &super::FramePlan<'_>) -> FrameStream {
+        let xpes = fp.total_xpes();
+        FrameStream {
+            streams: (0..fp.units()).map(|u| PassStream::new(fp.layer_plan(u))).collect(),
+            locked: vec![None; xpes],
+            first_open: vec![0; xpes],
+        }
+    }
+
+    /// The next pass of `unit` on XPE `flat`, advancing that unit's cursor.
+    pub fn next_for(
+        &mut self,
+        fp: &super::FramePlan<'_>,
+        unit: usize,
+        flat: usize,
+    ) -> Option<ScheduledPass> {
+        self.streams[unit].next_for(fp.layer_plan(unit), flat)
+    }
+
+    /// Peek the next pass of `unit` on XPE `flat` without advancing.
+    pub fn peek_for(
+        &self,
+        fp: &super::FramePlan<'_>,
+        unit: usize,
+        flat: usize,
+    ) -> Option<ScheduledPass> {
+        self.streams[unit].peek_for(fp.layer_plan(unit), flat)
+    }
+
+    /// True once `unit` has no passes left for XPE `flat`.
+    pub fn exhausted_for(&self, fp: &super::FramePlan<'_>, unit: usize, flat: usize) -> bool {
+        self.streams[unit].exhausted_for(fp.layer_plan(unit), flat)
+    }
+
+    /// Passes issued so far by `unit` (all XPEs).
+    pub fn issued(&self, unit: usize) -> usize {
+        self.streams[unit].issued()
+    }
+
+    /// True once every pass of `unit` has been issued.
+    pub fn all_issued(&self, unit: usize) -> bool {
+        self.streams[unit].all_issued()
+    }
+
+    /// The unit XPE `flat` must keep servicing (a VDP is mid-flight).
+    pub fn locked(&self, flat: usize) -> Option<usize> {
+        self.locked[flat]
+    }
+
+    pub fn set_locked(&mut self, flat: usize, unit: Option<usize>) {
+        self.locked[flat] = unit;
+    }
+
+    /// Earliest unit that may still have passes for XPE `flat`.
+    pub fn first_open(&self, flat: usize) -> usize {
+        self.first_open[flat]
+    }
+
+    /// Permanently skip drained leading units for XPE `flat`.
+    pub fn advance_first_open(&mut self, fp: &super::FramePlan<'_>, flat: usize) {
+        while self.first_open[flat] < self.streams.len()
+            && self.exhausted_for(fp, self.first_open[flat], flat)
+        {
+            self.first_open[flat] += 1;
+        }
     }
 }
 

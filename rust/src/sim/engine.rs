@@ -16,11 +16,18 @@ pub struct Scheduler {
     seq: u64,
     now: f64,
     clamped: u64,
+    peak_pending: usize,
 }
 
 impl Scheduler {
     fn new() -> Scheduler {
-        Scheduler { heap: BinaryHeap::new(), seq: 0, now: 0.0, clamped: 0 }
+        Scheduler {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            clamped: 0,
+            peak_pending: 0,
+        }
     }
 
     /// Current simulation time (s).
@@ -40,6 +47,7 @@ impl Scheduler {
         let e = Event { time_s: at_s.max(self.now), seq: self.seq, kind };
         self.seq += 1;
         self.heap.push(e);
+        self.peak_pending = self.peak_pending.max(self.heap.len());
     }
 
     /// Schedule `kind` after a relative delay.
@@ -54,6 +62,15 @@ impl Scheduler {
     /// Events clamped by past-time scheduling so far.
     pub fn clamped(&self) -> u64 {
         self.clamped
+    }
+
+    /// Peak simultaneous pending events over the run so far — the live
+    /// event-queue footprint. The whole-frame pipelined world keeps many
+    /// `(frame, layer)` units in one event space; this stat (surfaced as
+    /// the `peak_pending_events` counter) shows the single shared queue
+    /// stays O(#XPEs), not O(units · XPEs).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 }
 
@@ -126,6 +143,7 @@ pub fn run<W: World>(world: &mut W, max_events: u64) -> RunOutcome {
             break;
         }
     }
+    stats.count("peak_pending_events", sched.peak_pending as u64);
     if sched.clamped > 0 {
         stats.count("clamped_events", sched.clamped);
         // Loud in every build: a clamp is a modeling error distorting

@@ -32,6 +32,10 @@ pub enum EventKind {
     ActivationDone { vdp: VdpId },
     /// A memory fetch completed (operand staging for a pass group).
     MemFetchDone { bytes: usize },
+    /// A `(frame, layer)` unit's operand staging (eDRAM fetch + tile
+    /// buffer write) completed — the whole-frame pipelined world's
+    /// admission trigger for that unit's first passes.
+    FetchDone { unit: usize },
     /// Generic scheduler wakeup.
     Wakeup,
 }

@@ -25,6 +25,13 @@ impl SimStats {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Raise a named counter to at least `value` (for peak-style stats
+    /// that must not add when merging runs).
+    pub fn set_counter_max(&mut self, name: &str, value: u64) {
+        let e = self.counters.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(value);
+    }
+
     /// Add energy (J) in a named category.
     pub fn energy(&mut self, category: &str, joules: f64) {
         *self.energy_j.entry(category.to_string()).or_insert(0.0) += joules;

@@ -1,0 +1,314 @@
+//! Paper-conformance regression suite (tier-1).
+//!
+//! The Fig. 7 / Table II claims used to be asserted only inside `cargo
+//! bench` targets, so `cargo test` could pass while a refactor silently
+//! drifted the reproduction away from the paper. This suite pins them as
+//! plain tests:
+//!
+//! * **Fig. 7(a)/(b) orderings** — both OXBNN variants beat ROBIN_EO,
+//!   ROBIN_PO and LIGHTBULB on FPS and FPS/W on *every* evaluation BNN.
+//! * **Fig. 7 gmean ratios** — pinned against the values this
+//!   reproduction measures (recorded below next to the paper's quoted
+//!   numbers), with ±25% drift tolerance. The reproduction preserves the
+//!   paper's ordering story but not its exact magnitudes (the paper's
+//!   per-device constants are not all published; DESIGN.md lists the
+//!   calibration constants used here), so the pins are against *our*
+//!   measured baseline: the suite catches regressions of this codebase,
+//!   not disagreement with the paper's lab.
+//! * **Table II shapes** — solver N matches the paper on ≥ 6 of 7 rows,
+//!   N is non-increasing in DR, α = ⌊γ/N⌋.
+//! * **Event-domain conformance** — the transaction-level simulator
+//!   upholds the same claims under BOTH execution modes: sequential
+//!   per-layer event spaces and the whole-frame pipelined event space.
+
+use oxbnn::analysis::pca_capacity::PAPER_TABLE2;
+use oxbnn::analysis::scalability::ScalabilitySolver;
+use oxbnn::api::{analytic_report, BackendKind, Report, Session};
+use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use oxbnn::arch::perf::gmean;
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::workloads::Workload;
+
+/// Accelerator names in `evaluation_set` order.
+const NAMES: [&str; 5] = ["OXBNN_5", "OXBNN_50", "ROBIN_EO", "ROBIN_PO", "LIGHTBULB"];
+
+/// Fig. 7 metric grid: per accelerator, the four per-workload values.
+fn fig7_grid(metric: impl Fn(&Report) -> f64) -> Vec<(String, Vec<f64>)> {
+    let workloads = Workload::evaluation_set();
+    AcceleratorConfig::evaluation_set()
+        .into_iter()
+        .map(|a| {
+            let row = workloads
+                .iter()
+                .map(|w| metric(&analytic_report(&a, w)))
+                .collect();
+            (a.name.clone(), row)
+        })
+        .collect()
+}
+
+fn row<'a>(grid: &'a [(String, Vec<f64>)], name: &str) -> &'a [f64] {
+    &grid
+        .iter()
+        .find(|(n, _)| n.as_str() == name)
+        .expect("known accelerator")
+        .1
+}
+
+/// Gmean of the per-workload ratios a/b (the Fig. 7 "gmean speedup" rows).
+fn gmean_ratio(grid: &[(String, Vec<f64>)], a: &str, b: &str) -> f64 {
+    let ra = row(grid, a);
+    let rb = row(grid, b);
+    gmean(&ra.iter().zip(rb).map(|(x, y)| x / y).collect::<Vec<f64>>())
+}
+
+fn assert_within(measured: f64, pinned: f64, rel_tol: f64, what: &str) {
+    let rel = (measured - pinned).abs() / pinned;
+    assert!(
+        rel <= rel_tol,
+        "{}: measured {:.3} vs pinned {:.3} (drift {:.1}% > {:.0}%)",
+        what,
+        measured,
+        pinned,
+        rel * 100.0,
+        rel_tol * 100.0
+    );
+}
+
+#[test]
+fn fig7_oxbnn_beats_every_baseline_on_every_workload() {
+    for (metric_name, grid) in [
+        ("FPS", fig7_grid(|r| r.fps)),
+        ("FPS/W", fig7_grid(|r| r.fps_per_w)),
+    ] {
+        for ox in ["OXBNN_5", "OXBNN_50"] {
+            for base in ["ROBIN_EO", "ROBIN_PO", "LIGHTBULB"] {
+                for (i, (o, b)) in
+                    row(&grid, ox).iter().zip(row(&grid, base)).enumerate()
+                {
+                    assert!(
+                        o > b,
+                        "{}: {} must beat {} on workload #{} ({} vs {})",
+                        metric_name,
+                        ox,
+                        base,
+                        i,
+                        o,
+                        b
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fig7_fps_gmean_speedups_pinned() {
+    let grid = fig7_grid(|r| r.fps);
+    // (a, b, this reproduction's measured gmean, paper's quoted gmean).
+    // The pin is our measured baseline; the paper column documents the
+    // target the ordering story comes from.
+    for (a, b, pinned, _paper) in [
+        ("OXBNN_50", "ROBIN_EO", 92.99, "62x"),
+        ("OXBNN_50", "ROBIN_PO", 87.87, "8x"),
+        ("OXBNN_50", "LIGHTBULB", 39.75, "7x"),
+        ("OXBNN_5", "ROBIN_EO", 8.42, "54x"),
+        ("OXBNN_5", "ROBIN_PO", 7.96, "7x"),
+        ("OXBNN_5", "LIGHTBULB", 3.60, "16x"),
+    ] {
+        let measured = gmean_ratio(&grid, a, b);
+        assert_within(measured, pinned, 0.25, &format!("FPS gmean {}/{}", a, b));
+    }
+}
+
+#[test]
+fn fig7_fpsw_gmean_ratios_pinned() {
+    let grid = fig7_grid(|r| r.fps_per_w);
+    for (a, b, pinned, _paper) in [
+        ("OXBNN_5", "ROBIN_EO", 50.29, "6.8x"),
+        ("OXBNN_5", "ROBIN_PO", 15.34, "7.6x"),
+        ("OXBNN_5", "LIGHTBULB", 25.97, "2.14x"),
+        ("OXBNN_50", "ROBIN_EO", 56.65, "4.9x"),
+        ("OXBNN_50", "ROBIN_PO", 17.28, "5.5x"),
+        ("OXBNN_50", "LIGHTBULB", 29.26, "1.5x"),
+    ] {
+        let measured = gmean_ratio(&grid, a, b);
+        assert_within(measured, pinned, 0.25, &format!("FPS/W gmean {}/{}", a, b));
+    }
+}
+
+#[test]
+fn fig7_absolute_gmeans_pinned() {
+    // Coarser pins (×/÷1.5) on the per-accelerator gmean magnitudes: a
+    // uniform scale error (e.g. a broken τ or static-power term) shifts
+    // every ratio equally and would slip past the ratio pins.
+    let fps = fig7_grid(|r| r.fps);
+    let fpsw = fig7_grid(|r| r.fps_per_w);
+    for (name, fps_pin, fpsw_pin) in [
+        ("OXBNN_5", 42_702.0, 6_876.0),
+        ("OXBNN_50", 471_497.0, 7_745.0),
+        ("ROBIN_EO", 5_071.0, 136.7),
+        ("ROBIN_PO", 5_366.0, 448.3),
+        ("LIGHTBULB", 11_862.0, 264.7),
+    ] {
+        for (grid, pin, metric) in
+            [(&fps, fps_pin, "gmean FPS"), (&fpsw, fpsw_pin, "gmean FPS/W")]
+        {
+            let measured = gmean(row(grid, name));
+            let lo = pin / 1.5;
+            let hi = pin * 1.5;
+            assert!(
+                measured >= lo && measured <= hi,
+                "{} {}: measured {:.1} outside pinned [{:.1}, {:.1}]",
+                name,
+                metric,
+                measured,
+                lo,
+                hi
+            );
+        }
+    }
+    assert_eq!(fps.len(), NAMES.len());
+}
+
+#[test]
+fn table2_scalability_shapes_match_paper() {
+    let solver = ScalabilitySolver::default();
+    let rows = solver.table2();
+    assert_eq!(rows.len(), PAPER_TABLE2.len());
+    let mut n_exact = 0;
+    let mut last_n = usize::MAX;
+    let mut last_p = f64::NEG_INFINITY;
+    for (row, &(dr, p_paper, n_paper, gamma_paper, alpha_paper)) in
+        rows.iter().zip(PAPER_TABLE2.iter())
+    {
+        assert_eq!(row.dr_gsps, dr);
+        if row.n == n_paper {
+            n_exact += 1;
+        }
+        // Scalability trade-off shapes (Eqs. 3–5): higher DR relaxes the
+        // PD sensitivity floor and shrinks the feasible XPE size.
+        assert!(row.n <= last_n, "N must be non-increasing in DR");
+        assert!(
+            row.p_pd_opt_dbm >= last_p - 1e-9,
+            "P_PD-opt must relax (grow) with DR"
+        );
+        assert!(
+            (row.p_pd_opt_dbm - p_paper).abs() < 1.0,
+            "DR {}: P_PD-opt {:.2} dBm vs paper {:.2}",
+            dr,
+            row.p_pd_opt_dbm,
+            p_paper
+        );
+        // α = ⌊γ/N⌋ consistency against the paper's own γ column.
+        assert_eq!(gamma_paper / n_paper as u64, alpha_paper, "DR {}", dr);
+        assert_eq!(row.alpha, row.gamma / row.n as u64, "DR {}", dr);
+        last_n = row.n;
+        last_p = row.p_pd_opt_dbm;
+    }
+    assert!(
+        n_exact >= 6,
+        "Table II N reproduction regressed: {}/{} rows exact",
+        n_exact,
+        rows.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Event-domain conformance, sequential AND pipelined
+// ---------------------------------------------------------------------------
+
+/// Scaled-down OXBNN (PCA) and ROBIN-style (psum-reduction) configs the
+/// event simulator can sweep in test time.
+fn small_pca() -> AcceleratorConfig {
+    let mut cfg = AcceleratorConfig::oxbnn_5();
+    cfg.n = 9;
+    cfg.xpe_total = 18;
+    cfg
+}
+
+fn small_reduction() -> AcceleratorConfig {
+    let mut cfg = small_pca();
+    cfg.name = "SMALL_RED".into();
+    cfg.bitcount = BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+    cfg.energy = oxbnn::energy::power::EnergyModel::robin();
+    cfg
+}
+
+fn tiny_workload() -> Workload {
+    Workload::new(
+        "tiny_conformance",
+        vec![
+            GemmLayer::new("c1", 16, 243, 8),
+            GemmLayer::new("c2", 16, 288, 8).with_pool(),
+            GemmLayer::fc("fc", 512, 10),
+        ],
+    )
+}
+
+fn event_report(cfg: &AcceleratorConfig, batch: usize, pipelined: bool) -> Report {
+    Session::builder()
+        .accelerator(cfg.clone())
+        .workload(tiny_workload())
+        .backend(BackendKind::Event)
+        .batch(batch)
+        .pipeline(pipelined)
+        .build()
+        .expect("event conformance session")
+        .run()
+}
+
+#[test]
+fn event_domain_claims_hold_sequential_and_pipelined() {
+    let wl = tiny_workload();
+    let expect_passes: u64 =
+        wl.layers.iter().map(|l| l.total_passes(9) as u64).sum();
+    for pipelined in [false, true] {
+        let mode = if pipelined { "pipelined" } else { "sequential" };
+        let pca = event_report(&small_pca(), 1, pipelined);
+        let red = event_report(&small_reduction(), 1, pipelined);
+        // Transaction conservation and the paper's psum headline.
+        assert_eq!(pca.passes, expect_passes, "{}: PCA pass count", mode);
+        assert_eq!(red.passes, expect_passes, "{}: reduction pass count", mode);
+        assert_eq!(pca.psums, 0, "{}: PCA emits no electrical psums", mode);
+        assert!(red.psums > 0, "{}: reduction must pay the psum path", mode);
+        // Fig. 5/7 story in the event domain: the PCA design is faster and
+        // cheaper on the same fabric.
+        assert!(
+            pca.frame_latency_s < red.frame_latency_s,
+            "{}: PCA {} vs reduction {}",
+            mode,
+            pca.frame_latency_s,
+            red.frame_latency_s
+        );
+        assert!(
+            pca.dynamic_energy_per_frame_j < red.dynamic_energy_per_frame_j,
+            "{}: PCA energy must be lower",
+            mode
+        );
+        // No modeling-error clamps in either event space.
+        for r in [&pca, &red] {
+            let clamped: u64 =
+                r.layers.iter().map(|l| l.counter("clamped_events")).sum();
+            assert_eq!(clamped, 0, "{}: past-time scheduling clamps", mode);
+        }
+    }
+}
+
+#[test]
+fn event_pipelined_mode_agrees_with_sequential_and_wins_batched() {
+    let seq = event_report(&small_pca(), 4, false);
+    let pipe = event_report(&small_pca(), 4, true);
+    // Same per-frame transaction multiset either way.
+    assert_eq!(pipe.passes, seq.passes);
+    assert_eq!(pipe.psums, seq.psums);
+    // Cross-layer overlap: first frame no slower; multi-frame overlap:
+    // batched throughput strictly better than the sequential multiply.
+    assert!(pipe.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9));
+    assert!(
+        pipe.batched_fps() > seq.batched_fps(),
+        "pipelined batched FPS {} must beat sequential {}",
+        pipe.batched_fps(),
+        seq.batched_fps()
+    );
+}

@@ -5,13 +5,15 @@ use oxbnn::analysis::pca_capacity::{alpha, gamma_calibrated};
 use oxbnn::analysis::scalability::ScalabilitySolver;
 use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use oxbnn::arch::perf::layer_perf;
+use oxbnn::arch::workload_sim::{simulate_frame_planned, simulate_frames_pipelined};
 use oxbnn::coordinator::Batcher;
 use oxbnn::coordinator::Router;
 use oxbnn::mapping::layer::GemmLayer;
 use oxbnn::mapping::scheduler::MappingPolicy;
-use oxbnn::plan::{LayerPlan, PassStream};
+use oxbnn::plan::{ExecutionPlan, LayerPlan, PassStream};
 use oxbnn::util::json::Json;
 use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+use oxbnn::workloads::Workload;
 
 /// The PR-3 tentpole invariant: for random layers, geometries and both
 /// mapping policies, the streaming `LayerPlan`/`PassStream` enumerates
@@ -62,6 +64,128 @@ fn prop_stream_matches_materialized_schedule() {
         prop_assert_eq(streamed_total, sched.total_passes())?;
         prop_assert(stream.all_issued(), "all_issued after full drain")?;
         prop_assert_eq(plan.max_queue_len(), sched.max_queue_len())
+    });
+}
+
+/// The PR-4 tentpole invariants. For random accelerator geometries,
+/// workloads, bitcount modes and mapping policies:
+///
+/// 1. **Conservation** — the whole-frame pipelined event space executes
+///    exactly the per-layer transaction multiset of the sequential path.
+///    Both paths stream the same compiled per-XPE queues, so equality of
+///    the per-layer pass/readout/activation/psum counts (checked per
+///    frame-0 unit AND as whole-run totals) pins the full multiset.
+/// 2. **No slower** — cross-layer overlap can only shorten a frame:
+///    pipelined single-frame latency ≤ sequential frame latency, with
+///    zero past-time clamps in either space.
+#[test]
+fn prop_pipelined_whole_frame_conserves_and_is_no_slower() {
+    forall(Config::default().cases(30), |g| {
+        let n_layers = g.usize_in(1, 3);
+        let layers: Vec<GemmLayer> = (0..n_layers)
+            .map(|i| {
+                let h = g.usize_in(1, 10);
+                let s = g.usize_in(1, 120);
+                let k = g.usize_in(1, 5);
+                GemmLayer::new(format!("l{}", i), h, s, k)
+            })
+            .collect();
+        let wl = Workload::new("prop_pipe", layers);
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = g.usize_in(2, 24);
+        cfg.xpe_total = g.usize_in(2, 20);
+        let policy;
+        if g.bool() {
+            // Healthy gamma: saturation dynamics are covered by their own
+            // unit tests; this property pins scheduling, not clamping.
+            cfg.bitcount = BitcountMode::Pca { gamma: 1 << 20 };
+            policy = if g.bool() {
+                MappingPolicy::PcaLocal
+            } else {
+                MappingPolicy::SlicedSpread
+            };
+        } else {
+            cfg.bitcount =
+                BitcountMode::Reduction { latency_s: 3.125e-9, psum_bits: 16 };
+            cfg.energy = oxbnn::energy::power::EnergyModel::robin();
+            policy = MappingPolicy::SlicedSpread;
+        }
+        let plan = ExecutionPlan::compile(&cfg, &wl, policy);
+        let seq = simulate_frame_planned(&plan);
+        let pipe = simulate_frames_pipelined(&plan, 1);
+
+        // Whole-run conservation.
+        for key in ["passes", "pca_readouts", "activations", "psums"] {
+            prop_assert_eq(pipe.stats.counter(key), seq.stats.counter(key))?;
+        }
+        // Per-layer conservation (frame-0 units vs per-layer plans).
+        for (lt, lp) in pipe.layers.iter().zip(&plan.layers) {
+            prop_assert_eq(lt.passes, lp.total_passes() as u64)?;
+            prop_assert_eq(lt.activations, lp.vdp_count() as u64)?;
+        }
+        // Zero modeling-error clamps in either event space.
+        prop_assert_eq(pipe.stats.counter("clamped_events"), 0)?;
+        prop_assert_eq(seq.stats.counter("clamped_events"), 0)?;
+        // Cross-layer overlap never hurts the frame.
+        prop_assert(
+            pipe.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9),
+            &format!(
+                "pipelined frame {} slower than sequential {}",
+                pipe.frame_latency_s, seq.frame_latency_s
+            ),
+        )
+    });
+}
+
+/// Multi-frame pipelining: for random geometries, an N-frame pipelined
+/// batch conserves N× the per-frame transactions and never exceeds the
+/// sequential `N · frame` multiply (it strictly beats it whenever the
+/// workload leaves XPEs idle, which the dedicated tests and bench pin).
+#[test]
+fn prop_pipelined_batch_conserves_and_never_exceeds_multiply() {
+    forall(Config::default().cases(20), |g| {
+        let layers: Vec<GemmLayer> = (0..g.usize_in(1, 3))
+            .map(|i| {
+                GemmLayer::new(
+                    format!("l{}", i),
+                    g.usize_in(1, 8),
+                    g.usize_in(1, 90),
+                    g.usize_in(1, 4),
+                )
+            })
+            .collect();
+        let wl = Workload::new("prop_batch", layers);
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = g.usize_in(2, 16);
+        cfg.xpe_total = g.usize_in(2, 12);
+        cfg.bitcount = BitcountMode::Pca { gamma: 1 << 20 };
+        let frames = g.usize_in(2, 4);
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let seq = simulate_frame_planned(&plan);
+        let pipe = simulate_frames_pipelined(&plan, frames);
+        prop_assert_eq(
+            pipe.stats.counter("passes"),
+            frames as u64 * seq.stats.counter("passes"),
+        )?;
+        prop_assert_eq(
+            pipe.stats.counter("activations"),
+            frames as u64 * seq.stats.counter("activations"),
+        )?;
+        prop_assert_eq(pipe.stats.counter("clamped_events"), 0)?;
+        prop_assert(
+            pipe.batch_latency_s
+                <= frames as f64 * seq.frame_latency_s * (1.0 + 1e-9),
+            &format!(
+                "pipelined batch {} exceeds sequential multiply {}",
+                pipe.batch_latency_s,
+                frames as f64 * seq.frame_latency_s
+            ),
+        )?;
+        // Frames drain in order under frame-major priority.
+        for w in pipe.frame_done_s.windows(2) {
+            prop_assert(w[1] >= w[0] - 1e-12, "frame completions out of order")?;
+        }
+        Ok(())
     });
 }
 

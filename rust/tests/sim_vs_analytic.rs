@@ -231,6 +231,64 @@ fn full_multilayer_workload_event_vs_analytic_at_scale() {
 }
 
 #[test]
+fn plan_aware_analytic_narrows_error_on_unbalanced_fc_tail() {
+    // PR-4 satellite: the planless analytic model assumes perfect per-XPE
+    // balance (`ceil(passes / XPEs)`), which overestimates FPS when a
+    // small FC tail leaves most XPEs idle (10 VDPs on 18 XPEs: one XPE
+    // serializes a whole VDP's slices). The plan-aware Session path reads
+    // the compiled per-XPE queues and must land closer to the event
+    // simulator on an FC-dominated workload.
+    let cfg = small(true, 9, 18);
+    let wl = Workload::new(
+        "fc_tail_stack",
+        vec![
+            GemmLayer::new("c1", 36, 243, 8), // 288 VDPs × 27 slices, balanced
+            GemmLayer::fc("fc1", 4096, 10),   // 10 VDPs × 456 slices, unbalanced
+            GemmLayer::fc("fc2", 2048, 10),   // 10 VDPs × 228 slices, unbalanced
+        ],
+    );
+    let naive = oxbnn::arch::perf::workload_perf(&cfg, &wl);
+    let run = |kind| {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(kind)
+            .build()
+            .expect("fc tail session")
+            .run()
+    };
+    let plan_aware = run(BackendKind::Analytic);
+    let event = run(BackendKind::Event);
+
+    // Same transactions everywhere; the disagreement is purely timing.
+    assert_eq!(plan_aware.passes, event.passes);
+    let fps_err = |fps: f64| (fps - event.fps).abs() / event.fps;
+    let err_naive = fps_err(1.0 / naive.frame_latency_s);
+    let err_plan = fps_err(plan_aware.fps);
+    assert!(
+        err_plan < err_naive,
+        "per-XPE imbalance correction must narrow the FPS error: \
+         plan-aware {:.4} vs naive {:.4} (event {:.1} FPS)",
+        err_plan,
+        err_naive,
+        event.fps
+    );
+    assert!(
+        err_plan < 0.10,
+        "plan-aware analytic still off by {:.3} from the event sim",
+        err_plan
+    );
+    // The correction matters on this workload: the naive model is
+    // measurably optimistic (it under-reports the serialized FC tails).
+    assert!(
+        naive.frame_latency_s < event.frame_latency_s,
+        "naive {} vs event {}",
+        naive.frame_latency_s,
+        event.frame_latency_s
+    );
+}
+
+#[test]
 fn fig5_mapping_gap_grows_with_slices() {
     // The more slices per VDP, the bigger the PCA's advantage over the
     // psum-reduction design — the core Fig. 5 story.
