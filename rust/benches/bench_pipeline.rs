@@ -1,18 +1,21 @@
 //! Whole-frame pipelined event space vs the sequential `with_batch`
-//! multiply (the PR-4 perf trajectory): batched FPS, XPE idle fraction,
-//! and the conservation gates that make the speedup honest — identical
-//! PASS/readout counts and zero past-time clamps. Emits
-//! `BENCH_pipeline.json` (path overridable via `OXBNN_BENCH_OUT`) so CI
-//! can track the numbers over time.
+//! multiply, and receptive-field-EXACT admission vs the legacy 12.5%
+//! raster halo (the ISSUE-5 differential): batched FPS, XPE idle
+//! fraction, wake-index dispatch counts, and the conservation gates that
+//! make the speedups honest — identical PASS/readout counts and zero
+//! past-time clamps. Emits `BENCH_pipeline.json` (path overridable via
+//! `OXBNN_BENCH_OUT`) so CI can track the numbers over time.
 //!
 //! Run: `cargo bench --bench bench_pipeline`
 //! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_pipeline`
 
 use oxbnn::api::{BackendKind, Report, Session};
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::workload_sim::simulate_frames_pipelined;
-use oxbnn::mapping::layer::GemmLayer;
-use oxbnn::plan::ExecutionPlan;
+use oxbnn::arch::workload_sim::{
+    simulate_frames_pipelined, simulate_frames_pipelined_admission,
+};
+use oxbnn::mapping::layer::{ConvGeom, GemmLayer};
+use oxbnn::plan::{AdmissionMode, ExecutionPlan};
 use oxbnn::util::bench::{fmt_secs, Bencher, Table};
 use oxbnn::util::json::Json;
 use oxbnn::workloads::Workload;
@@ -21,25 +24,29 @@ fn main() {
     let fast = std::env::var("OXBNN_BENCH_FAST").is_ok();
     let frames: usize = if fast { 4 } else { 8 };
 
-    // Scaled-down OXBNN (N = 9, 18 XPEs) on a VGG-family conv stack with a
-    // deliberately unbalanced FC tail: the tail strands most XPEs idle,
-    // which is exactly the gap multi-frame pipelining exists to fill.
+    // Scaled-down OXBNN (N = 9, 18 XPEs) on a VGG-style conv stack — the
+    // Fig. 7 conv-workload stand-in: same-map 3×3 stride-1 windows (the
+    // geometry class every Fig. 7 BNN's conv spine is built from) with
+    // chain-consistent `ConvGeom`, feeding a deliberately unbalanced FC
+    // tail that strands most XPEs idle — exactly the gap multi-frame
+    // pipelining exists to fill.
     let mut cfg = AcceleratorConfig::oxbnn_5();
     cfg.n = 9;
     cfg.xpe_total = 18;
-    let scale = if fast { 2 } else { 1 };
+    let w: usize = if fast { 12 } else { 16 };
+    let (k3, k4) = if fast { (8, 8) } else { (16, 16) };
     let wl = Workload::new(
         "vgg_crop_pipeline",
         vec![
-            GemmLayer::new("conv2", 144 / scale, 1152, 8),
-            GemmLayer::new("conv3", 72 / scale, 1152, 16),
-            GemmLayer::new("conv4", 36 / scale, 2304, 32),
+            GemmLayer::new("conv2", w * w, 1152, 8).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::new("conv3", w * w, 1152, k3).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::new("conv4", w * w, 2304, k4).with_geom(ConvGeom::new(3, 1, 1, w)),
             GemmLayer::fc("fc", 2048, 10),
         ],
     );
     println!(
-        "pipeline bench — {} frames of {} on {} ({} XPEs)\n",
-        frames, wl.name, cfg.name, cfg.xpe_total
+        "pipeline bench — {} frames of {} ({}×{} maps) on {} ({} XPEs)\n",
+        frames, wl.name, w, w, cfg.name, cfg.xpe_total
     );
 
     let session = |pipelined: bool| -> Report {
@@ -60,10 +67,15 @@ fn main() {
     let seq = session(false);
     let pipe = session(true);
 
-    // The raw pipelined trace carries the idle-fraction and event-space
-    // shape metrics the report doesn't.
+    // The raw pipelined traces carry the idle-fraction / wake-index /
+    // admission-mode metrics the report doesn't.
     let plan = ExecutionPlan::compile(&cfg, &wl, oxbnn::api::default_policy(&cfg));
     let trace = simulate_frames_pipelined(&plan, frames);
+    let halo_trace = simulate_frames_pipelined_admission(
+        &plan,
+        frames,
+        AdmissionMode::RasterHalo(0.125),
+    );
     let tau = cfg.tau_s();
     let total_xpes = plan.layers[0].total_xpes();
     // Sequential idle fraction from first principles: the same photonic
@@ -71,7 +83,10 @@ fn main() {
     let busy_total = seq.passes as f64 * frames as f64 * tau;
     let seq_idle = 1.0 - busy_total / (total_xpes as f64 * seq.batch_latency_s);
     let pipe_idle = trace.xpe_idle_fraction();
+    let idle_delta = seq_idle - pipe_idle;
     let speedup = pipe.batched_fps() / seq.batched_fps();
+    let exact_fps = trace.fps();
+    let halo_fps = halo_trace.fps();
 
     let count = |r: &Report, key: &str| -> u64 {
         r.layers.iter().map(|l| l.counter(key)).sum()
@@ -117,15 +132,27 @@ fn main() {
     ]);
     t.print();
     println!(
-        "\npipelined batched FPS speedup: {:.2}x (idle {:.1}% → {:.1}%)",
+        "\npipelined batched FPS speedup: {:.2}x (idle {:.1}% → {:.1}%, Δ {:.1} pts)",
         speedup,
         100.0 * seq_idle,
-        100.0 * pipe_idle
+        100.0 * pipe_idle,
+        100.0 * idle_delta
+    );
+    println!(
+        "admission: exact {:.1} FPS vs 12.5% halo {:.1} FPS ({:+.2}%); \
+         {} wake dispatches over {} activations",
+        exact_fps,
+        halo_fps,
+        100.0 * (exact_fps / halo_fps - 1.0),
+        trace.stats.counter("wake_dispatches"),
+        trace.stats.counter("activations"),
     );
 
-    // Acceptance gates (ISSUE 4): the pipelined speedup must be real AND
-    // conservative — strictly higher batched FPS with the exact same
-    // transaction multiset and no past-time clamps.
+    // Acceptance gates (ISSUE 4 + ISSUE 5): the pipelined speedup must be
+    // real AND conservative — strictly higher batched FPS with the exact
+    // same transaction multiset and no past-time clamps — and exact
+    // receptive-field admission must not lose throughput to the halo
+    // guess on this Fig. 7-style conv workload.
     assert!(
         pipe.batched_fps() > seq.batched_fps(),
         "pipelined batched FPS {} must strictly beat sequential {}",
@@ -140,6 +167,22 @@ fn main() {
         "whole-batch PASS conservation"
     );
     assert_eq!(trace.stats.counter("clamped_events"), 0, "no past-time clamps");
+    assert_eq!(
+        halo_trace.stats.counter("clamped_events"),
+        0,
+        "no past-time clamps (halo differential)"
+    );
+    assert_eq!(
+        halo_trace.stats.counter("passes"),
+        trace.stats.counter("passes"),
+        "admission mode must not change the transaction multiset"
+    );
+    assert!(
+        exact_fps >= halo_fps * (1.0 - 1e-9),
+        "exact admission {} FPS must not lose to the halo guess {} FPS",
+        exact_fps,
+        halo_fps
+    );
     assert!(
         pipe_idle < seq_idle,
         "pipelining must reduce XPE idle time ({:.3} vs {:.3})",
@@ -155,12 +198,20 @@ fn main() {
         ("sequential_batched_fps", Json::Num(seq.batched_fps())),
         ("pipelined_batched_fps", Json::Num(pipe.batched_fps())),
         ("speedup", Json::Num(speedup)),
+        ("exact_admission_fps", Json::Num(exact_fps)),
+        ("halo_admission_fps", Json::Num(halo_fps)),
+        ("exact_over_halo", Json::Num(exact_fps / halo_fps)),
         ("sequential_batch_latency_s", Json::Num(seq.batch_latency_s)),
         ("pipelined_batch_latency_s", Json::Num(pipe.batch_latency_s)),
         ("sequential_frame_latency_s", Json::Num(seq.frame_latency_s)),
         ("pipelined_frame_latency_s", Json::Num(pipe.frame_latency_s)),
         ("sequential_xpe_idle_fraction", Json::Num(seq_idle)),
         ("pipelined_xpe_idle_fraction", Json::Num(pipe_idle)),
+        ("idle_fraction_delta", Json::Num(idle_delta)),
+        (
+            "wake_dispatches",
+            Json::Num(trace.stats.counter("wake_dispatches") as f64),
+        ),
         ("passes_per_frame", Json::Num(seq.passes as f64)),
         (
             "peak_pending_events",

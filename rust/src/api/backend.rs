@@ -206,6 +206,44 @@ impl Backend for AnalyticBackend {
     fn run_planned(&mut self, plan: &ExecutionPlan) -> Report {
         plan_aware_report(self, plan)
     }
+
+    /// Pipelined batches get a closed-form overlap estimate driven by the
+    /// plan's **exact admission thresholds** ([`FramePlan::need_acts`]):
+    /// layer `l` starts once the receptive-field prefix of layer `l−1` has
+    /// drained (its activations taken as draining uniformly over the
+    /// layer's span), and in steady state the batch completes one frame
+    /// per bottleneck-layer latency. Optimistic on memory-bound chains
+    /// (the shared fetch channel is not serialized here) — the event
+    /// backend remains the reference; `sim_vs_analytic.rs` pins the gap.
+    ///
+    /// [`FramePlan::need_acts`]: crate::plan::FramePlan::need_acts
+    fn run_planned_batched(
+        &mut self,
+        plan: &ExecutionPlan,
+        batch: usize,
+        pipelined: bool,
+    ) -> Report {
+        let report = plan_aware_report(self, plan);
+        if !pipelined {
+            return report.with_batch(batch);
+        }
+        let fp = crate::plan::FramePlan::new(plan, 1);
+        let mut start = 0.0_f64;
+        let mut end = 0.0_f64;
+        let mut bottleneck = 0.0_f64;
+        for (l, lr) in report.layers.iter().enumerate() {
+            if l > 0 {
+                let produced = plan.layers[l - 1].vdp_count() as f64;
+                let frac = fp.need_acts(l, 0) as f64 / produced;
+                start += frac * report.layers[l - 1].latency_s;
+            }
+            end = (start + lr.latency_s).max(end);
+            bottleneck = bottleneck.max(lr.latency_s);
+        }
+        let frame = end;
+        let makespan = frame + (batch - 1) as f64 * bottleneck;
+        report.with_pipelined_batch(batch, frame, makespan)
+    }
 }
 
 /// The shared plan-aware evaluation for backends whose timing is the

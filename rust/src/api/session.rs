@@ -61,7 +61,7 @@ pub struct SessionBuilder {
     backend: BackendChoice,
     policy: Option<MappingPolicy>,
     batch: usize,
-    pipeline: bool,
+    pipeline: Option<bool>,
     plan_cache: Option<Arc<PlanCache>>,
 }
 
@@ -121,11 +121,20 @@ impl SessionBuilder {
 
     /// Run the batch through the whole-frame pipelined event space
     /// (cross-layer + multi-frame overlap) instead of multiplying one
-    /// frame's latency. Honored by the event backend; backends without a
-    /// frame-overlap model fall back to the sequential multiply. Default
-    /// off.
+    /// frame's latency. Honored by the event backend (exact
+    /// receptive-field admission) and the analytic backend (closed-form
+    /// overlap estimate from the same exact thresholds); backends without
+    /// a frame-overlap model fall back to the sequential multiply.
+    ///
+    /// **Default: pipelined whenever `batch > 1`** (single frames have
+    /// nothing to overlap with, and the cross-layer path is covered by the
+    /// conformance suite). Call `.pipeline(false)` to opt out; the
+    /// `OXBNN_PIPELINE` environment variable pins the unset *batched*
+    /// default (`1` = pipelined, `0` = sequential multiply; batch-1
+    /// sessions stay sequential either way) — the CI admission matrix
+    /// runs both modes through it.
     pub fn pipeline(mut self, pipeline: bool) -> Self {
-        self.pipeline = pipeline;
+        self.pipeline = Some(pipeline);
         self
     }
 
@@ -171,15 +180,37 @@ impl SessionBuilder {
         let plan_cache = self
             .plan_cache
             .unwrap_or_else(|| Arc::new(PlanCache::default()));
+        let pipeline = self
+            .pipeline
+            .unwrap_or_else(|| default_pipeline(self.batch));
         Ok(Session {
             accelerator,
             workload,
             backend,
             policy,
             batch: self.batch,
-            pipeline: self.pipeline,
+            pipeline,
             plan_cache,
         })
+    }
+}
+
+/// The pipelined-by-default rule for batches: pipelined whenever the
+/// session evaluates more than one frame. `OXBNN_PIPELINE` pins the
+/// *batched* default for the CI admission matrix (`1` = the pipelined
+/// default, `0` = the sequential multiply); single frames stay
+/// sequential either way — there is nothing to overlap, and the override
+/// must not change batch-1 semantics between matrix legs.
+fn default_pipeline(batch: usize) -> bool {
+    match std::env::var("OXBNN_PIPELINE").ok().as_deref() {
+        Some("1") | Some("true") | Some("on") | None => batch > 1,
+        Some("0") | Some("false") | Some("off") => false,
+        // A misspelt override silently collapsing both CI matrix legs onto
+        // the same default would defeat the matrix — fail loudly instead.
+        Some(other) => panic!(
+            "OXBNN_PIPELINE must be 1/true/on or 0/false/off, got '{}'",
+            other
+        ),
     }
 }
 
@@ -204,7 +235,7 @@ impl Session {
             backend: BackendChoice::Kind(BackendKind::Analytic),
             policy: None,
             batch: 1,
-            pipeline: false,
+            pipeline: None,
             plan_cache: None,
         }
     }

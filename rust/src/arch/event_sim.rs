@@ -365,6 +365,10 @@ pub struct UnitState {
 ///   frame index, so frame `f+1`'s early layers stream into XPEs idled by
 ///   frame `f`'s tail. XPEs prefer work in frame-major unit order, so an
 ///   older frame is never starved by a newer one.
+/// * **O(woken) wake-ups** — an XPE blocked on admission parks itself in
+///   the stream's wake index under its head-pass threshold; each
+///   activation drain pops exactly the waiters it admits instead of
+///   re-dispatching every idle XPE.
 ///
 /// Shared hardware stays shared: one memory channel serializes operand
 /// fetches (double-buffered: a unit's fetch is requested when its
@@ -392,10 +396,28 @@ pub struct FrameWorld<'a> {
     ones_density: f64,
     frames_done: usize,
     frame_done_s: Vec<f64>,
+    /// Activations drained across all units, against the batch total:
+    /// under exact admission a consumer whose strided window never reads
+    /// the producer's last rows (e.g. 1×1 stride 2) can finish BEFORE its
+    /// producer fully drains, so frame completion alone must not stop the
+    /// event space while drain events are still pending — that would
+    /// silently drop them from the conservation counters.
+    acts_done_total: usize,
+    vdps_total: usize,
     n_reduction_inits: u64,
     n_reductions_done: u64,
     n_discharge_stalls: u64,
     n_saturations: u64,
+    /// Dispatches performed through the activation-drain wake index (one
+    /// per woken XPE — the satellite regression gate: an activation drain
+    /// must wake O(woken) XPEs, not re-dispatch every idle one).
+    n_wake_dispatches: u64,
+    /// When set, every admitted pass with a producer records `(unit, local
+    /// vdp, producer activations drained at issue)` — raw facts the
+    /// admission-oracle suite replays against an independent sliding-window
+    /// reference model. Off by default (one entry per pass).
+    record_admissions: bool,
+    admission_log: Vec<(u32, u32, u32)>,
 }
 
 impl<'a> FrameWorld<'a> {
@@ -448,10 +470,15 @@ impl<'a> FrameWorld<'a> {
             ones_density: 0.5,
             frames_done: 0,
             frame_done_s: vec![0.0; fp.frames()],
+            acts_done_total: 0,
+            vdps_total: (0..fp.units()).map(|u| fp.layer_plan(u).vdp_count()).sum(),
             n_reduction_inits: 0,
             n_reductions_done: 0,
             n_discharge_stalls: 0,
             n_saturations: 0,
+            n_wake_dispatches: 0,
+            record_admissions: false,
+            admission_log: Vec::new(),
         }
     }
 
@@ -478,6 +505,24 @@ impl<'a> FrameWorld<'a> {
         &self.units
     }
 
+    /// Dispatches performed through the activation-drain wake index (one
+    /// per woken XPE).
+    pub fn wake_dispatches(&self) -> u64 {
+        self.n_wake_dispatches
+    }
+
+    /// Record `(unit, local vdp, producer acts drained)` for every issued
+    /// pass with a producer — the admission-oracle replay hook.
+    pub fn record_admissions(&mut self, on: bool) {
+        self.record_admissions = on;
+    }
+
+    /// The recorded admission log (empty unless
+    /// [`FrameWorld::record_admissions`] was enabled before the run).
+    pub fn admission_log(&self) -> &[(u32, u32, u32)] {
+        &self.admission_log
+    }
+
     /// Serialize a unit's operand fetch onto the shared memory channel and
     /// schedule its readiness event. Requested once, when the predecessor
     /// unit starts computing (double-buffered staging).
@@ -495,28 +540,10 @@ impl<'a> FrameWorld<'a> {
         sched.at(ready, EventKind::FetchDone { unit: u });
     }
 
-    /// May XPE `flat`'s next pass of `unit` start now? Operands must be
-    /// staged, and for layer > 0 the producer must have drained the
-    /// activation prefix the pass's VDP reads.
-    fn admissible(&self, unit: usize, flat: usize) -> bool {
-        if !self.units[unit].fetch_done {
-            return false;
-        }
-        match self.fp.producer(unit) {
-            None => true,
-            Some(p) => {
-                let pass = self
-                    .stream
-                    .peek_for(self.fp, unit, flat)
-                    .expect("caller checked the unit is not exhausted here");
-                self.units[p].acts_done >= self.fp.need_acts(unit, pass.vdp.0)
-            }
-        }
-    }
-
     /// Find and issue the next pass for XPE `flat`: the locked (mid-VDP)
     /// unit if any, else the earliest unit in frame-major order that still
-    /// has passes for this XPE — **if** it is admissible.
+    /// has passes for this XPE — **if** its operands are staged and the
+    /// producer has drained the activation prefix the head pass reads.
     ///
     /// An XPE skips permanently *exhausted* units (that is what lets it
     /// stream into a later frame when it holds none of this frame's tail)
@@ -527,18 +554,41 @@ impl<'a> FrameWorld<'a> {
     /// instead keeps every XPE's schedule a concatenation of its unit
     /// queues in frame-major order, which is what makes "pipelined is
     /// never slower than sequential" provable (and property-tested).
+    ///
+    /// A blocked XPE does not spin: one blocked on admission parks itself
+    /// in the stream's wake index under its head-pass threshold (the
+    /// matching activation drain pops it — O(woken)); one blocked on
+    /// operand staging is woken by the unit's `FetchDone`.
     fn dispatch(&mut self, flat: usize, extra_delay: f64, sched: &mut Scheduler) {
-        let unit = match self.stream.locked(flat) {
-            Some(u) => Some(u),
-            None => {
-                self.stream.advance_first_open(self.fp, flat);
-                let next = self.stream.first_open(flat);
-                (next < self.fp.units() && self.admissible(next, flat)).then_some(next)
+        if let Some(u) = self.stream.locked(flat) {
+            self.issue(u, flat, extra_delay, sched);
+            return;
+        }
+        self.stream.advance_first_open(self.fp, flat);
+        let next = self.stream.first_open(flat);
+        if next >= self.fp.units() {
+            self.idle[flat] = true; // everything drained: idle for good
+            return;
+        }
+        if !self.units[next].fetch_done {
+            self.idle[flat] = true; // FetchDone { next } wakes us
+            return;
+        }
+        match self.fp.producer(next) {
+            None => self.issue(next, flat, extra_delay, sched),
+            Some(p) => {
+                let pass = self
+                    .stream
+                    .peek_for(self.fp, next, flat)
+                    .expect("first_open units have passes for this XPE");
+                let need = self.fp.need_acts(next, pass.vdp.0);
+                if self.units[p].acts_done >= need {
+                    self.issue(next, flat, extra_delay, sched);
+                } else {
+                    self.stream.register_waiter(next, need, flat);
+                    self.idle[flat] = true;
+                }
             }
-        };
-        match unit {
-            Some(u) => self.issue(u, flat, extra_delay, sched),
-            None => self.idle[flat] = true,
         }
     }
 
@@ -548,6 +598,15 @@ impl<'a> FrameWorld<'a> {
             .stream
             .next_for(self.fp, u, flat)
             .expect("dispatch only picks units with passes left");
+        if self.record_admissions {
+            if let Some(p) = self.fp.producer(u) {
+                self.admission_log.push((
+                    u as u32,
+                    pass.vdp.0 as u32,
+                    self.units[p].acts_done as u32,
+                ));
+            }
+        }
         if self.pca_mode && self.staged_unit[flat] != u {
             // Unit switch re-stages operands; the staging gap covers the
             // TIR discharge, so the XPE starts the unit on a fresh PCA.
@@ -587,13 +646,15 @@ impl<'a> FrameWorld<'a> {
         );
     }
 
-    /// Re-dispatch every idle XPE (admission state changed: a fetch
-    /// completed or an activation drained). `extra_delay` models the bus
-    /// hop activations take to the consumer's buffers.
-    fn wake_idle(&mut self, extra_delay: f64, sched: &mut Scheduler) {
+    /// Re-dispatch idle XPEs that are NOT parked on an admission
+    /// threshold (a fetch completion cannot advance a producer's
+    /// activation count, so parked waiters stay parked). `FetchDone`
+    /// events are rare — one per unit — so the O(idle XPEs) scan here is
+    /// cheap; the per-activation path goes through the wake index.
+    fn wake_unparked(&mut self, sched: &mut Scheduler) {
         for flat in 0..self.idle.len() {
-            if self.idle[flat] {
-                self.dispatch(flat, extra_delay, sched);
+            if self.idle[flat] && self.stream.waiting_on(flat).is_none() {
+                self.dispatch(flat, 0.0, sched);
             }
         }
     }
@@ -610,7 +671,7 @@ impl World for FrameWorld<'_> {
         match event {
             EventKind::FetchDone { unit } => {
                 self.units[*unit].fetch_done = true;
-                self.wake_idle(0.0, sched);
+                self.wake_unparked(sched);
             }
             EventKind::PassComplete { xpe, vdp, slice_idx, ones } => {
                 let (u, _local) = self.fp.unit_of_vdp(vdp.0);
@@ -696,6 +757,7 @@ impl World for FrameWorld<'_> {
                 let (u, _local) = self.fp.unit_of_vdp(vdp.0);
                 self.units[u].activations += 1;
                 self.units[u].acts_done += 1;
+                self.acts_done_total += 1;
                 let vdps = self.fp.layer_plan(u).vdp_count();
                 if self.units[u].acts_done == vdps {
                     self.units[u].done_s = sched.now();
@@ -706,16 +768,30 @@ impl World for FrameWorld<'_> {
                         self.frames_done += 1;
                     }
                 }
-                // A drained activation may admit successor passes; the bus
-                // hop carries it to the consumer's tile buffers.
-                self.wake_idle(self.cfg.peripherals.bus.latency_s, sched);
+                // A drained activation can only admit the same-frame
+                // successor's waiters: pop exactly the XPEs whose head-pass
+                // threshold is now met — O(woken), where the old path
+                // re-dispatched every idle XPE. The bus hop carries the
+                // activation to the consumer's tile buffers.
+                if self.fp.unit_layer(u) + 1 < self.fp.layers() {
+                    let acts = self.units[u].acts_done;
+                    let bus = self.cfg.peripherals.bus.latency_s;
+                    for flat in self.stream.pop_admitted(u + 1, acts) {
+                        self.n_wake_dispatches += 1;
+                        self.dispatch(flat, bus, sched);
+                    }
+                }
             }
             _ => {}
         }
     }
 
     fn done(&self) -> bool {
-        self.frames_done >= self.fp.frames()
+        // Frame completions drive the latency numbers, but the event space
+        // only closes once every unit's activations have drained — exact
+        // admission lets a consumer finish ahead of its producer's tail,
+        // and stopping there would truncate the conservation counters.
+        self.frames_done >= self.fp.frames() && self.acts_done_total >= self.vdps_total
     }
 
     fn finalize(&mut self, stats: &mut SimStats) {
@@ -736,6 +812,7 @@ impl World for FrameWorld<'_> {
         stats.count("reduction_inits", self.n_reduction_inits);
         stats.count("reductions_done", self.n_reductions_done);
         stats.count("activations", acts);
+        stats.count("wake_dispatches", self.n_wake_dispatches);
         for (category, joules) in energy_ledger(self.cfg, passes, readouts, mid, psums)
         {
             stats.energy(category, joules);

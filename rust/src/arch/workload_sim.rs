@@ -13,7 +13,7 @@
 use super::accelerator::AcceleratorConfig;
 use super::event_sim::{simulate_layer_planned, FrameWorld};
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::{ExecutionPlan, FramePlan};
+use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan};
 use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
@@ -198,11 +198,23 @@ impl PipelineTrace {
 
 /// Event-simulate `frames` back-to-back frames of a compiled plan through
 /// one whole-frame pipelined event space. Layer `l+1`'s passes start as
-/// soon as their input activation prefix has drained; frame `f+1`'s early
+/// soon as the exact receptive-field prefix of their input activations has
+/// drained ([`crate::plan::AdmissionMode::Exact`]); frame `f+1`'s early
 /// layers fill XPEs idled by frame `f`'s tail. Panics if the (generous)
 /// event budget truncates the run.
 pub fn simulate_frames_pipelined(plan: &ExecutionPlan, frames: usize) -> PipelineTrace {
-    let fp = FramePlan::new(plan, frames);
+    simulate_frames_pipelined_admission(plan, frames, AdmissionMode::Exact)
+}
+
+/// [`simulate_frames_pipelined`] under an explicit
+/// [`crate::plan::AdmissionMode`] — the halo mode exists for the
+/// exact-vs-halo differential tests and `bench_pipeline`.
+pub fn simulate_frames_pipelined_admission(
+    plan: &ExecutionPlan,
+    frames: usize,
+    admission: AdmissionMode,
+) -> PipelineTrace {
+    let fp = FramePlan::with_admission(plan, frames, admission);
     let mut world = FrameWorld::new(&plan.accelerator, &fp);
     let outcome = crate::sim::engine::run(&mut world, fp.event_budget());
     let mut stats = outcome.expect_complete(&format!(
@@ -266,19 +278,23 @@ mod tests {
     use super::*;
     use crate::api::{BackendKind, Session};
     use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
-    use crate::mapping::layer::GemmLayer;
+    use crate::mapping::layer::{ConvGeom, GemmLayer};
 
     /// Layers with >= 26 slices/VDP at N=9 so that VDP readouts arrive
     /// slower than the 5 ns TIR discharge — the regime real BNN layers
     /// occupy (ceil(S/N)·τ >> discharge). Shorter vectors make the event
     /// sim *correctly* report discharge stalls the analytic model folds
     /// away; `readout_rate_limit_visible_on_short_vectors` pins that.
+    /// The convs are 3×3 same-convs on a 4×4 map, so exact receptive-field
+    /// admission lets c2 start after c1's first two activation rows.
     fn tiny_workload() -> Workload {
         Workload::new(
             "tiny_wl",
             vec![
-                GemmLayer::new("c1", 16, 243, 8),
-                GemmLayer::new("c2", 16, 288, 8).with_pool(),
+                GemmLayer::new("c1", 16, 243, 8).with_geom(ConvGeom::new(3, 1, 1, 4)),
+                GemmLayer::new("c2", 16, 288, 8)
+                    .with_geom(ConvGeom::new(3, 1, 1, 4))
+                    .with_pool(),
                 GemmLayer::fc("fc", 512, 10),
             ],
         )

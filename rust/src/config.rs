@@ -184,12 +184,20 @@ pub fn save(
 ///   "layers": [
 ///     {"kind": "conv", "out_hw": 32, "in_channels": 3, "kernel": 3,
 ///      "out_channels": 64, "pool": true},
-///     {"kind": "depthwise", "out_hw": 16, "channels": 64, "kernel": 3},
-///     {"kind": "gemm", "h": 256, "s": 576, "k": 64},
+///     {"kind": "depthwise", "out_hw": 16, "channels": 64, "kernel": 3,
+///      "in_hw": 16},
+///     {"kind": "gemm", "h": 256, "s": 576, "k": 64,
+///      "kernel": 3, "stride": 1, "padding": 1, "in_hw": 16},
 ///     {"kind": "fc", "inputs": 1024, "outputs": 10}
 ///   ]
 /// }
 /// ```
+///
+/// Any non-FC layer may carry an explicit im2col window
+/// (`kernel`/`stride`/`padding`/`in_hw`, defaults 3/1/kernel⁄2/—) for
+/// receptive-field-exact pipelined admission; `conv` layers with odd
+/// kernels get the same-convolution window automatically. Layers without
+/// one take the conservative whole-map admission wait.
 pub fn workload_from_json_text(
     text: &str,
 ) -> Result<crate::workloads::Workload, ConfigError> {
@@ -240,6 +248,59 @@ pub fn workload_from_json_text(
             "fc" => GemmLayer::fc(lname, field("inputs")?, field("outputs")?),
             other => return Err(schema(format!("layer {}: unknown kind '{}'", i, other))),
         };
+        // Optional explicit im2col window for exact pipelined admission
+        // (overrides the same-conv window `conv` attaches automatically).
+        // Validated here so malformed user JSON reports ConfigError like
+        // every other field instead of tripping the library asserts.
+        if let Some(in_hw) = l.get("in_hw").and_then(Json::as_usize) {
+            let kernel = l.get("kernel").and_then(Json::as_usize).unwrap_or(3);
+            let stride = l.get("stride").and_then(Json::as_usize).unwrap_or(1);
+            let padding =
+                l.get("padding").and_then(Json::as_usize).unwrap_or(kernel / 2);
+            if layer.h == 1 {
+                return Err(schema(format!(
+                    "layer {} ({}): FC layers take no conv window (in_hw given)",
+                    i, kind
+                )));
+            }
+            if kernel == 0 || stride == 0 || in_hw == 0 || padding >= kernel {
+                return Err(schema(format!(
+                    "layer {} ({}): bad window (kernel {}, stride {}, padding {}, \
+                     in_hw {}) — need kernel/stride/in_hw > 0 and padding < kernel",
+                    i, kind, kernel, stride, padding, in_hw
+                )));
+            }
+            if in_hw + 2 * padding < kernel {
+                return Err(schema(format!(
+                    "layer {} ({}): kernel {} larger than the padded {}-map",
+                    i, kind, kernel, in_hw
+                )));
+            }
+            let geom = crate::mapping::layer::ConvGeom::new(kernel, stride, padding, in_hw);
+            let out = geom.out_hw();
+            // Regular convs declare their output map as H = out_hw²; the
+            // window must imply exactly that map (divisibility alone would
+            // let a stride typo silently reinterpret the raster).
+            if kind == "conv" && layer.h != out * out {
+                return Err(schema(format!(
+                    "layer {} (conv): window implies a {}×{} output map but the \
+                     layer has H = {}",
+                    i, out, out, layer.h
+                )));
+            }
+            if layer.vdp_count() % (out * out) != 0 {
+                return Err(schema(format!(
+                    "layer {} ({}): {} VDPs cannot raster the {}×{} output map \
+                     this window implies",
+                    i,
+                    kind,
+                    layer.vdp_count(),
+                    out,
+                    out
+                )));
+            }
+            layer = layer.with_geom(geom);
+        }
         if l.get("pool").and_then(Json::as_bool).unwrap_or(false) {
             layer = layer.with_pool();
         }
@@ -338,6 +399,61 @@ mod tests {
         assert_eq!((w.layers[1].h, w.layers[1].s, w.layers[1].k), (16 * 16, 9, 1));
         assert_eq!(w.layers[2].name, "pw");
         assert_eq!((w.layers[3].h, w.layers[3].s, w.layers[3].k), (1, 512, 10));
+    }
+
+    #[test]
+    fn workload_json_carries_conv_windows() {
+        let w = workload_from_json_text(
+            r#"{
+              "name": "geom",
+              "layers": [
+                {"kind": "conv", "out_hw": 8, "in_channels": 3, "out_channels": 4},
+                {"kind": "gemm", "h": 16, "s": 36, "k": 2,
+                 "kernel": 3, "stride": 2, "padding": 1, "in_hw": 8},
+                {"kind": "fc", "inputs": 32, "outputs": 10}
+              ]
+            }"#,
+        )
+        .unwrap();
+        // conv: automatic same-conv window.
+        let g0 = w.layers[0].geom.expect("conv auto-window");
+        assert_eq!((g0.kernel, g0.stride, g0.padding, g0.in_hw), (3, 1, 1, 8));
+        // gemm: explicit strided window.
+        let g1 = w.layers[1].geom.expect("explicit window");
+        assert_eq!((g1.kernel, g1.stride, g1.padding, g1.in_hw), (3, 2, 1, 8));
+        assert_eq!(g1.out_hw(), 4);
+        // fc: none.
+        assert!(w.layers[2].geom.is_none());
+    }
+
+    #[test]
+    fn workload_json_rejects_bad_windows_as_errors_not_panics() {
+        // padding >= kernel
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "gemm", "h": 16, "s": 9, "k": 1,
+                "kernel": 3, "padding": 3, "in_hw": 8}]}"#
+        )
+        .is_err());
+        // VDPs don't raster the implied output map
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "gemm", "h": 16, "s": 9, "k": 1,
+                "kernel": 3, "padding": 1, "in_hw": 12}]}"#
+        )
+        .is_err());
+        // FC layers take no window
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "fc", "inputs": 64, "outputs": 10,
+                "in_hw": 8}]}"#
+        )
+        .is_err());
+        // conv: an explicit window must imply the layer's own output map
+        // (stride typo would otherwise silently reinterpret the raster)
+        assert!(workload_from_json_text(
+            r#"{"name": "x", "layers": [{"kind": "conv", "out_hw": 8,
+                "in_channels": 2, "out_channels": 4, "kernel": 3, "stride": 2,
+                "padding": 1, "in_hw": 8}]}"#
+        )
+        .is_err());
     }
 
     #[test]

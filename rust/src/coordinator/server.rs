@@ -150,10 +150,12 @@ pub struct ServerConfig {
     /// it runs once per worker at startup, not per request).
     pub sim_backend: BackendKind,
     /// Simulate the photonic reference as a *pipelined batch* of
-    /// `max_batch` frames through the whole-frame event space instead of
-    /// one isolated frame — the honest per-frame latency for a server that
-    /// batches requests anyway. Meaningful with `sim_backend: Event` (the
-    /// analytic model has no frame-overlap path); default off.
+    /// `max_batch` frames instead of one isolated frame — the honest
+    /// per-frame latency for a server that batches requests anyway.
+    /// Default ON (the pipelined path has conformance coverage): the
+    /// analytic backend estimates the overlap from the plan's exact
+    /// admission thresholds; `sim_backend: Event` runs the
+    /// transaction-level whole-frame event space instead.
     pub sim_pipeline: bool,
     pub weight_seed: u64,
     /// Extra per-batch execution delay (test/chaos knob for emulating a
@@ -182,7 +184,7 @@ impl ServerConfig {
             replicas: 1,
             accelerator: AcceleratorConfig::oxbnn_50(),
             sim_backend: BackendKind::Analytic,
-            sim_pipeline: false,
+            sim_pipeline: true,
             weight_seed: 0x0B17,
             execute_delay: Duration::ZERO,
             manifest: None,

@@ -93,6 +93,22 @@ fn parse_backend(s: &str) -> Result<BackendKind, i32> {
     })
 }
 
+/// Parse the shared `--pipeline auto|true|false` option. `auto` (the
+/// default) leaves the session's own rule in charge: batches run the
+/// whole-frame pipelined event space, single frames stay sequential;
+/// `false` is the opt-out back to the `with_batch` multiply.
+fn parse_pipeline(s: &str) -> Result<Option<bool>, i32> {
+    match s {
+        "auto" | "" => Ok(None),
+        "true" | "on" | "1" => Ok(Some(true)),
+        "false" | "off" | "0" => Ok(Some(false)),
+        other => {
+            eprintln!("error: --pipeline must be auto|true|false, got '{}'", other);
+            Err(2)
+        }
+    }
+}
+
 fn cmd_table2() -> i32 {
     let solver = ScalabilitySolver::default();
     let mut table = Table::new(&[
@@ -132,9 +148,10 @@ fn cmd_fps(args: &[String]) -> i32 {
             "analytic|event|functional (event is detailed but much slower)",
         )
         .opt("batch", "1", "frames per cell (pipelined batches report batched FPS)")
-        .flag(
+        .opt(
             "pipeline",
-            "whole-frame pipelined event space per cell (event backend only)",
+            "auto",
+            "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
         )
         .flag("json", "emit JSON instead of tables");
     let parsed = match cmd.parse(args) {
@@ -149,7 +166,10 @@ fn cmd_fps(args: &[String]) -> i32 {
         Ok(b) => b.max(1),
         Err(e) => return handle_cli(e),
     };
-    let pipeline = parsed.has_flag("pipeline");
+    let pipeline = match parse_pipeline(parsed.get("pipeline")) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
     let accels = AcceleratorConfig::evaluation_set();
     let workloads = Workload::evaluation_set();
 
@@ -163,15 +183,15 @@ fn cmd_fps(args: &[String]) -> i32 {
         .collect();
     let cell_reports: Vec<oxbnn::api::Report> =
         parallel_map(jobs, host_threads(), move |(a, w)| {
-            Session::builder()
+            let mut builder = Session::builder()
                 .accelerator(a)
                 .workload(w)
                 .backend(backend)
-                .batch(batch)
-                .pipeline(pipeline)
-                .build()
-                .expect("session over built-in configs")
-                .run()
+                .batch(batch);
+            if let Some(p) = pipeline {
+                builder = builder.pipeline(p);
+            }
+            builder.build().expect("session over built-in configs").run()
         });
 
     let mut fps_table = Table::new(&[
@@ -262,10 +282,11 @@ fn cmd_simulate(args: &[String]) -> i32 {
         "analytic|event|functional (event simulates every PASS — slow on full BNNs)",
     )
     .opt("batch", "1", "frames to evaluate back-to-back")
-    .flag(
+    .opt(
         "pipeline",
-        "whole-frame pipelined event space: cross-layer + multi-frame overlap \
-         (event backend; others fall back to sequential)",
+        "auto",
+        "auto|true|false — whole-frame pipelined batches: cross-layer + multi-frame \
+         overlap with receptive-field-exact admission (auto: on when batch > 1)",
     )
     .flag("json", "emit the unified report as JSON")
     .flag("layers", "print per-layer breakdown");
@@ -321,14 +342,19 @@ fn cmd_simulate(args: &[String]) -> i32 {
         Ok(b) => b,
         Err(e) => return handle_cli(e),
     };
-    let mut session = match Session::builder()
+    let pipeline = match parse_pipeline(parsed.get("pipeline")) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    let mut builder = Session::builder()
         .accelerator(acc)
         .workload(workload)
         .backend(backend)
-        .batch(batch)
-        .pipeline(parsed.has_flag("pipeline"))
-        .build()
-    {
+        .batch(batch);
+    if let Some(p) = pipeline {
+        builder = builder.pipeline(p);
+    }
+    let mut session = match builder.build() {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {}", e);
@@ -472,11 +498,21 @@ fn server_config_from_args(
     cfg.max_wait = std::time::Duration::from_secs_f64((wait_ms / 1e3).max(0.0));
     cfg.queue_depth = parsed.get_usize("queue-depth").map_err(handle_cli)?.max(1);
     cfg.replicas = parsed.get_usize("replicas").map_err(handle_cli)?.max(1);
-    if parsed.has_flag("sim-pipeline") {
-        // Photonic reference = pipelined batch of max_batch frames through
-        // the whole-frame event space (needs the event backend).
-        cfg.sim_backend = BackendKind::Event;
-        cfg.sim_pipeline = true;
+    // Photonic reference: pipelined batch of max_batch frames (the server
+    // batches requests anyway). Default on with the analytic estimate;
+    // `event` runs the transaction-level whole-frame event space instead;
+    // `false` opts back out to the isolated-frame reference.
+    match parsed.get("sim-pipeline") {
+        "true" | "on" | "1" | "" => cfg.sim_pipeline = true,
+        "false" | "off" | "0" => cfg.sim_pipeline = false,
+        "event" => {
+            cfg.sim_backend = BackendKind::Event;
+            cfg.sim_pipeline = true;
+        }
+        other => {
+            eprintln!("error: --sim-pipeline must be true|false|event, got '{}'", other);
+            return Err(2);
+        }
     }
     Ok(cfg)
 }
@@ -491,9 +527,11 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
         .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
         .opt("replicas", "1", "worker replicas for the model")
-        .flag(
+        .opt(
             "sim-pipeline",
-            "photonic reference: pipelined batch of max-batch frames (event backend)",
+            "true",
+            "true|false|event — pipelined-batch photonic reference (event: \
+             transaction-level whole-frame event space)",
         );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -586,9 +624,11 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
     .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
     .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
     .opt("replicas", "1", "worker replicas for the model")
-    .flag(
+    .opt(
         "sim-pipeline",
-        "photonic reference: pipelined batch of max-batch frames (event backend)",
+        "true",
+        "true|false|event — pipelined-batch photonic reference (event: \
+         transaction-level whole-frame event space)",
     );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -766,9 +806,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
         "analytic|event|functional (analytic recommended for sweeps)",
     )
     .opt("batch", "1", "frames per cell (pipelined batches report batched FPS)")
-    .flag(
+    .opt(
         "pipeline",
-        "whole-frame pipelined event space per cell (event backend only)",
+        "auto",
+        "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
     )
     .opt("out", "-", "output CSV path ('-' for stdout)");
     let parsed = match cmd.parse(args) {
@@ -790,7 +831,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
         Ok(b) => b.max(1),
         Err(e) => return handle_cli(e),
     };
-    let pipeline = parsed.has_flag("pipeline");
+    let pipeline = match parse_pipeline(parsed.get("pipeline")) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
     let xpes: Vec<usize> = parsed
         .get("xpes")
         .split(',')
@@ -818,15 +862,15 @@ fn cmd_sweep(args: &[String]) -> i32 {
             bitcount: oxbnn::arch::BitcountMode::Pca { gamma },
             ..AcceleratorConfig::oxbnn_50()
         };
-        let report = Session::builder()
+        let mut builder = Session::builder()
             .accelerator(cfg)
             .workload(workload.clone())
             .backend(backend)
-            .batch(batch)
-            .pipeline(pipeline)
-            .build()
-            .expect("sweep session")
-            .run();
+            .batch(batch);
+        if let Some(p) = pipeline {
+            builder = builder.pipeline(p);
+        }
+        let report = builder.build().expect("sweep session").run();
         format!(
             "{},{},{},{},{:.1},{:.2},{:.2}\n",
             dr, n, gamma, x, report.fps, report.fps_per_w, report.static_power_w

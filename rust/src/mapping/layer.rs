@@ -8,6 +8,68 @@
 //!   against one weight vector each (K = 1, grouped).
 //! * An FC layer is H = 1, S = inputs, K = outputs.
 
+/// Convolution geometry of a flattened GEMM layer: the im2col window
+/// structure (`kernel`, `stride`, `padding` over an `in_hw × in_hw` input
+/// map) the flattening erased. The pipelined event space needs it to admit
+/// a consumer's output window exactly when its receptive field has drained
+/// ([`crate::plan::FramePlan::need_acts`]); layers without one (FC, or
+/// flattenings whose spatial order is not raster, e.g. branchy blocks) get
+/// the conservative whole-map wait.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Square kernel side k (k×k window).
+    pub kernel: usize,
+    pub stride: usize,
+    /// Zero padding on each input edge; must be < kernel so every output
+    /// window intersects the input map.
+    pub padding: usize,
+    /// Input feature-map side (the producer layer's output map, after any
+    /// 2×2 pooling the producer applies).
+    pub in_hw: usize,
+}
+
+impl ConvGeom {
+    pub fn new(kernel: usize, stride: usize, padding: usize, in_hw: usize) -> ConvGeom {
+        let g = ConvGeom { kernel, stride, padding, in_hw };
+        g.validate();
+        g
+    }
+
+    pub fn validate(&self) {
+        assert!(
+            self.kernel > 0 && self.stride > 0 && self.in_hw > 0,
+            "degenerate conv geometry {:?}",
+            self
+        );
+        assert!(
+            self.padding < self.kernel,
+            "padding must be < kernel so every window touches the map: {:?}",
+            self
+        );
+        assert!(
+            self.in_hw + 2 * self.padding >= self.kernel,
+            "kernel larger than the padded input map: {:?}",
+            self
+        );
+    }
+
+    /// Output feature-map side: `(in + 2p − k) / s + 1` (floor).
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+
+    /// Row/column of the *last* (bottom-right, raster-maximal) in-bounds
+    /// input element that output position `(r, c)` reads. `padding <
+    /// kernel` guarantees the window intersects the map, so this is
+    /// always defined.
+    pub fn last_input_rc(&self, r: usize, c: usize) -> (usize, usize) {
+        // r·s + k − 1 ≥ padding because padding < kernel, so no underflow.
+        let r_last = (r * self.stride + self.kernel - 1 - self.padding).min(self.in_hw - 1);
+        let c_last = (c * self.stride + self.kernel - 1 - self.padding).min(self.in_hw - 1);
+        (r_last, c_last)
+    }
+}
+
 /// One flattened GEMM layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GemmLayer {
@@ -20,11 +82,16 @@ pub struct GemmLayer {
     pub k: usize,
     /// True if a 2x2 pooling follows this layer (pooling-unit latency).
     pub pool: bool,
+    /// The im2col window structure this GEMM was flattened from, when the
+    /// layer is a convolution whose VDPs enumerate output raster positions
+    /// spatial-major (position = vdp / channels_per_position). `None` for
+    /// FC layers and flattenings with no raster spatial order.
+    pub geom: Option<ConvGeom>,
 }
 
 impl GemmLayer {
     pub fn new(name: impl Into<String>, h: usize, s: usize, k: usize) -> GemmLayer {
-        let layer = GemmLayer { name: name.into(), h, s, k, pool: false };
+        let layer = GemmLayer { name: name.into(), h, s, k, pool: false, geom: None };
         layer.validate();
         layer
     }
@@ -34,11 +101,34 @@ impl GemmLayer {
         self
     }
 
+    /// Attach the convolution window structure. The layer's VDPs must
+    /// enumerate the geometry's output raster positions spatial-major —
+    /// `vdp_count` a multiple of `out_hw²` (regular convs have exactly
+    /// `h = out_hw²`; depthwise flattenings carry one VDP per (position,
+    /// channel) pair, position-major).
+    pub fn with_geom(mut self, geom: ConvGeom) -> GemmLayer {
+        geom.validate();
+        let out = geom.out_hw();
+        assert!(
+            self.vdp_count() % (out * out) == 0,
+            "layer '{}' ({} VDPs) cannot raster an {}×{} output map",
+            self.name,
+            self.vdp_count(),
+            out,
+            out
+        );
+        self.geom = Some(geom);
+        self
+    }
+
     pub fn validate(&self) {
         assert!(self.h > 0 && self.s > 0 && self.k > 0, "degenerate layer {:?}", self);
     }
 
-    /// Conv layer constructor from geometry.
+    /// Conv layer constructor from geometry. Records the im2col window
+    /// structure for the common same-convolution case (stride 1, odd
+    /// kernel, pad k/2 — output map == input map); other geometries attach
+    /// theirs via [`GemmLayer::with_geom`].
     pub fn conv(
         name: impl Into<String>,
         out_hw: usize,
@@ -46,7 +136,17 @@ impl GemmLayer {
         kernel: usize,
         out_channels: usize,
     ) -> GemmLayer {
-        GemmLayer::new(name, out_hw * out_hw, kernel * kernel * in_channels, out_channels)
+        let layer = GemmLayer::new(
+            name,
+            out_hw * out_hw,
+            kernel * kernel * in_channels,
+            out_channels,
+        );
+        if kernel % 2 == 1 {
+            layer.with_geom(ConvGeom::new(kernel, 1, kernel / 2, out_hw))
+        } else {
+            layer
+        }
     }
 
     /// Depthwise conv: one k×k filter per channel. Modeled as H·W·C tiny
@@ -149,5 +249,60 @@ mod tests {
     #[should_panic]
     fn degenerate_rejected() {
         GemmLayer::new("bad", 0, 1, 1);
+    }
+
+    #[test]
+    fn conv_geom_output_map_and_window_reach() {
+        // Same conv: 3×3 stride 1 pad 1 on a 32 map → 32 map.
+        let same = ConvGeom::new(3, 1, 1, 32);
+        assert_eq!(same.out_hw(), 32);
+        // Interior window of output (r, c) reaches input (r+1, c+1).
+        assert_eq!(same.last_input_rc(5, 7), (6, 8));
+        // Bottom-right corner clamps into the map.
+        assert_eq!(same.last_input_rc(31, 31), (31, 31));
+        // Strided downsample: 3×3 stride 2 pad 1 on 56 → 28.
+        let down = ConvGeom::new(3, 2, 1, 56);
+        assert_eq!(down.out_hw(), 28);
+        assert_eq!(down.last_input_rc(0, 0), (1, 1));
+        assert_eq!(down.last_input_rc(27, 0), (55, 1));
+        // 1×1 stride 2 projection: 56 → 28, window IS the input element.
+        let proj = ConvGeom::new(1, 2, 0, 56);
+        assert_eq!(proj.out_hw(), 28);
+        assert_eq!(proj.last_input_rc(3, 4), (6, 8));
+        // 7×7 stride 2 pad 3 stem: 224 → 112.
+        assert_eq!(ConvGeom::new(7, 2, 3, 224).out_hw(), 112);
+    }
+
+    #[test]
+    fn conv_constructor_records_same_conv_geom() {
+        let l = GemmLayer::conv("c", 16, 8, 3, 4);
+        let g = l.geom.expect("odd-kernel conv carries its window geometry");
+        assert_eq!((g.kernel, g.stride, g.padding, g.in_hw), (3, 1, 1, 16));
+        assert_eq!(g.out_hw(), 16);
+        // FC and raw GEMM layers carry none.
+        assert!(GemmLayer::fc("fc", 64, 10).geom.is_none());
+        assert!(GemmLayer::new("g", 4, 9, 2).geom.is_none());
+    }
+
+    #[test]
+    fn with_geom_accepts_depthwise_position_major_flattening() {
+        // Depthwise: one VDP per (position, channel); 14² positions × 96
+        // channels rasterize a 14×14 map.
+        let l = GemmLayer::depthwise("dw", 14, 96, 3)
+            .with_geom(ConvGeom::new(3, 2, 1, 28));
+        assert_eq!(l.geom.unwrap().out_hw(), 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot raster")]
+    fn with_geom_rejects_mismatched_output_map() {
+        // 4×4 = 16 VDPs cannot raster the 8×8 map this geometry implies.
+        let _ = GemmLayer::new("bad", 16, 9, 1).with_geom(ConvGeom::new(3, 1, 1, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "padding must be < kernel")]
+    fn conv_geom_rejects_full_padding() {
+        ConvGeom::new(3, 1, 3, 8);
     }
 }

@@ -29,6 +29,7 @@ pub use cache::PlanCache;
 pub use stream::{FrameStream, LayerPlan, PassStream};
 
 use crate::arch::accelerator::AcceleratorConfig;
+use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
 use crate::workloads::Workload;
 
@@ -106,15 +107,25 @@ impl ExecutionPlan {
     }
 }
 
-/// Receptive-field lookahead for cross-layer pass admission, as a fraction
-/// of the producer layer's output feature map: a consumer VDP at spatial
-/// fraction `f` of its own map may start once the producer has drained
-/// activations up to fraction `min(1, f + HALO)`. The halo stands in for
-/// the kernel rows a conv window reaches beyond its own raster position
-/// (the flattened [`crate::mapping::layer::GemmLayer`] geometry no longer
-/// knows the kernel extent, so the plan uses a conservative fixed
-/// fraction).
-pub const RECEPTIVE_HALO: f64 = 0.125;
+/// Cross-layer admission rule a [`FramePlan`] applies in
+/// [`FramePlan::need_acts`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionMode {
+    /// Receptive-field-exact (the default): a consumer VDP is admitted
+    /// once the producer has drained exactly the raster prefix of
+    /// activations its im2col window reaches
+    /// ([`crate::mapping::layer::ConvGeom`]), falling back to the
+    /// whole-map wait when the geometry is unknown or does not chain.
+    Exact,
+    /// The legacy PR-4 rule, kept ONLY for the exact-vs-halo differential
+    /// tests and `bench_pipeline`: a consumer VDP at spatial fraction `f`
+    /// of its own map waits for the producer fraction `min(1, f + halo)`.
+    /// The fixed halo is a guess that stands in for the kernel extent the
+    /// flattening erased — it under-waits strided windows and over-waits
+    /// large stride-1 maps, which is why it is no longer a production
+    /// mode.
+    RasterHalo(f64),
+}
 
 /// A whole *batch of frames* laid over one [`ExecutionPlan`]: the unit
 /// table the frame-scoped event world simulates in a single event space.
@@ -129,20 +140,37 @@ pub const RECEPTIVE_HALO: f64 = 0.125;
 /// The plan also owns the **cross-layer admission rule** ([`Self::need_acts`]):
 /// how many of the producer layer's activations must have drained before a
 /// given consumer VDP's passes may be admitted. VDP indices are spatial-major
-/// (`vdp / K` = output raster position), so admission thresholds are
-/// monotone along every XPE's queue under both mapping policies.
+/// (`vdp / channels_per_position` = output raster position). Exact
+/// receptive-field thresholds are *not* globally monotone in the VDP index
+/// (a row-end window reaches further into the input raster than the next
+/// row-start window), which is fine: each XPE drains its queue in order, so
+/// only the head pass's threshold ever gates, and the wake index
+/// ([`crate::plan::FrameStream`]) keys each waiting XPE by exactly that
+/// head threshold.
 #[derive(Debug, Clone)]
 pub struct FramePlan<'a> {
     plan: &'a ExecutionPlan,
     frames: usize,
+    admission: AdmissionMode,
     /// Per-layer VDP base within one frame (prefix sums), plus the total.
     layer_vdp_base: Vec<usize>,
     frame_vdps: usize,
 }
 
 impl<'a> FramePlan<'a> {
-    /// Lay `frames` back-to-back frames over `plan`.
+    /// Lay `frames` back-to-back frames over `plan` with the exact
+    /// receptive-field admission rule.
     pub fn new(plan: &'a ExecutionPlan, frames: usize) -> FramePlan<'a> {
+        FramePlan::with_admission(plan, frames, AdmissionMode::Exact)
+    }
+
+    /// [`FramePlan::new`] with an explicit [`AdmissionMode`] — the
+    /// non-default modes exist for the differential test/bench suite.
+    pub fn with_admission(
+        plan: &'a ExecutionPlan,
+        frames: usize,
+        admission: AdmissionMode,
+    ) -> FramePlan<'a> {
         assert!(frames > 0, "a frame plan needs at least one frame");
         let mut layer_vdp_base = Vec::with_capacity(plan.layers.len());
         let mut acc = 0usize;
@@ -150,7 +178,11 @@ impl<'a> FramePlan<'a> {
             layer_vdp_base.push(acc);
             acc += lp.vdp_count();
         }
-        FramePlan { plan, frames, layer_vdp_base, frame_vdps: acc }
+        FramePlan { plan, frames, admission, layer_vdp_base, frame_vdps: acc }
+    }
+
+    pub fn admission(&self) -> AdmissionMode {
+        self.admission
     }
 
     pub fn plan(&self) -> &'a ExecutionPlan {
@@ -213,24 +245,40 @@ impl<'a> FramePlan<'a> {
     }
 
     /// Producer activations that must have drained before `unit`'s local
-    /// VDP `v` may be admitted. 0 for first layers (no producer). FC
-    /// consumers (`H == 1`) need the whole input map; conv consumers need
-    /// the raster prefix up to their own spatial fraction plus
-    /// [`RECEPTIVE_HALO`]. Monotone in `v`, so per-XPE queues under both
-    /// mapping policies block and unblock in order.
+    /// VDP `v` may be admitted. 0 for first layers (no producer).
+    ///
+    /// Under [`AdmissionMode::Exact`] the threshold is closed-form from
+    /// the consumer's [`crate::mapping::layer::ConvGeom`]: VDP `v` covers
+    /// output raster position `v / channels_per_position`; its k×k window
+    /// reaches the input map no further than raster position `(r_last,
+    /// c_last)` ([`ConvGeom::last_input_rc`]), so the threshold is that
+    /// raster prefix times the producer's activations-per-position — the
+    /// LAST producer activation feeding the window, not one more. A 2×2
+    /// pooling on the producer maps input position `(r, c)` to producer
+    /// rows/cols `≤ (2r+1, 2c+1)`. FC consumers, consumers without
+    /// geometry, and geometries that do not chain onto the producer's map
+    /// (branchy flattenings) wait for the whole map — the sound fallback.
+    ///
+    /// [`ConvGeom::last_input_rc`]: crate::mapping::layer::ConvGeom::last_input_rc
     pub fn need_acts(&self, unit: usize, v: usize) -> usize {
         let Some(prev) = self.producer(unit) else {
             return 0;
         };
         let consumer = &self.layer_plan(unit).layer;
+        let producer = &self.layer_plan(prev).layer;
         let produced = self.layer_plan(prev).vdp_count();
-        if consumer.h == 1 {
-            return produced; // FC: every VDP reads the whole flattened map
+        match self.admission {
+            AdmissionMode::Exact => exact_need(consumer, producer, produced, v),
+            AdmissionMode::RasterHalo(halo) => {
+                if consumer.h == 1 {
+                    return produced; // FC: reads the whole flattened map
+                }
+                let position = v / consumer.k;
+                let frac = (position + 1) as f64 / consumer.h as f64;
+                (((frac + halo).min(1.0) * produced as f64).ceil() as usize)
+                    .min(produced)
+            }
         }
-        let position = v / consumer.k;
-        let frac = (position + 1) as f64 / consumer.h as f64;
-        (((frac + RECEPTIVE_HALO).min(1.0) * produced as f64).ceil() as usize)
-            .min(produced)
     }
 
     /// Total passes across the whole batch.
@@ -248,6 +296,64 @@ impl<'a> FramePlan<'a> {
             .saturating_mul(self.frames as u64)
             + 10_000
     }
+}
+
+/// The receptive-field-exact threshold: the raster prefix of producer
+/// activations the consumer's VDP `v` reads, in activations. Whole-map
+/// (`produced`) whenever the window structure is unknown or the two
+/// flattenings do not chain onto one raster — the sound fallback.
+fn exact_need(
+    consumer: &GemmLayer,
+    producer: &GemmLayer,
+    produced: usize,
+    v: usize,
+) -> usize {
+    let Some(geom) = consumer.geom else {
+        return produced; // FC, or a flattening with no raster order
+    };
+    let out_hw = geom.out_hw();
+    let positions = out_hw * out_hw;
+    if positions == 0 || consumer.vdp_count() % positions != 0 {
+        return produced;
+    }
+    // Spatial-major VDP order: position = v / channels-per-position
+    // (regular conv: per_pos = K; depthwise: per_pos = C, K = 1).
+    let per_pos = consumer.vdp_count() / positions;
+    let pos = (v / per_pos).min(positions - 1);
+    let (mut r, mut c) = geom.last_input_rc(pos / out_hw, pos % out_hw);
+    // Producer-side raster: spatial positions and activations per position.
+    // A producer with geometry knows its output map; one without is taken
+    // as the regular flattening of one position per H row (FC producers,
+    // h == 1, have no raster and fall through the alignment check).
+    let prod_positions = match producer.geom {
+        Some(g) => g.out_hw() * g.out_hw(),
+        None => producer.h,
+    };
+    if prod_positions == 0 || produced % prod_positions != 0 {
+        return produced;
+    }
+    let per_pos_acts = produced / prod_positions;
+    let Some(prod_hw) = int_sqrt(prod_positions) else {
+        return produced;
+    };
+    if producer.pool {
+        // 2×2 pooling: input position (r, c) draws from producer rows and
+        // cols {2r, 2r+1} × {2c, 2c+1}; the raster-maximal element is at
+        // (2r+1, 2c+1).
+        if geom.in_hw * 2 != prod_hw {
+            return produced;
+        }
+        r = 2 * r + 1;
+        c = 2 * c + 1;
+    } else if geom.in_hw != prod_hw {
+        return produced;
+    }
+    ((r * prod_hw + c + 1) * per_pos_acts).min(produced)
+}
+
+fn int_sqrt(n: usize) -> Option<usize> {
+    let r = (n as f64).sqrt().round() as usize;
+    (r * r == n).then_some(r)
 }
 
 #[cfg(test)]
@@ -314,20 +420,104 @@ mod tests {
         // First layers need nothing.
         assert_eq!(fp.need_acts(0, 0), 0);
         assert_eq!(fp.need_acts(3, 0), 0);
-        // Conv consumer: monotone in VDP index, never above the producer's
-        // activation count, and strictly positive (can't start on nothing).
+        // The fixture's layers carry no ConvGeom, so exact admission takes
+        // the sound whole-map fallback for every consumer VDP.
         let produced = fp.layer_plan(0).vdp_count();
-        let mut last = 0;
         for v in 0..fp.layer_plan(1).vdp_count() {
-            let need = fp.need_acts(1, v);
-            assert!(need >= last, "admission must be monotone");
-            assert!(need >= 1 && need <= produced);
-            last = need;
+            assert_eq!(fp.need_acts(1, v), produced);
         }
-        assert_eq!(last, produced, "last raster position drains the map");
         // FC consumer reads the whole input map.
         let c2_vdps = fp.layer_plan(1).vdp_count();
         assert_eq!(fp.need_acts(2, 0), c2_vdps);
+    }
+
+    #[test]
+    fn exact_admission_follows_the_window_structure() {
+        // A chain whose geometry lines up: 8×8 map same-conv (3×3 s1 p1)
+        // into a strided 3×3 s2 p1 conv (8 → 4 map), then FC.
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let wl = Workload::new(
+            "geom",
+            vec![
+                GemmLayer::conv("c1", 8, 2, 3, 4), // 64 positions × 4 ch
+                GemmLayer::new("c2", 16, 36, 2)
+                    .with_geom(crate::mapping::layer::ConvGeom::new(3, 2, 1, 8)),
+                GemmLayer::fc("fc", 32, 10),
+            ],
+        );
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let fp = FramePlan::new(&plan, 1);
+        let produced = fp.layer_plan(0).vdp_count(); // 64 · 4 = 256
+        // c2 VDP 0 covers output (0,0): window rows/cols {0,1} of the 8
+        // map → raster prefix through (1,1) = 10 positions × 4 acts.
+        assert_eq!(fp.need_acts(1, 0), 10 * 4);
+        // Output (0,1) (VDPs 2..4): cols {1,2,3} → prefix through (1,3).
+        assert_eq!(fp.need_acts(1, 2), (8 + 3 + 1) * 4);
+        // Last output position needs exactly the whole map — not less.
+        let c2_vdps = fp.layer_plan(1).vdp_count();
+        assert_eq!(fp.need_acts(1, c2_vdps - 1), produced);
+        // FC keeps the whole-map wait.
+        assert_eq!(fp.need_acts(2, 0), c2_vdps);
+        // The legacy halo mode still computes the PR-4 rule for the
+        // differential suite. The fixed-fraction guess misses the true
+        // window: here it over-waits ((1/16 + 0.125)·256 = 48 vs the exact
+        // 40); on large stride-1 maps it under-waits (the admission-oracle
+        // suite and prop_invariants pin the differential).
+        let halo = FramePlan::with_admission(&plan, 1, AdmissionMode::RasterHalo(0.125));
+        assert_eq!(halo.need_acts(1, 0), 48);
+        assert_ne!(halo.need_acts(1, 0), fp.need_acts(1, 0));
+    }
+
+    #[test]
+    fn exact_admission_sees_through_producer_pooling() {
+        // Producer 8×8 map, 2×2 pooled → consumer same-conv on the 4 map.
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let wl = Workload::new(
+            "pooled",
+            vec![
+                GemmLayer::conv("p", 8, 2, 3, 4).with_pool(),
+                GemmLayer::conv("c", 4, 4, 3, 2),
+            ],
+        );
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let fp = FramePlan::new(&plan, 1);
+        // Consumer output (0,0): pooled input rows/cols {0,1} → producer
+        // rows/cols up to (2·1+1, 2·1+1) = (3,3) → prefix 3·8+3+1 = 28
+        // positions × 4 channels.
+        assert_eq!(fp.need_acts(1, 0), 28 * 4);
+        // Pool misalignment (consumer claims the unpooled map) falls back
+        // to the whole map.
+        let wl_bad = Workload::new(
+            "misaligned",
+            vec![
+                GemmLayer::conv("p", 8, 2, 3, 4).with_pool(),
+                GemmLayer::conv("c", 8, 4, 3, 2),
+            ],
+        );
+        let plan_bad = ExecutionPlan::compile(&cfg, &wl_bad, MappingPolicy::PcaLocal);
+        let fp_bad = FramePlan::new(&plan_bad, 1);
+        assert_eq!(fp_bad.need_acts(1, 0), fp_bad.layer_plan(0).vdp_count());
+    }
+
+    #[test]
+    fn wake_index_pops_only_met_thresholds() {
+        let plan = frame_plan_fixture();
+        let fp = FramePlan::new(&plan, 1);
+        let mut fs = FrameStream::new(&fp);
+        assert_eq!(fs.waiting_on(0), None);
+        fs.register_waiter(1, 10, 0);
+        fs.register_waiter(1, 4, 3);
+        fs.register_waiter(2, 7, 5);
+        assert_eq!(fs.waiting_count(), 3);
+        // Nothing met yet.
+        assert!(fs.pop_admitted(1, 3).is_empty());
+        // Pops in threshold order, not registration order; unit 2 untouched.
+        assert_eq!(fs.pop_admitted(1, 4), vec![3]);
+        assert_eq!(fs.waiting_on(3), None);
+        assert_eq!(fs.pop_admitted(1, 64), vec![0]);
+        assert_eq!(fs.waiting_count(), 1);
+        assert_eq!(fs.pop_admitted(2, 7), vec![5]);
+        assert_eq!(fs.waiting_count(), 0);
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! the independently-written materialized reference that the property
 //! tests check this module against.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::{MappingPolicy, Schedule, ScheduledPass};
 use crate::sim::event::{VdpId, XpeId};
@@ -237,6 +240,13 @@ impl PassStream {
 /// * `first_open[x]` — the earliest unit (in frame-major order) that still
 ///   has passes queued for XPE `x`; units fully drained on an XPE are
 ///   skipped permanently, keeping the per-dispatch unit scan short.
+/// * the **wake index** — per unit, a min-heap of `(admission threshold,
+///   XPE)` for XPEs whose head pass is blocked on the producer's
+///   activation drain ([`super::FramePlan::need_acts`]). An activation
+///   drain pops exactly the waiters whose threshold is now met — O(woken
+///   · log waiters) instead of re-dispatching every idle XPE. An idle XPE
+///   waiting on admission has a *stable* head pass (only the XPE itself
+///   advances its cursors), so an enqueued threshold can never go stale.
 ///
 /// Total state: `O(units · XPEs)` cursors — still no per-pass allocation.
 #[derive(Debug, Clone)]
@@ -244,6 +254,12 @@ pub struct FrameStream {
     streams: Vec<PassStream>,
     locked: Vec<Option<usize>>,
     first_open: Vec<usize>,
+    /// Per consumer unit: blocked XPEs keyed by their head-pass admission
+    /// threshold (min-heap).
+    waiters: Vec<BinaryHeap<Reverse<(usize, usize)>>>,
+    /// The unit each XPE is parked under, if any — guards against double
+    /// registration when unrelated events re-dispatch idle XPEs.
+    waiting_on: Vec<Option<usize>>,
 }
 
 impl FrameStream {
@@ -254,6 +270,8 @@ impl FrameStream {
             streams: (0..fp.units()).map(|u| PassStream::new(fp.layer_plan(u))).collect(),
             locked: vec![None; xpes],
             first_open: vec![0; xpes],
+            waiters: (0..fp.units()).map(|_| BinaryHeap::new()).collect(),
+            waiting_on: vec![None; xpes],
         }
     }
 
@@ -313,6 +331,45 @@ impl FrameStream {
         {
             self.first_open[flat] += 1;
         }
+    }
+
+    /// Park XPE `flat` on consumer `unit` until the producer has drained
+    /// `need` activations. The caller must not register an XPE twice.
+    pub fn register_waiter(&mut self, unit: usize, need: usize, flat: usize) {
+        debug_assert!(
+            self.waiting_on[flat].is_none(),
+            "XPE {} registered twice (already on unit {:?})",
+            flat,
+            self.waiting_on[flat]
+        );
+        self.waiters[unit].push(Reverse((need, flat)));
+        self.waiting_on[flat] = Some(unit);
+    }
+
+    /// The consumer unit XPE `flat` is parked on, if any.
+    pub fn waiting_on(&self, flat: usize) -> Option<usize> {
+        self.waiting_on[flat]
+    }
+
+    /// Pop every XPE parked on `unit` whose admission threshold is covered
+    /// by `acts_done` producer activations, unparking them. Returns the
+    /// woken XPEs (the whole point: O(woken), not O(idle)).
+    pub fn pop_admitted(&mut self, unit: usize, acts_done: usize) -> Vec<usize> {
+        let mut woken = Vec::new();
+        while let Some(&Reverse((need, flat))) = self.waiters[unit].peek() {
+            if need > acts_done {
+                break;
+            }
+            self.waiters[unit].pop();
+            self.waiting_on[flat] = None;
+            woken.push(flat);
+        }
+        woken
+    }
+
+    /// XPEs currently parked on admission thresholds (diagnostics).
+    pub fn waiting_count(&self) -> usize {
+        self.waiting_on.iter().filter(|w| w.is_some()).count()
     }
 }
 

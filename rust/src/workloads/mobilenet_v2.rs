@@ -5,7 +5,7 @@
 //! accelerators with many tiny-S slices.
 
 use super::Workload;
-use crate::mapping::layer::GemmLayer;
+use crate::mapping::layer::{ConvGeom, GemmLayer};
 
 /// Standard MobileNetV2 bottleneck table: (expansion t, out channels c,
 /// repeats n, first-stride s).
@@ -22,7 +22,10 @@ const BOTTLENECKS: [(usize, usize, usize, usize); 7] = [
 pub fn mobilenet_v2() -> Workload {
     let mut layers = Vec::new();
     // Stem: 3×3/2, 3→32, output 112².
-    layers.push(GemmLayer::new("conv1", 112 * 112, 27, 32));
+    layers.push(
+        GemmLayer::new("conv1", 112 * 112, 27, 32)
+            .with_geom(ConvGeom::new(3, 2, 1, 224)),
+    );
     let mut hw = 112usize;
     let mut cin = 32usize;
     let mut block = 0usize;
@@ -33,31 +36,28 @@ pub fn mobilenet_v2() -> Workload {
             let expanded = cin * t;
             block += 1;
             if t != 1 {
-                layers.push(GemmLayer::new(
-                    format!("b{}.expand", block),
-                    hw * hw,
-                    cin,
-                    expanded,
-                ));
+                layers.push(
+                    GemmLayer::new(format!("b{}.expand", block), hw * hw, cin, expanded)
+                        .with_geom(ConvGeom::new(1, 1, 0, hw)),
+                );
             }
-            layers.push(GemmLayer::depthwise(
-                format!("b{}.dw", block),
-                out_hw,
-                expanded,
-                3,
-            ));
-            layers.push(GemmLayer::new(
-                format!("b{}.project", block),
-                out_hw * out_hw,
-                expanded,
-                c,
-            ));
+            layers.push(
+                GemmLayer::depthwise(format!("b{}.dw", block), out_hw, expanded, 3)
+                    .with_geom(ConvGeom::new(3, stride, 1, hw)),
+            );
+            layers.push(
+                GemmLayer::new(format!("b{}.project", block), out_hw * out_hw, expanded, c)
+                    .with_geom(ConvGeom::new(1, 1, 0, out_hw)),
+            );
             hw = out_hw;
             cin = c;
         }
     }
     // Head: 1×1 to 1280, global pool, FC-1000.
-    layers.push(GemmLayer::new("conv_last", 7 * 7, 320, 1280));
+    layers.push(
+        GemmLayer::new("conv_last", 7 * 7, 320, 1280)
+            .with_geom(ConvGeom::new(1, 1, 0, 7)),
+    );
     layers.push(GemmLayer::fc("fc", 1280, 1000));
     Workload::new("mobilenet_v2", layers)
 }
@@ -93,5 +93,33 @@ mod tests {
     #[test]
     fn max_conv_s_under_paper_bound() {
         assert!(mobilenet_v2().max_conv_s() <= 4608);
+    }
+
+    #[test]
+    fn conv_geometry_carried_and_consistent() {
+        let w = mobilenet_v2();
+        for l in &w.layers {
+            if l.h == 1 {
+                assert!(l.geom.is_none(), "{}: FC carries no window", l.name);
+                continue;
+            }
+            let g = l.geom.expect("every conv/depthwise layer carries its window");
+            let out = g.out_hw();
+            // Regular convs raster one VDP set per position; depthwise
+            // flattens (position, channel) pairs position-major.
+            assert_eq!(l.vdp_count() % (out * out), 0, "{}", l.name);
+            if l.name.ends_with(".dw") {
+                assert_eq!((g.kernel, g.padding), (3, 1), "{}", l.name);
+            } else {
+                assert_eq!(l.h, out * out, "{}", l.name);
+            }
+        }
+        // The stride-2 depthwise windows exist (blocks 2, 4, 8, 14).
+        let strided = w
+            .layers
+            .iter()
+            .filter(|l| l.name.ends_with(".dw") && l.geom.unwrap().stride == 2)
+            .count();
+        assert_eq!(strided, 4);
     }
 }

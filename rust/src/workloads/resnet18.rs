@@ -4,12 +4,16 @@
 //! stride-2 first conv + 1×1 shortcut projection), global pool, FC-1000.
 
 use super::Workload;
-use crate::mapping::layer::GemmLayer;
+use crate::mapping::layer::{ConvGeom, GemmLayer};
 
 pub fn resnet18() -> Workload {
     let mut layers = Vec::new();
     // Stem: 7×7/2, 3→64, output 112×112, then 3×3/2 max pool → 56×56.
-    layers.push(GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64).with_pool());
+    layers.push(
+        GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64)
+            .with_geom(ConvGeom::new(7, 2, 3, 224))
+            .with_pool(),
+    );
 
     // (stage, out_hw, in_c, out_c, downsample?)
     let stages = [
@@ -20,36 +24,38 @@ pub fn resnet18() -> Workload {
     ];
     for (si, hw, cin, cout, down) in stages {
         let h = hw * hw;
+        // Downsampling stages halve the map in block 1's first conv
+        // (3×3 stride 2 from the previous stage's 2·hw map).
+        let in_hw1 = if down { hw * 2 } else { hw };
+        let stride1 = if down { 2 } else { 1 };
         // Block 1.
-        layers.push(GemmLayer::new(
-            format!("stage{}.b1.conv1", si),
-            h,
-            3 * 3 * cin,
-            cout,
-        ));
-        layers.push(GemmLayer::new(
-            format!("stage{}.b1.conv2", si),
-            h,
-            3 * 3 * cout,
-            cout,
-        ));
+        layers.push(
+            GemmLayer::new(format!("stage{}.b1.conv1", si), h, 3 * 3 * cin, cout)
+                .with_geom(ConvGeom::new(3, stride1, 1, in_hw1)),
+        );
+        layers.push(
+            GemmLayer::new(format!("stage{}.b1.conv2", si), h, 3 * 3 * cout, cout)
+                .with_geom(ConvGeom::new(3, 1, 1, hw)),
+        );
         if down {
-            // 1×1 stride-2 projection shortcut.
-            layers.push(GemmLayer::new(format!("stage{}.b1.down", si), h, cin, cout));
+            // 1×1 stride-2 projection shortcut. Its true input is the
+            // stage input (the 2·hw map), which is NOT its predecessor in
+            // this flattened chain — the pipelined admission rule detects
+            // the mismatch and falls back to the whole-map wait.
+            layers.push(
+                GemmLayer::new(format!("stage{}.b1.down", si), h, cin, cout)
+                    .with_geom(ConvGeom::new(1, 2, 0, hw * 2)),
+            );
         }
         // Block 2.
-        layers.push(GemmLayer::new(
-            format!("stage{}.b2.conv1", si),
-            h,
-            3 * 3 * cout,
-            cout,
-        ));
-        layers.push(GemmLayer::new(
-            format!("stage{}.b2.conv2", si),
-            h,
-            3 * 3 * cout,
-            cout,
-        ));
+        layers.push(
+            GemmLayer::new(format!("stage{}.b2.conv1", si), h, 3 * 3 * cout, cout)
+                .with_geom(ConvGeom::new(3, 1, 1, hw)),
+        );
+        layers.push(
+            GemmLayer::new(format!("stage{}.b2.conv2", si), h, 3 * 3 * cout, cout)
+                .with_geom(ConvGeom::new(3, 1, 1, hw)),
+        );
     }
     layers.push(GemmLayer::fc("fc", 512, 1000));
     Workload::new("resnet18", layers)
@@ -84,5 +90,22 @@ mod tests {
         let w = resnet18();
         assert_eq!(w.layers[0].h, 12544);
         assert!(w.layers.iter().all(|l| l.h <= 12544));
+    }
+
+    #[test]
+    fn conv_geometry_carried_and_consistent() {
+        let w = resnet18();
+        for l in &w.layers {
+            if l.h == 1 {
+                assert!(l.geom.is_none(), "{}: FC carries no window", l.name);
+            } else {
+                let g = l.geom.expect("every conv layer carries its window");
+                let out = g.out_hw();
+                assert_eq!(l.h, out * out, "{}: H must raster the output map", l.name);
+            }
+        }
+        // The stem's strided 7×7 window.
+        let g = w.layers[0].geom.unwrap();
+        assert_eq!((g.kernel, g.stride, g.padding, g.in_hw), (7, 2, 3, 224));
     }
 }

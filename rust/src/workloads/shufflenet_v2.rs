@@ -5,7 +5,7 @@
 //! 1024; FC-1000.
 
 use super::Workload;
-use crate::mapping::layer::GemmLayer;
+use crate::mapping::layer::{ConvGeom, GemmLayer};
 
 /// (stage index, out channels, units, out_hw).
 const STAGES: [(usize, usize, usize, usize); 3] =
@@ -14,72 +14,72 @@ const STAGES: [(usize, usize, usize, usize); 3] =
 pub fn shufflenet_v2() -> Workload {
     let mut layers = Vec::new();
     // Stem: 3×3/2 conv to 24 channels (112²), then 3×3/2 max pool → 56².
-    layers.push(GemmLayer::new("conv1", 112 * 112, 27, 24).with_pool());
+    layers.push(
+        GemmLayer::new("conv1", 112 * 112, 27, 24)
+            .with_geom(ConvGeom::new(3, 2, 1, 224))
+            .with_pool(),
+    );
     let mut cin = 24usize;
     for (si, cout, units, out_hw) in STAGES {
         for u in 0..units {
             let half = cout / 2;
             if u == 0 {
                 // Stride-2 unit: input hw = 2·out_hw, both branches run.
+                let in_hw = out_hw * 2;
                 let h_out = out_hw * out_hw;
                 // Left branch: depthwise (on cin) + 1×1 → half.
-                layers.push(GemmLayer::depthwise(
-                    format!("s{}.u{}.l.dw", si, u),
-                    out_hw,
-                    cin,
-                    3,
-                ));
-                layers.push(GemmLayer::new(
-                    format!("s{}.u{}.l.pw", si, u),
-                    h_out,
-                    cin,
-                    half,
-                ));
-                // Right branch: 1×1 → dw/2 → 1×1.
-                layers.push(GemmLayer::new(
-                    format!("s{}.u{}.r.pw1", si, u),
-                    (out_hw * 2) * (out_hw * 2),
-                    cin,
-                    half,
-                ));
-                layers.push(GemmLayer::depthwise(
-                    format!("s{}.u{}.r.dw", si, u),
-                    out_hw,
-                    half,
-                    3,
-                ));
-                layers.push(GemmLayer::new(
-                    format!("s{}.u{}.r.pw2", si, u),
-                    h_out,
-                    half,
-                    half,
-                ));
+                layers.push(
+                    GemmLayer::depthwise(format!("s{}.u{}.l.dw", si, u), out_hw, cin, 3)
+                        .with_geom(ConvGeom::new(3, 2, 1, in_hw)),
+                );
+                layers.push(
+                    GemmLayer::new(format!("s{}.u{}.l.pw", si, u), h_out, cin, half)
+                        .with_geom(ConvGeom::new(1, 1, 0, out_hw)),
+                );
+                // Right branch: 1×1 → dw/2 → 1×1. The 1×1's true input is
+                // the unit input, not the left branch it follows in this
+                // flattened chain; its honest geometry (the 2·out_hw map)
+                // will not chain onto the left pw's map, so admission
+                // falls back to the whole-map wait there.
+                layers.push(
+                    GemmLayer::new(
+                        format!("s{}.u{}.r.pw1", si, u),
+                        in_hw * in_hw,
+                        cin,
+                        half,
+                    )
+                    .with_geom(ConvGeom::new(1, 1, 0, in_hw)),
+                );
+                layers.push(
+                    GemmLayer::depthwise(format!("s{}.u{}.r.dw", si, u), out_hw, half, 3)
+                        .with_geom(ConvGeom::new(3, 2, 1, in_hw)),
+                );
+                layers.push(
+                    GemmLayer::new(format!("s{}.u{}.r.pw2", si, u), h_out, half, half)
+                        .with_geom(ConvGeom::new(1, 1, 0, out_hw)),
+                );
             } else {
                 // Stride-1 unit: split; only the right half (c/2) computes.
                 let h = out_hw * out_hw;
-                layers.push(GemmLayer::new(
-                    format!("s{}.u{}.pw1", si, u),
-                    h,
-                    half,
-                    half,
-                ));
-                layers.push(GemmLayer::depthwise(
-                    format!("s{}.u{}.dw", si, u),
-                    out_hw,
-                    half,
-                    3,
-                ));
-                layers.push(GemmLayer::new(
-                    format!("s{}.u{}.pw2", si, u),
-                    h,
-                    half,
-                    half,
-                ));
+                layers.push(
+                    GemmLayer::new(format!("s{}.u{}.pw1", si, u), h, half, half)
+                        .with_geom(ConvGeom::new(1, 1, 0, out_hw)),
+                );
+                layers.push(
+                    GemmLayer::depthwise(format!("s{}.u{}.dw", si, u), out_hw, half, 3)
+                        .with_geom(ConvGeom::new(3, 1, 1, out_hw)),
+                );
+                layers.push(
+                    GemmLayer::new(format!("s{}.u{}.pw2", si, u), h, half, half)
+                        .with_geom(ConvGeom::new(1, 1, 0, out_hw)),
+                );
             }
         }
         cin = cout;
     }
-    layers.push(GemmLayer::new("conv5", 7 * 7, 464, 1024));
+    layers.push(
+        GemmLayer::new("conv5", 7 * 7, 464, 1024).with_geom(ConvGeom::new(1, 1, 0, 7)),
+    );
     layers.push(GemmLayer::fc("fc", 1024, 1000));
     Workload::new("shufflenet_v2", layers)
 }
@@ -102,6 +102,23 @@ mod tests {
         // Published: ≈ 146 MMACs for ShuffleNetV2 1×.
         let g = shufflenet_v2().total_bitops() as f64;
         assert!((g - 0.146e9).abs() / 0.146e9 < 0.2, "bitops = {}", g);
+    }
+
+    #[test]
+    fn conv_geometry_carried_and_consistent() {
+        let w = shufflenet_v2();
+        for l in &w.layers {
+            if l.h == 1 {
+                assert!(l.geom.is_none(), "{}: FC carries no window", l.name);
+                continue;
+            }
+            let g = l.geom.expect("every conv/depthwise layer carries its window");
+            let out = g.out_hw();
+            assert_eq!(l.vdp_count() % (out * out), 0, "{}", l.name);
+            if !l.name.contains(".dw") {
+                assert_eq!(l.h, out * out, "{}", l.name);
+            }
+        }
     }
 
     #[test]

@@ -64,4 +64,21 @@ mod tests {
         let g = vgg_small().total_bitops() as f64;
         assert!((g - 0.57e9).abs() / 0.57e9 < 0.1, "bitops = {}", g);
     }
+
+    #[test]
+    fn conv_geometry_chains_through_the_pools() {
+        let w = vgg_small();
+        for pair in w.layers.windows(2) {
+            let (p, c) = (&pair[0], &pair[1]);
+            if c.h == 1 {
+                assert!(c.geom.is_none());
+                continue;
+            }
+            let (pg, cg) = (p.geom.unwrap(), c.geom.unwrap());
+            assert_eq!((cg.kernel, cg.stride, cg.padding), (3, 1, 1), "{}", c.name);
+            // Consumer reads the producer's map, halved when pooled.
+            let expect_in = if p.pool { pg.out_hw() / 2 } else { pg.out_hw() };
+            assert_eq!(cg.in_hw, expect_in, "{} after {}", c.name, p.name);
+        }
+    }
 }

@@ -7,7 +7,7 @@
 //! claim is checked over a broader population (E8).
 
 use super::Workload;
-use crate::mapping::layer::GemmLayer;
+use crate::mapping::layer::{ConvGeom, GemmLayer};
 
 /// VGG16 (224×224×3): thirteen 3×3 convs in five pooled stages + 3 FC.
 pub fn vgg16() -> Workload {
@@ -52,7 +52,11 @@ fn vgg(stage_convs: &[usize], name: &str) -> Workload {
 /// with stage widths (256, 512, 1024, 2048) and (3, 4, 6, 3) blocks.
 pub fn resnet50() -> Workload {
     let mut layers = Vec::new();
-    layers.push(GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64).with_pool());
+    layers.push(
+        GemmLayer::new("conv1", 112 * 112, 7 * 7 * 3, 64)
+            .with_geom(ConvGeom::new(7, 2, 3, 224))
+            .with_pool(),
+    );
     let stages: [(usize, usize, usize, usize); 4] = [
         (56, 64, 256, 3),
         (28, 128, 512, 4),
@@ -62,27 +66,34 @@ pub fn resnet50() -> Workload {
     let mut cin = 64usize;
     for (si, (hw, mid, cout, blocks)) in stages.into_iter().enumerate() {
         let h = hw * hw;
+        // Stages past the first downsample in their first block's 1×1
+        // (stride 2 from the previous stage's 2·hw map); stage 2 reads the
+        // pooled stem at the same 56 resolution.
+        let entry_hw = if si == 0 { hw } else { hw * 2 };
         for b in 0..blocks {
             let block_in = if b == 0 { cin } else { cout };
-            layers.push(GemmLayer::new(
-                format!("s{}.b{}.conv1x1a", si + 2, b + 1),
-                h,
-                block_in,
-                mid,
-            ));
-            layers.push(GemmLayer::new(
-                format!("s{}.b{}.conv3x3", si + 2, b + 1),
-                h,
-                3 * 3 * mid,
-                mid,
-            ));
-            layers.push(GemmLayer::new(
-                format!("s{}.b{}.conv1x1b", si + 2, b + 1),
-                h,
-                mid,
-                cout,
-            ));
+            let (in_a, stride_a) =
+                if b == 0 { (entry_hw, entry_hw / hw) } else { (hw, 1) };
+            layers.push(
+                GemmLayer::new(format!("s{}.b{}.conv1x1a", si + 2, b + 1), h, block_in, mid)
+                    .with_geom(ConvGeom::new(1, stride_a, 0, in_a)),
+            );
+            layers.push(
+                GemmLayer::new(format!("s{}.b{}.conv3x3", si + 2, b + 1), h, 3 * 3 * mid, mid)
+                    .with_geom(ConvGeom::new(3, 1, 1, hw)),
+            );
+            layers.push(
+                GemmLayer::new(format!("s{}.b{}.conv1x1b", si + 2, b + 1), h, mid, cout)
+                    .with_geom(ConvGeom::new(1, 1, 0, hw)),
+            );
             if b == 0 {
+                // Projection shortcut: reads the stage input, which is NOT
+                // its predecessor in this flattened chain. It carries no
+                // window on purpose — in stage 2 an honest (1×1, stride 1,
+                // 56-map) window would *accidentally* chain onto
+                // conv1x1b's same-sized map and fabricate an admission
+                // dependency; no geometry forces the sound whole-map wait
+                // in every stage.
                 layers.push(GemmLayer::new(
                     format!("s{}.b{}.down", si + 2, b + 1),
                     h,
@@ -138,5 +149,33 @@ mod tests {
         assert_eq!(vgg19().layers.len(), 16 + 3);
         // 1 stem + (3+4+6+3) blocks × 3 convs + 4 downsamples + fc.
         assert_eq!(resnet50().layers.len(), 1 + 16 * 3 + 4 + 1);
+    }
+
+    #[test]
+    fn conv_geometry_carried_and_consistent() {
+        for w in [vgg16(), vgg19(), resnet50()] {
+            for l in &w.layers {
+                if l.h == 1 {
+                    assert!(l.geom.is_none(), "{}/{}: FC has no window", w.name, l.name);
+                    continue;
+                }
+                if l.name.ends_with(".down") {
+                    // Residual projections read the stage input, not their
+                    // chain predecessor — no window, whole-map admission.
+                    assert!(l.geom.is_none(), "{}/{}", w.name, l.name);
+                    continue;
+                }
+                let g = l
+                    .geom
+                    .unwrap_or_else(|| panic!("{}/{}: conv without window", w.name, l.name));
+                let out = g.out_hw();
+                assert_eq!(l.h, out * out, "{}/{}", w.name, l.name);
+            }
+        }
+        // VGG same-convs: every conv window is 3×3 stride 1 pad 1.
+        for l in vgg16().layers.iter().filter(|l| l.h > 1) {
+            let g = l.geom.unwrap();
+            assert_eq!((g.kernel, g.stride, g.padding), (3, 1, 1), "{}", l.name);
+        }
     }
 }

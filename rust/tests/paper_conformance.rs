@@ -236,11 +236,14 @@ fn small_reduction() -> AcceleratorConfig {
 }
 
 fn tiny_workload() -> Workload {
+    use oxbnn::mapping::layer::ConvGeom;
     Workload::new(
         "tiny_conformance",
         vec![
-            GemmLayer::new("c1", 16, 243, 8),
-            GemmLayer::new("c2", 16, 288, 8).with_pool(),
+            GemmLayer::new("c1", 16, 243, 8).with_geom(ConvGeom::new(3, 1, 1, 4)),
+            GemmLayer::new("c2", 16, 288, 8)
+                .with_geom(ConvGeom::new(3, 1, 1, 4))
+                .with_pool(),
             GemmLayer::fc("fc", 512, 10),
         ],
     )
@@ -311,4 +314,38 @@ fn event_pipelined_mode_agrees_with_sequential_and_wins_batched() {
         pipe.batched_fps(),
         seq.batched_fps()
     );
+}
+
+/// The CI admission matrix runs this suite with `OXBNN_PIPELINE=1` and
+/// `=0`: a batched session built WITHOUT an explicit `.pipeline(..)`
+/// resolves the env-controlled default, and the claims that must hold in
+/// BOTH admission modes — exact transaction conservation, batch latency
+/// bounded by the sequential multiply, zero past-time clamps — stay green
+/// either way.
+#[test]
+fn default_batched_mode_conserves_in_both_admission_modes() {
+    let cfg = small_pca();
+    let default_mode = Session::builder()
+        .accelerator(cfg.clone())
+        .workload(tiny_workload())
+        .backend(BackendKind::Event)
+        .batch(4)
+        .build()
+        .expect("default-mode session")
+        .run();
+    let seq = event_report(&cfg, 4, false);
+    assert_eq!(default_mode.passes, seq.passes);
+    assert_eq!(default_mode.psums, seq.psums);
+    assert!(
+        default_mode.batch_latency_s <= seq.batch_latency_s * (1.0 + 1e-9),
+        "default mode {} must not exceed the sequential multiply {}",
+        default_mode.batch_latency_s,
+        seq.batch_latency_s
+    );
+    let clamped: u64 = default_mode
+        .layers
+        .iter()
+        .map(|l| l.counter("clamped_events"))
+        .sum();
+    assert_eq!(clamped, 0);
 }

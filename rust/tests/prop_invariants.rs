@@ -5,12 +5,15 @@ use oxbnn::analysis::pca_capacity::{alpha, gamma_calibrated};
 use oxbnn::analysis::scalability::ScalabilitySolver;
 use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use oxbnn::arch::perf::layer_perf;
-use oxbnn::arch::workload_sim::{simulate_frame_planned, simulate_frames_pipelined};
+use oxbnn::arch::workload_sim::{
+    simulate_frame_planned, simulate_frames_pipelined,
+    simulate_frames_pipelined_admission,
+};
 use oxbnn::coordinator::Batcher;
 use oxbnn::coordinator::Router;
-use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::mapping::layer::{ConvGeom, GemmLayer};
 use oxbnn::mapping::scheduler::MappingPolicy;
-use oxbnn::plan::{ExecutionPlan, LayerPlan, PassStream};
+use oxbnn::plan::{AdmissionMode, ExecutionPlan, FramePlan, LayerPlan, PassStream};
 use oxbnn::util::json::Json;
 use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
 use oxbnn::workloads::Workload;
@@ -186,6 +189,112 @@ fn prop_pipelined_batch_conserves_and_never_exceeds_multiply() {
             prop_assert(w[1] >= w[0] - 1e-12, "frame completions out of order")?;
         }
         Ok(())
+    });
+}
+
+/// The ISSUE-5 differential: receptive-field-exact admission vs the
+/// legacy 12.5% raster halo, on random conv-tail workloads (same-map 3×3
+/// stride-1 chains, maps wide enough that the exact one-row lookahead
+/// undercuts the halo pointwise, feeding an unbalanced FC tail).
+///
+/// 1. **Pointwise lemma** — every exact threshold ≤ the halo threshold.
+/// 2. **Conservation** — both admission modes execute the identical
+///    per-layer PASS/readout/activation/psum multisets (admission defers
+///    work, it never changes it).
+/// 3. **Makespan** — with pointwise-earlier admission, the single-frame
+///    pipelined makespan under exact admission is ≤ the halo makespan
+///    (every event time is a monotone function of its release times in
+///    PCA mode: serial per-XPE queues, one monotone fetch chain).
+/// 4. **Pipelined ≤ sequential** holds in BOTH modes, multi-frame too.
+#[test]
+fn prop_exact_vs_halo_admission_differential() {
+    forall(Config::default().cases(10), |g| {
+        let w = [12usize, 16, 20][g.usize_in(0, 2)];
+        let n_convs = g.usize_in(2, 3);
+        let mut layers = Vec::new();
+        for i in 0..n_convs {
+            layers.push(
+                GemmLayer::new(
+                    format!("c{}", i),
+                    w * w,
+                    g.usize_in(20, 60),
+                    g.usize_in(1, 3),
+                )
+                .with_geom(ConvGeom::new(3, 1, 1, w)),
+            );
+        }
+        layers.push(GemmLayer::fc("fc", 64, g.usize_in(2, 6)));
+        let wl = Workload::new("prop_diff", layers);
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = g.usize_in(4, 12);
+        cfg.xpe_total = g.usize_in(4, 12);
+        cfg.bitcount = BitcountMode::Pca { gamma: 1 << 20 };
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+
+        // (1) Pointwise: exact ≤ halo on every consumer VDP.
+        let exact_fp = FramePlan::new(&plan, 1);
+        let halo_fp =
+            FramePlan::with_admission(&plan, 1, AdmissionMode::RasterHalo(0.125));
+        for unit in 1..wl.layers.len() {
+            for v in 0..exact_fp.layer_plan(unit).vdp_count() {
+                prop_assert(
+                    exact_fp.need_acts(unit, v) <= halo_fp.need_acts(unit, v),
+                    &format!("unit {} vdp {}: exact above halo", unit, v),
+                )?;
+            }
+        }
+
+        // (2) + (3): single-frame differential.
+        let seq = simulate_frame_planned(&plan);
+        let exact =
+            simulate_frames_pipelined_admission(&plan, 1, AdmissionMode::Exact);
+        let halo = simulate_frames_pipelined_admission(
+            &plan,
+            1,
+            AdmissionMode::RasterHalo(0.125),
+        );
+        for key in ["passes", "pca_readouts", "activations", "psums"] {
+            prop_assert_eq(exact.stats.counter(key), halo.stats.counter(key))?;
+            prop_assert_eq(exact.stats.counter(key), seq.stats.counter(key))?;
+        }
+        for (e, h) in exact.layers.iter().zip(&halo.layers) {
+            prop_assert_eq(e.passes, h.passes)?;
+            prop_assert_eq(e.pca_readouts, h.pca_readouts)?;
+            prop_assert_eq(e.psums, h.psums)?;
+            prop_assert_eq(e.activations, h.activations)?;
+        }
+        prop_assert_eq(exact.stats.counter("clamped_events"), 0)?;
+        prop_assert_eq(halo.stats.counter("clamped_events"), 0)?;
+        prop_assert(
+            exact.batch_latency_s <= halo.batch_latency_s * (1.0 + 1e-9),
+            &format!(
+                "exact makespan {} above halo {}",
+                exact.batch_latency_s, halo.batch_latency_s
+            ),
+        )?;
+
+        // (4) Pipelined ≤ sequential in both modes, and on a multi-frame
+        // batch the exact-admission makespan never exceeds the multiply.
+        prop_assert(
+            exact.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9),
+            "exact pipelined frame slower than sequential",
+        )?;
+        prop_assert(
+            halo.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9),
+            "halo pipelined frame slower than sequential",
+        )?;
+        let frames = g.usize_in(2, 3);
+        let batch =
+            simulate_frames_pipelined_admission(&plan, frames, AdmissionMode::Exact);
+        prop_assert_eq(
+            batch.stats.counter("passes"),
+            frames as u64 * seq.stats.counter("passes"),
+        )?;
+        prop_assert(
+            batch.batch_latency_s
+                <= frames as f64 * seq.frame_latency_s * (1.0 + 1e-9),
+            "exact multi-frame batch exceeds the sequential multiply",
+        )
     });
 }
 
