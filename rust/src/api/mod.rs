@@ -140,6 +140,20 @@ pub fn simulated_effective_latency_cached(
     Ok(report.batch_latency_s / report.batch as f64)
 }
 
+/// Simulated photonic throughput (frames/s) at the effective per-frame
+/// latency of [`simulated_effective_latency_cached`] — the paper-model
+/// reference figure the serving registry attaches to each loaded model.
+pub fn simulated_photonic_fps_cached(
+    cache: &std::sync::Arc<crate::plan::PlanCache>,
+    cfg: &crate::arch::accelerator::AcceleratorConfig,
+    workload: &crate::workloads::Workload,
+    kind: BackendKind,
+    batch: usize,
+    pipelined: bool,
+) -> Result<f64, ApiError> {
+    Ok(1.0 / simulated_effective_latency_cached(cache, cfg, workload, kind, batch, pipelined)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,6 +616,24 @@ mod tests {
         .unwrap();
         assert!(pipe < seq, "pipelined effective {} vs sequential {}", pipe, seq);
         assert_eq!(cache.misses(), 1, "all helpers share one compiled plan");
+    }
+
+    #[test]
+    fn photonic_fps_is_reciprocal_effective_latency() {
+        use std::sync::Arc;
+        let cache = Arc::new(crate::plan::PlanCache::default());
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let lat = simulated_effective_latency_cached(
+            &cache, &cfg, &wl, BackendKind::Event, 4, true,
+        )
+        .unwrap();
+        let fps = simulated_photonic_fps_cached(
+            &cache, &cfg, &wl, BackendKind::Event, 4, true,
+        )
+        .unwrap();
+        assert!((fps - 1.0 / lat).abs() / fps < 1e-12);
+        assert!(fps > 0.0);
     }
 
     #[test]

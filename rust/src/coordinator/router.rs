@@ -74,6 +74,35 @@ impl Router {
         Ok(self.replicas[pick].replica_id)
     }
 
+    /// Route to a SPECIFIC replica (session affinity / health probes);
+    /// increments its outstanding count. Errors when that replica is not
+    /// registered — quarantined replicas reject pinned traffic too.
+    pub fn route_to(&mut self, model: &str, replica_id: usize) -> Result<usize, RouteError> {
+        match self
+            .replicas
+            .iter_mut()
+            .find(|r| r.model == model && r.replica_id == replica_id)
+        {
+            Some(r) => {
+                r.outstanding += 1;
+                Ok(replica_id)
+            }
+            None => Err(RouteError::UnknownModel(model.to_string())),
+        }
+    }
+
+    /// Live (still-registered) replica ids for a model, sorted.
+    pub fn replica_ids(&self, model: &str) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .replicas
+            .iter()
+            .filter(|r| r.model == model)
+            .map(|r| r.replica_id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Remove a replica from routing entirely (a worker that failed to
     /// start quarantines itself with this; leaving it registered would
     /// make the dead replica the *preferred* least-loaded target, since
@@ -166,6 +195,20 @@ mod tests {
         // Deregistering the last replica makes the model unroutable.
         r.deregister("m", 1);
         assert_eq!(r.route("m"), Err(RouteError::UnknownModel("m".into())));
+    }
+
+    #[test]
+    fn pinned_routing_respects_registration() {
+        let mut r = Router::default();
+        r.register("m", 0);
+        r.register("m", 1);
+        assert_eq!(r.route_to("m", 1), Ok(1));
+        assert_eq!(r.outstanding("m"), 1);
+        r.complete("m", 1);
+        r.deregister("m", 1);
+        assert_eq!(r.route_to("m", 1), Err(RouteError::UnknownModel("m".into())));
+        assert_eq!(r.replica_ids("m"), vec![0]);
+        assert_eq!(r.outstanding("m"), 0, "failed pinned route must not leak load");
     }
 
     #[test]

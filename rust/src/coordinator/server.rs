@@ -21,6 +21,12 @@
 //! or shutdown flush), so counts return to zero no matter how the caller
 //! consumes (or drops) the reply receiver.
 //!
+//! Lifecycle: [`Server::drain`] gracefully flushes and joins through a
+//! shared handle (the HTTP front-end holds `Arc<Server>`), and
+//! [`Server::quarantine`] removes one replica from routing while still
+//! flushing its accepted jobs — both guarantee zero lost accepted
+//! requests.
+//!
 //! Each response also carries the *simulated photonic latency* the frame
 //! would have on the configured OXBNN accelerator (from the analytic
 //! model), tying the serving path to the paper's performance story.
@@ -202,13 +208,19 @@ impl ServerConfig {
 }
 
 /// Running server handle.
+///
+/// Interior mutability on `senders`/`workers` lets a SHARED handle
+/// (`Arc<Server>`, as the HTTP front-end holds) drain gracefully via
+/// [`Server::drain`] and quarantine individual replicas via
+/// [`Server::quarantine`]; the consuming [`Server::shutdown`] remains for
+/// exclusive owners.
 pub struct Server {
     /// Keyed by (model, replica id). Bounded: this is the back-pressure
     /// surface.
-    senders: BTreeMap<(String, usize), mpsc::SyncSender<Job>>,
+    senders: Mutex<BTreeMap<(String, usize), mpsc::SyncSender<Job>>>,
     router: Arc<Mutex<Router>>,
     pub metrics: Arc<Mutex<ServerMetrics>>,
-    workers: Vec<thread::JoinHandle<()>>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
     input_lens: BTreeMap<String, usize>,
     queue_depth: usize,
 }
@@ -401,10 +413,10 @@ impl Server {
             }
         }
         Ok(Server {
-            senders,
+            senders: Mutex::new(senders),
             router,
             metrics,
-            workers,
+            workers: Mutex::new(workers),
             input_lens,
             queue_depth,
         })
@@ -431,14 +443,7 @@ impl Server {
         self.queue_depth
     }
 
-    /// Submit a request; returns the chosen replica and a receiver for
-    /// the response. Fails fast with [`SubmitError::QueueFull`] when the
-    /// replica's bounded queue has no free slot (back-pressure).
-    pub fn submit(
-        &self,
-        req: InferenceRequest,
-    ) -> std::result::Result<(usize, mpsc::Receiver<Result<InferenceResponse>>), SubmitError>
-    {
+    fn validate(&self, req: &InferenceRequest) -> std::result::Result<(), SubmitError> {
         let expect = self
             .input_lens
             .get(&req.model)
@@ -451,9 +456,60 @@ impl Server {
                 got: req.input.len(),
             });
         }
+        Ok(())
+    }
+
+    /// Enqueue on a routed replica. The router's outstanding count was
+    /// already incremented for `replica`; every failure path here rolls
+    /// it back.
+    fn enqueue(
+        &self,
+        model: String,
+        replica: usize,
+        input: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Result<InferenceResponse>>, SubmitError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = Job { input, submitted: Instant::now(), reply: reply_tx };
+        let sender = self
+            .senders
+            .lock()
+            .unwrap()
+            .get(&(model.clone(), replica))
+            .cloned();
+        let sender = match sender {
+            Some(s) => s,
+            // Quarantined or drained between routing and enqueue.
+            None => {
+                self.router.lock().unwrap().complete(&model, replica);
+                return Err(SubmitError::WorkerGone(model));
+            }
+        };
+        match sender.try_send(job) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.router.lock().unwrap().complete(&model, replica);
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(SubmitError::QueueFull { model, replica, depth: self.queue_depth })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.router.lock().unwrap().complete(&model, replica);
+                Err(SubmitError::WorkerGone(model))
+            }
+        }
+    }
+
+    /// Submit a request; returns the chosen replica and a receiver for
+    /// the response. Fails fast with [`SubmitError::QueueFull`] when the
+    /// replica's bounded queue has no free slot (back-pressure).
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> std::result::Result<(usize, mpsc::Receiver<Result<InferenceResponse>>), SubmitError>
+    {
+        self.validate(&req)?;
         // Route to the least-loaded replica of the model. The router's
         // outstanding count is decremented by the worker on the reply
-        // path (or right below, if admission fails).
+        // path (or in enqueue, if admission fails).
         let replica = self
             .router
             .lock()
@@ -462,28 +518,29 @@ impl Server {
             .map_err(|e| match e {
                 RouteError::UnknownModel(m) => SubmitError::UnknownModel(m),
             })?;
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let job = Job { input: req.input, submitted: Instant::now(), reply: reply_tx };
-        let sender = self
-            .senders
-            .get(&(req.model.clone(), replica))
-            .expect("router only returns registered replicas");
-        match sender.try_send(job) {
-            Ok(()) => Ok((replica, reply_rx)),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.router.lock().unwrap().complete(&req.model, replica);
-                self.metrics.lock().unwrap().rejected += 1;
-                Err(SubmitError::QueueFull {
-                    model: req.model,
-                    replica,
-                    depth: self.queue_depth,
-                })
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.router.lock().unwrap().complete(&req.model, replica);
-                Err(SubmitError::WorkerGone(req.model))
-            }
+        let rx = self.enqueue(req.model, replica, req.input)?;
+        Ok((replica, rx))
+    }
+
+    /// Submit pinned to a SPECIFIC replica (session affinity, health
+    /// probes). No load balancing is applied; a quarantined or absent
+    /// replica fails with [`SubmitError::WorkerGone`].
+    pub fn submit_to(
+        &self,
+        req: InferenceRequest,
+        replica: usize,
+    ) -> std::result::Result<mpsc::Receiver<Result<InferenceResponse>>, SubmitError> {
+        self.validate(&req)?;
+        if self
+            .router
+            .lock()
+            .unwrap()
+            .route_to(&req.model, replica)
+            .is_err()
+        {
+            return Err(SubmitError::WorkerGone(req.model));
         }
+        self.enqueue(req.model, replica, req.input)
     }
 
     /// Convenience: submit and wait.
@@ -495,13 +552,43 @@ impl Server {
         Ok(resp)
     }
 
-    /// Graceful shutdown: close queues, flush in-flight work, join
-    /// workers. Every accepted request receives its reply first.
-    pub fn shutdown(mut self) {
-        self.senders.clear(); // drop all senders → workers drain and exit
-        for w in self.workers.drain(..) {
+    /// Live (non-quarantined) replica ids for a model.
+    pub fn replicas(&self, model: &str) -> Vec<usize> {
+        self.router.lock().unwrap().replica_ids(model)
+    }
+
+    /// Quarantine one replica: deregister it from routing and close its
+    /// queue. Already-accepted jobs are NOT lost — the worker receives
+    /// every buffered job before it observes the disconnect, flushes its
+    /// batcher, and exits. Returns `false` when the replica was already
+    /// gone. The worker thread is joined later by `drain`/`shutdown`.
+    pub fn quarantine(&self, model: &str, replica: usize) -> bool {
+        self.router.lock().unwrap().deregister(model, replica);
+        self.senders
+            .lock()
+            .unwrap()
+            .remove(&(model.to_string(), replica))
+            .is_some()
+    }
+
+    /// Graceful drain through a SHARED handle (`&self`, so `Arc<Server>`
+    /// holders can drain too): close every queue, let workers flush all
+    /// accepted requests, and join them. Idempotent; new submissions
+    /// racing the drain fail with [`SubmitError::WorkerGone`] instead of
+    /// being silently dropped.
+    pub fn drain(&self) {
+        self.senders.lock().unwrap().clear(); // workers see Disconnected
+        let workers: Vec<thread::JoinHandle<()>> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
             let _ = w.join();
         }
+    }
+
+    /// Graceful shutdown for exclusive owners: every accepted request
+    /// receives its reply first. Equivalent to [`Server::drain`].
+    pub fn shutdown(self) {
+        self.drain();
     }
 }
 
@@ -697,33 +784,59 @@ fn run_batch(
     }
     match result {
         Ok(outputs) => {
-            debug_assert_eq!(outputs.len(), size);
+            // A well-behaved engine returns one output per frame. If it
+            // comes up short, the unmatched jobs MUST still get replies:
+            // zip truncation would silently drop their reply senders and
+            // strand blocking callers forever (a release-mode-only loss,
+            // since the old debug_assert compiled out).
+            let n_ok = outputs.len().min(size);
+            if outputs.len() != size {
+                crate::log_error!(
+                    "{}[{}]: engine returned {} outputs for a batch of {}",
+                    model,
+                    replica,
+                    outputs.len(),
+                    size
+                );
+            }
             let total_s: Vec<f64> = jobs
                 .iter()
                 .map(|j| j.submitted.elapsed().as_secs_f64())
                 .collect();
             {
                 let mut m = metrics.lock().unwrap();
-                for (q, t) in queue_s.iter().zip(&total_s) {
+                for (q, t) in queue_s.iter().zip(&total_s).take(n_ok) {
                     m.queue.record(*q);
                     m.execute.record(execute_s);
                     m.end_to_end.record(*t);
                     m.completed += 1;
                 }
+                m.failed += (size - n_ok) as u64;
                 m.record_batch(size);
             }
-            for ((job, logits), (q, t)) in jobs
+            let mut out_iter = outputs.into_iter();
+            for (job, (q, t)) in jobs
                 .into_iter()
-                .zip(outputs)
                 .zip(queue_s.into_iter().zip(total_s))
             {
-                let _ = job.reply.send(Ok(InferenceResponse {
-                    logits,
-                    queue_s: q,
-                    execute_s,
-                    total_s: t,
-                    simulated_photonic_s: simulated_s,
-                }));
+                match out_iter.next() {
+                    Some(logits) => {
+                        let _ = job.reply.send(Ok(InferenceResponse {
+                            logits,
+                            queue_s: q,
+                            execute_s,
+                            total_s: t,
+                            simulated_photonic_s: simulated_s,
+                        }));
+                    }
+                    None => {
+                        let _ = job.reply.send(Err(anyhow!(
+                            "engine returned a short batch ({} of {} outputs)",
+                            n_ok,
+                            size
+                        )));
+                    }
+                }
             }
         }
         Err(e) => {

@@ -54,6 +54,8 @@
 //! * `functional` — integer reference BNN engine for cross-validation
 //! * `coordinator` — inference serving: router, batched back-pressured
 //!   worker loop, admission control, metrics
+//! * [`serving`] — HTTP front-end: multi-model registry with hot reload,
+//!   shard router with retry budgets, health probes, metrics exposition
 //! * [`api`] — the `Session`/`Backend` facade unifying the execution models
 
 pub mod analysis;
@@ -66,6 +68,7 @@ pub mod energy;
 pub mod functional;
 pub mod mapping;
 pub mod plan;
+pub mod serving;
 pub mod sim;
 pub mod workloads;
 pub mod devices;

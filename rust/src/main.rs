@@ -6,6 +6,7 @@
 //!   simulate    run one accelerator × workload through the Session facade
 //!   oxg         OXG device study (truth table / transient, paper Fig. 3)
 //!   serve       start the inference server on AOT artifacts
+//!   serve-http  HTTP front-end: multi-model sharded serving over real sockets
 //!   info        dump accelerator configurations
 //!
 //! `simulate`, `fps` and `sweep` accept `--backend analytic|event|functional`
@@ -37,6 +38,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("oxg") => cmd_oxg(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("serve-http") => cmd_serve_http(&args[1..]),
         Some("serve-bench") => cmd_serve_bench(&args[1..]),
         Some("info") => cmd_info(),
         Some("dump-config") => cmd_dump_config(&args[1..]),
@@ -64,7 +66,8 @@ fn print_usage() {
            simulate   one accelerator x workload run (--backend analytic|event|functional)\n\
            oxg        OXG device study (paper Fig. 3 truth table + transient)\n\
            serve      run the inference server over AOT artifacts\n\
-           serve-bench closed/open-loop load benchmark of the serving path\n\
+           serve-http  HTTP front-end: multi-model sharded serving (--smoke self-test)\n\
+           serve-bench closed/open-loop load benchmark of the serving path (--http)\n\
            info        dump the five evaluation accelerator configurations\n\
            dump-config emit a built-in accelerator config as editable JSON\n\
            sweep       CSV sweep of FPS over the Table II DR points x XPE counts\n\n\
@@ -577,6 +580,360 @@ fn cmd_serve(args: &[String]) -> i32 {
     (ok != n) as i32
 }
 
+/// Build a model registry for the HTTP front-end over the shared
+/// serve/serve-bench options: real artifacts when the manifest exists,
+/// the synthetic in-memory models otherwise.
+fn registry_from_args(
+    parsed: &oxbnn::util::cli::Parsed,
+    first_model: &str,
+) -> Result<std::sync::Arc<oxbnn::serving::ModelRegistry>, i32> {
+    use oxbnn::serving::ModelRegistry;
+    let cfg = server_config_from_args(parsed, first_model)?;
+    let dir = std::path::PathBuf::from(parsed.get("artifacts"));
+    let registry = if dir.join("manifest.json").exists() {
+        match ModelRegistry::from_artifacts(cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {:#}", e);
+                return Err(1);
+            }
+        }
+    } else {
+        ModelRegistry::synthetic(cfg)
+    };
+    Ok(std::sync::Arc::new(registry))
+}
+
+fn cmd_serve_http(args: &[String]) -> i32 {
+    use oxbnn::serving::{serve, HttpConfig, RetryPolicy};
+    let cmd = Command::new(
+        "oxbnn serve-http",
+        "HTTP front-end: multi-model sharded serving with hot reload and health checks",
+    )
+    .opt("addr", "127.0.0.1:8080", "bind address (port 0 = OS-assigned)")
+    .opt("artifacts", "artifacts", "artifacts directory (synthetic models if missing)")
+    .opt("models", "tiny", "comma-separated models to load at boot")
+    .opt("batch", "8", "max dynamic batch size per model")
+    .opt("policy", "immediate", "batch-cut policy: immediate|deadline")
+    .opt("max-wait-ms", "2", "deadline policy: oldest-request max wait (ms)")
+    .opt("queue-depth", "1024", "bounded per-replica queue depth (back-pressure)")
+    .opt("replicas", "1", "worker replicas per model")
+    .opt(
+        "sim-pipeline",
+        "true",
+        "true|false|event — pipelined-batch photonic reference (event: \
+         transaction-level whole-frame event space)",
+    )
+    .opt(
+        "threads",
+        "0",
+        "connection-handler threads, one per open connection (0 = host cores); \
+         size above the expected concurrent connection count",
+    )
+    .opt("retries", "2", "per-request retry cap (gated by the per-model retry budget)")
+    .flag("smoke", "run the self-contained serving smoke suite on loopback and exit");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    if parsed.has_flag("smoke") {
+        return run_http_smoke();
+    }
+    let models: Vec<String> = parsed
+        .get("models")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if models.is_empty() {
+        eprintln!("error: --models must list at least one model");
+        return 2;
+    }
+    let registry = match registry_from_args(&parsed, &models[0]) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    for model in &models {
+        if let Err(e) = registry.load(model, 0) {
+            eprintln!("error loading model '{}': {:#}", model, e);
+            return 1;
+        }
+    }
+    let threads = parsed.get_usize("threads").unwrap_or(0);
+    let retries = parsed.get_usize("retries").unwrap_or(2);
+    let http = HttpConfig {
+        addr: parsed.get("addr").to_string(),
+        threads,
+        retry: RetryPolicy { max_retries: retries, ..RetryPolicy::default() },
+        ..HttpConfig::default()
+    };
+    let handle = match serve(http, registry) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {:#}", e);
+            return 1;
+        }
+    };
+    println!(
+        "oxbnn HTTP front-end listening on http://{} ({} models: {})",
+        handle.addr(),
+        models.len(),
+        models.join(", ")
+    );
+    println!("  POST /v1/infer   {{\"model\":...,\"input\":[...],\"session\":...}}");
+    println!("  POST /v1/submit  fire-and-forget (202)");
+    println!("  GET  /v1/models  live models; PUT reconciles desired state");
+    println!("  GET  /metrics    plain-text counters   GET /healthz  probe states");
+    // Serve until the process is killed (no signal handling offline;
+    // in-process embedders get graceful drain via ServingHandle).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// The CI serving smoke: boots the full front-end on loopback with two
+/// synthetic models and drives it over real sockets — concurrent infer
+/// on both models, overload shedding, hot reload/unload under load,
+/// health/metrics pages, and a graceful drain that must lose nothing.
+fn run_http_smoke() -> i32 {
+    use oxbnn::serving::{serve, HttpConfig, ModelRegistry, RetryPolicy};
+    use oxbnn::serving::http::request_once;
+    use oxbnn::util::json::Json;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    macro_rules! check {
+        ($cond:expr, $($msg:tt)*) => {
+            if !$cond {
+                eprintln!("serving-smoke FAILED: {}", format!($($msg)*));
+                return 1;
+            }
+        };
+    }
+
+    let infer_body = |model: &str, seed: u64| -> String {
+        let mut rng = Rng::new(0x517E + seed);
+        let input: Vec<f64> = (0..192).map(|_| rng.f64() - 0.5).collect();
+        Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("input", Json::arr_f64(&input)),
+        ])
+        .to_string()
+    };
+
+    println!("serving-smoke: booting two synthetic models on loopback");
+    let mut cfg = ServerConfig::synthetic(&[]);
+    cfg.max_batch = 4;
+    cfg.queue_depth = 4;
+    cfg.replicas = 1;
+    // Slow the engine down so overload and in-flight-drain states are
+    // reliably observable over real sockets.
+    cfg.execute_delay = Duration::from_millis(100);
+    let registry = Arc::new(ModelRegistry::synthetic(cfg));
+    for model in ["alpha", "beta"] {
+        if let Err(e) = registry.load(model, 1) {
+            eprintln!("serving-smoke FAILED: loading '{}': {:#}", model, e);
+            return 1;
+        }
+    }
+    let http = HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        // More handlers than the flood below needs engine slots, so
+        // shedding comes from the bounded engine queue, not the pool.
+        threads: 32,
+        retry: RetryPolicy {
+            max_retries: 3,
+            backoff: Duration::from_millis(10),
+            ..RetryPolicy::default()
+        },
+        ..HttpConfig::default()
+    };
+    let handle = match serve(http, Arc::clone(&registry)) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("serving-smoke FAILED: {:#}", e);
+            return 1;
+        }
+    };
+    let addr = handle.addr().to_string();
+
+    // -- step 1: concurrent inference on both models ----------------------
+    println!("serving-smoke: [1/5] concurrent inference on two models");
+    let mut workers = Vec::new();
+    for i in 0..6u64 {
+        let addr = addr.clone();
+        let model = if i % 2 == 0 { "alpha" } else { "beta" };
+        let body = infer_body(model, i);
+        workers.push(std::thread::spawn(move || {
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    for w in workers {
+        let result = w.join().expect("smoke client thread");
+        match result {
+            Ok((200, body)) => {
+                let j = Json::parse(std::str::from_utf8(&body).unwrap_or("")).unwrap_or(Json::Null);
+                let n = j.get("logits").and_then(Json::as_arr).map(|a| a.len());
+                check!(n == Some(10), "expected 10 logits, got {:?}", n);
+            }
+            Ok((status, body)) => {
+                check!(false, "infer returned {}: {}", status, String::from_utf8_lossy(&body));
+            }
+            Err(e) => check!(false, "infer transport error: {}", e),
+        }
+    }
+
+    // -- step 2: overload sheds with 429, nothing hangs --------------------
+    println!("serving-smoke: [2/5] overload: 64 concurrent vs queue depth 4");
+    let mut workers = Vec::new();
+    for i in 0..64u64 {
+        let addr = addr.clone();
+        let body = infer_body("alpha", 100 + i);
+        workers.push(std::thread::spawn(move || {
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    let (mut ok, mut shed, mut other) = (0u64, 0u64, 0u64);
+    for w in workers {
+        match w.join().expect("smoke flood thread") {
+            Ok((200, _)) => ok += 1,
+            Ok((429, _)) => shed += 1,
+            _ => other += 1,
+        }
+    }
+    check!(other == 0, "flood produced {} non-200/429 outcomes", other);
+    check!(ok > 0, "flood must land some requests");
+    check!(shed > 0, "queue depth 4 must shed some of 64 concurrent requests");
+    check!(ok + shed == 64, "every flood request must be answered");
+    println!("serving-smoke:   {} served, {} shed with 429", ok, shed);
+
+    // -- step 3: hot reload/unload under concurrent load -------------------
+    println!("serving-smoke: [3/5] hot load gamma / unload beta / reload alpha under load");
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut loaders = Vec::new();
+    for i in 0..2u64 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let body = infer_body("alpha", 200 + i);
+        loaders.push(std::thread::spawn(move || -> Result<u64, String> {
+            let mut served = 0;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                match request_once(&addr, "POST", "/v1/infer", body.as_bytes()) {
+                    Ok((200, _)) => served += 1,
+                    Ok((status, body)) => {
+                        return Err(format!(
+                            "infer during reload returned {}: {}",
+                            status,
+                            String::from_utf8_lossy(&body)
+                        ))
+                    }
+                    Err(e) => return Err(format!("transport error during reload: {}", e)),
+                }
+            }
+            Ok(served)
+        }));
+    }
+    // Let the load threads issue their first requests before reconfiguring.
+    std::thread::sleep(Duration::from_millis(20));
+    let put = br#"{"models": [{"name": "alpha"}, {"name": "gamma", "replicas": 2}]}"#;
+    let (status, body) = match request_once(&addr, "PUT", "/v1/models", put) {
+        Ok(r) => r,
+        Err(e) => {
+            check!(false, "PUT /v1/models transport error: {}", e);
+            unreachable!()
+        }
+    };
+    check!(status == 200, "PUT returned {}: {}", status, String::from_utf8_lossy(&body));
+    let (status, _) = request_once(&addr, "PUT", "/v1/models", br#"{"reload": ["alpha"]}"#)
+        .expect("reload request");
+    check!(status == 200, "reload PUT returned {}", status);
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    for l in loaders {
+        match l.join().expect("loader thread") {
+            Ok(served) => check!(served > 0, "load thread served nothing"),
+            Err(msg) => check!(false, "{}", msg),
+        }
+    }
+    // Post-conditions: beta gone (404), gamma live, alpha epoch bumped.
+    let (status, _) =
+        request_once(&addr, "POST", "/v1/infer", infer_body("beta", 300).as_bytes())
+            .expect("beta request");
+    check!(status == 404, "unloaded beta must 404, got {}", status);
+    let (status, _) =
+        request_once(&addr, "POST", "/v1/infer", infer_body("gamma", 301).as_bytes())
+            .expect("gamma request");
+    check!(status == 200, "hot-loaded gamma must serve, got {}", status);
+    let (_, listing) = request_once(&addr, "GET", "/v1/models", b"").expect("models listing");
+    let j = Json::parse(std::str::from_utf8(&listing).unwrap_or("")).unwrap_or(Json::Null);
+    let alpha_epoch = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|ms| {
+            ms.iter()
+                .find(|m| m.get("name").and_then(Json::as_str) == Some("alpha"))
+                .and_then(|m| m.get("epoch").and_then(Json::as_usize))
+        })
+        .unwrap_or(0);
+    check!(alpha_epoch >= 3, "alpha reload must bump the epoch, got {}", alpha_epoch);
+
+    // -- step 4: health and metrics pages ----------------------------------
+    println!("serving-smoke: [4/5] health + metrics");
+    let (status, body) = request_once(&addr, "GET", "/healthz", b"").expect("healthz");
+    check!(status == 200, "healthz returned {}: {}", status, String::from_utf8_lossy(&body));
+    let (status, body) = request_once(&addr, "GET", "/metrics", b"").expect("metrics");
+    check!(status == 200, "metrics returned {}", status);
+    let text = String::from_utf8_lossy(&body);
+    check!(
+        text.contains("oxbnn_http_requests_total{endpoint=\"/v1/infer\",status=\"200\"}"),
+        "metrics missing infer counters: {}",
+        text
+    );
+    check!(text.contains("oxbnn_http_shed_total"), "metrics missing shed counter");
+    check!(
+        text.contains("oxbnn_model_replicas{model=\"gamma\"} 2"),
+        "metrics missing gamma replicas: {}",
+        text
+    );
+
+    // -- step 5: graceful drain loses nothing in flight --------------------
+    println!("serving-smoke: [5/5] graceful drain with requests in flight");
+    let barrier = Arc::new(std::sync::Barrier::new(5));
+    let mut drainers = Vec::new();
+    for i in 0..4u64 {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        let body = infer_body("alpha", 400 + i);
+        drainers.push(std::thread::spawn(move || {
+            barrier.wait();
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    barrier.wait();
+    // Give the requests time to be accepted and submitted, then drain
+    // while they are still executing (the engine holds each for 100ms).
+    std::thread::sleep(Duration::from_millis(75));
+    handle.shutdown();
+    for d in drainers {
+        match d.join().expect("drain client") {
+            Ok((200, _)) => {}
+            Ok((status, body)) => check!(
+                false,
+                "in-flight request lost to drain: {} {}",
+                status,
+                String::from_utf8_lossy(&body)
+            ),
+            Err(e) => check!(false, "in-flight request dropped: {}", e),
+        }
+    }
+    check!(
+        request_once(&addr, "GET", "/healthz", b"").is_err(),
+        "server must be down after shutdown"
+    );
+    println!("serving-smoke PASSED");
+    0
+}
+
 #[derive(Default)]
 struct LoadStats {
     ok: u64,
@@ -629,11 +986,21 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
         "true",
         "true|false|event — pipelined-batch photonic reference (event: \
          transaction-level whole-frame event space)",
+    )
+    .opt(
+        "http",
+        "",
+        "benchmark over HTTP instead of in-process: 'auto' boots a loopback \
+         front-end, anything else is an external addr (host:port) — make sure \
+         the target's --threads covers --concurrency; emits BENCH_http.json",
     );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_cli(e),
     };
+    if !parsed.get("http").is_empty() {
+        return cmd_serve_bench_http(&parsed);
+    }
     let model = parsed.get("model").to_string();
     let mode = parsed.get("mode").to_string();
     if mode != "closed" && mode != "open" {
@@ -791,6 +1158,299 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
         return 1;
     }
     (stats.ok == 0) as i32
+}
+
+/// Fetch `model`'s input length and photonic FPS from a front-end's
+/// `GET /v1/models` listing (works for in-process and external targets).
+fn fetch_model_info(addr: &str, model: &str) -> Result<(usize, f64), String> {
+    use oxbnn::util::json::Json;
+    let (status, body) = oxbnn::serving::request_once(addr, "GET", "/v1/models", b"")
+        .map_err(|e| format!("GET /v1/models on {}: {}", addr, e))?;
+    if status != 200 {
+        return Err(format!("GET /v1/models returned {}", status));
+    }
+    let text =
+        std::str::from_utf8(&body).map_err(|_| "non-UTF-8 models listing".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad models listing JSON: {}", e))?;
+    let entry = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .and_then(|ms| {
+            ms.iter()
+                .find(|m| m.get("name").and_then(Json::as_str) == Some(model))
+                .cloned()
+        })
+        .ok_or_else(|| format!("model '{}' is not loaded on {}", model, addr))?;
+    let input_len = entry
+        .get("input_len")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "models listing missing input_len".to_string())?;
+    let photonic_fps = entry.get("photonic_fps").and_then(Json::as_f64).unwrap_or(0.0);
+    Ok((input_len, photonic_fps))
+}
+
+/// `serve-bench --http`: closed/open-loop load over real loopback (or
+/// external) sockets against the HTTP front-end, then a lazy-vs-tree
+/// request-parse micro-benchmark on the exact wire payload. Writes
+/// `BENCH_http.json`; exits 1 if nothing was served or the lazy parser
+/// falls below the 5x speedup floor.
+fn cmd_serve_bench_http(parsed: &oxbnn::util::cli::Parsed) -> i32 {
+    use oxbnn::coordinator::LatencyHistogram;
+    use oxbnn::serving::{serve, ClientConn, HttpConfig, RetryPolicy};
+    use oxbnn::util::json::{path_f32_slice, path_str, Json};
+    use std::time::{Duration, Instant};
+
+    let model = parsed.get("model").to_string();
+    let mode = parsed.get("mode").to_string();
+    if mode != "closed" && mode != "open" {
+        eprintln!("error: --mode must be closed|open, got '{}'", mode);
+        return 2;
+    }
+    let concurrency = parsed.get_usize("concurrency").unwrap_or(32).max(1);
+    let duration = parsed.get_f64("duration").unwrap_or(2.0).max(0.01);
+    let total_requests = parsed.get_usize("requests").unwrap_or(0);
+    let rate = parsed.get_f64("rate").unwrap_or(2000.0).max(1.0);
+    let target = parsed.get("http").to_string();
+
+    let mut handle = None;
+    let addr = if target == "auto" {
+        let registry = match registry_from_args(parsed, &model) {
+            Ok(r) => r,
+            Err(code) => return code,
+        };
+        if let Err(e) = registry.load(&model, 0) {
+            eprintln!("error loading model '{}': {:#}", model, e);
+            return 1;
+        }
+        let http = HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // One handler per open benchmark connection, plus slack for
+            // the info/metrics fetches.
+            threads: concurrency + 2,
+            retry: RetryPolicy::default(),
+            ..HttpConfig::default()
+        };
+        match serve(http, registry) {
+            Ok(h) => {
+                let a = h.addr().to_string();
+                handle = Some(h);
+                a
+            }
+            Err(e) => {
+                eprintln!("error: {:#}", e);
+                return 1;
+            }
+        }
+    } else {
+        target.clone()
+    };
+
+    let (input_len, photonic_fps) = match fetch_model_info(&addr, &model) {
+        Ok(v) => v,
+        Err(msg) => {
+            eprintln!("error: {}", msg);
+            return 1; // a booted handle drains via Drop
+        }
+    };
+    println!(
+        "serve-bench --http: target={} model={} mode={} concurrency={} input_len={}",
+        addr, model, mode, concurrency, input_len
+    );
+
+    let deadline = Instant::now() + Duration::from_secs_f64(duration);
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let addr = addr.clone();
+        let model = model.clone();
+        let mode = mode.clone();
+        let budget = if total_requests > 0 {
+            Some(total_requests / concurrency + usize::from(c < total_requests % concurrency))
+        } else {
+            None
+        };
+        let client_rate = rate / concurrency as f64;
+        clients.push(std::thread::spawn(move || -> (Vec<f64>, u64, u64, u64) {
+            let mut rng = Rng::new(0xB17C + c as u64);
+            let input: Vec<f64> = (0..input_len).map(|_| rng.f64() - 0.5).collect();
+            let body = Json::obj(vec![
+                ("model", Json::Str(model)),
+                ("input", Json::arr_f64(&input)),
+            ])
+            .to_string();
+            let mut conn = match ClientConn::connect(&addr) {
+                Ok(conn) => conn,
+                Err(_) => return (Vec::new(), 0, 0, 1),
+            };
+            let mut lat = Vec::new();
+            let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
+            let mut issued = 0usize;
+            let mut next_arrival = Instant::now();
+            loop {
+                match budget {
+                    Some(b) if issued >= b => break,
+                    Some(_) => {}
+                    None if Instant::now() >= deadline => break,
+                    None => {}
+                }
+                if mode == "open" {
+                    // Poisson arrival schedule; when the connection falls
+                    // behind, arrivals burst back-to-back to catch up.
+                    next_arrival += Duration::from_secs_f64(rng.exp(client_rate));
+                    let now = Instant::now();
+                    if next_arrival > now {
+                        let mut wait = next_arrival - now;
+                        if budget.is_none() {
+                            wait = wait.min(deadline.saturating_duration_since(now));
+                        }
+                        std::thread::sleep(wait);
+                    }
+                }
+                issued += 1;
+                let t_req = Instant::now();
+                match conn.request("POST", "/v1/infer", body.as_bytes()) {
+                    Ok((200, _)) => {
+                        ok += 1;
+                        lat.push(t_req.elapsed().as_secs_f64());
+                    }
+                    Ok((429, _)) => rejected += 1,
+                    Ok((_, _)) => failed += 1,
+                    Err(_) => {
+                        failed += 1;
+                        match ClientConn::connect(&addr) {
+                            Ok(fresh) => conn = fresh,
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+            (lat, ok, rejected, failed)
+        }));
+    }
+    let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
+    let mut samples: Vec<f64> = Vec::new();
+    for c in clients {
+        match c.join() {
+            Ok((lat, o, r, f)) => {
+                samples.extend(lat);
+                ok += o;
+                rejected += r;
+                failed += f;
+            }
+            Err(_) => eprintln!("bench client thread panicked"),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut hist = LatencyHistogram::new(samples.len().max(1));
+    for s in &samples {
+        hist.record(*s);
+    }
+    let achieved_fps = ok as f64 / elapsed;
+    println!(
+        "\ncompleted {} requests in {:.3}s → {:.1} FPS end-to-end \
+         ({} rejected with 429, {} failed)",
+        ok, elapsed, achieved_fps, rejected, failed
+    );
+    println!(
+        "e2e latency: p50 {} p95 {} p99 {}",
+        fmt_time(hist.p50()),
+        fmt_time(hist.p95()),
+        fmt_time(hist.p99())
+    );
+
+    // Request-parse micro-benchmark on the exact wire shape the hot path
+    // sees: lazy field scanner vs full tree parse + extraction.
+    let parse_body = {
+        let mut rng = Rng::new(0xFACE);
+        let input: Vec<f64> = (0..input_len).map(|_| rng.f64() - 0.5).collect();
+        Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("session", Json::Str("bench-session".to_string())),
+            ("input", Json::arr_f64(&input)),
+        ])
+        .to_string()
+    };
+    let bytes = parse_body.as_bytes();
+    let mut out: Vec<f32> = Vec::new();
+    let lazy_pass = |out: &mut Vec<f32>| {
+        let m = path_str(bytes, &["model"]).expect("lazy model").expect("model present");
+        let s = path_str(bytes, &["session"]).expect("lazy session");
+        let found = path_f32_slice(bytes, &["input"], out).expect("lazy input");
+        std::hint::black_box((m.len(), s.is_some(), found, out.len()));
+    };
+    let full_pass = || {
+        let j = Json::parse(&parse_body).expect("tree parse");
+        let m = j.get("model").and_then(Json::as_str).map(String::from);
+        let s = j.get("session").and_then(Json::as_str).map(String::from);
+        let input: Vec<f32> = j
+            .get("input")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).map(|v| v as f32).collect())
+            .unwrap_or_default();
+        std::hint::black_box((m, s, input.len()));
+    };
+    let iters = 2000usize;
+    for _ in 0..200 {
+        lazy_pass(&mut out);
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        lazy_pass(&mut out);
+    }
+    let lazy_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    for _ in 0..50 {
+        full_pass();
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        full_pass();
+    }
+    let full_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    let speedup = full_ns / lazy_ns.max(1e-9);
+    println!(
+        "request parse ({} floats): lazy {:.0} ns/req vs full tree {:.0} ns/req → {:.1}x",
+        input_len, lazy_ns, full_ns, speedup
+    );
+
+    let report = Json::obj(vec![
+        ("target", Json::Str(addr.clone())),
+        ("model", Json::Str(model.clone())),
+        ("mode", Json::Str(mode.clone())),
+        ("concurrency", Json::Num(concurrency as f64)),
+        ("input_len", Json::Num(input_len as f64)),
+        ("requests_ok", Json::Num(ok as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("failed", Json::Num(failed as f64)),
+        ("elapsed_s", Json::Num(elapsed)),
+        ("achieved_fps", Json::Num(achieved_fps)),
+        ("photonic_fps", Json::Num(photonic_fps)),
+        ("e2e_p50_s", Json::Num(hist.p50())),
+        ("e2e_p95_s", Json::Num(hist.p95())),
+        ("e2e_p99_s", Json::Num(hist.p99())),
+        ("parse_lazy_ns_per_req", Json::Num(lazy_ns)),
+        ("parse_full_ns_per_req", Json::Num(full_ns)),
+        ("parse_speedup", Json::Num(speedup)),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_http.json", report.to_string_pretty()) {
+        eprintln!("write BENCH_http.json failed: {}", e);
+        return 1;
+    }
+    println!("wrote BENCH_http.json");
+    if let Some(h) = handle {
+        h.shutdown();
+    }
+    if ok == 0 {
+        eprintln!("error: no requests served");
+        return 1;
+    }
+    if speedup < 5.0 {
+        eprintln!(
+            "error: lazy parser speedup {:.1}x is below the 5x floor",
+            speedup
+        );
+        return 1;
+    }
+    0
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {

@@ -204,6 +204,20 @@ impl Manifest {
             .get(name)
             .ok_or_else(|| schema(format!("artifact '{}' not in manifest", name)))
     }
+
+    /// A manifest holding only the `bnn_<model>` artifacts for `models` —
+    /// the per-model slice the serving registry hands each model's
+    /// `Server`, so hot-loading one model never depends on a sibling
+    /// artifact validating.
+    pub fn subset(&self, models: &[&str]) -> Result<Manifest, ManifestError> {
+        let mut artifacts = BTreeMap::new();
+        for model in models {
+            let name = format!("bnn_{}", model);
+            let a = self.get(&name)?;
+            artifacts.insert(name, a.clone());
+        }
+        Ok(Manifest { dir: self.dir.clone(), artifacts })
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +274,16 @@ mod tests {
     fn missing_artifact_errors() {
         let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
         assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn subset_slices_per_model() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        let s = m.subset(&["tiny"]).unwrap();
+        assert_eq!(s.artifacts.len(), 1);
+        assert!(s.get("bnn_tiny").is_ok());
+        assert_eq!(s.dir, m.dir);
+        assert!(m.subset(&["tiny", "nope"]).is_err());
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Health checking that exercises a real replica round-trip.
+//!
+//! A probe is a zero-input inference submitted through the model's live
+//! coordinator server — the same queue, batcher, and engine a user
+//! request crosses — so "healthy" means the serving path works, not just
+//! that a thread is parked somewhere. Probe outcomes map to three
+//! states: `Live` (round-trip completed), `Degraded` (back-pressured or
+//! slow: queue full, or no reply within the probe timeout), `Dead`
+//! (submission refused or execution failed). Reports are TTL-cached per
+//! model so `GET /healthz` polling never becomes its own load source.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{InferenceRequest, SubmitError};
+
+use super::registry::ModelEntry;
+
+/// Probe verdict for one model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Probe round-trip completed.
+    Live,
+    /// Serving but back-pressured: probe shed with queue-full, or the
+    /// reply missed the probe timeout.
+    Degraded,
+    /// Probe refused or failed — the model cannot serve.
+    Dead,
+}
+
+impl HealthState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Live => "live",
+            HealthState::Degraded => "degraded",
+            HealthState::Dead => "dead",
+        }
+    }
+}
+
+/// One model's health verdict plus the evidence.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    pub model: String,
+    pub state: HealthState,
+    pub detail: String,
+}
+
+/// TTL-cached prober.
+pub struct HealthChecker {
+    cache: Mutex<BTreeMap<String, (Instant, HealthReport)>>,
+    ttl: Duration,
+    probe_timeout: Duration,
+}
+
+impl HealthChecker {
+    pub fn new(ttl: Duration, probe_timeout: Duration) -> HealthChecker {
+        HealthChecker { cache: Mutex::new(BTreeMap::new()), ttl, probe_timeout }
+    }
+
+    /// Probe `entry`, serving a cached report when fresher than the TTL.
+    pub fn check(&self, entry: &ModelEntry) -> HealthReport {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some((at, report)) = cache.get(&entry.name) {
+                if at.elapsed() < self.ttl {
+                    return report.clone();
+                }
+            }
+        }
+        let report = probe(entry, self.probe_timeout);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(entry.name.clone(), (Instant::now(), report.clone()));
+        report
+    }
+
+    /// Drop the cached report for `model` (after quarantine/reload, the
+    /// next check must re-probe).
+    pub fn invalidate(&self, model: &str) {
+        self.cache.lock().unwrap().remove(model);
+    }
+}
+
+/// One uncached probe round-trip.
+pub fn probe(entry: &ModelEntry, timeout: Duration) -> HealthReport {
+    let req = InferenceRequest {
+        model: entry.name.clone(),
+        input: vec![0.0; entry.input_len],
+    };
+    let report = |state: HealthState, detail: String| HealthReport {
+        model: entry.name.clone(),
+        state,
+        detail,
+    };
+    let rx = match entry.server.submit(req) {
+        Ok((_replica, rx)) => rx,
+        Err(SubmitError::QueueFull { depth, .. }) => {
+            return report(
+                HealthState::Degraded,
+                format!("probe shed: queue full at depth {}", depth),
+            )
+        }
+        Err(e) => return report(HealthState::Dead, format!("probe refused: {}", e)),
+    };
+    match rx.recv_timeout(timeout) {
+        Ok(Ok(resp)) => report(
+            HealthState::Live,
+            format!("probe round-trip in {:.3}ms", resp.total_s * 1e3),
+        ),
+        Ok(Err(e)) => report(HealthState::Dead, format!("probe execution failed: {:#}", e)),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => report(
+            HealthState::Degraded,
+            format!("probe reply missed {:?} timeout", timeout),
+        ),
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            report(HealthState::Dead, "probe reply channel dropped".to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::serving::registry::ModelRegistry;
+    use std::sync::Arc;
+
+    fn registry() -> Arc<ModelRegistry> {
+        let mut cfg = ServerConfig::synthetic(&[]);
+        cfg.max_batch = 4;
+        cfg.queue_depth = 64;
+        Arc::new(ModelRegistry::synthetic(cfg))
+    }
+
+    #[test]
+    fn live_model_probes_live() {
+        let reg = registry();
+        let entry = reg.load("m", 1).unwrap();
+        let r = probe(&entry, Duration::from_secs(5));
+        assert_eq!(r.state, HealthState::Live, "detail: {}", r.detail);
+        assert_eq!(r.model, "m");
+        reg.drain_all();
+    }
+
+    #[test]
+    fn drained_model_probes_dead() {
+        let reg = registry();
+        let entry = reg.load("m", 1).unwrap();
+        entry.server.drain();
+        let r = probe(&entry, Duration::from_secs(1));
+        assert_eq!(r.state, HealthState::Dead, "detail: {}", r.detail);
+        reg.drain_all();
+    }
+
+    #[test]
+    fn slow_model_probes_degraded() {
+        let mut cfg = ServerConfig::synthetic(&[]);
+        cfg.max_batch = 1;
+        cfg.queue_depth = 64;
+        cfg.execute_delay = Duration::from_millis(200);
+        let reg = Arc::new(ModelRegistry::synthetic(cfg));
+        let entry = reg.load("m", 1).unwrap();
+        let r = probe(&entry, Duration::from_millis(5));
+        assert_eq!(r.state, HealthState::Degraded, "detail: {}", r.detail);
+        reg.drain_all();
+    }
+
+    #[test]
+    fn checker_caches_within_ttl_and_invalidates() {
+        let reg = registry();
+        let entry = reg.load("m", 1).unwrap();
+        let checker = HealthChecker::new(Duration::from_secs(60), Duration::from_secs(5));
+        assert_eq!(checker.check(&entry).state, HealthState::Live);
+        // Kill the model; the cached verdict still reads live until
+        // invalidated — then the re-probe sees it dead.
+        entry.server.drain();
+        assert_eq!(checker.check(&entry).state, HealthState::Live, "TTL-cached");
+        checker.invalidate("m");
+        assert_eq!(checker.check(&entry).state, HealthState::Dead);
+        reg.drain_all();
+    }
+}

@@ -1,0 +1,398 @@
+//! Hand-rolled HTTP/1.1 over `std::net` (no hyper/tokio offline): a
+//! buffered server-side connection ([`Conn`]) that parses pipelined
+//! keep-alive requests with `Content-Length` bodies, a response writer,
+//! and a small keep-alive client ([`ClientConn`]) shared by the smoke
+//! suite, the integration tests and `serve-bench --http`.
+//!
+//! Scope is deliberately the serving front-end's needs: request-line +
+//! headers + fixed-length body. No chunked transfer encoding, no
+//! multi-line headers, no HTTP/2 — a request using those is answered
+//! with a clean protocol error, never undefined behavior.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Largest accepted header block; protects the server from unbounded
+/// buffering on garbage input.
+const MAX_HEAD: usize = 16 * 1024;
+/// Largest accepted request body (a vgg_small frame is ~3072 floats ≈
+/// 40 KiB of JSON; 16 MiB leaves generous headroom).
+const MAX_BODY: usize = 16 * 1024 * 1024;
+const READ_CHUNK: usize = 8 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the connection should be kept open after the response.
+    pub keep_alive: bool,
+}
+
+/// Connection-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum HttpError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed request: {0}")]
+    Malformed(String),
+}
+
+fn malformed(msg: impl Into<String>) -> HttpError {
+    HttpError::Malformed(msg.into())
+}
+
+/// Standard reason phrase for the status codes this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Find the first `\r\n\r\n` in `buf`, returning the index just past it.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Case-insensitive ASCII equality (header names).
+fn eq_ignore_case(a: &str, b: &str) -> bool {
+    a.eq_ignore_ascii_case(b)
+}
+
+/// Server side of one TCP connection: owns the stream plus a carry-over
+/// buffer so pipelined keep-alive requests parse without re-reads.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn { stream, buf: Vec::new() }
+    }
+
+    /// Read one full request. `Ok(None)` means the peer closed cleanly
+    /// between requests; truncation mid-request is an error.
+    pub fn read_request(&mut self) -> Result<Option<Request>, HttpError> {
+        // Accumulate until the header block is complete.
+        let head_end = loop {
+            if let Some(end) = find_head_end(&self.buf) {
+                break end;
+            }
+            if self.buf.len() > MAX_HEAD {
+                return Err(malformed("header block exceeds 16 KiB"));
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None); // clean close between requests
+                }
+                return Err(malformed("connection closed mid-headers"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+
+        let head = std::str::from_utf8(&self.buf[..head_end - 4])
+            .map_err(|_| malformed("non-UTF-8 header block"))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || path.is_empty() {
+            return Err(malformed(format!("bad request line '{}'", request_line)));
+        }
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(malformed(format!("unsupported version '{}'", version)));
+        }
+
+        let mut content_length: usize = 0;
+        // HTTP/1.1 defaults to keep-alive; 1.0 to close.
+        let mut keep_alive = version == "HTTP/1.1";
+        for line in lines {
+            let (name, value) = match line.split_once(':') {
+                Some((n, v)) => (n.trim(), v.trim()),
+                None => continue, // tolerate stray lines
+            };
+            if eq_ignore_case(name, "content-length") {
+                content_length = value
+                    .parse()
+                    .map_err(|_| malformed(format!("bad content-length '{}'", value)))?;
+            } else if eq_ignore_case(name, "connection") {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            } else if eq_ignore_case(name, "transfer-encoding") {
+                return Err(malformed("transfer-encoding is not supported"));
+            }
+        }
+        if content_length > MAX_BODY {
+            return Err(malformed(format!("body of {} bytes exceeds cap", content_length)));
+        }
+
+        // Accumulate the body.
+        let total = head_end + content_length;
+        while self.buf.len() < total {
+            let mut chunk = [0u8; READ_CHUNK];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(malformed("connection closed mid-body"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = self.buf[head_end..total].to_vec();
+        // Keep any pipelined bytes beyond this request.
+        self.buf.drain(..total);
+        Ok(Some(Request { method, path, body, keep_alive }))
+    }
+
+    /// Write a complete response. `keep_alive` decides the `Connection`
+    /// header; the caller closes the connection when it is false.
+    pub fn write_response(
+        &mut self,
+        status: u16,
+        headers: &[(&str, &str)],
+        body: &[u8],
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            status,
+            status_reason(status),
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        for (name, value) in headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()
+    }
+}
+
+/// Minimal keep-alive HTTP/1.1 client over one connection. Responses
+/// must carry `Content-Length` (everything this repo's server sends
+/// does).
+pub struct ClientConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ClientConn {
+    pub fn connect(addr: &str) -> std::io::Result<ClientConn> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(ClientConn { stream, buf: Vec::new() })
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>), HttpError> {
+        let head = format!(
+            "{} {} HTTP/1.1\r\nHost: oxbnn\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            method,
+            path,
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()?;
+
+        // Read the response head.
+        let head_end = loop {
+            if let Some(end) = find_head_end(&self.buf) {
+                break end;
+            }
+            if self.buf.len() > MAX_HEAD {
+                return Err(malformed("response header block exceeds cap"));
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(malformed("connection closed before response"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end - 4])
+            .map_err(|_| malformed("non-UTF-8 response head"))?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| malformed(format!("bad status line '{}'", status_line)))?;
+        let mut content_length: usize = 0;
+        for line in lines {
+            if let Some((name, value)) = line.split_once(':') {
+                if eq_ignore_case(name.trim(), "content-length") {
+                    content_length = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| malformed("bad response content-length"))?;
+                }
+            }
+        }
+        if content_length > MAX_BODY {
+            return Err(malformed("response body exceeds cap"));
+        }
+        let total = head_end + content_length;
+        while self.buf.len() < total {
+            let mut chunk = [0u8; READ_CHUNK];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(malformed("connection closed mid-response"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = self.buf[head_end..total].to_vec();
+        self.buf.drain(..total);
+        Ok((status, body))
+    }
+}
+
+/// One-shot convenience: connect, issue a single request, disconnect.
+pub fn request_once(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>), HttpError> {
+    let mut conn = ClientConn::connect(addr)?;
+    conn.request(method, path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::thread;
+
+    /// Loopback round-trip: the server-side Conn parses what the
+    /// client-side ClientConn sends, and vice versa.
+    #[test]
+    fn request_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream);
+            // Two pipeline-friendly requests on one connection.
+            let r1 = conn.read_request().unwrap().unwrap();
+            assert_eq!(r1.method, "POST");
+            assert_eq!(r1.path, "/v1/infer");
+            assert_eq!(r1.body, b"{\"model\":\"tiny\"}");
+            assert!(r1.keep_alive);
+            conn.write_response(200, &[("X-Test", "1")], b"ok-1", true).unwrap();
+            let r2 = conn.read_request().unwrap().unwrap();
+            assert_eq!(r2.method, "GET");
+            assert_eq!(r2.path, "/metrics");
+            assert!(r2.body.is_empty());
+            conn.write_response(404, &[], b"gone", false).unwrap();
+            // Peer closes; next read reports a clean end.
+            assert!(matches!(conn.read_request(), Ok(None) | Err(_)));
+        });
+        let mut client = ClientConn::connect(&addr.to_string()).unwrap();
+        let (status, body) = client
+            .request("POST", "/v1/infer", b"{\"model\":\"tiny\"}")
+            .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"ok-1");
+        let (status, body) = client.request("GET", "/metrics", b"").unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, b"gone");
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let cases: &[&[u8]] = &[
+            b"NONSENSE\r\n\r\n",
+            b"GET /x SPDY/3\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        ];
+        for raw in cases {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let raw = raw.to_vec();
+            let client = thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(&raw).unwrap();
+            });
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream);
+            let got = conn.read_request();
+            assert!(
+                matches!(got, Err(HttpError::Malformed(_))),
+                "{:?} must be rejected, got {:?}",
+                String::from_utf8_lossy(&raw),
+                got.map(|r| r.map(|q| q.path))
+            );
+            client.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_an_error_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST /x HTTP/1.1\r\nContent-Length: 100\r\n\r\nshort").unwrap();
+            // Close with 95 bytes still owed.
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream);
+        assert!(conn.read_request().is_err());
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream);
+        let r = conn.read_request().unwrap().unwrap();
+        assert!(!r.keep_alive);
+        drop(client.join().unwrap());
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_codes() {
+        for code in [200u16, 202, 400, 404, 405, 413, 429, 500, 503] {
+            assert_ne!(status_reason(code), "Unknown", "{}", code);
+        }
+        assert_eq!(status_reason(418), "Unknown");
+    }
+}

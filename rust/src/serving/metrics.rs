@@ -1,0 +1,152 @@
+//! HTTP front-end metrics: per-endpoint/status request counters, shed and
+//! retry totals, and the lazy-parse timing the `serve-bench --http` report
+//! reads back. Rendered as a plain-text exposition (Prometheus-style
+//! `name{labels} value` lines) by `GET /metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Counters shared by every connection handler. One `Mutex` around a
+/// small map keeps this dependency-free; the critical sections are a few
+/// integer bumps, far off the request critical path compared to the
+/// engine round-trip.
+#[derive(Debug, Default)]
+pub struct HttpMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// (endpoint label, status code) → count.
+    requests: BTreeMap<(String, u16), u64>,
+    /// Requests shed with 429 after the retry budget ran dry.
+    shed: u64,
+    /// Individual retry attempts performed by the shard router.
+    retries: u64,
+    /// Nanoseconds spent in the lazy request parser, and requests parsed.
+    parse_ns: u64,
+    parse_count: u64,
+    /// Whether the server is draining (new requests get 503).
+    draining: bool,
+}
+
+impl HttpMetrics {
+    /// Record one finished request.
+    pub fn record(&self, endpoint: &str, status: u16) {
+        let mut m = self.inner.lock().unwrap();
+        *m.requests.entry((endpoint.to_string(), status)).or_insert(0) += 1;
+        if status == 429 {
+            m.shed += 1;
+        }
+    }
+
+    /// Record `n` retry attempts made on behalf of one request.
+    pub fn record_retries(&self, n: u64) {
+        if n > 0 {
+            self.inner.lock().unwrap().retries += n;
+        }
+    }
+
+    /// Record one lazy-parsed request body.
+    pub fn record_parse_ns(&self, ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.parse_ns += ns;
+        m.parse_count += 1;
+    }
+
+    pub fn set_draining(&self, draining: bool) {
+        self.inner.lock().unwrap().draining = draining;
+    }
+
+    /// Count for one (endpoint, status) cell.
+    pub fn count(&self, endpoint: &str, status: u16) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .requests
+            .get(&(endpoint.to_string(), status))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Total requests shed with 429.
+    pub fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().shed
+    }
+
+    /// Total retry attempts.
+    pub fn retries(&self) -> u64 {
+        self.inner.lock().unwrap().retries
+    }
+
+    /// Mean lazy-parse nanoseconds per request (0 before any parse).
+    pub fn mean_parse_ns(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.parse_count == 0 {
+            0.0
+        } else {
+            m.parse_ns as f64 / m.parse_count as f64
+        }
+    }
+
+    /// Plain-text exposition. `extra` lines (e.g. per-model coordinator
+    /// counters) are appended verbatim by the caller.
+    pub fn render(&self, extra: &str) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for ((endpoint, status), count) in &m.requests {
+            out.push_str(&format!(
+                "oxbnn_http_requests_total{{endpoint=\"{}\",status=\"{}\"}} {}\n",
+                endpoint, status, count
+            ));
+        }
+        out.push_str(&format!("oxbnn_http_shed_total {}\n", m.shed));
+        out.push_str(&format!("oxbnn_http_retries_total {}\n", m.retries));
+        out.push_str(&format!("oxbnn_http_parse_ns_total {}\n", m.parse_ns));
+        out.push_str(&format!("oxbnn_http_parse_requests_total {}\n", m.parse_count));
+        out.push_str(&format!("oxbnn_http_draining {}\n", u8::from(m.draining)));
+        out.push_str(extra);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let m = HttpMetrics::default();
+        m.record("/v1/infer", 200);
+        m.record("/v1/infer", 200);
+        m.record("/v1/infer", 429);
+        m.record("/healthz", 200);
+        m.record_retries(3);
+        m.record_parse_ns(500);
+        m.record_parse_ns(1500);
+        assert_eq!(m.count("/v1/infer", 200), 2);
+        assert_eq!(m.count("/v1/infer", 429), 1);
+        assert_eq!(m.count("/v1/infer", 500), 0);
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.retries(), 3);
+        assert!((m.mean_parse_ns() - 1000.0).abs() < 1e-9);
+        let text = m.render("oxbnn_model_replicas{model=\"tiny\"} 2\n");
+        assert!(text.contains(
+            "oxbnn_http_requests_total{endpoint=\"/v1/infer\",status=\"200\"} 2"
+        ));
+        assert!(text.contains("oxbnn_http_shed_total 1"));
+        assert!(text.contains("oxbnn_http_retries_total 3"));
+        assert!(text.contains("oxbnn_http_draining 0"));
+        assert!(text.contains("oxbnn_model_replicas{model=\"tiny\"} 2"));
+        m.set_draining(true);
+        assert!(m.render("").contains("oxbnn_http_draining 1"));
+    }
+
+    #[test]
+    fn empty_metrics_render_safely() {
+        let m = HttpMetrics::default();
+        assert_eq!(m.mean_parse_ns(), 0.0);
+        let text = m.render("");
+        assert!(text.contains("oxbnn_http_shed_total 0"));
+    }
+}

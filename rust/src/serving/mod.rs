@@ -1,0 +1,40 @@
+//! HTTP serving front-end: a multi-model sharded router with
+//! production resilience over the batched coordinator.
+//!
+//! The layer cake, top to bottom:
+//!
+//! * [`http`] — hand-rolled HTTP/1.1 over `std::net` (no external
+//!   dependencies): pipelined keep-alive parsing with `Content-Length`
+//!   bodies, plus the small client the tests and bench harness use.
+//! * [`server`] — accept loop + connection handlers on the shared
+//!   [`ThreadPool`]; dispatches `/v1/infer`, `/v1/submit`,
+//!   `/v1/models`, `/metrics` and `/healthz`. The infer hot path uses
+//!   the lazy JSON field scanner ([`crate::util::json::path_f32_slice`])
+//!   so a request parse costs no tree allocation.
+//! * [`shard`] — [`ShardRouter`]: least-outstanding replica spread (via
+//!   the coordinator's router), consistent-hash session affinity,
+//!   retry-with-backoff gated by a per-model retry budget, failover
+//!   across hot reloads.
+//! * [`registry`] — [`ModelRegistry`]: one coordinator [`Server`] per
+//!   model over a shared plan cache, epoch-guarded hot load / unload /
+//!   reload, background drains.
+//! * [`health`] — real replica round-trip probes (live / degraded /
+//!   dead), TTL-cached.
+//! * [`metrics`] — front-end counters rendered by `GET /metrics`.
+//!
+//! [`ThreadPool`]: crate::util::threadpool::ThreadPool
+//! [`Server`]: crate::coordinator::Server
+
+pub mod health;
+pub mod http;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+pub mod shard;
+
+pub use health::{probe, HealthChecker, HealthReport, HealthState};
+pub use http::{request_once, ClientConn, Conn, HttpError, Request};
+pub use metrics::HttpMetrics;
+pub use registry::{ModelEntry, ModelRegistry};
+pub use server::{serve, HttpConfig, ServingHandle};
+pub use shard::{InferError, InferReply, RetryPolicy, ShardRouter};

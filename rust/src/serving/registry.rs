@@ -1,0 +1,286 @@
+//! Multi-model registry: artifact manifest + one coordinator
+//! [`Server`] per model, with hot load/unload/reload.
+//!
+//! Swap discipline (epoch-guarded): a load of an already-served model
+//! builds the NEW server first — workers spawned, plan compiled, weights
+//! staged — and only then swaps the registry entry (epoch + 1). Requests
+//! racing the swap either land on the old entry (drained in the
+//! background, so every accepted request still gets its reply) or the
+//! new one; there is never a window with no server behind the name.
+//! All per-model servers share the base config's [`PlanCache`], so N
+//! models with the same geometry on the same accelerator compile one
+//! mapping.
+//!
+//! [`PlanCache`]: crate::plan::PlanCache
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{synthetic_manifest, workload_from_artifact, Server, ServerConfig};
+use crate::runtime::manifest::Manifest;
+
+/// Where per-model manifests come from.
+enum Source {
+    /// Every model name materializes the in-memory synthetic artifact —
+    /// the bare-checkout serving path (and the hot-load path for smoke
+    /// tests, where any name is loadable).
+    Synthetic,
+    /// A real artifacts manifest; loads slice it per model
+    /// ([`Manifest::subset`]), so one broken sibling artifact never
+    /// blocks a hot load.
+    Artifacts(Manifest),
+}
+
+/// One live model: its coordinator server plus the metadata the HTTP
+/// surface reports.
+pub struct ModelEntry {
+    pub name: String,
+    /// Bumped on every (re)load of this name; `GET /v1/models` exposes it
+    /// so clients can observe hot reloads.
+    pub epoch: u64,
+    pub server: Arc<Server>,
+    pub input_len: usize,
+    /// Replicas the entry was configured with (live count may be lower
+    /// after quarantines — see [`Server::replicas`]).
+    pub replicas: usize,
+    /// Simulated photonic FPS of this geometry on the configured
+    /// accelerator (the paper-model reference the front-end reports).
+    pub photonic_fps: f64,
+}
+
+/// Registry of live models. Cheap to share (`Arc<ModelRegistry>`).
+pub struct ModelRegistry {
+    base: ServerConfig,
+    source: Source,
+    epoch: AtomicU64,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Background drains of replaced/unloaded servers; joined by
+    /// [`ModelRegistry::drain_all`] so shutdown observes them complete.
+    drains: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl ModelRegistry {
+    /// A registry serving synthetic in-memory models: any name is
+    /// loadable. `base` supplies the serving knobs (batching, queue
+    /// depth, replicas, accelerator, shared plan cache); its `models`
+    /// and `manifest` fields are ignored — call [`ModelRegistry::load`]
+    /// per model instead.
+    pub fn synthetic(base: ServerConfig) -> ModelRegistry {
+        ModelRegistry {
+            base,
+            source: Source::Synthetic,
+            epoch: AtomicU64::new(0),
+            models: RwLock::new(BTreeMap::new()),
+            drains: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A registry over a parsed artifacts manifest.
+    pub fn with_manifest(base: ServerConfig, manifest: Manifest) -> ModelRegistry {
+        ModelRegistry {
+            base,
+            source: Source::Artifacts(manifest),
+            epoch: AtomicU64::new(0),
+            models: RwLock::new(BTreeMap::new()),
+            drains: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A registry loading `<base.artifacts_dir>/manifest.json`.
+    pub fn from_artifacts(base: ServerConfig) -> Result<ModelRegistry> {
+        let manifest =
+            Manifest::load(&base.artifacts_dir).context("loading artifacts manifest")?;
+        Ok(ModelRegistry::with_manifest(base, manifest))
+    }
+
+    /// Load (or hot-reload) `name` with `replicas` workers (0 = the base
+    /// config's replica count). Builds the new server fully before
+    /// swapping it in; a replaced server drains in the background.
+    pub fn load(&self, name: &str, replicas: usize) -> Result<Arc<ModelEntry>> {
+        let replicas = if replicas > 0 { replicas } else { self.base.replicas.max(1) };
+        let mut cfg = self.base.clone();
+        cfg.models = vec![name.to_string()];
+        cfg.replicas = replicas;
+        let manifest = match &self.source {
+            Source::Synthetic => synthetic_manifest(&[name]),
+            Source::Artifacts(m) => m
+                .subset(&[name])
+                .with_context(|| format!("slicing manifest for model '{}'", name))?,
+        };
+        let artifact = manifest.get(&format!("bnn_{}", name))?.clone();
+        cfg.manifest = Some(manifest);
+        let photonic_fps = crate::api::simulated_photonic_fps_cached(
+            &cfg.plan_cache,
+            &cfg.accelerator,
+            &workload_from_artifact(&artifact),
+            cfg.sim_backend,
+            if cfg.sim_pipeline { cfg.max_batch } else { 1 },
+            cfg.sim_pipeline,
+        )
+        .map_err(|e| anyhow!("simulating photonic reference for '{}': {}", name, e))?;
+        let server = Arc::new(Server::start(cfg)?);
+        let input_len = server
+            .input_len(name)
+            .ok_or_else(|| anyhow!("server started without model '{}'", name))?;
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            epoch,
+            server,
+            input_len,
+            replicas,
+            photonic_fps,
+        });
+        let old = self
+            .models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&entry));
+        if let Some(old) = old {
+            self.background_drain(old);
+        }
+        Ok(entry)
+    }
+
+    /// Hot-reload `name` at its current replica count (epoch bump).
+    pub fn reload(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let replicas = self
+            .get(name)
+            .map(|e| e.replicas)
+            .ok_or_else(|| anyhow!("model '{}' is not loaded", name))?;
+        self.load(name, replicas)
+    }
+
+    /// Unload `name`; its server drains in the background (accepted
+    /// requests still complete). Returns `false` when not loaded.
+    pub fn unload(&self, name: &str) -> bool {
+        match self.models.write().unwrap().remove(name) {
+            Some(entry) => {
+                self.background_drain(entry);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Live entries, name-sorted.
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    fn background_drain(&self, entry: Arc<ModelEntry>) {
+        let handle = thread::Builder::new()
+            .name(format!("oxbnn-drain-{}", entry.name))
+            .spawn(move || entry.server.drain())
+            .expect("spawning drain thread");
+        self.drains.lock().unwrap().push(handle);
+    }
+
+    /// Drain every live model and join all background drains. Idempotent.
+    pub fn drain_all(&self) {
+        let entries = std::mem::take(&mut *self.models.write().unwrap());
+        for entry in entries.values() {
+            entry.server.drain();
+        }
+        let handles: Vec<thread::JoinHandle<()>> =
+            self.drains.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{InferenceRequest, SubmitError};
+
+    fn base() -> ServerConfig {
+        let mut cfg = ServerConfig::synthetic(&[]);
+        cfg.max_batch = 4;
+        cfg.queue_depth = 64;
+        cfg
+    }
+
+    #[test]
+    fn load_infer_unload_lifecycle() {
+        let reg = ModelRegistry::synthetic(base());
+        let a = reg.load("alpha", 1).unwrap();
+        assert_eq!(a.epoch, 1);
+        assert_eq!(a.input_len, 8 * 8 * 3);
+        assert!(a.photonic_fps > 0.0);
+        let resp = a
+            .server
+            .infer_blocking(InferenceRequest {
+                model: "alpha".into(),
+                input: vec![0.25; a.input_len],
+            })
+            .unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert_eq!(reg.names(), vec!["alpha".to_string()]);
+        assert!(reg.unload("alpha"));
+        assert!(!reg.unload("alpha"), "second unload is a no-op");
+        assert!(reg.get("alpha").is_none());
+        reg.drain_all();
+    }
+
+    #[test]
+    fn hot_reload_bumps_epoch_and_keeps_serving() {
+        let reg = ModelRegistry::synthetic(base());
+        let v1 = reg.load("m", 1).unwrap();
+        assert_eq!(v1.epoch, 1);
+        let v2 = reg.reload("m").unwrap();
+        assert_eq!(v2.epoch, 2);
+        assert_eq!(reg.get("m").unwrap().epoch, 2);
+        // The new entry serves; the replaced server drains in the
+        // background and rejects new submissions once drained.
+        let resp = v2
+            .server
+            .infer_blocking(InferenceRequest {
+                model: "m".into(),
+                input: vec![0.1; v2.input_len],
+            })
+            .unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        reg.drain_all();
+        match v1.server.submit(InferenceRequest { model: "m".into(), input: vec![0.1; v1.input_len] }) {
+            Err(SubmitError::WorkerGone(_)) => {}
+            other => panic!("drained server must refuse, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn models_share_one_plan_compile() {
+        let reg = ModelRegistry::synthetic(base());
+        let cache = Arc::clone(&reg.base.plan_cache);
+        reg.load("a", 1).unwrap();
+        reg.load("b", 1).unwrap();
+        // Same geometry + accelerator → one compiled plan across models
+        // (registry photonic-FPS computation AND both servers' workers).
+        assert_eq!(cache.len(), 1, "synthetic models must share one plan");
+        reg.drain_all();
+    }
+
+    #[test]
+    fn artifact_registry_rejects_unknown_models() {
+        let manifest = synthetic_manifest(&["real"]);
+        let reg = ModelRegistry::with_manifest(base(), manifest);
+        assert!(reg.load("real", 1).is_ok());
+        assert!(reg.load("ghost", 1).is_err(), "no artifact, no load");
+        // The failed load never disturbed the live entry.
+        assert_eq!(reg.names(), vec!["real".to_string()]);
+        reg.drain_all();
+    }
+}

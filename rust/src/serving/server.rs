@@ -1,0 +1,651 @@
+//! The HTTP front-end: accept loop + connection handlers over the
+//! existing [`ThreadPool`], dispatching to the shard router, registry,
+//! health checker and metrics.
+//!
+//! Endpoints:
+//!
+//! | route              | method | purpose                                        |
+//! |--------------------|--------|------------------------------------------------|
+//! | `/v1/infer`        | POST   | synchronous inference (lazy-parsed hot path)   |
+//! | `/v1/submit`       | POST   | fire-and-forget inference → 202                |
+//! | `/v1/models`       | GET    | live models: epoch, replicas, photonic FPS     |
+//! | `/v1/models`       | PUT    | desired-state hot load / unload / reload       |
+//! | `/metrics`         | GET    | plain-text counters (front-end + per-model)    |
+//! | `/healthz`         | GET    | real replica round-trip probes, TTL-cached     |
+//!
+//! The infer hot path never builds a JSON tree: the three fields it
+//! needs (`model`, `session`, `input`) are pulled straight off the raw
+//! body by the lazy scanner in [`crate::util::json`], with the input
+//! vector reused across every request of a keep-alive connection.
+//!
+//! Graceful drain: `ServingHandle::shutdown` flips the draining flag,
+//! wakes the accept loop, joins it (the connection pool drains — every
+//! in-flight request finishes and is answered; queued connections get a
+//! clean 503), then drains every model server so accepted inferences
+//! complete. Nothing accepted is ever dropped on the floor.
+//!
+//! [`ThreadPool`]: crate::util::threadpool::ThreadPool
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context as _;
+
+use crate::util::json::{path_f32_slice, path_str, Json};
+use crate::util::threadpool::{host_threads, ThreadPool};
+
+use super::health::{HealthChecker, HealthState};
+use super::http::{Conn, HttpError, Request};
+use super::metrics::HttpMetrics;
+use super::registry::ModelRegistry;
+use super::shard::{InferError, RetryPolicy, ShardRouter};
+
+/// Front-end knobs.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; use port 0 to let the OS pick (tests, smoke).
+    pub addr: String,
+    /// Connection-handler threads (0 = one per host core).
+    pub threads: usize,
+    pub retry: RetryPolicy,
+    /// How long a health verdict stays cached.
+    pub health_ttl: Duration,
+    /// How long a health probe waits for its round-trip.
+    pub probe_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            threads: 0,
+            retry: RetryPolicy::default(),
+            health_ttl: Duration::from_millis(500),
+            probe_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// State shared by every connection handler.
+struct Ctx {
+    registry: Arc<ModelRegistry>,
+    router: ShardRouter,
+    metrics: Arc<HttpMetrics>,
+    health: HealthChecker,
+    draining: Arc<AtomicBool>,
+}
+
+/// A running front-end. Dropping the handle shuts the server down
+/// gracefully (prefer calling [`ServingHandle::shutdown`] explicitly).
+pub struct ServingHandle {
+    addr: SocketAddr,
+    draining: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<HttpMetrics>,
+}
+
+impl ServingHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Arc<HttpMetrics> {
+        &self.metrics
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight request,
+    /// drain every model server, then return.
+    pub fn shutdown(mut self) {
+        self.shutdown_in_place();
+    }
+
+    fn shutdown_in_place(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.draining.store(true, Ordering::SeqCst);
+        self.metrics.set_draining(true);
+        // Wake the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        self.registry.drain_all();
+    }
+}
+
+impl Drop for ServingHandle {
+    fn drop(&mut self) {
+        self.shutdown_in_place();
+    }
+}
+
+/// Bind `cfg.addr` and serve `registry` until the handle is shut down.
+pub fn serve(cfg: HttpConfig, registry: Arc<ModelRegistry>) -> anyhow::Result<ServingHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding HTTP front-end to {}", cfg.addr))?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    let draining = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(HttpMetrics::default());
+    let ctx = Arc::new(Ctx {
+        registry: Arc::clone(&registry),
+        router: ShardRouter::new(Arc::clone(&registry), cfg.retry.clone()),
+        metrics: Arc::clone(&metrics),
+        health: HealthChecker::new(cfg.health_ttl, cfg.probe_timeout),
+        draining: Arc::clone(&draining),
+    });
+    let threads = if cfg.threads > 0 { cfg.threads } else { host_threads() };
+    let accept = thread::Builder::new()
+        .name("oxbnn-http-accept".to_string())
+        .spawn(move || {
+            // The accept loop owns the handler pool: when it breaks, the
+            // pool drops, which drains queued connections (they answer
+            // 503 under the draining flag) and joins in-flight handlers.
+            let pool = ThreadPool::new(threads);
+            for stream in listener.incoming() {
+                if ctx.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue, // transient accept error
+                };
+                let ctx = Arc::clone(&ctx);
+                pool.execute(move || handle_conn(stream, ctx));
+            }
+        })
+        .context("spawning HTTP accept thread")?;
+    Ok(ServingHandle { addr, draining, accept: Some(accept), registry, metrics })
+}
+
+const CT_JSON: &str = "application/json";
+const CT_TEXT: &str = "text/plain; version=0.0.4";
+
+/// One dispatched response.
+struct Reply {
+    endpoint: &'static str,
+    status: u16,
+    content_type: &'static str,
+    /// Adds `Retry-After: 1` (set on 429).
+    retry_after: bool,
+    body: String,
+}
+
+impl Reply {
+    fn json(endpoint: &'static str, status: u16, body: String) -> Reply {
+        Reply { endpoint, status, content_type: CT_JSON, retry_after: false, body }
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Serve one connection: pipelined keep-alive requests until close,
+/// error, or a non-keep-alive exchange. The f32 input buffer is reused
+/// across all requests on the connection (zero steady-state allocation
+/// in the input parse).
+fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
+    let _ = stream.set_nodelay(true);
+    // Bounds a handler blocked on an idle or stalled peer, so drains
+    // can't be held hostage by a silent connection.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut conn = Conn::new(stream);
+    let mut input_buf: Vec<f32> = Vec::new();
+    loop {
+        let req = match conn.read_request() {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean close
+            Err(HttpError::Malformed(why)) => {
+                ctx.metrics.record("other", 400);
+                let _ = conn.write_response(
+                    400,
+                    &[("Content-Type", CT_JSON)],
+                    error_body(&why).as_bytes(),
+                    false,
+                );
+                return;
+            }
+            Err(HttpError::Io(_)) => return, // peer gone or idle timeout
+        };
+        if ctx.draining.load(Ordering::SeqCst) {
+            ctx.metrics.record("other", 503);
+            let _ = conn.write_response(
+                503,
+                &[("Content-Type", CT_JSON)],
+                error_body("draining").as_bytes(),
+                false,
+            );
+            return;
+        }
+        let keep = req.keep_alive;
+        let reply = dispatch(&req, &ctx, &mut input_buf);
+        ctx.metrics.record(reply.endpoint, reply.status);
+        let mut headers: Vec<(&str, &str)> = vec![("Content-Type", reply.content_type)];
+        if reply.retry_after {
+            headers.push(("Retry-After", "1"));
+        }
+        if conn
+            .write_response(reply.status, &headers, reply.body.as_bytes(), keep)
+            .is_err()
+        {
+            return;
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+fn dispatch(req: &Request, ctx: &Ctx, input_buf: &mut Vec<f32>) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/infer") => infer(req, ctx, input_buf, false),
+        ("POST", "/v1/submit") => infer(req, ctx, input_buf, true),
+        ("GET", "/metrics") => metrics_page(ctx),
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/v1/models") => Reply::json("/v1/models", 200, models_listing(ctx)),
+        ("PUT", "/v1/models") => put_models(req, ctx),
+        (_, "/v1/infer") | (_, "/v1/submit") | (_, "/metrics") | (_, "/healthz") => Reply::json(
+            endpoint_label(&req.path),
+            405,
+            error_body(&format!("method {} not allowed", req.method)),
+        ),
+        (_, "/v1/models") => {
+            Reply::json("/v1/models", 405, error_body(&format!("method {} not allowed", req.method)))
+        }
+        _ => Reply::json("other", 404, error_body(&format!("no such endpoint {}", req.path))),
+    }
+}
+
+fn endpoint_label(path: &str) -> &'static str {
+    match path {
+        "/v1/infer" => "/v1/infer",
+        "/v1/submit" => "/v1/submit",
+        "/v1/models" => "/v1/models",
+        "/metrics" => "/metrics",
+        "/healthz" => "/healthz",
+        _ => "other",
+    }
+}
+
+/// The hot path. `detached` selects `/v1/submit` 202 semantics.
+fn infer(req: &Request, ctx: &Ctx, input_buf: &mut Vec<f32>, detached: bool) -> Reply {
+    let endpoint: &'static str = if detached { "/v1/submit" } else { "/v1/infer" };
+    // Lazy scan — three targeted passes over the raw bytes, no tree.
+    let parse_start = Instant::now();
+    let model = match path_str(&req.body, &["model"]) {
+        Ok(Some(m)) => m,
+        Ok(None) => return Reply::json(endpoint, 400, error_body("missing 'model'")),
+        Err(e) => return Reply::json(endpoint, 400, error_body(&format!("bad JSON: {}", e))),
+    };
+    let session = match path_str(&req.body, &["session"]) {
+        Ok(s) => s,
+        Err(e) => return Reply::json(endpoint, 400, error_body(&format!("bad JSON: {}", e))),
+    };
+    match path_f32_slice(&req.body, &["input"], input_buf) {
+        Ok(true) => {}
+        Ok(false) => return Reply::json(endpoint, 400, error_body("missing 'input'")),
+        Err(e) => return Reply::json(endpoint, 400, error_body(&format!("bad JSON: {}", e))),
+    }
+    ctx.metrics.record_parse_ns(parse_start.elapsed().as_nanos() as u64);
+
+    if detached {
+        return match ctx.router.submit_detached(&model, input_buf) {
+            Ok(()) => Reply::json(
+                "/v1/submit",
+                202,
+                Json::obj(vec![("accepted", Json::Bool(true))]).to_string(),
+            ),
+            Err(e) => infer_error_reply("/v1/submit", e),
+        };
+    }
+    match ctx.router.infer(&model, input_buf, session.as_deref()) {
+        Ok(reply) => {
+            ctx.metrics.record_retries(reply.retries);
+            let logits: Vec<f64> = reply.response.logits.iter().map(|&x| x as f64).collect();
+            let body = Json::obj(vec![
+                ("model", Json::Str(model)),
+                ("epoch", Json::Num(reply.epoch as f64)),
+                ("retries", Json::Num(reply.retries as f64)),
+                ("logits", Json::arr_f64(&logits)),
+                (
+                    "latency",
+                    Json::obj(vec![
+                        ("queue_s", Json::Num(reply.response.queue_s)),
+                        ("execute_s", Json::Num(reply.response.execute_s)),
+                        ("total_s", Json::Num(reply.response.total_s)),
+                        (
+                            "simulated_photonic_s",
+                            Json::Num(reply.response.simulated_photonic_s),
+                        ),
+                    ]),
+                ),
+            ]);
+            Reply::json("/v1/infer", 200, body.to_string())
+        }
+        Err(e) => infer_error_reply("/v1/infer", e),
+    }
+}
+
+fn infer_error_reply(endpoint: &'static str, err: InferError) -> Reply {
+    let (status, retry_after) = match &err {
+        InferError::UnknownModel(_) => (404, false),
+        InferError::InvalidInput { .. } => (400, false),
+        InferError::Overloaded(_) => (429, true),
+        InferError::Failed(_) => (500, false),
+    };
+    Reply {
+        endpoint,
+        status,
+        content_type: CT_JSON,
+        retry_after,
+        body: error_body(&err.to_string()),
+    }
+}
+
+fn metrics_page(ctx: &Ctx) -> Reply {
+    let mut extra = String::new();
+    for entry in ctx.registry.list() {
+        let live = entry.server.replicas(&entry.name).len();
+        let m = entry.server.metrics.lock().unwrap();
+        extra.push_str(&format!(
+            "oxbnn_model_replicas{{model=\"{name}\"}} {live}\n\
+             oxbnn_model_epoch{{model=\"{name}\"}} {epoch}\n\
+             oxbnn_model_outstanding{{model=\"{name}\"}} {out}\n\
+             oxbnn_model_completed{{model=\"{name}\"}} {done}\n\
+             oxbnn_model_failed{{model=\"{name}\"}} {failed}\n\
+             oxbnn_model_rejected{{model=\"{name}\"}} {rej}\n",
+            name = entry.name,
+            live = live,
+            epoch = entry.epoch,
+            out = entry.server.outstanding(&entry.name),
+            done = m.completed,
+            failed = m.failed,
+            rej = m.rejected,
+        ));
+    }
+    Reply {
+        endpoint: "/metrics",
+        status: 200,
+        content_type: CT_TEXT,
+        retry_after: false,
+        body: ctx.metrics.render(&extra),
+    }
+}
+
+fn healthz(ctx: &Ctx) -> Reply {
+    let mut all_live = true;
+    let mut states = std::collections::BTreeMap::new();
+    for entry in ctx.registry.list() {
+        let report = ctx.health.check(&entry);
+        if report.state != HealthState::Live {
+            all_live = false;
+        }
+        states.insert(
+            entry.name.clone(),
+            Json::obj(vec![
+                ("state", Json::Str(report.state.as_str().to_string())),
+                ("detail", Json::Str(report.detail)),
+            ]),
+        );
+    }
+    let body = Json::obj(vec![
+        (
+            "status",
+            Json::Str(if all_live { "ok" } else { "unhealthy" }.to_string()),
+        ),
+        ("models", Json::Obj(states)),
+    ]);
+    Reply::json("/healthz", if all_live { 200 } else { 503 }, body.to_string())
+}
+
+fn models_listing(ctx: &Ctx) -> String {
+    let models: Vec<Json> = ctx
+        .registry
+        .list()
+        .iter()
+        .map(|entry| {
+            let live: Vec<f64> = entry
+                .server
+                .replicas(&entry.name)
+                .iter()
+                .map(|&r| r as f64)
+                .collect();
+            Json::obj(vec![
+                ("name", Json::Str(entry.name.clone())),
+                ("epoch", Json::Num(entry.epoch as f64)),
+                ("replicas", Json::arr_f64(&live)),
+                ("configured_replicas", Json::Num(entry.replicas as f64)),
+                ("input_len", Json::Num(entry.input_len as f64)),
+                ("photonic_fps", Json::Num(entry.photonic_fps)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("models", Json::Arr(models))]).to_string()
+}
+
+/// `PUT /v1/models` — desired-state reconcile. Body shape:
+/// `{"models": [{"name": "a", "replicas": 2}, ...], "reload": ["b"]}`.
+/// When `models` is present, listed models are loaded (or resized) and
+/// unlisted ones unloaded; `reload` hot-reloads by name (epoch bump).
+/// This is the cold path, so the full tree parser is fine here.
+fn put_models(req: &Request, ctx: &Ctx) -> Reply {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Reply::json("/v1/models", 400, error_body("body is not UTF-8")),
+    };
+    let j = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return Reply::json("/v1/models", 400, error_body(&format!("bad JSON: {}", e)))
+        }
+    };
+    if let Some(models) = j.get("models").and_then(Json::as_arr) {
+        let mut desired: Vec<(String, usize)> = Vec::new();
+        for m in models {
+            let name = match m.get("name").and_then(Json::as_str) {
+                Some(n) => n.to_string(),
+                None => {
+                    return Reply::json(
+                        "/v1/models",
+                        400,
+                        error_body("each model needs a 'name'"),
+                    )
+                }
+            };
+            let replicas = m.get("replicas").and_then(Json::as_usize).unwrap_or(0);
+            desired.push((name, replicas));
+        }
+        for name in ctx.registry.names() {
+            if !desired.iter().any(|(n, _)| *n == name) {
+                ctx.registry.unload(&name);
+                ctx.health.invalidate(&name);
+            }
+        }
+        for (name, replicas) in &desired {
+            let needs_load = match ctx.registry.get(name) {
+                None => true,
+                Some(entry) => *replicas > 0 && entry.replicas != *replicas,
+            };
+            if needs_load {
+                if let Err(e) = ctx.registry.load(name, *replicas) {
+                    return Reply::json(
+                        "/v1/models",
+                        400,
+                        error_body(&format!("loading '{}': {:#}", name, e)),
+                    );
+                }
+                ctx.health.invalidate(name);
+            }
+        }
+    }
+    if let Some(reloads) = j.get("reload").and_then(Json::as_arr) {
+        for r in reloads {
+            let name = match r.as_str() {
+                Some(n) => n,
+                None => {
+                    return Reply::json(
+                        "/v1/models",
+                        400,
+                        error_body("'reload' entries must be model names"),
+                    )
+                }
+            };
+            if let Err(e) = ctx.registry.reload(name) {
+                return Reply::json(
+                    "/v1/models",
+                    400,
+                    error_body(&format!("reloading '{}': {:#}", name, e)),
+                );
+            }
+            ctx.health.invalidate(name);
+        }
+    }
+    Reply::json("/v1/models", 200, models_listing(ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::serving::http::request_once;
+    use crate::util::json::path_f64;
+
+    fn boot(models: &[(&str, usize)]) -> ServingHandle {
+        let mut cfg = ServerConfig::synthetic(&[]);
+        cfg.max_batch = 4;
+        cfg.queue_depth = 64;
+        let registry = Arc::new(ModelRegistry::synthetic(cfg));
+        for (name, replicas) in models {
+            registry.load(name, *replicas).unwrap();
+        }
+        let http = HttpConfig { addr: "127.0.0.1:0".to_string(), threads: 2, ..Default::default() };
+        serve(http, registry).unwrap()
+    }
+
+    fn infer_body(model: &str) -> String {
+        let input: Vec<f64> = (0..192).map(|i| (i % 7) as f64 * 0.125).collect();
+        Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("input", Json::arr_f64(&input)),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn infer_round_trip_and_unknowns() {
+        let handle = boot(&[("tiny", 1)]);
+        let addr = handle.addr().to_string();
+        let (status, body) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("tiny").as_bytes()).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("logits").and_then(Json::as_arr).unwrap().len(), 10);
+        assert_eq!(j.get("epoch").and_then(Json::as_usize), Some(1));
+        assert!(path_f64(&body, &["latency", "total_s"]).unwrap().unwrap() > 0.0);
+
+        let (status, _) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("ghost").as_bytes()).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = request_once(&addr, "POST", "/v1/infer", b"{not json").unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = request_once(&addr, "GET", "/nope", b"").unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = request_once(&addr, "GET", "/v1/infer", b"").unwrap();
+        assert_eq!(status, 405);
+        assert_eq!(handle.metrics().count("/v1/infer", 200), 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn submit_is_fire_and_forget() {
+        let handle = boot(&[("tiny", 1)]);
+        let addr = handle.addr().to_string();
+        let (status, body) =
+            request_once(&addr, "POST", "/v1/submit", infer_body("tiny").as_bytes()).unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn health_metrics_and_models_pages() {
+        let handle = boot(&[("alpha", 1), ("beta", 2)]);
+        let addr = handle.addr().to_string();
+        let (status, body) = request_once(&addr, "GET", "/healthz", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+
+        let (status, body) = request_once(&addr, "GET", "/v1/models", b"").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let models = j.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("name").and_then(Json::as_str), Some("alpha"));
+        assert_eq!(
+            models[1].get("replicas").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+
+        let (status, body) = request_once(&addr, "GET", "/metrics", b"").unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("oxbnn_model_replicas{model=\"beta\"} 2"), "{}", text);
+        assert!(text.contains("oxbnn_http_draining 0"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn put_models_reconciles_desired_state() {
+        let handle = boot(&[("alpha", 1), ("beta", 1)]);
+        let addr = handle.addr().to_string();
+        // Desired state: keep alpha, drop beta, add gamma with 2 replicas.
+        let body = br#"{"models": [{"name": "alpha"}, {"name": "gamma", "replicas": 2}]}"#;
+        let (status, listing) = request_once(&addr, "PUT", "/v1/models", body).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&listing));
+        assert_eq!(handle.registry().names(), vec!["alpha".to_string(), "gamma".to_string()]);
+        assert_eq!(handle.registry().get("alpha").unwrap().epoch, 1, "untouched");
+        assert_eq!(handle.registry().get("gamma").unwrap().replicas, 2);
+
+        // Reload alpha: epoch bumps, serving continues.
+        let (status, _) =
+            request_once(&addr, "PUT", "/v1/models", br#"{"reload": ["alpha"]}"#).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(handle.registry().get("alpha").unwrap().epoch, 4);
+        let (status, _) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("alpha").as_bytes()).unwrap();
+        assert_eq!(status, 200);
+
+        // Dropped model now 404s; bad reload 400s.
+        let (status, _) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("beta").as_bytes()).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) =
+            request_once(&addr, "PUT", "/v1/models", br#"{"reload": ["ghost"]}"#).unwrap();
+        assert_eq!(status, 400);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_graceful_and_idempotent_via_drop() {
+        let handle = boot(&[("tiny", 1)]);
+        let addr = handle.addr().to_string();
+        let (status, _) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("tiny").as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        drop(handle); // Drop path must shut down cleanly too
+        assert!(
+            request_once(&addr, "GET", "/healthz", b"").is_err(),
+            "server must be gone after drop"
+        );
+    }
+}

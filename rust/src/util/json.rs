@@ -437,6 +437,395 @@ fn utf8_len(b: u8) -> Option<usize> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lazy path scanner
+// ---------------------------------------------------------------------------
+//
+// The serving hot path must pull two fields (`model`, `input`) out of every
+// request body; building a full `Json` tree allocates a node per array
+// element. These extractors walk the raw bytes instead, skipping values they
+// don't need, so a request costs one `String` (the model name) and one
+// reused `Vec<f32>` — O(1) allocations per request.
+//
+// Semantics mirror `Json::parse(..).path(keys)` followed by the typed
+// accessor: a missing key, a non-object on the path, or a leaf of the wrong
+// type yields `None`/`false`, never an error. Only malformed JSON *along the
+// scanned route* errors; with duplicate keys the scanner takes the first
+// occurrence while the tree parser keeps the last (the serializer never
+// emits duplicates).
+
+/// Extract the string at `path` from raw JSON bytes without building a tree.
+pub fn path_str(bytes: &[u8], path: &[&str]) -> Result<Option<String>, JsonError> {
+    let mut s = Scan { bytes, pos: 0 };
+    if !s.seek(path)? {
+        return Ok(None);
+    }
+    if s.peek() != Some(b'"') {
+        return Ok(None);
+    }
+    let mut p = Parser { bytes, pos: s.pos };
+    Ok(Some(p.string()?))
+}
+
+/// Extract the number at `path` from raw JSON bytes without building a tree.
+pub fn path_f64(bytes: &[u8], path: &[&str]) -> Result<Option<f64>, JsonError> {
+    let mut s = Scan { bytes, pos: 0 };
+    if !s.seek(path)? {
+        return Ok(None);
+    }
+    match s.peek() {
+        Some(b'-' | b'0'..=b'9') => {
+            let end = scan_number_end(bytes, s.pos);
+            Ok(Some(parse_f64_span(bytes, s.pos, end)?))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Fill `out` with the number array at `path`. `Ok(true)` means extracted;
+/// `Ok(false)` means the path is missing, not an array, or holds a
+/// non-number element. `out` is cleared first and its capacity reused, so
+/// steady-state callers pay zero allocations here.
+pub fn path_f32_slice(
+    bytes: &[u8],
+    path: &[&str],
+    out: &mut Vec<f32>,
+) -> Result<bool, JsonError> {
+    out.clear();
+    let mut s = Scan { bytes, pos: 0 };
+    if !s.seek(path)? {
+        return Ok(false);
+    }
+    if s.peek() != Some(b'[') {
+        return Ok(false);
+    }
+    s.pos += 1;
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        s.pos += 1;
+        return Ok(true);
+    }
+    loop {
+        s.skip_ws();
+        match s.peek() {
+            Some(b'-' | b'0'..=b'9') => {
+                let end = scan_number_end(bytes, s.pos);
+                let v = parse_f64_span(bytes, s.pos, end)?;
+                s.pos = end;
+                out.push(v as f32);
+            }
+            _ => {
+                out.clear();
+                return Ok(false);
+            }
+        }
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.pos += 1,
+            Some(b']') => {
+                s.pos += 1;
+                return Ok(true);
+            }
+            _ => return Err(s.err("expected ',' or ']' in array")),
+        }
+    }
+}
+
+/// Byte-walking cursor shared by the `path_*` extractors.
+struct Scan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Position the cursor at the value addressed by `path`. `Ok(false)`
+    /// when a key is missing or an intermediate value is not an object.
+    fn seek(&mut self, path: &[&str]) -> Result<bool, JsonError> {
+        self.skip_ws();
+        for want in path {
+            if self.peek() != Some(b'{') {
+                return Ok(false);
+            }
+            self.pos += 1;
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(false);
+            }
+            loop {
+                self.skip_ws();
+                let hit = self.key_matches(want)?;
+                self.skip_ws();
+                if self.peek() != Some(b':') {
+                    return Err(self.err("expected ':' after key"));
+                }
+                self.pos += 1;
+                self.skip_ws();
+                if hit {
+                    break;
+                }
+                self.skip_value()?;
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b'}') => {
+                        self.pos += 1;
+                        return Ok(false);
+                    }
+                    _ => return Err(self.err("expected ',' or '}' in object")),
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Consume an object key, reporting whether it equals `want`. Keys
+    /// without escapes compare raw; escaped keys decode via the tree
+    /// parser's string routine, so equality semantics are identical.
+    fn key_matches(&mut self, want: &str) -> Result<bool, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected object key"));
+        }
+        let start = self.pos;
+        let mut i = self.pos + 1;
+        while let Some(&b) = self.bytes.get(i) {
+            match b {
+                b'"' => {
+                    let raw = &self.bytes[start + 1..i];
+                    self.pos = i + 1;
+                    return Ok(raw == want.as_bytes());
+                }
+                b'\\' => {
+                    let mut p = Parser { bytes: self.bytes, pos: start };
+                    let s = p.string()?;
+                    self.pos = p.pos;
+                    return Ok(s == *want);
+                }
+                _ => i += 1,
+            }
+        }
+        self.pos = i;
+        Err(self.err("unterminated string"))
+    }
+
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'"') => self.skip_string(),
+            Some(b'{') => self.skip_container(b'{', b'}'),
+            Some(b'[') => self.skip_container(b'[', b']'),
+            Some(b't') => self.skip_lit("true"),
+            Some(b'f') => self.skip_lit("false"),
+            Some(b'n') => self.skip_lit("null"),
+            Some(b'-' | b'0'..=b'9') => {
+                self.pos = scan_number_end(self.bytes, self.pos);
+                Ok(())
+            }
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn skip_container(&mut self, open: u8, close: u8) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated container")),
+                Some(b'"') => self.skip_string()?,
+                Some(b) => {
+                    self.pos += 1;
+                    if b == open {
+                        depth += 1;
+                    } else if b == close {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.pos += 1; // opening quote
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                // An escape pair never hides a closing quote (\uXXXX hex
+                // digits contain neither quotes nor backslashes).
+                Some(b'\\') => {
+                    if self.pos + 2 > self.bytes.len() {
+                        return Err(self.err("unterminated string"));
+                    }
+                    self.pos += 2;
+                }
+                _ => self.pos += 1,
+            }
+        }
+    }
+
+    fn skip_lit(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err("unexpected character"))
+        }
+    }
+}
+
+/// Lex a number with the exact grammar `Parser::number` uses; returns the
+/// end offset.
+fn scan_number_end(bytes: &[u8], mut pos: usize) -> usize {
+    let at = |p: usize| bytes.get(p).copied();
+    if at(pos) == Some(b'-') {
+        pos += 1;
+    }
+    while matches!(at(pos), Some(b'0'..=b'9')) {
+        pos += 1;
+    }
+    if at(pos) == Some(b'.') {
+        pos += 1;
+        while matches!(at(pos), Some(b'0'..=b'9')) {
+            pos += 1;
+        }
+    }
+    if matches!(at(pos), Some(b'e' | b'E')) {
+        pos += 1;
+        if matches!(at(pos), Some(b'+' | b'-')) {
+            pos += 1;
+        }
+        while matches!(at(pos), Some(b'0'..=b'9')) {
+            pos += 1;
+        }
+    }
+    pos
+}
+
+/// Exact powers of ten representable in f64 (10^0 ..= 10^22).
+const POW10: [f64; 23] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13,
+    1e14, 1e15, 1e16, 1e17, 1e18, 1e19, 1e20, 1e21, 1e22,
+];
+
+/// Decimal → f64 over `bytes[start..end]`, bit-identical to `str::parse`.
+///
+/// Fast path (Clinger): when the mantissa fits below 2^53 and the decimal
+/// exponent is within ±22, `m * 10^e` (or `m / 10^-e`) is a single exactly
+/// rounded IEEE operation on exact operands — the same correctly rounded
+/// result `str::parse` produces, without its digit-by-digit machinery.
+/// Everything outside that window falls back to `str::parse`.
+fn parse_f64_span(bytes: &[u8], start: usize, end: usize) -> Result<f64, JsonError> {
+    let s = &bytes[start..end];
+    let fallback = |offset: usize| {
+        std::str::from_utf8(s)
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .ok_or(JsonError { msg: "invalid number".to_string(), offset })
+    };
+    let mut i = 0usize;
+    let neg = s.first() == Some(&b'-');
+    if neg {
+        i += 1;
+    }
+    let mut mant: u64 = 0;
+    let mut sig = 0usize; // significant digits accumulated into mant
+    let mut exp10: i64 = 0;
+    let mut wide = false; // more significant digits than mant can hold
+    while let Some(b @ b'0'..=b'9') = s.get(i).copied() {
+        i += 1;
+        if sig == 0 && b == b'0' {
+            continue; // leading integer zeros carry no information
+        }
+        if sig < 17 {
+            mant = mant * 10 + (b - b'0') as u64;
+            sig += 1;
+        } else {
+            wide = true;
+        }
+    }
+    if s.get(i) == Some(&b'.') {
+        i += 1;
+        while let Some(b @ b'0'..=b'9') = s.get(i).copied() {
+            i += 1;
+            if sig == 0 && b == b'0' {
+                exp10 -= 1; // zeros before the first significant digit
+                continue;
+            }
+            if sig < 17 {
+                mant = mant * 10 + (b - b'0') as u64;
+                sig += 1;
+                exp10 -= 1;
+            } else {
+                wide = true;
+            }
+        }
+    }
+    if matches!(s.get(i).copied(), Some(b'e' | b'E')) {
+        i += 1;
+        let eneg = match s.get(i) {
+            Some(b'-') => {
+                i += 1;
+                true
+            }
+            Some(b'+') => {
+                i += 1;
+                false
+            }
+            _ => false,
+        };
+        let mut e: i64 = 0;
+        let mut any = false;
+        while let Some(b @ b'0'..=b'9') = s.get(i).copied() {
+            i += 1;
+            any = true;
+            if e < 10_000 {
+                e = e * 10 + (b - b'0') as i64;
+            }
+        }
+        if !any {
+            return fallback(start);
+        }
+        exp10 += if eneg { -e } else { e };
+    }
+    if i != s.len() {
+        return fallback(start); // unconsumed input: defer to str::parse
+    }
+    if mant == 0 && !wide {
+        // All-zero digits (or none at all, which str::parse rejects).
+        return if sig == 0 && !s.iter().any(|b| b.is_ascii_digit()) {
+            fallback(start)
+        } else {
+            Ok(if neg { -0.0 } else { 0.0 })
+        };
+    }
+    if wide || mant >= (1u64 << 53) || !(-22..=22).contains(&exp10) {
+        return fallback(start);
+    }
+    let v = mant as f64;
+    let v = if exp10 >= 0 { v * POW10[exp10 as usize] } else { v / POW10[(-exp10) as usize] };
+    Ok(if neg { -v } else { v })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -508,6 +897,185 @@ mod tests {
     fn deterministic_object_order() {
         let j = Json::parse(r#"{"z": 1, "a": 2}"#).unwrap();
         assert_eq!(j.to_string(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn lazy_path_extracts_infer_body() {
+        let body =
+            br#"{"session":"u1","model":"bnn_tiny","input":[0.5,-1,2e-3],"pad":{"x":[1,2]}}"#;
+        assert_eq!(path_str(body, &["model"]).unwrap().as_deref(), Some("bnn_tiny"));
+        assert_eq!(path_str(body, &["session"]).unwrap().as_deref(), Some("u1"));
+        assert_eq!(path_str(body, &["nope"]).unwrap(), None);
+        assert_eq!(path_str(body, &["input"]).unwrap(), None); // wrong type
+        let mut buf = Vec::new();
+        assert!(path_f32_slice(body, &["input"], &mut buf).unwrap());
+        assert_eq!(buf, vec![0.5, -1.0, 0.002]);
+        assert!(path_f32_slice(body, &["pad", "x"], &mut buf).unwrap());
+        assert_eq!(buf, vec![1.0, 2.0]);
+        assert!(!path_f32_slice(body, &["model"], &mut buf).unwrap());
+        assert_eq!(path_f64(body, &["pad", "x"]).unwrap(), None);
+        assert!(path_str(br#"{"model" "x"}"#, &["model"]).is_err());
+        assert!(path_str(br#"{"a":[1,}"#, &["b"]).is_err());
+        // Mixed array: rejected like the tree accessor chain would.
+        assert!(!path_f32_slice(br#"{"a":[1,"x"]}"#, &["a"], &mut buf).unwrap());
+        // Empty array extracts as empty.
+        assert!(path_f32_slice(br#"{"a":[]}"#, &["a"], &mut buf).unwrap());
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn lazy_path_handles_escaped_keys_and_whitespace() {
+        let body = "{\n  \"k\\\"ey\" : { \"v\" : 7.25 },\n  \"z\" : \"s\\n\"\n}".as_bytes();
+        assert_eq!(path_f64(body, &["k\"ey", "v"]).unwrap(), Some(7.25));
+        assert_eq!(path_str(body, &["z"]).unwrap().as_deref(), Some("s\n"));
+        assert_eq!(path_f64(body, &["k\"ey", "w"]).unwrap(), None);
+    }
+
+    fn gen_string(g: &mut crate::util::quickcheck::Gen) -> String {
+        const PIECES: [&str; 10] =
+            ["a", "Z", "0", " ", "\"", "\\", "\n", "\t", "é", "😀"];
+        (0..g.usize_in(0, 6)).map(|_| *g.choose(&PIECES)).collect()
+    }
+
+    fn gen_num(g: &mut crate::util::quickcheck::Gen) -> f64 {
+        match g.usize_in(0, 4) {
+            0 => g.usize_in(0, 1_000_000) as f64,
+            1 => -(g.usize_in(0, 1_000_000) as f64),
+            2 => g.f64_in(-1.0, 1.0),
+            3 => g.f64_in(-1e18, 1e18),
+            _ => g.f64_in(-1.0, 1.0) * 10f64.powi(g.usize_in(0, 44) as i32 - 22),
+        }
+    }
+
+    fn gen_json(g: &mut crate::util::quickcheck::Gen, depth: usize) -> Json {
+        // Keys come from a small pool so random walks revisit them; the
+        // BTreeMap dedups, so serialized documents never hold duplicates.
+        const KEYS: [&str; 8] = ["model", "input", "a", "b", "c", "k\"ey", "né", "x"];
+        let hi = if depth == 0 { 3 } else { 5 };
+        match g.usize_in(0, hi) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(gen_num(g)),
+            3 => Json::Str(gen_string(g)),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|_| (g.choose(&KEYS).to_string(), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    fn gen_path(g: &mut crate::util::quickcheck::Gen, doc: &Json) -> Vec<String> {
+        let mut path = Vec::new();
+        let mut cur = doc.clone();
+        for _ in 0..3 {
+            match cur.as_obj() {
+                Some(o) if !o.is_empty() => {
+                    if g.usize_in(0, 4) == 0 {
+                        path.push("missing-key".to_string());
+                        return path;
+                    }
+                    let keys: Vec<&String> = o.keys().collect();
+                    let k = keys[g.usize_in(0, keys.len() - 1)].clone();
+                    let next = o[&k].clone();
+                    path.push(k);
+                    cur = next;
+                    if g.bool() {
+                        return path;
+                    }
+                }
+                _ => {
+                    if g.usize_in(0, 2) == 0 {
+                        path.push("x".to_string());
+                    }
+                    return path;
+                }
+            }
+        }
+        path
+    }
+
+    /// The property the serving hot path relies on: lazy extraction over
+    /// raw bytes agrees exactly (bit-for-bit on floats) with building the
+    /// tree and walking it, on arbitrary documents and paths.
+    #[test]
+    fn lazy_scan_agrees_with_tree_parser() {
+        use crate::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+        forall(Config::default().cases(300), |g| {
+            let doc = gen_json(g, 3);
+            let text = if g.bool() { doc.to_string() } else { doc.to_string_pretty() };
+            let bytes = text.as_bytes();
+            let tree = Json::parse(&text).expect("serializer output reparses");
+            let path = gen_path(g, &tree);
+            let keys: Vec<&str> = path.iter().map(|s| s.as_str()).collect();
+            let node = tree.path(&keys);
+
+            prop_assert_eq(
+                path_str(bytes, &keys).unwrap(),
+                node.and_then(|n| n.as_str().map(String::from)),
+            )?;
+            prop_assert_eq(
+                path_f64(bytes, &keys).unwrap().map(f64::to_bits),
+                node.and_then(Json::as_f64).map(f64::to_bits),
+            )?;
+
+            let mut buf = Vec::new();
+            let got = path_f32_slice(bytes, &keys, &mut buf).unwrap();
+            let want: Option<Vec<f32>> = node.and_then(|n| n.as_arr()).and_then(|a| {
+                a.iter().map(|v| v.as_f64().map(|f| f as f32)).collect()
+            });
+            match want {
+                Some(w) => {
+                    prop_assert(got, "f32 array present but scanner missed it")?;
+                    prop_assert_eq(
+                        buf.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                        w.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    )?;
+                }
+                None => prop_assert(!got, "scanner accepted a non-f32-array leaf")?,
+            }
+            Ok(())
+        });
+    }
+
+    /// The Clinger fast path must be invisible: byte-identical to
+    /// `str::parse::<f64>` on random decimal literals, including ones that
+    /// force the wide-mantissa / large-exponent fallback.
+    #[test]
+    fn lazy_number_parse_is_bit_identical_to_std() {
+        use crate::util::quickcheck::{forall, prop_assert_eq, Config};
+        forall(Config::default().cases(500), |g| {
+            let mut s = String::new();
+            if g.bool() {
+                s.push('-');
+            }
+            for _ in 0..g.usize_in(1, 22) {
+                s.push((b'0' + g.usize_in(0, 9) as u8) as char);
+            }
+            if g.bool() {
+                s.push('.');
+                for _ in 0..g.usize_in(1, 22) {
+                    s.push((b'0' + g.usize_in(0, 9) as u8) as char);
+                }
+            }
+            if g.bool() {
+                s.push(*g.choose(&['e', 'E']));
+                match g.usize_in(0, 2) {
+                    0 => s.push('-'),
+                    1 => s.push('+'),
+                    _ => {}
+                }
+                for _ in 0..g.usize_in(1, 3) {
+                    s.push((b'0' + g.usize_in(0, 9) as u8) as char);
+                }
+            }
+            let bytes = s.as_bytes();
+            prop_assert_eq(scan_number_end(bytes, 0), bytes.len())?;
+            let lazy = parse_f64_span(bytes, 0, bytes.len()).unwrap();
+            let full: f64 = s.parse().unwrap();
+            prop_assert_eq(lazy.to_bits(), full.to_bits())
+        });
     }
 
     #[test]

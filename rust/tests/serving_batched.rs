@@ -268,6 +268,114 @@ fn shutdown_flushes_every_accepted_request() {
 }
 
 #[test]
+fn drain_through_shared_handle_flushes_accepted_requests() {
+    let _guard = serial();
+    // Regression: shutdown() consumed the Server, so an Arc-shared handle
+    // (what the HTTP front-end hands its connection threads) could never
+    // drain — dropping the Arc leaked workers and in a cut batch the
+    // queued responses with them. drain(&self) must flush everything.
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.max_batch = 4;
+    cfg.execute_delay = Duration::from_millis(20);
+    let server = std::sync::Arc::new(Server::start(cfg).expect("start"));
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(23);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| {
+            server
+                .submit(req(random_input(&mut rng, input_len)))
+                .expect("submit")
+                .1
+        })
+        .collect();
+    server.drain();
+    for rx in rxs {
+        let resp = rx.recv().expect("flushed reply").expect("ok");
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    // Post-drain submissions fail cleanly instead of panicking or hanging.
+    match server.submit(req(random_input(&mut rng, input_len))) {
+        Err(SubmitError::WorkerGone(_)) | Err(SubmitError::UnknownModel(_)) => {}
+        other => panic!("submit after drain must fail cleanly, got {:?}", other.map(|_| ())),
+    }
+    // Idempotent: a second drain (or the consuming shutdown) is a no-op.
+    server.drain();
+}
+
+#[test]
+fn quarantine_flushes_queued_jobs_and_reroutes() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.replicas = 2;
+    cfg.max_batch = 2;
+    cfg.execute_delay = Duration::from_millis(30);
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(29);
+    // Build a backlog spread across both replicas.
+    let mut accepted = Vec::new();
+    for _ in 0..8 {
+        let (replica, rx) = server
+            .submit(req(random_input(&mut rng, input_len)))
+            .expect("submit");
+        accepted.push((replica, rx));
+    }
+    assert!(accepted.iter().any(|(r, _)| *r == 0));
+    // Kill replica 0 mid-load: its accepted jobs must still be answered
+    // (the worker flushes its queue before exiting), and all new traffic
+    // must land on replica 1.
+    assert!(server.quarantine("tiny", 0));
+    assert!(!server.quarantine("tiny", 0), "second quarantine is a no-op");
+    assert_eq!(server.replicas("tiny"), vec![1]);
+    for _ in 0..4 {
+        let (replica, rx) = server
+            .submit(req(random_input(&mut rng, input_len)))
+            .expect("submit after quarantine");
+        assert_eq!(replica, 1, "quarantined replica must receive no new traffic");
+        accepted.push((replica, rx));
+    }
+    // Pinned submission to the quarantined replica is refused.
+    assert!(matches!(
+        server.submit_to(req(random_input(&mut rng, input_len)), 0),
+        Err(SubmitError::WorkerGone(_))
+    ));
+    // Zero loss: every accepted request gets a successful reply.
+    for (_, rx) in accepted {
+        rx.recv().expect("reply").expect("ok");
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    assert_eq!(server.outstanding("tiny"), 0);
+    server.shutdown();
+}
+
+#[test]
+fn pinned_submit_serves_on_the_requested_replica() {
+    let _guard = serial();
+    let mut cfg = ServerConfig::synthetic(&["tiny"]);
+    cfg.replicas = 2;
+    let server = Server::start(cfg).expect("start");
+    let input_len = server.input_len("tiny").unwrap();
+    let mut rng = Rng::new(31);
+    for replica in [0usize, 1, 1, 0] {
+        let rx = server
+            .submit_to(req(random_input(&mut rng, input_len)), replica)
+            .expect("pinned submit");
+        rx.recv().expect("reply").expect("ok");
+    }
+    assert!(matches!(
+        server.submit_to(req(random_input(&mut rng, input_len)), 7),
+        Err(SubmitError::WorkerGone(_))
+    ));
+    assert_eq!(server.outstanding("tiny"), 0);
+    server.shutdown();
+}
+
+#[test]
 fn batched_serving_beats_per_frame_serving() {
     let _guard = serial();
     // Same closed-loop load, only max_batch differs: true batching

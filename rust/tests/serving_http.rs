@@ -1,0 +1,312 @@
+//! End-to-end tests of the HTTP serving front-end over real loopback
+//! sockets: correctness against the functional engine, replica failover
+//! under concurrent load, overload shedding, hot reload, and graceful
+//! drain. Everything runs on the synthetic in-memory models, so no
+//! artifacts directory is needed.
+//!
+//! Only meaningful on the sim engine — with `--features xla-runtime` the
+//! synthetic manifest has no HLO files to compile, so the whole file is
+//! compiled out.
+#![cfg(not(feature = "xla-runtime"))]
+
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::time::Duration;
+
+use oxbnn::coordinator::{synthetic_manifest, synthetic_weights, ServerConfig};
+use oxbnn::functional::bnn;
+use oxbnn::serving::{
+    request_once, serve, HttpConfig, ModelRegistry, RetryPolicy, ServingHandle,
+};
+use oxbnn::util::json::{path_f64, Json};
+use oxbnn::util::rng::Rng;
+
+/// Timing-sensitive tests (execute_delay, drains) run one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Boot a front-end over synthetic models on an OS-assigned port.
+fn boot(
+    mutate: impl FnOnce(&mut ServerConfig),
+    retry: RetryPolicy,
+    threads: usize,
+    models: &[(&str, usize)],
+) -> ServingHandle {
+    let mut cfg = ServerConfig::synthetic(&[]);
+    cfg.max_batch = 4;
+    cfg.queue_depth = 64;
+    mutate(&mut cfg);
+    let registry = Arc::new(ModelRegistry::synthetic(cfg));
+    for (name, replicas) in models {
+        registry.load(name, *replicas).expect("model loads");
+    }
+    let http = HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads,
+        retry,
+        ..HttpConfig::default()
+    };
+    serve(http, registry).expect("front-end binds loopback")
+}
+
+fn infer_body(model: &str, input: &[f32]) -> String {
+    let as_f64: Vec<f64> = input.iter().map(|&x| x as f64).collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("input", Json::arr_f64(&as_f64)),
+    ])
+    .to_string()
+}
+
+fn logits_of(body: &[u8]) -> Vec<f32> {
+    let j = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+    j.get("logits")
+        .and_then(Json::as_arr)
+        .expect("logits array")
+        .iter()
+        .map(|v| v.as_f64().expect("numeric logit") as f32)
+        .collect()
+}
+
+/// The full network round-trip — JSON request, lazy parse, shard route,
+/// batched engine, JSON response — must reproduce the functional
+/// reference engine bit-exactly (f64 JSON text round-trips f32 exactly).
+#[test]
+fn http_infer_matches_functional_engine() {
+    let _guard = serial();
+    let handle = boot(|_| {}, RetryPolicy::default(), 4, &[("tiny", 1)]);
+    let addr = handle.addr().to_string();
+
+    let seed = ServerConfig::synthetic(&["tiny"]).weight_seed;
+    let manifest = synthetic_manifest(&["tiny"]);
+    let artifact = manifest.get("bnn_tiny").unwrap();
+    let weights = synthetic_weights(artifact, seed);
+
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..3 {
+        let input: Vec<f32> = (0..artifact.args[0].element_count())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect();
+        let (status, body) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("tiny", &input).as_bytes())
+                .unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let want = bnn::forward(artifact, &input, &weights);
+        assert_eq!(logits_of(&body), want, "HTTP logits diverge from functional engine");
+        assert!(path_f64(&body, &["latency", "total_s"]).unwrap().unwrap() > 0.0);
+    }
+    handle.shutdown();
+}
+
+/// Kill a replica mid-load: traffic rebalances onto the survivor and no
+/// request is silently lost — every submission gets a 200.
+#[test]
+fn failover_quarantine_rebalances_without_loss() {
+    let _guard = serial();
+    let handle = boot(
+        |cfg| {
+            cfg.execute_delay = Duration::from_millis(10);
+            cfg.max_batch = 2;
+        },
+        RetryPolicy { max_retries: 3, backoff: Duration::from_millis(5), ..Default::default() },
+        20,
+        &[("m", 2)],
+    );
+    let addr = handle.addr().to_string();
+    let entry = handle.registry().get("m").expect("model loaded");
+    assert_eq!(entry.server.replicas("m").len(), 2);
+
+    let barrier = Arc::new(Barrier::new(17));
+    let mut clients = Vec::new();
+    for i in 0..16u64 {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        let body = infer_body("m", &vec![0.25 + i as f32 * 1e-3; entry.input_len]);
+        clients.push(std::thread::spawn(move || {
+            barrier.wait();
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    barrier.wait();
+    // Let some requests land on both replicas, then kill replica 0.
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(entry.server.quarantine("m", 0), "replica 0 was live");
+    for c in clients {
+        let (status, body) = c.join().unwrap().expect("no transport failures");
+        assert_eq!(
+            status,
+            200,
+            "request lost to quarantine: {}",
+            String::from_utf8_lossy(&body)
+        );
+    }
+    // Traffic rebalanced: only the survivor remains, and it still serves.
+    assert_eq!(entry.server.replicas("m"), vec![1]);
+    let (status, _) = request_once(
+        &addr,
+        "POST",
+        "/v1/infer",
+        infer_body("m", &vec![0.5; entry.input_len]).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(entry.server.outstanding("m"), 0, "router accounting leaked");
+    handle.shutdown();
+}
+
+/// Overload beyond the bounded queue sheds with 429 (Retry-After) while
+/// every request still gets an answer, and the shed counter records it.
+#[test]
+fn overload_sheds_with_429() {
+    let _guard = serial();
+    let handle = boot(
+        |cfg| {
+            cfg.queue_depth = 1;
+            cfg.max_batch = 1;
+            cfg.execute_delay = Duration::from_millis(50);
+        },
+        RetryPolicy { max_retries: 0, ..Default::default() },
+        20,
+        &[("m", 1)],
+    );
+    let addr = handle.addr().to_string();
+    let input_len = handle.registry().get("m").unwrap().input_len;
+    let mut clients = Vec::new();
+    for _ in 0..16 {
+        let addr = addr.clone();
+        let body = infer_body("m", &vec![0.1; input_len]);
+        clients.push(std::thread::spawn(move || {
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    let (mut ok, mut shed) = (0, 0);
+    for c in clients {
+        match c.join().unwrap().expect("every request gets a response") {
+            (200, _) => ok += 1,
+            (429, _) => shed += 1,
+            (status, body) => {
+                panic!("unexpected {}: {}", status, String::from_utf8_lossy(&body))
+            }
+        }
+    }
+    assert!(ok > 0, "some requests must land");
+    assert!(shed > 0, "queue depth 1 must shed under 16-way concurrency");
+    assert_eq!(ok + shed, 16);
+    assert_eq!(handle.metrics().shed(), shed as u64);
+    assert_eq!(handle.metrics().count("/v1/infer", 429), shed as u64);
+    handle.shutdown();
+}
+
+/// Hot reload during serving: the epoch in infer responses bumps, and no
+/// request observes an error window.
+#[test]
+fn hot_reload_bumps_epoch_in_responses() {
+    let _guard = serial();
+    let handle = boot(|_| {}, RetryPolicy::default(), 4, &[("m", 1)]);
+    let addr = handle.addr().to_string();
+    let input_len = handle.registry().get("m").unwrap().input_len;
+    let body = infer_body("m", &vec![0.3; input_len]);
+
+    let (status, resp) = request_once(&addr, "POST", "/v1/infer", body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(path_f64(&resp, &["epoch"]).unwrap(), Some(1.0));
+
+    handle.registry().reload("m").expect("hot reload");
+    let (status, resp) = request_once(&addr, "POST", "/v1/infer", body.as_bytes()).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert_eq!(path_f64(&resp, &["epoch"]).unwrap(), Some(2.0));
+    handle.shutdown();
+}
+
+/// Graceful drain: requests in flight when shutdown starts all complete
+/// with 200 — nothing accepted is lost.
+#[test]
+fn graceful_drain_completes_in_flight_requests() {
+    let _guard = serial();
+    let handle = boot(
+        |cfg| cfg.execute_delay = Duration::from_millis(100),
+        RetryPolicy::default(),
+        8,
+        &[("m", 1)],
+    );
+    let addr = handle.addr().to_string();
+    let input_len = handle.registry().get("m").unwrap().input_len;
+    let barrier = Arc::new(Barrier::new(5));
+    let mut clients = Vec::new();
+    for i in 0..4u64 {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        let body = infer_body("m", &vec![0.2 + i as f32 * 1e-3; input_len]);
+        clients.push(std::thread::spawn(move || {
+            barrier.wait();
+            request_once(&addr, "POST", "/v1/infer", body.as_bytes())
+        }));
+    }
+    barrier.wait();
+    // Requests are submitted within a few ms and execute for 100ms;
+    // drain while they are still inside the engine.
+    std::thread::sleep(Duration::from_millis(40));
+    handle.shutdown();
+    for c in clients {
+        let (status, body) = c.join().unwrap().expect("in-flight request dropped");
+        assert_eq!(
+            status,
+            200,
+            "in-flight request lost to drain: {}",
+            String::from_utf8_lossy(&body)
+        );
+    }
+    assert!(
+        request_once(&addr, "GET", "/healthz", b"").is_err(),
+        "server must be down after shutdown"
+    );
+}
+
+/// Error surface: bad JSON, unknown model, wrong method, unknown path,
+/// plus the healthy-path health and models pages.
+#[test]
+fn endpoint_error_surface() {
+    let _guard = serial();
+    let handle = boot(|_| {}, RetryPolicy::default(), 4, &[("m", 1)]);
+    let addr = handle.addr().to_string();
+
+    let (status, _) = request_once(&addr, "POST", "/v1/infer", b"{oops").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        request_once(&addr, "POST", "/v1/infer", br#"{"input": [1.0]}"#).unwrap();
+    assert_eq!(status, 400, "missing model field");
+    let (status, _) = request_once(
+        &addr,
+        "POST",
+        "/v1/infer",
+        br#"{"model": "ghost", "input": [1.0]}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    let (status, _) =
+        request_once(&addr, "POST", "/v1/infer", br#"{"model": "m", "input": [1.0]}"#)
+            .unwrap();
+    assert_eq!(status, 400, "wrong input length");
+    let (status, _) = request_once(&addr, "DELETE", "/v1/models", b"").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = request_once(&addr, "GET", "/v2/nothing", b"").unwrap();
+    assert_eq!(status, 404);
+
+    let (status, body) = request_once(&addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let (status, body) = request_once(&addr, "GET", "/v1/models", b"").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let models = j.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(models[0].get("name").and_then(Json::as_str), Some("m"));
+    assert!(
+        models[0]
+            .get("photonic_fps")
+            .and_then(Json::as_f64)
+            .unwrap()
+            > 0.0
+    );
+    handle.shutdown();
+}
