@@ -1,0 +1,407 @@
+//! Deterministic-interleaving model checker — a dependency-free
+//! mini-loom.
+//!
+//! A protocol under test is a set of [`Thread`] state machines over a
+//! cloneable shared state `S`. Each [`Thread::step`] performs **at most
+//! one** shared-state operation (through the [`Shared`] shim, which
+//! enforces the discipline) — the granularity at which real threads can
+//! interleave around an atomic op or a mutex-protected critical
+//! section. The [`Explorer`] then enumerates thread schedules by DFS:
+//! at every state it forks one branch per runnable thread, checking the
+//! caller's invariant after each step and again at quiescence, and
+//! reporting the first violating schedule as a replayable trace.
+//!
+//! The search is exhaustive up to the configured bounds:
+//!
+//! * `max_preemptions` — schedules that switch away from a
+//!   still-runnable thread more than this many times are pruned
+//!   (bounded-preemption search: most real bugs need only a few
+//!   preemptions, and the bound tames the factorial blowup).
+//! * `max_schedules` — a hard cap on completed schedules, so CI time
+//!   stays bounded on larger configurations.
+//!
+//! Everything is deterministic: threads are stepped in index order, no
+//! clocks or randomness exist, and two runs of the same configuration
+//! produce identical reports — a failing schedule is a reproducer.
+//!
+//! Future concurrent code (e.g. the ROADMAP's bounded work-stealing
+//! scheduler) adopts this by expressing its protocol as [`Thread`]s over
+//! a model of its shared state; see [`super::protocols`] for the shape.
+
+/// Shared-state shim: the only door to `S` during exploration. Counts
+/// operations and enforces the one-op-per-step discipline that makes
+/// the interleaving semantics meaningful.
+#[derive(Debug, Clone)]
+pub struct Shared<S> {
+    state: S,
+    ops: u64,
+    in_step: bool,
+    accessed: bool,
+}
+
+impl<S> Shared<S> {
+    pub fn new(state: S) -> Shared<S> {
+        Shared { state, ops: 0, in_step: false, accessed: false }
+    }
+
+    /// Perform one atomic shared-state operation. Panics if a thread
+    /// tries a second operation within a single step — split it into
+    /// two steps instead; that split IS the interleaving point.
+    pub fn with<R>(&mut self, f: impl FnOnce(&mut S) -> R) -> R {
+        assert!(
+            !(self.in_step && self.accessed),
+            "a Thread::step may perform at most one shared-state op; \
+             split the protocol into more steps"
+        );
+        self.accessed = true;
+        self.ops += 1;
+        f(&mut self.state)
+    }
+
+    /// Read-only view for invariant checks (not counted as an op).
+    pub fn peek(&self) -> &S {
+        &self.state
+    }
+
+    /// Shared-state operations performed so far.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    fn begin_step(&mut self) {
+        self.in_step = true;
+        self.accessed = false;
+    }
+}
+
+/// What one scheduling quantum of a thread did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Made progress; the thread has more steps left.
+    Ran,
+    /// Cannot progress in this state (e.g. waiting on a guard). A
+    /// blocked step must not mutate the shared state.
+    Blocked,
+    /// Made progress and finished; the thread will not be stepped again.
+    Done,
+}
+
+/// One protocol participant: a cloneable state machine over `S`.
+///
+/// Implementors are plain structs with a program counter; `boxed_clone`
+/// is the object-safe clone the DFS needs to fork a schedule:
+///
+/// ```ignore
+/// fn boxed_clone(&self) -> Box<dyn Thread<S>> { Box::new(self.clone()) }
+/// ```
+pub trait Thread<S> {
+    fn step(&mut self, shared: &mut Shared<S>) -> Step;
+    fn boxed_clone(&self) -> Box<dyn Thread<S>>;
+}
+
+impl<S> Clone for Box<dyn Thread<S>> {
+    fn clone(&self) -> Self {
+        self.boxed_clone()
+    }
+}
+
+/// A schedule that violated the invariant (or deadlocked): the thread
+/// indices in execution order, replayable by construction.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub schedule: Vec<usize>,
+    pub message: String,
+}
+
+/// What an exploration found.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Completed (run-to-quiescence) schedules explored.
+    pub schedules: u64,
+    /// Individual thread steps executed across all schedules.
+    pub steps: u64,
+    /// Branches pruned by the preemption budget.
+    pub pruned: u64,
+    /// True if the `max_schedules` cap stopped the search early.
+    pub capped: bool,
+    /// First invariant violation or deadlock found, if any.
+    pub violation: Option<Violation>,
+}
+
+impl Report {
+    /// Panic with the violating schedule if one was found — the
+    /// one-liner protocol tests end with.
+    pub fn assert_clean(&self) {
+        if let Some(v) = &self.violation {
+            panic!("schedule {:?} violates the protocol: {}", v.schedule, v.message);
+        }
+    }
+}
+
+/// DFS over thread schedules with a bounded-preemption budget.
+#[derive(Debug, Clone, Copy)]
+pub struct Explorer {
+    /// Maximum context switches away from a still-runnable thread per
+    /// schedule. `usize::MAX` = full exhaustive search.
+    pub max_preemptions: usize,
+    /// Hard cap on completed schedules (CI time bound).
+    pub max_schedules: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Explorer {
+        Explorer { max_preemptions: usize::MAX, max_schedules: 200_000 }
+    }
+}
+
+struct Search<'a, S> {
+    explorer: Explorer,
+    invariant: &'a dyn Fn(&S, bool) -> Result<(), String>,
+    report: Report,
+    trace: Vec<usize>,
+}
+
+impl Explorer {
+    /// Explore every schedule of `threads` over `init`, checking
+    /// `invariant(state, quiescent)` after each step (`quiescent =
+    /// false`) and once more when all threads are done (`quiescent =
+    /// true`). Stops at the first violation.
+    pub fn explore<S: Clone>(
+        &self,
+        init: S,
+        threads: Vec<Box<dyn Thread<S>>>,
+        invariant: impl Fn(&S, bool) -> Result<(), String>,
+    ) -> Report {
+        let mut search = Search {
+            explorer: *self,
+            invariant: &invariant,
+            report: Report {
+                schedules: 0,
+                steps: 0,
+                pruned: 0,
+                capped: false,
+                violation: None,
+            },
+            trace: Vec::new(),
+        };
+        let done = vec![false; threads.len()];
+        let shared = Shared::new(init);
+        dfs(&mut search, &shared, &threads, &done, None, 0);
+        search.report
+    }
+}
+
+/// A forked evaluation of one candidate thread's next step.
+type Fork<S> = (Shared<S>, Vec<Box<dyn Thread<S>>>, Step);
+
+/// One DFS node: try each non-done thread on a fork of the state.
+fn dfs<S: Clone>(
+    search: &mut Search<'_, S>,
+    shared: &Shared<S>,
+    threads: &[Box<dyn Thread<S>>],
+    done: &[bool],
+    last: Option<usize>,
+    preemptions: usize,
+) {
+    if search.report.violation.is_some() {
+        return;
+    }
+    if search.report.schedules >= search.explorer.max_schedules {
+        search.report.capped = true;
+        return;
+    }
+    if done.iter().all(|&d| d) {
+        search.report.schedules += 1;
+        if let Err(msg) = (search.invariant)(shared.peek(), true) {
+            search.report.violation = Some(Violation {
+                schedule: search.trace.clone(),
+                message: format!("at quiescence: {}", msg),
+            });
+        }
+        return;
+    }
+    // Evaluate every runnable thread's step on a fork first, so the
+    // preemption test below knows which threads are genuinely runnable
+    // (a blocked thread does not cost a preemption to switch away from).
+    let mut forks: Vec<Option<Fork<S>>> = Vec::with_capacity(threads.len());
+    for t in 0..threads.len() {
+        if done[t] {
+            forks.push(None);
+            continue;
+        }
+        let mut fork_shared = shared.clone();
+        let mut fork_threads = threads.to_vec();
+        fork_shared.begin_step();
+        let step = fork_threads[t].step(&mut fork_shared);
+        forks.push(Some((fork_shared, fork_threads, step)));
+    }
+    let runnable = |t: usize| matches!(&forks[t], Some((_, _, Step::Ran | Step::Done)));
+    let any_runnable = (0..threads.len()).any(runnable);
+    if !any_runnable {
+        let stuck: Vec<usize> = (0..threads.len()).filter(|&t| !done[t]).collect();
+        search.report.violation = Some(Violation {
+            schedule: search.trace.clone(),
+            message: format!("deadlock: threads {:?} are all blocked", stuck),
+        });
+        return;
+    }
+    for t in 0..threads.len() {
+        if search.report.violation.is_some()
+            || search.report.schedules >= search.explorer.max_schedules
+        {
+            return;
+        }
+        let Some((fork_shared, fork_threads, step)) = &forks[t] else {
+            continue;
+        };
+        if *step == Step::Blocked {
+            continue;
+        }
+        // A preemption is a switch away from `last` while it could have
+        // kept running.
+        let cost = match last {
+            Some(l) if l != t && runnable(l) => 1,
+            _ => 0,
+        };
+        if preemptions + cost > search.explorer.max_preemptions {
+            search.report.pruned += 1;
+            continue;
+        }
+        search.report.steps += 1;
+        search.trace.push(t);
+        if let Err(msg) = (search.invariant)(fork_shared.peek(), false) {
+            search.report.violation = Some(Violation {
+                schedule: search.trace.clone(),
+                message: msg,
+            });
+            search.trace.pop();
+            return;
+        }
+        let mut next_done = done.to_vec();
+        if *step == Step::Done {
+            next_done[t] = true;
+        }
+        dfs(
+            search,
+            fork_shared,
+            fork_threads,
+            &next_done,
+            Some(t),
+            preemptions + cost,
+        );
+        search.trace.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A thread that increments a counter `n` times, one op per step.
+    #[derive(Clone)]
+    struct Inc {
+        left: usize,
+    }
+
+    impl Thread<i64> for Inc {
+        fn step(&mut self, shared: &mut Shared<i64>) -> Step {
+            shared.with(|s| *s += 1);
+            self.left -= 1;
+            if self.left == 0 {
+                Step::Done
+            } else {
+                Step::Ran
+            }
+        }
+        fn boxed_clone(&self) -> Box<dyn Thread<i64>> {
+            Box::new(self.clone())
+        }
+    }
+
+    #[test]
+    fn counts_interleavings_exactly() {
+        // Two threads of two steps each: 4!/(2!·2!) = 6 schedules.
+        let threads: Vec<Box<dyn Thread<i64>>> =
+            vec![Box::new(Inc { left: 2 }), Box::new(Inc { left: 2 })];
+        let report = Explorer::default().explore(0, threads, |&s, quiescent| {
+            if quiescent && s != 4 {
+                return Err(format!("expected 4 increments, got {}", s));
+            }
+            Ok(())
+        });
+        report.assert_clean();
+        assert_eq!(report.schedules, 6);
+        assert!(!report.capped);
+    }
+
+    #[test]
+    fn zero_preemption_budget_keeps_only_run_to_completion_orders() {
+        // With no preemptions allowed, each thread runs to completion
+        // once scheduled: exactly 2 schedules remain.
+        let threads: Vec<Box<dyn Thread<i64>>> =
+            vec![Box::new(Inc { left: 2 }), Box::new(Inc { left: 2 })];
+        let explorer = Explorer { max_preemptions: 0, ..Explorer::default() };
+        let report = explorer.explore(0, threads, |_, _| Ok(()));
+        assert_eq!(report.schedules, 2);
+        assert!(report.pruned > 0);
+    }
+
+    /// Two threads each waiting for the other to move first: deadlock.
+    #[derive(Clone)]
+    struct WaitsFor {
+        other_moved_key: usize,
+    }
+
+    impl Thread<[bool; 2]> for WaitsFor {
+        fn step(&mut self, shared: &mut Shared<[bool; 2]>) -> Step {
+            let other = self.other_moved_key;
+            let can_go = shared.with(|s| s[other]);
+            if can_go {
+                Step::Done
+            } else {
+                Step::Blocked
+            }
+        }
+        fn boxed_clone(&self) -> Box<dyn Thread<[bool; 2]>> {
+            Box::new(self.clone())
+        }
+    }
+
+    #[test]
+    fn detects_deadlock() {
+        let threads: Vec<Box<dyn Thread<[bool; 2]>>> = vec![
+            Box::new(WaitsFor { other_moved_key: 1 }),
+            Box::new(WaitsFor { other_moved_key: 0 }),
+        ];
+        let report = Explorer::default().explore([false, false], threads, |_, _| Ok(()));
+        let v = report.violation.expect("circular wait must deadlock");
+        assert!(v.message.contains("deadlock"), "{}", v.message);
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let run = || {
+            let threads: Vec<Box<dyn Thread<i64>>> =
+                vec![Box::new(Inc { left: 3 }), Box::new(Inc { left: 2 })];
+            Explorer::default().explore(0, threads, |_, _| Ok(()))
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn violation_reports_replayable_trace() {
+        let threads: Vec<Box<dyn Thread<i64>>> =
+            vec![Box::new(Inc { left: 1 }), Box::new(Inc { left: 1 })];
+        let report = Explorer::default().explore(0, threads, |&s, _| {
+            if s >= 2 {
+                Err("second increment observed".to_string())
+            } else {
+                Ok(())
+            }
+        });
+        let v = report.violation.expect("must trip after two steps");
+        assert_eq!(v.schedule.len(), 2, "trace covers exactly the violating prefix");
+    }
+}

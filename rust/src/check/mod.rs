@@ -1,0 +1,29 @@
+//! # Static checking
+//!
+//! Ahead-of-execution verification, distinct from the paper-math models
+//! in [`crate::analysis`]: nothing here computes performance or energy —
+//! it proves *legality* of what the rest of the crate is about to run.
+//!
+//! Two engines:
+//!
+//! * [`planlint`] — a static verifier over compiled [`ExecutionPlan`]s /
+//!   [`FramePlan`]s. It re-derives, independently of the plan code, the
+//!   invariants the event simulator relies on at runtime (admission
+//!   thresholds producible by the producer's raster order, pass-map
+//!   conservation, PCA capacity, XPE balance) and reports violations as
+//!   [`planlint::Finding`]s with machine-readable codes. The `lint` CLI
+//!   subcommand and the serving registry's load gate both run it.
+//! * [`interleave`] — a dependency-free deterministic-interleaving model
+//!   checker (a mini-loom): protocol state machines express their shared
+//!   accesses through a [`interleave::Shared`] shim and the explorer
+//!   enumerates thread schedules exhaustively (DFS, optionally bounded by
+//!   a preemption budget), checking an invariant after every step and at
+//!   quiescence. [`protocols`] models the three riskiest concurrent
+//!   protocols in the serving stack against it.
+//!
+//! [`ExecutionPlan`]: crate::plan::ExecutionPlan
+//! [`FramePlan`]: crate::plan::FramePlan
+
+pub mod interleave;
+pub mod planlint;
+pub mod protocols;

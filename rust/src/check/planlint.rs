@@ -1,0 +1,884 @@
+//! Static plan verifier: proves, without running the simulator, that a
+//! compiled [`ExecutionPlan`] / [`FramePlan`] can execute legally.
+//!
+//! Everything the event simulator trusts at runtime is re-derived here
+//! *independently* of the plan code and cross-checked:
+//!
+//! * **Admission** — the cross-layer dependency graph is deadlock-free:
+//!   unit producer edges are acyclic (Kahn), every head-pass threshold is
+//!   producible by the producer's raster order (the unclamped
+//!   receptive-field reach never exceeds the producer's activation
+//!   count), and the runtime rule [`FramePlan::need_acts`] agrees with
+//!   the linter's own closed-form re-derivation at every output position.
+//! * **Conservation** — per-XPE pass maps sum to the closed-form totals,
+//!   the declared critical path really is the longest queue, and the
+//!   slice table tiles the vector size exactly.
+//! * **Capacity** — PCA accumulation never exceeds the accelerator's
+//!   `B_PCA` bound `γ` (paper Section III-B2) for the configured mapping
+//!   policy, and `γ` itself agrees with the paper-calibrated Table II
+//!   value for the configured data rate.
+//! * **Balance** — neither mapping policy over- or under-subscribes an
+//!   XPE beyond its balance bound (`slices` for `PcaLocal`, 1 for
+//!   `SlicedSpread`), and the pass map spans exactly the hardware grid.
+//!
+//! Findings carry a fixed [`Severity`] and a machine-readable [`Code`]
+//! (`PL1xx` mapping, `PL2xx` admission, `PL3xx` capacity). Only
+//! [`Severity::Error`] findings make a plan unservable — the CLI `lint`
+//! subcommand exits non-zero on them and the serving registry refuses
+//! the model load ([`LintRejection`], surfaced as HTTP 422).
+//!
+//! [`FramePlan::need_acts`]: crate::plan::FramePlan::need_acts
+
+use std::fmt;
+
+use crate::arch::accelerator::BitcountMode;
+use crate::mapping::layer::{ConvGeom, GemmLayer};
+use crate::mapping::scheduler::MappingPolicy;
+use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan, LayerPlan};
+
+/// How bad a finding is. Only `Error` findings fail the lint gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Expected but worth surfacing (e.g. an FC layer's whole-map wait).
+    Info,
+    /// Legal but suspicious or performance-degrading (e.g. a conv whose
+    /// geometry does not chain, losing cross-layer pipelining).
+    Warning,
+    /// The plan cannot execute correctly; the gate refuses it.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Machine-readable finding codes. The numeric id is stable — tests, CI
+/// logs and API clients may match on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Code {
+    /// PL101: `plan.layers[i].layer` disagrees with `workload.layers[i]`
+    /// (the two views [`ExecutionPlan`] promises identical).
+    ViewMismatch,
+    /// PL102: a layer was compiled for a different XPE geometry (N or
+    /// XPC shape) than the plan's accelerator provides.
+    GridMismatch,
+    /// PL103: per-XPE queue lengths do not conserve the closed-form pass
+    /// total, or the declared critical path is not the longest queue.
+    PassCountMismatch,
+    /// PL104: the slice table does not tile the vector size `S` into
+    /// `ceil(S/N)` slices of length `1..=N`.
+    SliceTableCorrupt,
+    /// PL105: the pass map spans more (or fewer) XPE slots than the
+    /// accelerator physically has — passes would land on XPEs that do
+    /// not exist, or leave hardware permanently idle.
+    XpeOversubscribed,
+    /// PL106: queue-length spread exceeds the mapping policy's balance
+    /// bound (`slices` for `PcaLocal`, 1 for `SlicedSpread`).
+    XpeImbalance,
+    /// PL201: the unit dependency graph has a cycle (or a producer edge
+    /// pointing forward in frame-major order) — admission deadlock.
+    AdmissionCycle,
+    /// PL202: an admission threshold exceeds what the producer will ever
+    /// drain — the consumer would wait forever.
+    AdmissionUnsatisfiable,
+    /// PL203: a layer's [`ConvGeom`] violates its own invariants
+    /// (degenerate sides, padding ≥ kernel, kernel off the padded map).
+    GeomInvalid,
+    /// PL204: the [`ConvGeom`] is inconsistent with the GEMM flattening
+    /// it claims to describe (output map does not divide the VDP count,
+    /// or `S` disagrees with `kernel² × producer channels`).
+    GeomGemmMismatch,
+    /// PL205: a conv-shaped consumer falls back to the whole-map wait
+    /// (no geometry, or geometry that does not chain onto the producer's
+    /// output map) — sound, but cross-layer pipelining is lost.
+    AdmissionFallback,
+    /// PL206: the runtime rule [`FramePlan::need_acts`] disagrees with
+    /// the linter's independent re-derivation of the same threshold.
+    ///
+    /// [`FramePlan::need_acts`]: crate::plan::FramePlan::need_acts
+    AdmissionDrift,
+    /// PL301: a PASS would accumulate more '1's than the PCA capacity
+    /// `γ` can hold (paper Section III-B2: functional-error territory).
+    PcaOverflow,
+    /// PL302: the configured `γ` drifts from the paper-calibrated
+    /// Table II value for the accelerator's data rate.
+    PcaCapacityDrift,
+}
+
+impl Code {
+    /// Stable numeric id, e.g. `"PL301"`.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Code::ViewMismatch => "PL101",
+            Code::GridMismatch => "PL102",
+            Code::PassCountMismatch => "PL103",
+            Code::SliceTableCorrupt => "PL104",
+            Code::XpeOversubscribed => "PL105",
+            Code::XpeImbalance => "PL106",
+            Code::AdmissionCycle => "PL201",
+            Code::AdmissionUnsatisfiable => "PL202",
+            Code::GeomInvalid => "PL203",
+            Code::GeomGemmMismatch => "PL204",
+            Code::AdmissionFallback => "PL205",
+            Code::AdmissionDrift => "PL206",
+            Code::PcaOverflow => "PL301",
+            Code::PcaCapacityDrift => "PL302",
+        }
+    }
+
+    /// The fixed severity of this code.
+    pub fn severity(&self) -> Severity {
+        match self {
+            Code::ViewMismatch
+            | Code::GridMismatch
+            | Code::PassCountMismatch
+            | Code::SliceTableCorrupt
+            | Code::XpeOversubscribed
+            | Code::XpeImbalance
+            | Code::AdmissionCycle
+            | Code::AdmissionUnsatisfiable
+            | Code::GeomInvalid
+            | Code::GeomGemmMismatch
+            | Code::AdmissionDrift
+            | Code::PcaOverflow => Severity::Error,
+            Code::PcaCapacityDrift => Severity::Warning,
+            Code::AdmissionFallback => Severity::Info,
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One lint finding: code + severity + where + why.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub code: Code,
+    pub severity: Severity,
+    /// Workload layer index the finding anchors to, when layer-scoped.
+    pub layer: Option<usize>,
+    pub message: String,
+}
+
+impl Finding {
+    fn new(code: Code, layer: Option<usize>, message: String) -> Finding {
+        Finding { code, severity: code.severity(), layer, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}]", self.code, self.severity)?;
+        if let Some(l) = self.layer {
+            write!(f, " layer {}", l)?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// True if any finding is [`Severity::Error`].
+pub fn has_errors(findings: &[Finding]) -> bool {
+    findings.iter().any(|f| f.severity == Severity::Error)
+}
+
+/// A plan refused by the lint gate: carries every finding so callers
+/// (the serving registry, HTTP 422 bodies) can report precisely.
+#[derive(Debug)]
+pub struct LintRejection {
+    /// What was being linted (model or workload name).
+    pub subject: String,
+    pub findings: Vec<Finding>,
+}
+
+impl fmt::Display for LintRejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let errors: Vec<String> = self
+            .findings
+            .iter()
+            .filter(|x| x.severity == Severity::Error)
+            .map(|x| x.to_string())
+            .collect();
+        write!(f, "plan for '{}' failed lint: {}", self.subject, errors.join("; "))
+    }
+}
+
+impl std::error::Error for LintRejection {}
+
+/// Lint `plan` and refuse it (with every finding attached) if any
+/// [`Severity::Error`] finding surfaces — the serving registry's load
+/// gate. On success the non-fatal findings are returned for logging.
+pub fn gate(subject: &str, plan: &ExecutionPlan) -> Result<Vec<Finding>, LintRejection> {
+    let findings = verify(plan);
+    if has_errors(&findings) {
+        Err(LintRejection { subject: subject.to_string(), findings })
+    } else {
+        Ok(findings)
+    }
+}
+
+/// Verify `plan` under the default (receptive-field-exact) admission
+/// mode: per-layer mapping/capacity checks plus the cross-layer
+/// admission argument of [`verify_frame`].
+pub fn verify(plan: &ExecutionPlan) -> Vec<Finding> {
+    verify_with(plan, AdmissionMode::Exact)
+}
+
+/// [`verify`] under an explicit [`AdmissionMode`].
+pub fn verify_with(plan: &ExecutionPlan, admission: AdmissionMode) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if plan.layers.len() != plan.workload.layers.len() {
+        findings.push(Finding::new(
+            Code::ViewMismatch,
+            None,
+            format!(
+                "plan has {} compiled layers but the workload view has {}",
+                plan.layers.len(),
+                plan.workload.layers.len()
+            ),
+        ));
+    }
+    for (i, lp) in plan.layers.iter().enumerate() {
+        check_layer(plan, i, lp, &mut findings);
+    }
+    check_pca_calibration(plan, &mut findings);
+    // Two frames so the frame-major unit numbering (including the
+    // frame-boundary "no producer" edge) is exercised, not just frame 0.
+    let fp = FramePlan::with_admission(plan, 2, admission);
+    findings.extend(verify_frame(&fp));
+    findings
+}
+
+/// Cross-layer admission checks over an assembled [`FramePlan`]: cycle
+/// detection over the unit dependency DAG, producibility of every
+/// admission threshold, and agreement between the runtime rule and the
+/// linter's independent re-derivation.
+pub fn verify_frame(fp: &FramePlan<'_>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_unit_dag(fp, &mut findings);
+    let layers = fp.layers();
+    // Admission thresholds are identical across frames (same compiled
+    // layers), so scanning frame 0's units covers the whole batch.
+    for unit in 0..layers.min(fp.units()) {
+        check_admission(fp, unit, &mut findings);
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// Per-layer mapping / capacity checks
+// ---------------------------------------------------------------------
+
+fn check_layer(plan: &ExecutionPlan, i: usize, lp: &LayerPlan, findings: &mut Vec<Finding>) {
+    let acc = &plan.accelerator;
+    if let Some(view) = plan.workload.layers.get(i) {
+        if *view != lp.layer {
+            findings.push(Finding::new(
+                Code::ViewMismatch,
+                Some(i),
+                format!(
+                    "compiled layer '{}' disagrees with workload view '{}'",
+                    lp.layer.name, view.name
+                ),
+            ));
+        }
+    }
+    if lp.n != acc.n {
+        findings.push(Finding::new(
+            Code::GridMismatch,
+            Some(i),
+            format!("layer sliced for N={} on an N={} accelerator", lp.n, acc.n),
+        ));
+    }
+    if lp.m == 0 || lp.xpc_count == 0 {
+        findings.push(Finding::new(
+            Code::XpeOversubscribed,
+            Some(i),
+            "pass map spans zero XPE slots".to_string(),
+        ));
+        return; // queue-length math divides by the slot count
+    }
+    let hw_slots = acc.m() * acc.xpc_count();
+    if lp.total_xpes() != hw_slots {
+        findings.push(Finding::new(
+            Code::XpeOversubscribed,
+            Some(i),
+            format!(
+                "pass map spans {} XPE slots but the accelerator grid has {}",
+                lp.total_xpes(),
+                hw_slots
+            ),
+        ));
+    } else if (lp.m, lp.xpc_count) != (acc.m(), acc.xpc_count()) {
+        findings.push(Finding::new(
+            Code::GridMismatch,
+            Some(i),
+            format!(
+                "pass map shaped {}x{} XPEs/XPC vs the accelerator's {}x{}",
+                lp.xpc_count,
+                lp.m,
+                acc.xpc_count(),
+                acc.m()
+            ),
+        ));
+    }
+    check_slice_table(i, lp, findings);
+    check_conservation(i, lp, findings);
+    check_pca_capacity(acc, i, lp, findings);
+    if let Some(geom) = lp.layer.geom {
+        check_geom(i, &lp.layer, geom, findings);
+    }
+}
+
+/// The slice table must tile `S` exactly: `ceil(S/N)` slices, each
+/// `1..=N` long, summing to `S`. Read back through [`LayerPlan::pass_at`]
+/// (VDP 0's slices, in order, under either policy).
+fn check_slice_table(i: usize, lp: &LayerPlan, findings: &mut Vec<Finding>) {
+    if lp.n == 0 {
+        return; // already a GridMismatch; ceil(S/0) is meaningless
+    }
+    let slices = lp.slices();
+    if slices != lp.layer.s.div_ceil(lp.n) {
+        findings.push(Finding::new(
+            Code::SliceTableCorrupt,
+            Some(i),
+            format!(
+                "{} slices for S={} on N={} (expected ceil(S/N)={})",
+                slices,
+                lp.layer.s,
+                lp.n,
+                lp.layer.s.div_ceil(lp.n)
+            ),
+        ));
+        return;
+    }
+    let t = lp.total_xpes();
+    let mut sum = 0usize;
+    for j in 0..slices {
+        // VDP 0's j-th slice: PcaLocal keeps it on XPE 0 at queue depth
+        // j; SlicedSpread places global slice j on XPE j % T at depth
+        // j / T.
+        let pass = match lp.policy {
+            MappingPolicy::PcaLocal => lp.pass_at(0, j),
+            MappingPolicy::SlicedSpread => lp.pass_at(j % t, j / t),
+        };
+        let Some(pass) = pass else {
+            findings.push(Finding::new(
+                Code::SliceTableCorrupt,
+                Some(i),
+                format!("slice {} of VDP 0 is unreachable through the pass map", j),
+            ));
+            return;
+        };
+        if pass.slice_len == 0 || pass.slice_len > lp.n {
+            findings.push(Finding::new(
+                Code::SliceTableCorrupt,
+                Some(i),
+                format!("slice {} has length {} outside 1..=N={}", j, pass.slice_len, lp.n),
+            ));
+            return;
+        }
+        sum += pass.slice_len;
+    }
+    if sum != lp.layer.s {
+        findings.push(Finding::new(
+            Code::SliceTableCorrupt,
+            Some(i),
+            format!("slice lengths sum to {} but the vector size is {}", sum, lp.layer.s),
+        ));
+    }
+}
+
+/// Queue lengths conserve the pass total, the declared critical path is
+/// the longest queue, and the spread respects the policy balance bound.
+fn check_conservation(i: usize, lp: &LayerPlan, findings: &mut Vec<Finding>) {
+    let t = lp.total_xpes();
+    let (mut sum, mut max, mut min) = (0usize, 0usize, usize::MAX);
+    for x in 0..t {
+        let q = lp.queue_len(x);
+        sum += q;
+        max = max.max(q);
+        min = min.min(q);
+    }
+    if sum != lp.total_passes() {
+        findings.push(Finding::new(
+            Code::PassCountMismatch,
+            Some(i),
+            format!(
+                "per-XPE queues hold {} passes but the closed form says {} (VDPs {} x slices {})",
+                sum,
+                lp.total_passes(),
+                lp.vdp_count(),
+                lp.slices()
+            ),
+        ));
+    }
+    if max != lp.max_queue_len() {
+        findings.push(Finding::new(
+            Code::PassCountMismatch,
+            Some(i),
+            format!(
+                "declared critical path {} but the longest queue is {}",
+                lp.max_queue_len(),
+                max
+            ),
+        ));
+    }
+    let bound = match lp.policy {
+        MappingPolicy::PcaLocal => lp.slices(),
+        MappingPolicy::SlicedSpread => 1,
+    };
+    if max.saturating_sub(min) > bound {
+        findings.push(Finding::new(
+            Code::XpeImbalance,
+            Some(i),
+            format!(
+                "queue spread {} (max {} / min {}) exceeds the {:?} balance bound {}",
+                max - min,
+                max,
+                min,
+                lp.policy,
+                bound
+            ),
+        ));
+    }
+}
+
+/// Worst-case '1's accumulated before a PCA readout must fit `γ`: a full
+/// vector under `PcaLocal` (slices accumulate back-to-back in the analog
+/// domain), a single slice under `SlicedSpread`.
+fn check_pca_capacity(
+    acc: &crate::arch::accelerator::AcceleratorConfig,
+    i: usize,
+    lp: &LayerPlan,
+    findings: &mut Vec<Finding>,
+) {
+    let BitcountMode::Pca { gamma } = &acc.bitcount else {
+        return;
+    };
+    let gamma = *gamma;
+    let worst = match lp.policy {
+        MappingPolicy::PcaLocal => lp.layer.s as u64,
+        MappingPolicy::SlicedSpread => lp.n as u64,
+    };
+    if worst > gamma {
+        findings.push(Finding::new(
+            Code::PcaOverflow,
+            Some(i),
+            format!(
+                "layer '{}' accumulates up to {} ones per readout under {:?} but B_PCA={}",
+                lp.layer.name, worst, lp.policy, gamma
+            ),
+        ));
+    }
+}
+
+/// `γ` itself must match the paper-calibrated Table II value for the
+/// accelerator's data rate (0.5% tolerance for interpolated rates).
+fn check_pca_calibration(plan: &ExecutionPlan, findings: &mut Vec<Finding>) {
+    let acc = &plan.accelerator;
+    let BitcountMode::Pca { gamma } = &acc.bitcount else {
+        return;
+    };
+    let gamma = *gamma;
+    let calibrated = crate::analysis::pca_capacity::gamma_calibrated(acc.dr_gsps);
+    let drift = (gamma as f64 - calibrated as f64).abs() / calibrated as f64;
+    if drift > 0.005 {
+        findings.push(Finding::new(
+            Code::PcaCapacityDrift,
+            None,
+            format!(
+                "configured gamma={} but Table II calibration at {} GS/s gives {}",
+                gamma, acc.dr_gsps, calibrated
+            ),
+        ));
+    }
+}
+
+/// Re-validate a [`ConvGeom`] without panicking, then check it against
+/// the GEMM flattening it claims to describe.
+fn check_geom(i: usize, layer: &GemmLayer, g: ConvGeom, findings: &mut Vec<Finding>) {
+    if g.kernel == 0 || g.stride == 0 || g.in_hw == 0 {
+        findings.push(Finding::new(
+            Code::GeomInvalid,
+            Some(i),
+            format!("degenerate geometry {:?}", g),
+        ));
+        return;
+    }
+    if g.padding >= g.kernel {
+        findings.push(Finding::new(
+            Code::GeomInvalid,
+            Some(i),
+            format!("padding {} >= kernel {} (windows off the map)", g.padding, g.kernel),
+        ));
+        return;
+    }
+    if g.in_hw + 2 * g.padding < g.kernel {
+        findings.push(Finding::new(
+            Code::GeomInvalid,
+            Some(i),
+            format!("kernel {} larger than the padded {}-side map", g.kernel, g.in_hw),
+        ));
+        return;
+    }
+    let out = g.out_hw();
+    let positions = out * out;
+    if positions == 0 || layer.vdp_count() % positions != 0 {
+        findings.push(Finding::new(
+            Code::GeomGemmMismatch,
+            Some(i),
+            format!(
+                "{} VDPs cannot raster the {}x{} output map the geometry implies",
+                layer.vdp_count(),
+                out,
+                out
+            ),
+        ));
+        return;
+    }
+    // Depthwise position-major flattening: one VDP per (position,
+    // channel) with K = 1 — each VDP reads a single k×k window, so the
+    // vector size must be exactly kernel².
+    let per_pos = layer.vdp_count() / positions;
+    if layer.k == 1 && per_pos > 1 && layer.s != g.kernel * g.kernel {
+        findings.push(Finding::new(
+            Code::GeomGemmMismatch,
+            Some(i),
+            format!(
+                "depthwise vector size {} != kernel^2 = {}",
+                layer.s,
+                g.kernel * g.kernel
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-layer admission checks
+// ---------------------------------------------------------------------
+
+/// The unit dependency graph must be a DAG whose edges point backwards
+/// in frame-major order — the topological argument that makes the
+/// frame-major XPE preference deadlock-free. Kahn's algorithm over the
+/// producer edges; any unprocessed unit means a cycle.
+fn check_unit_dag(fp: &FramePlan<'_>, findings: &mut Vec<Finding>) {
+    let units = fp.units();
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); units];
+    let mut indegree = vec![0usize; units];
+    for u in 0..units {
+        if let Some(p) = fp.producer(u) {
+            if p >= u {
+                findings.push(Finding::new(
+                    Code::AdmissionCycle,
+                    Some(fp.unit_layer(u)),
+                    format!(
+                        "unit {} depends on unit {} ahead of it in frame-major order",
+                        u, p
+                    ),
+                ));
+                return;
+            }
+            consumers[p].push(u);
+            indegree[u] += 1;
+        }
+    }
+    let mut ready: Vec<usize> = (0..units).filter(|&u| indegree[u] == 0).collect();
+    let mut processed = 0usize;
+    while let Some(u) = ready.pop() {
+        processed += 1;
+        for &c in &consumers[u] {
+            indegree[c] -= 1;
+            if indegree[c] == 0 {
+                ready.push(c);
+            }
+        }
+    }
+    if processed != units {
+        findings.push(Finding::new(
+            Code::AdmissionCycle,
+            None,
+            format!("{} of {} units are trapped in a dependency cycle", units - processed, units),
+        ));
+    }
+}
+
+/// How the linter's independent threshold derivation classified a
+/// consumer layer.
+enum Thresholds {
+    /// FC or raster-less flattening: the whole-map wait is *expected*.
+    WholeMapExpected,
+    /// Conv-shaped consumer that cannot use its window structure —
+    /// sound (whole-map wait) but pipelining is lost.
+    Fallback(&'static str),
+    /// Per output position: the unclamped producer-activation reach.
+    PerPosition(Vec<usize>),
+}
+
+/// Re-derive the receptive-field-exact admission thresholds from the
+/// raw geometry — deliberately NOT calling into
+/// [`crate::plan::FramePlan::need_acts`], and deliberately without its
+/// final `min(produced)` clamp, so unproducible thresholds stay visible.
+fn derive_exact(consumer: &GemmLayer, producer: &GemmLayer, produced: usize) -> Thresholds {
+    let Some(geom) = consumer.geom else {
+        return if consumer.h == 1 {
+            Thresholds::WholeMapExpected
+        } else {
+            Thresholds::Fallback("consumer carries no window geometry")
+        };
+    };
+    let out_hw = geom.out_hw();
+    let positions = out_hw * out_hw;
+    if positions == 0 || consumer.vdp_count() % positions != 0 {
+        return Thresholds::Fallback("VDP count does not raster the output map");
+    }
+    let prod_positions = match producer.geom {
+        Some(g) => g.out_hw() * g.out_hw(),
+        None => producer.h,
+    };
+    if prod_positions == 0 || produced % prod_positions != 0 {
+        return Thresholds::Fallback("producer activations do not raster its map");
+    }
+    let per_pos_acts = produced / prod_positions;
+    let Some(prod_hw) = int_sqrt(prod_positions) else {
+        return Thresholds::Fallback("producer map is not square");
+    };
+    let expected_in = if producer.pool { prod_hw / 2 } else { prod_hw };
+    if producer.pool && prod_hw % 2 != 0 {
+        return Thresholds::Fallback("2x2 pool on an odd producer map");
+    }
+    if geom.in_hw != expected_in {
+        return Thresholds::Fallback("consumer input map does not chain onto the producer");
+    }
+    let mut needs = Vec::with_capacity(positions);
+    for pos in 0..positions {
+        let (mut r, mut c) = geom.last_input_rc(pos / out_hw, pos % out_hw);
+        if producer.pool {
+            r = 2 * r + 1;
+            c = 2 * c + 1;
+        }
+        needs.push((r * prod_hw + c + 1) * per_pos_acts);
+    }
+    Thresholds::PerPosition(needs)
+}
+
+fn check_admission(fp: &FramePlan<'_>, unit: usize, findings: &mut Vec<Finding>) {
+    let Some(prev) = fp.producer(unit) else {
+        return;
+    };
+    let layer_idx = fp.unit_layer(unit);
+    let consumer = &fp.layer_plan(unit).layer;
+    let producer = &fp.layer_plan(prev).layer;
+    let produced = fp.layer_plan(prev).vdp_count();
+    match fp.admission() {
+        AdmissionMode::Exact => {
+            match derive_exact(consumer, producer, produced) {
+                Thresholds::WholeMapExpected => {}
+                Thresholds::Fallback(reason) => {
+                    findings.push(Finding::new(
+                        Code::AdmissionFallback,
+                        Some(layer_idx),
+                        format!(
+                            "'{}' waits for the whole producer map ({}): cross-layer \
+                             pipelining lost",
+                            consumer.name, reason
+                        ),
+                    ));
+                    check_runtime_agreement(fp, unit, layer_idx, produced, findings);
+                }
+                Thresholds::PerPosition(needs) => {
+                    // Channel-chain consistency: a regular conv's vector
+                    // size must be kernel² × the producer's activations
+                    // per position (its channel count). This is what
+                    // catches an off-by-one kernel that happens to keep
+                    // the output map aligned.
+                    let geom = consumer.geom.expect("PerPosition implies geometry");
+                    let out = geom.out_hw();
+                    let per_pos = consumer.vdp_count() / (out * out);
+                    let prod_positions = match producer.geom {
+                        Some(g) => g.out_hw() * g.out_hw(),
+                        None => producer.h,
+                    };
+                    let per_pos_acts = produced / prod_positions;
+                    if per_pos == consumer.k
+                        && per_pos_acts > 0
+                        && consumer.s != geom.kernel * geom.kernel * per_pos_acts
+                    {
+                        findings.push(Finding::new(
+                            Code::GeomGemmMismatch,
+                            Some(layer_idx),
+                            format!(
+                                "'{}' vector size {} != kernel^2 ({}) x producer channels ({})",
+                                consumer.name,
+                                consumer.s,
+                                geom.kernel * geom.kernel,
+                                per_pos_acts
+                            ),
+                        ));
+                    }
+                    for (pos, &need) in needs.iter().enumerate() {
+                        if need > produced {
+                            findings.push(Finding::new(
+                                Code::AdmissionUnsatisfiable,
+                                Some(layer_idx),
+                                format!(
+                                    "'{}' position {} waits for {} producer activations \
+                                     but '{}' only ever drains {}",
+                                    consumer.name, pos, need, producer.name, produced
+                                ),
+                            ));
+                            return;
+                        }
+                        let v = pos * per_pos;
+                        let runtime = fp.need_acts(unit, v);
+                        if runtime != need.min(produced) {
+                            findings.push(Finding::new(
+                                Code::AdmissionDrift,
+                                Some(layer_idx),
+                                format!(
+                                    "'{}' VDP {}: runtime threshold {} != re-derived {}",
+                                    consumer.name,
+                                    v,
+                                    runtime,
+                                    need.min(produced)
+                                ),
+                            ));
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+        AdmissionMode::RasterHalo(halo) => {
+            if consumer.h == 1 {
+                check_runtime_agreement(fp, unit, layer_idx, produced, findings);
+                return;
+            }
+            // Independent re-derivation of the PR-4 halo rule: fraction
+            // of the consumer's own raster plus a fixed halo, clamped to
+            // the whole map — monotone and always producible.
+            for position in 0..consumer.h {
+                let frac = (position + 1) as f64 / consumer.h as f64;
+                let expect = (((frac + halo).min(1.0) * produced as f64).ceil() as usize)
+                    .min(produced);
+                let runtime = fp.need_acts(unit, position * consumer.k);
+                if runtime != expect || runtime > produced {
+                    findings.push(Finding::new(
+                        Code::AdmissionDrift,
+                        Some(layer_idx),
+                        format!(
+                            "'{}' position {}: runtime halo threshold {} != re-derived {}",
+                            consumer.name, position, runtime, expect
+                        ),
+                    ));
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// For whole-map waits, the runtime rule must agree: every sampled VDP
+/// of the consumer waits for exactly `produced` activations.
+fn check_runtime_agreement(
+    fp: &FramePlan<'_>,
+    unit: usize,
+    layer_idx: usize,
+    produced: usize,
+    findings: &mut Vec<Finding>,
+) {
+    let vdps = fp.layer_plan(unit).vdp_count();
+    for v in [0, vdps / 2, vdps.saturating_sub(1)] {
+        let runtime = fp.need_acts(unit, v);
+        if runtime != produced {
+            findings.push(Finding::new(
+                Code::AdmissionDrift,
+                Some(layer_idx),
+                format!(
+                    "whole-map wait expected ({} activations) but runtime admits VDP {} at {}",
+                    produced, v, runtime
+                ),
+            ));
+            return;
+        }
+    }
+}
+
+fn int_sqrt(n: usize) -> Option<usize> {
+    let r = (n as f64).sqrt().round() as usize;
+    (r * r == n).then_some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::accelerator::AcceleratorConfig;
+    use crate::workloads::Workload;
+
+    fn chained() -> Workload {
+        Workload::new(
+            "chained",
+            vec![
+                GemmLayer::conv("c1", 8, 2, 3, 4),
+                GemmLayer::conv("c2", 8, 4, 3, 4).with_pool(),
+                GemmLayer::conv("c3", 4, 4, 3, 2),
+                GemmLayer::fc("fc", 32, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn clean_plan_has_no_errors() {
+        for policy in [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread] {
+            let plan =
+                ExecutionPlan::compile(&AcceleratorConfig::oxbnn_5(), &chained(), policy);
+            let findings = verify(&plan);
+            assert!(!has_errors(&findings), "unexpected errors: {:?}", findings);
+        }
+    }
+
+    #[test]
+    fn halo_mode_lints_clean_too() {
+        let plan = ExecutionPlan::compile(
+            &AcceleratorConfig::oxbnn_50(),
+            &chained(),
+            MappingPolicy::PcaLocal,
+        );
+        let findings = verify_with(&plan, AdmissionMode::RasterHalo(0.125));
+        assert!(!has_errors(&findings), "unexpected errors: {:?}", findings);
+    }
+
+    #[test]
+    fn view_mismatch_detected() {
+        let mut plan = ExecutionPlan::compile(
+            &AcceleratorConfig::oxbnn_5(),
+            &chained(),
+            MappingPolicy::PcaLocal,
+        );
+        plan.workload.layers[1].k += 1;
+        let findings = verify(&plan);
+        assert!(findings.iter().any(|f| f.code == Code::ViewMismatch), "{:?}", findings);
+    }
+
+    #[test]
+    fn gate_refuses_on_error() {
+        let mut plan = ExecutionPlan::compile(
+            &AcceleratorConfig::oxbnn_5(),
+            &chained(),
+            MappingPolicy::PcaLocal,
+        );
+        assert!(gate("ok", &plan).is_ok());
+        plan.layers[0].xpc_count += 1;
+        let rej = gate("bad", &plan).unwrap_err();
+        assert!(rej.findings.iter().any(|f| f.code == Code::XpeOversubscribed));
+        assert!(rej.to_string().contains("PL105"), "{}", rej);
+    }
+}

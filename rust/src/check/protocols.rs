@@ -1,0 +1,572 @@
+//! The three riskiest concurrent protocols of the serving stack,
+//! expressed as [`interleave`] models and checked exhaustively.
+//!
+//! Each model mirrors one real protocol at the granularity of its
+//! atomic operations (one mutex-protected critical section or one
+//! atomic RMW per step), in a *faithful* variant that must pass and in
+//! *seeded-bug* variants reproducing the race the real code guards
+//! against — those must be caught, which is what proves the checker has
+//! the power to see the bug class at all:
+//!
+//! 1. **Router outstanding-count accounting under failover**
+//!    ([`check_router`]) — the coordinator `Router`'s least-outstanding
+//!    routing racing worker completions and a quarantine/deregister.
+//!    Invariants: no negative outstanding (the double-complete bug), and
+//!    live replicas quiesce to zero outstanding.
+//! 2. **Registry epoch-guarded swap vs in-flight resolve**
+//!    ([`check_registry`]) — `ModelRegistry::load`'s epoch allocation +
+//!    entry swap racing readers resolving entries. Invariants: no
+//!    resolve observes a torn entry (epoch and server from different
+//!    loads), and the published epoch never regresses (two concurrent
+//!    loads must swap in initiation order — the guard the unguarded
+//!    variant drops).
+//! 3. **Shard retry-budget token accounting** ([`check_budget`]) — the
+//!    serving `RetryBudget`'s deposit/withdraw arithmetic. Invariants:
+//!    tokens stay within `[0, cap]` and, when the cap never binds,
+//!    conserve exactly (the split read-modify-write variant loses
+//!    deposits).
+//!
+//! [`interleave`]: super::interleave
+
+use super::interleave::{Explorer, Report, Shared, Step, Thread};
+
+// ---------------------------------------------------------------------
+// 1. Router outstanding-count accounting under failover
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ReplicaCell {
+    pub present: bool,
+    pub outstanding: i64,
+    pub routed: u64,
+    pub completed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterState {
+    pub replicas: Vec<ReplicaCell>,
+    /// Requests shed because no replica was present at route time.
+    pub shed: u64,
+}
+
+/// Seeded bugs for [`check_router`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterBug {
+    /// The pre-fix coordinator bug: a request completed on both the
+    /// submit error path and the worker path — outstanding underflows.
+    DoubleComplete,
+}
+
+/// One in-flight request: route (least-outstanding among present
+/// replicas, atomically incrementing), then complete (atomically
+/// decrementing unless the replica was deregistered meanwhile — the
+/// real `Router::complete` no-ops on gone replicas).
+#[derive(Clone)]
+struct Requester {
+    pc: u8,
+    target: Option<usize>,
+    bug: Option<RouterBug>,
+}
+
+impl Requester {
+    fn complete(&self, s: &mut RouterState) {
+        if let Some(r) = self.target {
+            if s.replicas[r].present {
+                s.replicas[r].outstanding -= 1;
+                s.replicas[r].completed += 1;
+            }
+        }
+    }
+}
+
+impl Thread<RouterState> for Requester {
+    fn step(&mut self, shared: &mut Shared<RouterState>) -> Step {
+        match self.pc {
+            0 => {
+                self.target = shared.with(|s| {
+                    let pick = s
+                        .replicas
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.present)
+                        .min_by_key(|(i, r)| (r.outstanding, *i))
+                        .map(|(i, _)| i);
+                    match pick {
+                        Some(i) => {
+                            s.replicas[i].outstanding += 1;
+                            s.replicas[i].routed += 1;
+                        }
+                        None => s.shed += 1,
+                    }
+                    pick
+                });
+                self.pc = 1;
+                if self.target.is_none() {
+                    return Step::Done; // shed: nothing to complete
+                }
+                Step::Ran
+            }
+            1 => {
+                shared.with(|s| self.complete(s));
+                self.pc = 2;
+                if self.bug == Some(RouterBug::DoubleComplete) {
+                    Step::Ran
+                } else {
+                    Step::Done
+                }
+            }
+            _ => {
+                // Seeded bug: the request completes a second time.
+                shared.with(|s| self.complete(s));
+                Step::Done
+            }
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<RouterState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// Failover: deregister replica 0 at an arbitrary point.
+#[derive(Clone)]
+struct Quarantiner;
+
+impl Thread<RouterState> for Quarantiner {
+    fn step(&mut self, shared: &mut Shared<RouterState>) -> Step {
+        shared.with(|s| s.replicas[0].present = false);
+        Step::Done
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<RouterState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// Explore `requesters` concurrent requests over `replicas` replicas,
+/// optionally racing a quarantine of replica 0.
+pub fn check_router(
+    explorer: &Explorer,
+    requesters: usize,
+    replicas: usize,
+    quarantine: bool,
+    bug: Option<RouterBug>,
+) -> Report {
+    let init = RouterState {
+        replicas: vec![
+            ReplicaCell { present: true, outstanding: 0, routed: 0, completed: 0 };
+            replicas
+        ],
+        shed: 0,
+    };
+    let mut threads: Vec<Box<dyn Thread<RouterState>>> = (0..requesters)
+        .map(|_| {
+            Box::new(Requester { pc: 0, target: None, bug }) as Box<dyn Thread<RouterState>>
+        })
+        .collect();
+    if quarantine {
+        threads.push(Box::new(Quarantiner));
+    }
+    explorer.explore(init, threads, |s: &RouterState, quiescent| {
+        for (i, r) in s.replicas.iter().enumerate() {
+            if r.outstanding < 0 {
+                return Err(format!(
+                    "replica {} outstanding underflowed to {} (double-complete)",
+                    i, r.outstanding
+                ));
+            }
+            if r.present && r.outstanding != (r.routed as i64 - r.completed as i64) {
+                return Err(format!(
+                    "replica {} lost an update: outstanding {} != routed {} - completed {}",
+                    i, r.outstanding, r.routed, r.completed
+                ));
+            }
+            if quiescent && r.present && r.outstanding != 0 {
+                return Err(format!(
+                    "replica {} quiesced with {} outstanding",
+                    i, r.outstanding
+                ));
+            }
+        }
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------
+// 2. Registry epoch-guarded swap vs in-flight resolve
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Entry {
+    pub epoch: u64,
+    /// Identity of the server built for this epoch; equals `epoch` in a
+    /// consistent entry, so `server != epoch` IS a torn publication.
+    pub server: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegistryState {
+    /// The `AtomicU64` epoch counter.
+    pub next_epoch: u64,
+    /// The entry behind the model name (the `RwLock`-guarded map slot).
+    pub published: Entry,
+    /// Highest epoch ever published (for the regression check).
+    pub max_published: u64,
+    /// Set by a reader that resolved an entry whose halves disagree.
+    pub torn_observed: bool,
+    /// Set at publish time when the published epoch went backwards.
+    pub regressed: bool,
+}
+
+/// Seeded bugs for [`check_registry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegistryBug {
+    /// Publish the entry's two halves in two separate shared ops — a
+    /// reader between them resolves a torn entry.
+    TornEntry,
+    /// Drop the epoch guard on the swap: a slower earlier load
+    /// overwrites a faster later one, regressing the published epoch.
+    UnguardedSwap,
+}
+
+/// `ModelRegistry::load`: allocate an epoch (atomic fetch_add), build
+/// the server off-lock, then swap the entry under the write lock —
+/// guarded so a stale build never overwrites a newer one.
+#[derive(Clone)]
+struct Loader {
+    pc: u8,
+    my_epoch: u64,
+    bug: Option<RegistryBug>,
+}
+
+impl Thread<RegistryState> for Loader {
+    fn step(&mut self, shared: &mut Shared<RegistryState>) -> Step {
+        match (self.pc, self.bug) {
+            (0, _) => {
+                self.my_epoch = shared.with(|s| {
+                    s.next_epoch += 1;
+                    s.next_epoch
+                });
+                self.pc = 1;
+                Step::Ran
+            }
+            (1, Some(RegistryBug::TornEntry)) => {
+                let e = self.my_epoch;
+                shared.with(|s| s.published.epoch = e);
+                self.pc = 2;
+                Step::Ran
+            }
+            (2, Some(RegistryBug::TornEntry)) => {
+                let e = self.my_epoch;
+                shared.with(|s| {
+                    s.published.server = e;
+                    if s.published.epoch < s.max_published {
+                        s.regressed = true;
+                    }
+                    s.max_published = s.max_published.max(s.published.epoch);
+                });
+                Step::Done
+            }
+            (1, Some(RegistryBug::UnguardedSwap)) => {
+                let e = self.my_epoch;
+                shared.with(|s| {
+                    s.published = Entry { epoch: e, server: e };
+                    if e < s.max_published {
+                        s.regressed = true;
+                    }
+                    s.max_published = s.max_published.max(e);
+                });
+                Step::Done
+            }
+            _ => {
+                // Faithful: one atomic swap, epoch-guarded.
+                let e = self.my_epoch;
+                shared.with(|s| {
+                    if e > s.published.epoch {
+                        s.published = Entry { epoch: e, server: e };
+                        if e < s.max_published {
+                            s.regressed = true;
+                        }
+                        s.max_published = s.max_published.max(e);
+                    }
+                });
+                Step::Done
+            }
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<RegistryState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// A request resolving the entry, then using what it resolved (the
+/// `Arc` clone keeps the old server alive, so use always succeeds —
+/// what must never happen is observing a torn entry).
+#[derive(Clone)]
+struct Resolver {
+    pc: u8,
+    seen: Entry,
+}
+
+impl Thread<RegistryState> for Resolver {
+    fn step(&mut self, shared: &mut Shared<RegistryState>) -> Step {
+        match self.pc {
+            0 => {
+                self.seen = shared.with(|s| s.published);
+                self.pc = 1;
+                Step::Ran
+            }
+            _ => {
+                let seen = self.seen;
+                shared.with(|s| {
+                    if seen.epoch != seen.server {
+                        s.torn_observed = true;
+                    }
+                });
+                Step::Done
+            }
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<RegistryState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// Explore `loaders` concurrent hot-loads of one model name racing
+/// `readers` resolves.
+pub fn check_registry(
+    explorer: &Explorer,
+    loaders: usize,
+    readers: usize,
+    bug: Option<RegistryBug>,
+) -> Report {
+    let init = RegistryState {
+        next_epoch: 0,
+        published: Entry { epoch: 0, server: 0 },
+        max_published: 0,
+        torn_observed: false,
+        regressed: false,
+    };
+    let mut threads: Vec<Box<dyn Thread<RegistryState>>> = Vec::new();
+    for _ in 0..loaders {
+        threads.push(Box::new(Loader { pc: 0, my_epoch: 0, bug }));
+    }
+    for _ in 0..readers {
+        threads.push(Box::new(Resolver { pc: 0, seen: Entry { epoch: 0, server: 0 } }));
+    }
+    explorer.explore(init, threads, |s: &RegistryState, quiescent| {
+        if s.published.epoch != s.published.server && s.published.epoch != 0 {
+            // A torn entry is visible in the state itself between the
+            // two halves of a split publication.
+            return Err(format!(
+                "published entry is torn: epoch {} vs server {}",
+                s.published.epoch, s.published.server
+            ));
+        }
+        if s.torn_observed {
+            return Err("a resolve observed a torn entry".to_string());
+        }
+        if s.regressed {
+            return Err("published epoch regressed (stale load overwrote newer)".to_string());
+        }
+        if quiescent && s.published.epoch != s.next_epoch {
+            return Err(format!(
+                "last-initiated load must win: published {} vs allocated {}",
+                s.published.epoch, s.next_epoch
+            ));
+        }
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------
+// 3. Shard retry-budget token accounting
+// ---------------------------------------------------------------------
+
+/// Token arithmetic in integer tenths (the real budget uses f64 with a
+/// 0.1 deposit ratio; tenths keep the model exact).
+#[derive(Debug, Clone)]
+pub struct BudgetState {
+    pub tokens: i64,
+    pub cap: i64,
+    pub deposits: u64,
+    pub withdrawals: u64,
+    pub denials: u64,
+}
+
+/// One deposit credits this many tenths (budget_ratio = 0.1 per
+/// request, scaled to keep the model integral).
+pub const DEPOSIT: i64 = 1;
+/// One retry withdraws this many tenths (a whole token).
+pub const WITHDRAW: i64 = 10;
+
+/// Seeded bug for [`check_budget`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetBug {
+    /// Deposit as read-then-write in two shared ops: concurrent
+    /// deposits lose updates.
+    SplitRmw,
+}
+
+#[derive(Clone)]
+struct Depositor {
+    left: usize,
+    staged: Option<i64>,
+    bug: Option<BudgetBug>,
+}
+
+impl Thread<BudgetState> for Depositor {
+    fn step(&mut self, shared: &mut Shared<BudgetState>) -> Step {
+        match (self.bug, self.staged) {
+            (Some(BudgetBug::SplitRmw), None) => {
+                self.staged = Some(shared.with(|s| s.tokens));
+                Step::Ran
+            }
+            (Some(BudgetBug::SplitRmw), Some(read)) => {
+                shared.with(|s| {
+                    s.tokens = (read + DEPOSIT).min(s.cap);
+                    s.deposits += 1;
+                });
+                self.staged = None;
+                self.left -= 1;
+                if self.left == 0 {
+                    Step::Done
+                } else {
+                    Step::Ran
+                }
+            }
+            _ => {
+                shared.with(|s| {
+                    s.tokens = (s.tokens + DEPOSIT).min(s.cap);
+                    s.deposits += 1;
+                });
+                self.left -= 1;
+                if self.left == 0 {
+                    Step::Done
+                } else {
+                    Step::Ran
+                }
+            }
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<BudgetState>> {
+        Box::new(self.clone())
+    }
+}
+
+#[derive(Clone)]
+struct Withdrawer {
+    left: usize,
+}
+
+impl Thread<BudgetState> for Withdrawer {
+    fn step(&mut self, shared: &mut Shared<BudgetState>) -> Step {
+        shared.with(|s| {
+            if s.tokens >= WITHDRAW {
+                s.tokens -= WITHDRAW;
+                s.withdrawals += 1;
+            } else {
+                s.denials += 1;
+            }
+        });
+        self.left -= 1;
+        if self.left == 0 {
+            Step::Done
+        } else {
+            Step::Ran
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<BudgetState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// Explore depositors (each making `deposits_each` deposits) racing
+/// withdrawers (each attempting `withdraws_each` withdrawals) over a
+/// budget starting at `initial` tenths. Pass a `cap` high enough that
+/// clamping never binds and conservation is checked exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn check_budget(
+    explorer: &Explorer,
+    depositors: usize,
+    deposits_each: usize,
+    withdrawers: usize,
+    withdraws_each: usize,
+    initial: i64,
+    cap: i64,
+    bug: Option<BudgetBug>,
+) -> Report {
+    let init = BudgetState { tokens: initial, cap, deposits: 0, withdrawals: 0, denials: 0 };
+    let mut threads: Vec<Box<dyn Thread<BudgetState>>> = Vec::new();
+    if deposits_each > 0 {
+        for _ in 0..depositors {
+            threads.push(Box::new(Depositor { left: deposits_each, staged: None, bug }));
+        }
+    }
+    if withdraws_each > 0 {
+        for _ in 0..withdrawers {
+            threads.push(Box::new(Withdrawer { left: withdraws_each }));
+        }
+    }
+    let cap_can_bind = initial + (depositors * deposits_each) as i64 * DEPOSIT > cap;
+    explorer.explore(init, threads, move |s: &BudgetState, quiescent| {
+        if s.tokens < 0 {
+            return Err(format!("tokens underflowed to {}", s.tokens));
+        }
+        if s.tokens > s.cap {
+            return Err(format!("tokens {} exceed the cap {}", s.tokens, s.cap));
+        }
+        if quiescent && !cap_can_bind {
+            let expect = initial + s.deposits as i64 * DEPOSIT - s.withdrawals as i64 * WITHDRAW;
+            if s.tokens != expect {
+                return Err(format!(
+                    "lost update: {} tokens after {} deposits / {} withdrawals (expected {})",
+                    s.tokens, s.deposits, s.withdrawals, expect
+                ));
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Explorer {
+        Explorer { max_preemptions: usize::MAX, max_schedules: 50_000 }
+    }
+
+    #[test]
+    fn faithful_protocols_pass_small_configs() {
+        check_router(&fast(), 2, 2, true, None).assert_clean();
+        check_registry(&fast(), 2, 2, None).assert_clean();
+        check_budget(&fast(), 2, 1, 1, 1, 10, 1000, None).assert_clean();
+    }
+
+    #[test]
+    fn seeded_bugs_are_caught() {
+        assert!(
+            check_router(&fast(), 2, 2, true, Some(RouterBug::DoubleComplete))
+                .violation
+                .is_some(),
+            "double-complete must underflow outstanding"
+        );
+        assert!(
+            check_registry(&fast(), 2, 2, Some(RegistryBug::TornEntry))
+                .violation
+                .is_some(),
+            "split publication must be observed torn"
+        );
+        assert!(
+            check_registry(&fast(), 2, 1, Some(RegistryBug::UnguardedSwap))
+                .violation
+                .is_some(),
+            "unguarded swap must regress the epoch"
+        );
+        assert!(
+            check_budget(&fast(), 2, 1, 0, 0, 0, 1000, Some(BudgetBug::SplitRmw))
+                .violation
+                .is_some(),
+            "split RMW must lose a deposit"
+        );
+    }
+}

@@ -99,6 +99,7 @@ impl<T> Batcher<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
 

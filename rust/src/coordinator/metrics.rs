@@ -64,7 +64,7 @@ impl LatencyHistogram {
             return 0.0;
         }
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
         sorted[rank.min(sorted.len() - 1)]
     }
@@ -157,6 +157,7 @@ impl ServerMetrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
 

@@ -9,6 +9,14 @@
 //! executable invocation (`runtime::BatchRunner`), with bounded
 //! per-replica queues providing admission-control back-pressure
 //! (`SubmitError::QueueFull`).
+//!
+//! Request-path code in this subtree may not `unwrap()`/`expect()` (the
+//! `disallowed_methods` deny below + `clippy.toml`): a panic must cost
+//! one request, never the process. Locks go through
+//! [`crate::util::sync`]; everything else is matched or surfaced as a
+//! protocol error. Test modules opt back out locally.
+
+#![deny(clippy::disallowed_methods)]
 
 pub mod batcher;
 pub mod metrics;

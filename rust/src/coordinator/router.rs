@@ -53,14 +53,13 @@ impl Router {
             .filter(|(_, r)| r.model == model)
             .map(|(i, _)| i)
             .collect();
-        if candidates.is_empty() {
-            return Err(RouteError::UnknownModel(model.to_string()));
-        }
-        let min_out = candidates
+        let Some(min_out) = candidates
             .iter()
             .map(|&i| self.replicas[i].outstanding)
             .min()
-            .unwrap();
+        else {
+            return Err(RouteError::UnknownModel(model.to_string()));
+        };
         let tied: Vec<usize> = candidates
             .iter()
             .copied()
@@ -133,6 +132,7 @@ impl Router {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
 

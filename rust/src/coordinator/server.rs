@@ -51,6 +51,7 @@ use crate::arch::accelerator::AcceleratorConfig;
 use crate::mapping::layer::GemmLayer;
 use crate::runtime::manifest::{ArgSpec, Artifact, LayerDim, Manifest};
 use crate::runtime::{BatchRunner, Runtime};
+use crate::util::sync::lock_unpoisoned;
 use crate::workloads::Workload;
 
 /// An inference request (one frame, batch = 1 artifacts).
@@ -268,6 +269,12 @@ pub fn synthetic_manifest(models: &[&str]) -> Manifest {
     let mut artifacts = BTreeMap::new();
     for model in models {
         let name = format!("bnn_{}", model);
+        // Models named `*-overcap` get an FC stage whose per-pass
+        // accumulation exceeds any shipped PCA capacity (γ = 8 503 on
+        // the default serving accelerator), so the static plan lint
+        // refuses them with PL301 — the deterministic trigger for the
+        // 422 load-rejection path.
+        let fc_s = if model.ends_with("-overcap") { 40_000 } else { 128 };
         artifacts.insert(
             name.clone(),
             Artifact {
@@ -287,7 +294,7 @@ pub fn synthetic_manifest(models: &[&str]) -> Manifest {
                     },
                     ArgSpec {
                         name: "w1".to_string(),
-                        shape: vec![128, 10],
+                        shape: vec![fc_s, 10],
                         dtype: "f32".to_string(),
                     },
                 ],
@@ -303,7 +310,7 @@ pub fn synthetic_manifest(models: &[&str]) -> Manifest {
                     LayerDim {
                         kind: "fc".to_string(),
                         h: 1,
-                        s: 128,
+                        s: fc_s,
                         k: 10,
                         fmap_hw: 1,
                     },
@@ -397,7 +404,7 @@ impl Server {
             for replica in 0..cfg.replicas {
                 let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
                 senders.insert((model.clone(), replica), tx);
-                router.lock().unwrap().register(model, replica);
+                lock_unpoisoned(&router).register(model, replica);
                 let metrics = Arc::clone(&metrics);
                 let router = Arc::clone(&router);
                 let cfg2 = cfg.clone();
@@ -435,7 +442,7 @@ impl Server {
     /// Outstanding (queued + executing) requests across a model's
     /// replicas. Returns to zero once all replies have been issued.
     pub fn outstanding(&self, model: &str) -> usize {
-        self.router.lock().unwrap().outstanding(model)
+        lock_unpoisoned(&self.router).outstanding(model)
     }
 
     /// Bounded per-replica queue depth (the admission-control limit).
@@ -470,29 +477,26 @@ impl Server {
     ) -> std::result::Result<mpsc::Receiver<Result<InferenceResponse>>, SubmitError> {
         let (reply_tx, reply_rx) = mpsc::channel();
         let job = Job { input, submitted: Instant::now(), reply: reply_tx };
-        let sender = self
-            .senders
-            .lock()
-            .unwrap()
+        let sender = lock_unpoisoned(&self.senders)
             .get(&(model.clone(), replica))
             .cloned();
         let sender = match sender {
             Some(s) => s,
             // Quarantined or drained between routing and enqueue.
             None => {
-                self.router.lock().unwrap().complete(&model, replica);
+                lock_unpoisoned(&self.router).complete(&model, replica);
                 return Err(SubmitError::WorkerGone(model));
             }
         };
         match sender.try_send(job) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => {
-                self.router.lock().unwrap().complete(&model, replica);
-                self.metrics.lock().unwrap().rejected += 1;
+                lock_unpoisoned(&self.router).complete(&model, replica);
+                lock_unpoisoned(&self.metrics).rejected += 1;
                 Err(SubmitError::QueueFull { model, replica, depth: self.queue_depth })
             }
             Err(mpsc::TrySendError::Disconnected(_)) => {
-                self.router.lock().unwrap().complete(&model, replica);
+                lock_unpoisoned(&self.router).complete(&model, replica);
                 Err(SubmitError::WorkerGone(model))
             }
         }
@@ -510,10 +514,7 @@ impl Server {
         // Route to the least-loaded replica of the model. The router's
         // outstanding count is decremented by the worker on the reply
         // path (or in enqueue, if admission fails).
-        let replica = self
-            .router
-            .lock()
-            .unwrap()
+        let replica = lock_unpoisoned(&self.router)
             .route(&req.model)
             .map_err(|e| match e {
                 RouteError::UnknownModel(m) => SubmitError::UnknownModel(m),
@@ -531,10 +532,7 @@ impl Server {
         replica: usize,
     ) -> std::result::Result<mpsc::Receiver<Result<InferenceResponse>>, SubmitError> {
         self.validate(&req)?;
-        if self
-            .router
-            .lock()
-            .unwrap()
+        if lock_unpoisoned(&self.router)
             .route_to(&req.model, replica)
             .is_err()
         {
@@ -554,7 +552,7 @@ impl Server {
 
     /// Live (non-quarantined) replica ids for a model.
     pub fn replicas(&self, model: &str) -> Vec<usize> {
-        self.router.lock().unwrap().replica_ids(model)
+        lock_unpoisoned(&self.router).replica_ids(model)
     }
 
     /// Quarantine one replica: deregister it from routing and close its
@@ -563,10 +561,8 @@ impl Server {
     /// batcher, and exits. Returns `false` when the replica was already
     /// gone. The worker thread is joined later by `drain`/`shutdown`.
     pub fn quarantine(&self, model: &str, replica: usize) -> bool {
-        self.router.lock().unwrap().deregister(model, replica);
-        self.senders
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.router).deregister(model, replica);
+        lock_unpoisoned(&self.senders)
             .remove(&(model.to_string(), replica))
             .is_some()
     }
@@ -577,9 +573,9 @@ impl Server {
     /// racing the drain fail with [`SubmitError::WorkerGone`] instead of
     /// being silently dropped.
     pub fn drain(&self) {
-        self.senders.lock().unwrap().clear(); // workers see Disconnected
+        lock_unpoisoned(&self.senders).clear(); // workers see Disconnected
         let workers: Vec<thread::JoinHandle<()>> =
-            self.workers.lock().unwrap().drain(..).collect();
+            lock_unpoisoned(&self.workers).drain(..).collect();
         for w in workers {
             let _ = w.join();
         }
@@ -624,15 +620,20 @@ fn worker_loop(
     // With `sim_pipeline`, the photonic reference is the effective
     // per-frame latency of a pipelined `max_batch`-frame run (frames
     // overlap in one event space) rather than one isolated frame.
-    let simulated_s = crate::api::simulated_effective_latency_cached(
+    let simulated_s = match crate::api::simulated_effective_latency_cached(
         &cfg.plan_cache,
         &cfg.accelerator,
         &workload_from_artifact(&artifact),
         cfg.sim_backend,
         if cfg.sim_pipeline { cfg.max_batch } else { 1 },
         cfg.sim_pipeline,
-    )
-    .expect("bnn_forward artifacts always yield a non-empty workload");
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            crate::log_error!("{}[{}]: photonic reference sim failed: {:#}", model, replica, e);
+            return fail_all(rx, &router, &model, replica, &metrics, &format!("{:#}", e));
+        }
+    };
     crate::log_info!(
         "{}[{}]: worker ready (compile {:.3}s, {} policy, simulated photonic frame {})",
         model,
@@ -726,9 +727,9 @@ fn fail_all(
 ) {
     // Deregistration also forgets this replica's outstanding counts, so
     // the jobs drained below need no complete() calls.
-    router.lock().unwrap().deregister(model, replica);
+    lock_unpoisoned(router).deregister(model, replica);
     while let Ok(job) = rx.recv() {
-        metrics.lock().unwrap().failed += 1;
+        lock_unpoisoned(metrics).failed += 1;
         let _ = job
             .reply
             .send(Err(anyhow!("{}[{}]: worker failed to start: {}", model, replica, why)));
@@ -777,7 +778,7 @@ fn run_batch(
     // sent (one lock), so observers never see a completed request still
     // counted as outstanding.
     {
-        let mut r = router.lock().unwrap();
+        let mut r = lock_unpoisoned(router);
         for _ in 0..size {
             r.complete(model, replica);
         }
@@ -804,7 +805,7 @@ fn run_batch(
                 .map(|j| j.submitted.elapsed().as_secs_f64())
                 .collect();
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_unpoisoned(metrics);
                 for (q, t) in queue_s.iter().zip(&total_s).take(n_ok) {
                     m.queue.record(*q);
                     m.execute.record(execute_s);
@@ -843,7 +844,7 @@ fn run_batch(
             let msg = format!("executing batch of {}: {:#}", size, e);
             crate::log_error!("{}[{}]: {}", model, replica, msg);
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_unpoisoned(metrics);
                 m.failed += size as u64;
                 m.record_batch(size);
             }
@@ -855,6 +856,7 @@ fn run_batch(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
 

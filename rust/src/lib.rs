@@ -48,6 +48,8 @@
 //! * `mapping` — convolution flattening, slicing, scheduling (paper Fig. 5)
 //! * [`plan`] — compiled execution plans: compile → cache → stream (the
 //!   event backend's O(#XPEs)-memory schedule representation)
+//! * [`check`] — static checking: plan lint (admission/conservation/PCA
+//!   capacity findings) + deterministic-interleaving model checker
 //! * `baselines` — ROBIN and LIGHTBULB accelerator models
 //! * `workloads` — the four evaluated BNNs (layer geometry)
 //! * `energy` — power/energy accounting (paper Table III)
@@ -62,6 +64,7 @@ pub mod analysis;
 pub mod api;
 pub mod arch;
 pub mod baselines;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

@@ -7,6 +7,7 @@
 //!   oxg         OXG device study (truth table / transient, paper Fig. 3)
 //!   serve       start the inference server on AOT artifacts
 //!   serve-http  HTTP front-end: multi-model sharded serving over real sockets
+//!   lint        static plan verification over the model zoo (CI gate)
 //!   info        dump accelerator configurations
 //!
 //! `simulate`, `fps` and `sweep` accept `--backend analytic|event|functional`
@@ -40,6 +41,7 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("serve-http") => cmd_serve_http(&args[1..]),
         Some("serve-bench") => cmd_serve_bench(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("info") => cmd_info(),
         Some("dump-config") => cmd_dump_config(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
@@ -68,6 +70,7 @@ fn print_usage() {
            serve      run the inference server over AOT artifacts\n\
            serve-http  HTTP front-end: multi-model sharded serving (--smoke self-test)\n\
            serve-bench closed/open-loop load benchmark of the serving path (--http)\n\
+           lint        statically verify compiled plans over the model zoo (CI gate)\n\
            info        dump the five evaluation accelerator configurations\n\
            dump-config emit a built-in accelerator config as editable JSON\n\
            sweep       CSV sweep of FPS over the Table II DR points x XPE counts\n\n\
@@ -1547,6 +1550,89 @@ fn cmd_sweep(args: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+/// `oxbnn lint` — static verification of every compiled plan the repo
+/// ships: the five zoo models × both mapping policies × both admission
+/// modes × both OXBNN accelerators, through `check::planlint`. Exits
+/// non-zero on any Error-severity finding, which is what makes it a CI
+/// gate: a mapping or admission regression fails the build before any
+/// simulator runs.
+fn cmd_lint(args: &[String]) -> i32 {
+    use oxbnn::check::planlint::{self, Severity};
+    use oxbnn::mapping::scheduler::MappingPolicy;
+    use oxbnn::plan::{AdmissionMode, ExecutionPlan};
+
+    let cmd = Command::new(
+        "oxbnn lint",
+        "statically verify compiled plans over the model zoo (CI gate)",
+    )
+    .opt("halo", "0.125", "RasterHalo admission margin (fraction of producer acts)")
+    .flag("verbose", "print info/warning findings too, not just errors");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_cli(e),
+    };
+    let halo = match parsed.get_f64("halo") {
+        Ok(h) => h,
+        Err(e) => return handle_cli(e),
+    };
+    let verbose = parsed.has_flag("verbose");
+
+    let mut models = Workload::evaluation_set();
+    models.push(oxbnn::workloads::zoo::resnet50());
+    let accels = [AcceleratorConfig::oxbnn_5(), AcceleratorConfig::oxbnn_50()];
+    let policies = [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread];
+    let admissions = [AdmissionMode::Exact, AdmissionMode::RasterHalo(halo)];
+
+    let (mut plans, mut errors, mut warnings, mut infos) = (0usize, 0usize, 0usize, 0usize);
+    for acc in &accels {
+        for model in &models {
+            for policy in policies {
+                let plan = ExecutionPlan::compile(acc, model, policy);
+                for admission in admissions {
+                    plans += 1;
+                    let subject = format!(
+                        "{} × {} [{:?}, {:?}]",
+                        acc.name, model.name, policy, admission
+                    );
+                    for finding in planlint::verify_with(&plan, admission) {
+                        match finding.severity {
+                            Severity::Error => {
+                                errors += 1;
+                                eprintln!("{}: {}", subject, finding);
+                            }
+                            Severity::Warning => {
+                                warnings += 1;
+                                if verbose {
+                                    println!("{}: {}", subject, finding);
+                                }
+                            }
+                            Severity::Info => {
+                                infos += 1;
+                                if verbose {
+                                    println!("{}: {}", subject, finding);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "lint: {} plans checked ({} models × {} accelerators × {} policies × {} \
+         admission modes): {} errors, {} warnings, {} info",
+        plans,
+        models.len(),
+        accels.len(),
+        policies.len(),
+        admissions.len(),
+        errors,
+        warnings,
+        infos
+    );
+    (errors > 0) as i32
 }
 
 fn cmd_dump_config(args: &[String]) -> i32 {

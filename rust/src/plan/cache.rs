@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::ExecutionPlan;
 use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
@@ -18,9 +18,15 @@ use crate::workloads::Workload;
 /// The key covers every field that shapes the plan or its timing:
 /// accelerator identity (name, DR, N, XPE count, bitcount mode, memory
 /// bandwidth), the workload's full layer geometry, and the mapping
-/// policy. Compilation is cheap (no materialization), so on a rare
-/// concurrent miss two threads may compile the same plan; the first
-/// insert wins and both get the same `Arc` afterwards.
+/// policy.
+///
+/// Each map slot is a per-key once guard (`Arc<OnceLock<..>>`): the map
+/// lock is held only to look up or insert the slot, and compilation runs
+/// through the slot's `get_or_init` *outside* the map lock. Concurrent
+/// misses on the **same** key serialize on that key's cell alone (one
+/// compilation, everyone shares the result); misses on **distinct** keys
+/// never wait on each other, and readers of resident plans never wait on
+/// anyone's compilation.
 ///
 /// Eviction is least-recently-used: at capacity, the single entry with
 /// the stalest access tick is dropped — a hot serving model's plan
@@ -28,7 +34,7 @@ use crate::workloads::Workload;
 /// throwaway geometries through a shared cache), where the previous
 /// flush-everything policy evicted the hot plan along with the cold ones.
 pub struct PlanCache {
-    inner: Mutex<HashMap<String, CacheEntry>>,
+    inner: Mutex<HashMap<String, Slot>>,
     capacity: usize,
     /// Monotone access clock for LRU ordering (ticks on hit and insert).
     clock: AtomicU64,
@@ -37,8 +43,12 @@ pub struct PlanCache {
     evictions: AtomicU64,
 }
 
-struct CacheEntry {
-    plan: Arc<ExecutionPlan>,
+/// One cache slot: a per-key once guard. The cell is `Arc`-shared so
+/// same-key waiters hold it across the map lock being released (and so
+/// an eviction cannot invalidate an in-flight compilation — the evicted
+/// compiler still completes against its own handle).
+struct Slot {
+    cell: Arc<OnceLock<Arc<ExecutionPlan>>>,
     last_used: u64,
 }
 
@@ -74,35 +84,47 @@ impl PlanCache {
         policy: MappingPolicy,
     ) -> Arc<ExecutionPlan> {
         let key = fingerprint(cfg, workload, policy);
-        if let Some(entry) = self.inner.lock().unwrap().get_mut(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            entry.last_used = self.tick();
-            return Arc::clone(&entry.plan);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        // Compile outside the lock: parallel sweep cells must not
-        // serialize on each other's compilations.
-        let plan = Arc::new(ExecutionPlan::compile(cfg, workload, policy));
-        let mut map = self.inner.lock().unwrap();
-        // Evict the least-recently-used entry (O(n) scan — capacity is
-        // small and eviction only runs on a miss at capacity). Re-check
-        // presence first: a concurrent miss may have inserted this key.
-        if !map.contains_key(&key) && map.len() >= self.capacity {
-            if let Some(stalest) = map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-            {
-                map.remove(&stalest);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.get_or_init_with(key, || Arc::new(ExecutionPlan::compile(cfg, workload, policy)))
+    }
+
+    /// The cache's real machinery, with the compilation injectable so
+    /// tests can pin a slow compile deterministically: resolve (or
+    /// insert) the key's once cell under the map lock, then initialize
+    /// it *outside* the lock — only same-key callers ever wait on a
+    /// compilation.
+    fn get_or_init_with(
+        &self,
+        key: String,
+        compile: impl FnOnce() -> Arc<ExecutionPlan>,
+    ) -> Arc<ExecutionPlan> {
+        let cell = {
+            let mut map = self.inner.lock().unwrap();
+            if let Some(slot) = map.get_mut(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                slot.last_used = self.tick();
+                Arc::clone(&slot.cell)
+            } else {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                // Evict the least-recently-used entry (O(n) scan —
+                // capacity is small and eviction only runs on a miss at
+                // capacity).
+                if map.len() >= self.capacity {
+                    if let Some(stalest) = map
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                    {
+                        map.remove(&stalest);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let slot = Slot { cell: Arc::new(OnceLock::new()), last_used: self.tick() };
+                let cell = Arc::clone(&slot.cell);
+                map.insert(key, slot);
+                cell
             }
-        }
-        let last_used = self.tick();
-        let entry = map
-            .entry(key)
-            .or_insert(CacheEntry { plan, last_used });
-        entry.last_used = last_used;
-        Arc::clone(&entry.plan)
+        };
+        Arc::clone(cell.get_or_init(compile))
     }
 
     /// Plans currently cached.
@@ -119,7 +141,9 @@ impl PlanCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Cache misses (= compilations attempted) since construction.
+    /// Cache misses (= distinct-key compilations started) since
+    /// construction. Same-key concurrent misses count once: the slot's
+    /// once guard makes the second caller a hit that waits on the cell.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -301,5 +325,101 @@ mod tests {
         );
         assert!(cache.evictions() >= 64 - 7, "cold keys churn through the LRU");
         assert!(cache.contains(&cfg, &hot, MappingPolicy::PcaLocal));
+    }
+
+    #[test]
+    fn concurrent_cold_misses_on_distinct_keys_do_not_serialize() {
+        use std::sync::mpsc;
+        use std::thread;
+        use std::time::Duration;
+
+        let cache = Arc::new(PlanCache::default());
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let plan =
+            Arc::new(ExecutionPlan::compile(&cfg, &wl("proto"), MappingPolicy::PcaLocal));
+
+        // A cold miss whose "compilation" stays open until released —
+        // deterministic stand-in for a slow compile.
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let slow = {
+            let cache = Arc::clone(&cache);
+            let plan = Arc::clone(&plan);
+            thread::spawn(move || {
+                cache.get_or_init_with("slow-key".to_string(), move || {
+                    started_tx.send(()).expect("test driver listens");
+                    let _ = release_rx.recv_timeout(Duration::from_secs(30));
+                    plan
+                })
+            })
+        };
+        started_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("slow compile must start");
+
+        // While the slow key is mid-compilation, a miss on a DIFFERENT
+        // key must complete: it may wait on its own cell only, never on
+        // the map or another key's compilation.
+        let (done_tx, done_rx) = mpsc::channel();
+        let fast = {
+            let cache = Arc::clone(&cache);
+            let plan = Arc::clone(&plan);
+            thread::spawn(move || {
+                let got = cache.get_or_init_with("fast-key".to_string(), move || plan);
+                done_tx.send(()).expect("test driver listens");
+                got
+            })
+        };
+        let fast_done = done_rx.recv_timeout(Duration::from_secs(10));
+        release_tx.send(()).expect("slow compile waits for release");
+        fast_done.expect("distinct-key miss serialized behind another key's compilation");
+        let _ = fast.join().expect("fast thread");
+        let _ = slow.join().expect("slow thread");
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_same_key_misses_compile_once() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::mpsc;
+        use std::thread;
+        use std::time::Duration;
+
+        let cache = Arc::new(PlanCache::default());
+        let cfg = AcceleratorConfig::oxbnn_5();
+        let plan =
+            Arc::new(ExecutionPlan::compile(&cfg, &wl("proto"), MappingPolicy::PcaLocal));
+        let compiles = Arc::new(AtomicUsize::new(0));
+
+        let (second_up_tx, second_up_rx) = mpsc::channel();
+        let first = {
+            let cache = Arc::clone(&cache);
+            let plan = Arc::clone(&plan);
+            let compiles = Arc::clone(&compiles);
+            thread::spawn(move || {
+                cache.get_or_init_with("shared".to_string(), move || {
+                    compiles.fetch_add(1, Ordering::SeqCst);
+                    // Hold the compile open until the second caller has
+                    // announced itself, so the two calls provably overlap.
+                    let _ = second_up_rx.recv_timeout(Duration::from_secs(30));
+                    plan
+                })
+            })
+        };
+        // Announce-then-call: whichever caller wins the slot, the loser
+        // must share the winner's single compilation.
+        second_up_tx.send(()).expect("first closure may be waiting");
+        let compiles2 = Arc::clone(&compiles);
+        let plan2 = Arc::clone(&plan);
+        let b = cache.get_or_init_with("shared".to_string(), move || {
+            compiles2.fetch_add(1, Ordering::SeqCst);
+            plan2
+        });
+        let a = first.join().expect("first thread");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(compiles.load(Ordering::SeqCst), 1, "once guard admits one compile");
+        assert_eq!(cache.misses(), 1, "the second caller is a hit on the in-flight slot");
+        assert_eq!(cache.hits(), 1);
     }
 }

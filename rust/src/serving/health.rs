@@ -14,6 +14,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{InferenceRequest, SubmitError};
+use crate::util::sync::lock_unpoisoned;
 
 use super::registry::ModelEntry;
 
@@ -62,7 +63,7 @@ impl HealthChecker {
     /// Probe `entry`, serving a cached report when fresher than the TTL.
     pub fn check(&self, entry: &ModelEntry) -> HealthReport {
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = lock_unpoisoned(&self.cache);
             if let Some((at, report)) = cache.get(&entry.name) {
                 if at.elapsed() < self.ttl {
                     return report.clone();
@@ -70,9 +71,7 @@ impl HealthChecker {
             }
         }
         let report = probe(entry, self.probe_timeout);
-        self.cache
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.cache)
             .insert(entry.name.clone(), (Instant::now(), report.clone()));
         report
     }
@@ -80,7 +79,7 @@ impl HealthChecker {
     /// Drop the cached report for `model` (after quarantine/reload, the
     /// next check must re-probe).
     pub fn invalidate(&self, model: &str) {
-        self.cache.lock().unwrap().remove(model);
+        lock_unpoisoned(&self.cache).remove(model);
     }
 }
 
@@ -122,6 +121,7 @@ pub fn probe(entry: &ModelEntry, timeout: Duration) -> HealthReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::coordinator::ServerConfig;

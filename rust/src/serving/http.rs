@@ -286,6 +286,7 @@ pub fn request_once(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
     use std::net::TcpListener;

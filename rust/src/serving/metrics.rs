@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use crate::util::sync::lock_unpoisoned;
+
 /// Counters shared by every connection handler. One `Mutex` around a
 /// small map keeps this dependency-free; the critical sections are a few
 /// integer bumps, far off the request critical path compared to the
@@ -33,7 +35,7 @@ struct Inner {
 impl HttpMetrics {
     /// Record one finished request.
     pub fn record(&self, endpoint: &str, status: u16) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         *m.requests.entry((endpoint.to_string(), status)).or_insert(0) += 1;
         if status == 429 {
             m.shed += 1;
@@ -43,26 +45,24 @@ impl HttpMetrics {
     /// Record `n` retry attempts made on behalf of one request.
     pub fn record_retries(&self, n: u64) {
         if n > 0 {
-            self.inner.lock().unwrap().retries += n;
+            lock_unpoisoned(&self.inner).retries += n;
         }
     }
 
     /// Record one lazy-parsed request body.
     pub fn record_parse_ns(&self, ns: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         m.parse_ns += ns;
         m.parse_count += 1;
     }
 
     pub fn set_draining(&self, draining: bool) {
-        self.inner.lock().unwrap().draining = draining;
+        lock_unpoisoned(&self.inner).draining = draining;
     }
 
     /// Count for one (endpoint, status) cell.
     pub fn count(&self, endpoint: &str, status: u16) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.inner)
             .requests
             .get(&(endpoint.to_string(), status))
             .copied()
@@ -71,17 +71,17 @@ impl HttpMetrics {
 
     /// Total requests shed with 429.
     pub fn shed(&self) -> u64 {
-        self.inner.lock().unwrap().shed
+        lock_unpoisoned(&self.inner).shed
     }
 
     /// Total retry attempts.
     pub fn retries(&self) -> u64 {
-        self.inner.lock().unwrap().retries
+        lock_unpoisoned(&self.inner).retries
     }
 
     /// Mean lazy-parse nanoseconds per request (0 before any parse).
     pub fn mean_parse_ns(&self) -> f64 {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         if m.parse_count == 0 {
             0.0
         } else {
@@ -92,7 +92,7 @@ impl HttpMetrics {
     /// Plain-text exposition. `extra` lines (e.g. per-model coordinator
     /// counters) are appended verbatim by the caller.
     pub fn render(&self, extra: &str) -> String {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         let mut out = String::new();
         for ((endpoint, status), count) in &m.requests {
             out.push_str(&format!(
@@ -111,6 +111,7 @@ impl HttpMetrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
 

@@ -1,6 +1,12 @@
 //! HTTP serving front-end: a multi-model sharded router with
 //! production resilience over the batched coordinator.
 //!
+//! Request-path code in this subtree may not `unwrap()`/`expect()` (the
+//! `disallowed_methods` deny below + `clippy.toml`): a panic must cost
+//! one request, never the process. Locks go through
+//! [`crate::util::sync`]; everything else is matched or surfaced as a
+//! protocol error. Test modules opt back out locally.
+//!
 //! The layer cake, top to bottom:
 //!
 //! * [`http`] — hand-rolled HTTP/1.1 over `std::net` (no external
@@ -24,6 +30,8 @@
 //!
 //! [`ThreadPool`]: crate::util::threadpool::ThreadPool
 //! [`Server`]: crate::coordinator::Server
+
+#![deny(clippy::disallowed_methods)]
 
 pub mod health;
 pub mod http;

@@ -3,13 +3,27 @@
 //!
 //! Swap discipline (epoch-guarded): a load of an already-served model
 //! builds the NEW server first — workers spawned, plan compiled, weights
-//! staged — and only then swaps the registry entry (epoch + 1). Requests
-//! racing the swap either land on the old entry (drained in the
-//! background, so every accepted request still gets its reply) or the
-//! new one; there is never a window with no server behind the name.
+//! staged — and only then swaps the registry entry (epoch + 1). The swap
+//! itself is guarded under the write lock: an entry only replaces one
+//! with a LOWER epoch, so two loads racing on the same name can never
+//! publish the older build last (the loser drains itself instead). The
+//! interleaving model checker exercises exactly this protocol
+//! ([`crate::check::protocols`], `RegistryBug::UnguardedSwap` shows the
+//! regression the guard prevents). Requests racing the swap either land
+//! on the old entry (drained in the background, so every accepted
+//! request still gets its reply) or the new one; there is never a window
+//! with no server behind the name.
+//!
+//! Loads are also statically vetted: the compiled [`ExecutionPlan`] runs
+//! through [`crate::check::planlint::gate`] before the server is built,
+//! and a plan with an `Error`-severity finding refuses to load
+//! ([`crate::check::planlint::LintRejection`] in the error chain — the
+//! HTTP surface maps it to `422 Unprocessable Entity`).
 //! All per-model servers share the base config's [`PlanCache`], so N
 //! models with the same geometry on the same accelerator compile one
 //! mapping.
+//!
+//! [`ExecutionPlan`]: crate::plan::ExecutionPlan
 //!
 //! [`PlanCache`]: crate::plan::PlanCache
 
@@ -22,6 +36,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{synthetic_manifest, workload_from_artifact, Server, ServerConfig};
 use crate::runtime::manifest::Manifest;
+use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 
 /// Where per-model manifests come from.
 enum Source {
@@ -113,10 +128,20 @@ impl ModelRegistry {
         };
         let artifact = manifest.get(&format!("bnn_{}", name))?.clone();
         cfg.manifest = Some(manifest);
+        let workload = workload_from_artifact(&artifact);
+        // Static admission: lint the compiled plan BEFORE spawning any
+        // worker. An Error-severity finding (capacity overflow, threshold
+        // deadlock, conservation breach) means the geometry cannot serve
+        // correctly; surface it as a typed rejection instead of letting
+        // workers fail at runtime.
+        let policy = crate::api::default_policy(&cfg.accelerator);
+        let plan = cfg.plan_cache.get_or_compile(&cfg.accelerator, &workload, policy);
+        crate::check::planlint::gate(name, &plan)
+            .with_context(|| format!("refusing to load model '{}'", name))?;
         let photonic_fps = crate::api::simulated_photonic_fps_cached(
             &cfg.plan_cache,
             &cfg.accelerator,
-            &workload_from_artifact(&artifact),
+            &workload,
             cfg.sim_backend,
             if cfg.sim_pipeline { cfg.max_batch } else { 1 },
             cfg.sim_pipeline,
@@ -135,15 +160,29 @@ impl ModelRegistry {
             replicas,
             photonic_fps,
         });
-        let old = self
-            .models
-            .write()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&entry));
-        if let Some(old) = old {
-            self.background_drain(old);
+        // Epoch-guarded swap: only replace an entry with a LOWER epoch.
+        // Epoch allocation (fetch_add above) and publication happen under
+        // different synchronization, so two loads racing on one name can
+        // reach this point in either order; without the guard the older
+        // build could be published last (the regression
+        // `check::protocols::RegistryBug::UnguardedSwap` demonstrates).
+        // The losing build drains itself; the caller gets the winner.
+        let (published, superseded) = {
+            let mut models = write_unpoisoned(&self.models);
+            match models.get(name) {
+                Some(existing) if existing.epoch >= epoch => {
+                    (Arc::clone(existing), Some(Arc::clone(&entry)))
+                }
+                _ => {
+                    let old = models.insert(name.to_string(), Arc::clone(&entry));
+                    (entry, old)
+                }
+            }
+        };
+        if let Some(stale) = superseded {
+            self.background_drain(stale);
         }
-        Ok(entry)
+        Ok(published)
     }
 
     /// Hot-reload `name` at its current replica count (epoch bump).
@@ -158,7 +197,7 @@ impl ModelRegistry {
     /// Unload `name`; its server drains in the background (accepted
     /// requests still complete). Returns `false` when not loaded.
     pub fn unload(&self, name: &str) -> bool {
-        match self.models.write().unwrap().remove(name) {
+        match write_unpoisoned(&self.models).remove(name) {
             Some(entry) => {
                 self.background_drain(entry);
                 true
@@ -168,34 +207,41 @@ impl ModelRegistry {
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.models.read().unwrap().get(name).cloned()
+        read_unpoisoned(&self.models).get(name).cloned()
     }
 
     /// Live entries, name-sorted.
     pub fn list(&self) -> Vec<Arc<ModelEntry>> {
-        self.models.read().unwrap().values().cloned().collect()
+        read_unpoisoned(&self.models).values().cloned().collect()
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        read_unpoisoned(&self.models).keys().cloned().collect()
     }
 
     fn background_drain(&self, entry: Arc<ModelEntry>) {
-        let handle = thread::Builder::new()
+        let spawned = thread::Builder::new()
             .name(format!("oxbnn-drain-{}", entry.name))
-            .spawn(move || entry.server.drain())
-            .expect("spawning drain thread");
-        self.drains.lock().unwrap().push(handle);
+            .spawn({
+                let entry = Arc::clone(&entry);
+                move || entry.server.drain()
+            });
+        match spawned {
+            Ok(handle) => lock_unpoisoned(&self.drains).push(handle),
+            // Thread exhaustion: drain inline rather than leaking the
+            // replaced server's accepted requests.
+            Err(_) => entry.server.drain(),
+        }
     }
 
     /// Drain every live model and join all background drains. Idempotent.
     pub fn drain_all(&self) {
-        let entries = std::mem::take(&mut *self.models.write().unwrap());
+        let entries = std::mem::take(&mut *write_unpoisoned(&self.models));
         for entry in entries.values() {
             entry.server.drain();
         }
         let handles: Vec<thread::JoinHandle<()>> =
-            self.drains.lock().unwrap().drain(..).collect();
+            lock_unpoisoned(&self.drains).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -203,6 +249,7 @@ impl ModelRegistry {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::coordinator::{InferenceRequest, SubmitError};

@@ -34,7 +34,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context as _;
 
+use crate::check::planlint::LintRejection;
 use crate::util::json::{path_f32_slice, path_str, Json};
+use crate::util::sync::lock_unpoisoned;
 use crate::util::threadpool::{host_threads, ThreadPool};
 
 use super::health::{HealthChecker, HealthState};
@@ -356,7 +358,7 @@ fn metrics_page(ctx: &Ctx) -> Reply {
     let mut extra = String::new();
     for entry in ctx.registry.list() {
         let live = entry.server.replicas(&entry.name).len();
-        let m = entry.server.metrics.lock().unwrap();
+        let m = lock_unpoisoned(&entry.server.metrics);
         extra.push_str(&format!(
             "oxbnn_model_replicas{{model=\"{name}\"}} {live}\n\
              oxbnn_model_epoch{{model=\"{name}\"}} {epoch}\n\
@@ -437,6 +439,10 @@ fn models_listing(ctx: &Ctx) -> String {
 /// `{"models": [{"name": "a", "replicas": 2}, ...], "reload": ["b"]}`.
 /// When `models` is present, listed models are loaded (or resized) and
 /// unlisted ones unloaded; `reload` hot-reloads by name (epoch bump).
+/// A model whose compiled plan fails the static lint gate
+/// ([`LintRejection`] in the load error chain) is refused with
+/// `422 Unprocessable Entity` — the request was well-formed, the plan
+/// is provably unservable. Other load failures stay 400.
 /// This is the cold path, so the full tree parser is fine here.
 fn put_models(req: &Request, ctx: &Ctx) -> Reply {
     let text = match std::str::from_utf8(&req.body) {
@@ -480,7 +486,7 @@ fn put_models(req: &Request, ctx: &Ctx) -> Reply {
                 if let Err(e) = ctx.registry.load(name, *replicas) {
                     return Reply::json(
                         "/v1/models",
-                        400,
+                        load_error_status(&e),
                         error_body(&format!("loading '{}': {:#}", name, e)),
                     );
                 }
@@ -503,7 +509,7 @@ fn put_models(req: &Request, ctx: &Ctx) -> Reply {
             if let Err(e) = ctx.registry.reload(name) {
                 return Reply::json(
                     "/v1/models",
-                    400,
+                    load_error_status(&e),
                     error_body(&format!("reloading '{}': {:#}", name, e)),
                 );
             }
@@ -513,7 +519,18 @@ fn put_models(req: &Request, ctx: &Ctx) -> Reply {
     Reply::json("/v1/models", 200, models_listing(ctx))
 }
 
+/// 422 when the load was refused by the static plan lint (anywhere in
+/// the error chain), 400 for everything else.
+fn load_error_status(e: &anyhow::Error) -> u16 {
+    if e.downcast_ref::<LintRejection>().is_some() {
+        422
+    } else {
+        400
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::coordinator::ServerConfig;
@@ -632,6 +649,26 @@ mod tests {
         let (status, _) =
             request_once(&addr, "PUT", "/v1/models", br#"{"reload": ["ghost"]}"#).unwrap();
         assert_eq!(status, 400);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn overcap_model_is_refused_with_422() {
+        let handle = boot(&[("alpha", 1)]);
+        let addr = handle.addr().to_string();
+        // `*-overcap` names synthesize an FC stage whose accumulation
+        // exceeds B_PCA, so the plan lints with PL301 and the load is
+        // refused before any worker spawns.
+        let body = br#"{"models": [{"name": "alpha"}, {"name": "bad-overcap"}]}"#;
+        let (status, reply) = request_once(&addr, "PUT", "/v1/models", body).unwrap();
+        let text = String::from_utf8_lossy(&reply).to_string();
+        assert_eq!(status, 422, "{}", text);
+        assert!(text.contains("PL301"), "{}", text);
+        // The refused model was never published; existing models serve on.
+        assert_eq!(handle.registry().names(), vec!["alpha".to_string()]);
+        let (status, _) =
+            request_once(&addr, "POST", "/v1/infer", infer_body("alpha").as_bytes()).unwrap();
+        assert_eq!(status, 200);
         handle.shutdown();
     }
 

@@ -14,6 +14,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{InferenceRequest, InferenceResponse, SubmitError};
+use crate::util::sync::lock_unpoisoned;
 
 use super::registry::ModelRegistry;
 
@@ -54,12 +55,12 @@ impl RetryBudget {
     }
 
     fn deposit(&self, ratio: f64, cap: f64) {
-        let mut t = self.tokens.lock().unwrap();
+        let mut t = lock_unpoisoned(&self.tokens);
         *t = (*t + ratio).min(cap);
     }
 
     fn withdraw(&self) -> bool {
-        let mut t = self.tokens.lock().unwrap();
+        let mut t = lock_unpoisoned(&self.tokens);
         if *t >= 1.0 {
             *t -= 1.0;
             true
@@ -130,9 +131,7 @@ impl ShardRouter {
 
     fn budget(&self, model: &str) -> Arc<RetryBudget> {
         Arc::clone(
-            self.budgets
-                .lock()
-                .unwrap()
+            lock_unpoisoned(&self.budgets)
                 .entry(model.to_string())
                 .or_insert_with(|| Arc::new(RetryBudget::new(self.policy.budget_cap))),
         )
@@ -238,6 +237,7 @@ impl ShardRouter {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap
 mod tests {
     use super::*;
     use crate::coordinator::ServerConfig;

@@ -9,5 +9,6 @@ pub mod json;
 pub mod logging;
 pub mod quickcheck;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod units;

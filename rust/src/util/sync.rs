@@ -1,0 +1,61 @@
+//! Poison-tolerant lock acquisition for request paths.
+//!
+//! The serving and coordinator request paths ban `unwrap()`/`expect()`
+//! (clippy `disallowed_methods`, denied subtree-wide): a panicking
+//! worker must degrade one request, not wedge every thread that later
+//! touches the same lock. A poisoned `std::sync` lock only means some
+//! thread panicked while holding it — the protected data is still
+//! there, and every structure these paths guard (metrics counters,
+//! registry maps, router tables) is valid after any partial update. So
+//! the right recovery is to take the lock anyway via
+//! [`PoisonError::into_inner`], which these helpers centralize.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a [`Mutex`], recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an [`RwLock`], recovering the guard from poisoning.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an [`RwLock`], recovering the guard from poisoning.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().expect("first take");
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock really is poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7, "data survives the poisoning");
+    }
+
+    #[test]
+    fn recovers_a_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().expect("first take");
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(read_unpoisoned(&l).len(), 3);
+        write_unpoisoned(&l).push(4);
+        assert_eq!(read_unpoisoned(&l).len(), 4);
+    }
+}

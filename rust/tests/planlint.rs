@@ -1,0 +1,241 @@
+//! Plan-lint mutation suite (ISSUE 7 satellite).
+//!
+//! Two halves:
+//!
+//! 1. **Zoo conformance** — every shipped workload, compiled on both
+//!    paper accelerators under both mapping policies and verified under
+//!    both admission modes, lints with zero `Error` findings. This is
+//!    the same matrix the `oxbnn lint` CLI subcommand walks in CI.
+//! 2. **Mutations** — corrupting a compiled [`ExecutionPlan`] in a
+//!    targeted way (stale view, wrong grid, oversubscribed XPE slots,
+//!    corrupt slice table, off-by-one kernel, swapped producer/consumer,
+//!    B_PCA overflow) yields exactly the machine-readable [`Code`] the
+//!    verifier documents for that corruption, and the lint gate turns
+//!    the `Error`-severity ones into a typed [`LintRejection`].
+
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::check::planlint::{self, has_errors, Code, Severity};
+use oxbnn::coordinator::{synthetic_manifest, workload_from_artifact};
+use oxbnn::mapping::layer::GemmLayer;
+use oxbnn::mapping::scheduler::MappingPolicy;
+use oxbnn::plan::{AdmissionMode, ExecutionPlan};
+use oxbnn::workloads::{zoo, Workload};
+
+const POLICIES: [MappingPolicy; 2] = [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread];
+
+fn admissions() -> [AdmissionMode; 2] {
+    [AdmissionMode::Exact, AdmissionMode::RasterHalo(0.125)]
+}
+
+/// The model zoo the CLI lints: the paper's four evaluation networks
+/// plus the ResNet-50 scaling workload.
+fn model_zoo() -> Vec<Workload> {
+    let mut models = Workload::evaluation_set();
+    models.push(zoo::resnet50());
+    models
+}
+
+/// A small chain whose every cross-layer edge is receptive-field exact
+/// (conv -> conv -> pooled conv -> FC) — the controlled fixture the
+/// mutations corrupt. Mirrors the geometry style of the zoo networks.
+fn chained() -> Workload {
+    Workload::new(
+        "chained",
+        vec![
+            GemmLayer::conv("c1", 8, 2, 3, 4),
+            GemmLayer::conv("c2", 8, 4, 3, 4).with_pool(),
+            GemmLayer::conv("c3", 4, 4, 3, 2),
+            GemmLayer::fc("fc", 32, 10),
+        ],
+    )
+}
+
+fn compile(policy: MappingPolicy) -> ExecutionPlan {
+    ExecutionPlan::compile(&AcceleratorConfig::oxbnn_5(), &chained(), policy)
+}
+
+/// Every code a mutation below expects, asserted present.
+fn assert_code(plan: &ExecutionPlan, code: Code) {
+    let findings = planlint::verify(plan);
+    assert!(
+        findings.iter().any(|f| f.code == code),
+        "expected {} among: {:?}",
+        code.id(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------
+// 1. Zoo conformance
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_zoo_plans_lint_clean_across_the_full_matrix() {
+    let accels = [AcceleratorConfig::oxbnn_5(), AcceleratorConfig::oxbnn_50()];
+    let mut plans = 0usize;
+    for acc in &accels {
+        for model in &model_zoo() {
+            for policy in POLICIES {
+                let plan = ExecutionPlan::compile(acc, model, policy);
+                for admission in admissions() {
+                    plans += 1;
+                    let findings = planlint::verify_with(&plan, admission);
+                    assert!(
+                        !has_errors(&findings),
+                        "{} x {} [{:?}, {:?}]: {:?}",
+                        acc.name,
+                        model.name,
+                        policy,
+                        admission,
+                        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+    }
+    // 5 models x 2 accelerators x 2 policies x 2 admission modes.
+    assert_eq!(plans, 40);
+}
+
+#[test]
+fn zoo_plans_pass_the_gate() {
+    for model in &model_zoo() {
+        let plan = ExecutionPlan::compile(
+            &AcceleratorConfig::oxbnn_50(),
+            model,
+            MappingPolicy::PcaLocal,
+        );
+        planlint::gate(&model.name, &plan).expect("zoo plan must pass the lint gate");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Mutations -> expected codes
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_workload_view_is_pl101() {
+    let mut plan = compile(MappingPolicy::PcaLocal);
+    plan.workload.layers[0].k += 1;
+    assert_code(&plan, Code::ViewMismatch);
+}
+
+#[test]
+fn foreign_grid_slicing_is_pl102() {
+    let mut plan = compile(MappingPolicy::PcaLocal);
+    plan.layers[0].n += 1; // sliced for an XPE size the accelerator lacks
+    assert_code(&plan, Code::GridMismatch);
+}
+
+#[test]
+fn corrupt_slice_table_is_pl104() {
+    let mut plan = compile(MappingPolicy::SlicedSpread);
+    // Grow the vector size in BOTH views (so PL101 stays quiet): the
+    // compiled slice lengths no longer tile S.
+    plan.layers[0].layer.s += 1;
+    plan.workload.layers[0].s += 1;
+    assert_code(&plan, Code::SliceTableCorrupt);
+}
+
+#[test]
+fn oversubscribed_xpe_grid_is_pl105_and_gate_refuses() {
+    let mut plan = compile(MappingPolicy::PcaLocal);
+    assert!(planlint::gate("ok", &plan).is_ok());
+    plan.layers[0].xpc_count += 1; // passes land on XPCs that do not exist
+    let rej = planlint::gate("bad", &plan).unwrap_err();
+    assert!(rej.findings.iter().any(|f| f.code == Code::XpeOversubscribed));
+    assert!(rej.to_string().contains("PL105"), "{}", rej);
+}
+
+#[test]
+fn off_by_one_kernel_is_pl204() {
+    let mut plan = compile(MappingPolicy::PcaLocal);
+    // Enlarge c2's kernel with padding adjusted so the output map — and
+    // therefore every raster-alignment precondition — still holds. The
+    // admission thresholds this geometry derives are silently wrong;
+    // the channel-chain cross-check (S = kernel^2 x producer channels)
+    // is what catches it.
+    for view in [&mut plan.layers[1].layer, &mut plan.workload.layers[1]] {
+        let g = view.geom.as_mut().expect("c2 carries conv geometry");
+        g.kernel = 5;
+        g.padding = 2;
+    }
+    let findings = planlint::verify(&plan);
+    assert!(
+        findings.iter().any(|f| f.code == Code::GeomGemmMismatch),
+        "expected PL204 among: {:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+    // The corruption is layer-scoped and uniquely attributed.
+    let f = findings.iter().find(|f| f.code == Code::GeomGemmMismatch).unwrap();
+    assert_eq!(f.layer, Some(1));
+    assert_eq!(f.severity, Severity::Error);
+}
+
+#[test]
+fn swapped_producer_consumer_is_pl205() {
+    let clean = compile(MappingPolicy::PcaLocal);
+    let baseline = planlint::verify(&clean);
+    assert!(
+        !baseline.iter().any(|f| f.code == Code::AdmissionFallback),
+        "fixture must chain exactly: {:?}",
+        baseline.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+
+    // Swap c2 and c3 in BOTH views: per-layer checks stay green, but
+    // neither conv chains onto its new producer's output map any more —
+    // the linter reports the (sound) whole-map fallback on each edge.
+    let mut plan = clean;
+    plan.layers.swap(1, 2);
+    plan.workload.layers.swap(1, 2);
+    let findings = planlint::verify(&plan);
+    let fallbacks: Vec<_> =
+        findings.iter().filter(|f| f.code == Code::AdmissionFallback).collect();
+    assert_eq!(fallbacks.len(), 2, "both swapped edges lose pipelining: {:?}", findings);
+    assert!(fallbacks.iter().all(|f| f.severity == Severity::Info));
+    // Sound, so still servable — the gate admits it.
+    assert!(planlint::gate("swapped", &plan).is_ok());
+}
+
+#[test]
+fn pca_overflow_is_pl301() {
+    // The synthetic serving manifest's deterministic overcap trigger: an
+    // FC stage of S = 40 000 > gamma = 8 503 on the default serving
+    // accelerator — the same plan `serve-http` refuses with HTTP 422.
+    let manifest = synthetic_manifest(&["victim-overcap"]);
+    let artifact = manifest.get("bnn_victim-overcap").unwrap();
+    let workload = workload_from_artifact(artifact);
+    let acc = AcceleratorConfig::oxbnn_50();
+    let plan = ExecutionPlan::compile(&acc, &workload, MappingPolicy::PcaLocal);
+    let rej = planlint::gate("victim-overcap", &plan).unwrap_err();
+    assert!(rej.findings.iter().any(|f| f.code == Code::PcaOverflow));
+    assert!(rej.to_string().contains("PL301"), "{}", rej);
+
+    // The same geometry is servable when slices spread across XPEs (a
+    // single slice of N = 19 ones always fits gamma).
+    let spread = ExecutionPlan::compile(&acc, &workload, MappingPolicy::SlicedSpread);
+    let findings = planlint::verify(&spread);
+    assert!(
+        !findings.iter().any(|f| f.code == Code::PcaOverflow),
+        "{:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. The machine-readable surface is stable
+// ---------------------------------------------------------------------
+
+#[test]
+fn codes_and_severities_are_stable() {
+    assert_eq!(Code::ViewMismatch.id(), "PL101");
+    assert_eq!(Code::XpeOversubscribed.id(), "PL105");
+    assert_eq!(Code::AdmissionCycle.id(), "PL201");
+    assert_eq!(Code::AdmissionFallback.id(), "PL205");
+    assert_eq!(Code::PcaOverflow.id(), "PL301");
+    assert_eq!(Code::PcaCapacityDrift.id(), "PL302");
+    assert_eq!(Code::AdmissionFallback.severity(), Severity::Info);
+    assert_eq!(Code::PcaCapacityDrift.severity(), Severity::Warning);
+    assert_eq!(Code::PcaOverflow.severity(), Severity::Error);
+    assert!(Severity::Info < Severity::Warning && Severity::Warning < Severity::Error);
+}
