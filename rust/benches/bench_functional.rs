@@ -1,0 +1,231 @@
+//! Functional-engine benchmark (the PR-8 perf trajectory): bit-packed
+//! XNOR+popcount forward pass vs the scalar f32 reference on a VGG-scale
+//! conv stack — ns/frame, frames/sec through the serving `BatchRunner` in
+//! both modes (the serve-bench before/after numbers), heap allocations
+//! per frame on the hot path, and the 64× weight-footprint compression.
+//! Emits `BENCH_functional.json` (path overridable via `OXBNN_BENCH_OUT`)
+//! so CI can track the numbers over time.
+//!
+//! Acceptance gate: the packed engine must clear ≥10× the f32 reference's
+//! single-frame throughput (the ISSUE-8 floor; word-parallel XNOR over
+//! 64-synapse lanes should land well above it).
+//!
+//! Run: `cargo bench --bench bench_functional`
+//! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_functional`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use oxbnn::functional::{bnn, packed, FunctionalMode, PackedWeights};
+use oxbnn::runtime::{ArgSpec, Artifact, BatchRunner, LayerDim, Runtime};
+use oxbnn::util::bench::{fmt_secs, Bencher, Table};
+use oxbnn::util::json::Json;
+use oxbnn::util::rng::Rng;
+
+/// Counting allocator: the "allocations per frame" metric measures the
+/// hot path directly instead of trusting the buffer-reuse story.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Heap allocations per call of `f`, averaged over `iters` calls.
+fn allocs_per_call<F: FnMut()>(iters: u64, mut f: F) -> f64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        f();
+    }
+    (ALLOCS.load(Ordering::Relaxed) - before) as f64 / iters as f64
+}
+
+/// A VGG-scale functional-engine artifact: 8×8×64 input through three
+/// SAME-padded 3×3 convs (64 → 64 → pool → 128 channels) into a
+/// 2048-deep FC — ~5.9M scalar VDP ops per frame, every conv row 576
+/// synapses deep (9 packed words).
+fn bench_artifact() -> Artifact {
+    let layers = vec![
+        LayerDim { kind: "conv".into(), h: 64, s: 576, k: 64, fmap_hw: 8 },
+        LayerDim { kind: "conv".into(), h: 64, s: 576, k: 64, fmap_hw: 8 },
+        LayerDim { kind: "conv".into(), h: 16, s: 576, k: 128, fmap_hw: 4 },
+        LayerDim { kind: "fc".into(), h: 1, s: 2048, k: 10, fmap_hw: 1 },
+    ];
+    let mut args = vec![ArgSpec {
+        name: "x".into(),
+        shape: vec![1, 8, 8, 64],
+        dtype: "f32".into(),
+    }];
+    for (i, l) in layers.iter().enumerate() {
+        args.push(ArgSpec {
+            name: format!("w{}", i),
+            shape: vec![l.s, l.k],
+            dtype: "f32".into(),
+        });
+    }
+    Artifact {
+        name: "bench_functional".into(),
+        kind: "bnn_forward".into(),
+        file: std::path::PathBuf::from("<synthetic>"),
+        args,
+        output_shape: vec![1, 10],
+        layers,
+        model: Some("bench".into()),
+        input_hw: Some(8),
+        input_channels: Some(64),
+        num_classes: Some(10),
+        apply_activation: None,
+    }
+}
+
+fn main() {
+    let bencher = Bencher::from_env();
+    let artifact = bench_artifact();
+    let mut rng = Rng::new(0xBE7C);
+    let weights: Vec<Vec<f32>> =
+        artifact.layers.iter().map(|l| rng.bits(l.s * l.k)).collect();
+    let input_len = artifact.args[0].element_count();
+    let frame: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+    let frame_ops: usize = artifact.layers.iter().map(|l| l.h * l.s * l.k).sum();
+
+    println!(
+        "functional engine — {} ({} scalar VDP ops/frame)\n",
+        artifact.name, frame_ops
+    );
+
+    // Single-frame forward pass, scratch reused across calls in BOTH
+    // engines (each engine's steady-state serving configuration).
+    let packed_weights = PackedWeights::pack(&artifact, &weights);
+    let refs = packed_weights.refs();
+    let mut packed_scratch = packed::Scratch::default();
+    let packed_stat = bencher.run("forward_packed", || {
+        packed::forward_packed_with(&artifact, &frame, &refs, &mut packed_scratch)
+    });
+    let mut f32_scratch = bnn::Scratch::default();
+    let f32_stat = bencher.run("forward_f32", || {
+        bnn::forward_with(&artifact, &frame, &weights, &mut f32_scratch)
+    });
+    let speedup = f32_stat.median / packed_stat.median;
+
+    // Sanity: both engines agree on the benchmarked frame.
+    assert_eq!(
+        packed::forward_packed_with(&artifact, &frame, &refs, &mut packed_scratch),
+        bnn::forward_with(&artifact, &frame, &weights, &mut f32_scratch),
+        "packed and f32 engines disagree on the bench frame"
+    );
+
+    // Allocations per frame AFTER warmup (the benches above warmed the
+    // scratch buffers): the packed hot path must stay allocation-lean.
+    let packed_allocs = allocs_per_call(16, || {
+        std::hint::black_box(packed::forward_packed_with(
+            &artifact,
+            &frame,
+            &refs,
+            &mut packed_scratch,
+        ));
+    });
+    let f32_allocs = allocs_per_call(16, || {
+        std::hint::black_box(bnn::forward_with(
+            &artifact,
+            &frame,
+            &weights,
+            &mut f32_scratch,
+        ));
+    });
+
+    // Serve-path frames/sec: the same artifact through `BatchRunner` (one
+    // staged-weight upload, batched dispatch) in f32 mode (before) and
+    // packed mode (after). Batch 8 crosses the batch-parallel threshold,
+    // so the packed number includes the multi-core fan-out.
+    let batch = 8usize;
+    let frames: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect())
+        .collect();
+    let frame_refs: Vec<&[f32]> = frames.iter().map(|f| f.as_slice()).collect();
+    let fps_of = |mode: FunctionalMode| {
+        let mut runner = BatchRunner::with_mode(
+            Runtime::cpu().expect("sim runtime"),
+            artifact.clone(),
+            weights.clone(),
+            mode,
+        )
+        .expect("runner");
+        let stat = bencher.run(&format!("batch{}_{}", batch, mode), || {
+            runner.run(&frame_refs).expect("batched run")
+        });
+        stat.throughput(batch as f64)
+    };
+    let fps_f32 = fps_of(FunctionalMode::F32);
+    let fps_packed = fps_of(FunctionalMode::Packed);
+
+    let f32_weight_bytes: usize = weights.iter().map(|w| w.len() * 4).sum();
+    let packed_weight_bytes: usize =
+        packed_weights.layers().iter().map(|m| m.packed_bytes()).sum();
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["scalar VDP ops/frame".into(), format!("{}", frame_ops)]);
+    t.row(&["f32 frame".into(), fmt_secs(f32_stat.median)]);
+    t.row(&["packed frame".into(), fmt_secs(packed_stat.median)]);
+    t.row(&["speedup".into(), format!("{:.1}x", speedup)]);
+    t.row(&["f32 allocs/frame".into(), format!("{:.1}", f32_allocs)]);
+    t.row(&["packed allocs/frame".into(), format!("{:.1}", packed_allocs)]);
+    t.row(&["serve FPS (f32, before)".into(), format!("{:.1}", fps_f32)]);
+    t.row(&["serve FPS (packed, after)".into(), format!("{:.1}", fps_packed)]);
+    t.row(&["f32 weight bytes".into(), format!("{}", f32_weight_bytes)]);
+    t.row(&["packed weight bytes".into(), format!("{}", packed_weight_bytes)]);
+    t.print();
+
+    // Acceptance gates. The throughput floor is the headline; the
+    // allocation bound keeps the reuse contract honest (logits vector +
+    // a couple of bookkeeping Vecs, nothing per-row or per-layer).
+    assert!(
+        speedup >= 10.0,
+        "packed engine must be >= 10x the f32 reference, got {:.1}x \
+         ({} vs {})",
+        speedup,
+        fmt_secs(packed_stat.median),
+        fmt_secs(f32_stat.median)
+    );
+    assert!(
+        packed_allocs <= 8.0,
+        "packed hot path allocates {:.1} times/frame — per-frame buffer \
+         reuse regressed",
+        packed_allocs
+    );
+    println!("\ngate OK: packed {:.1}x faster than f32 reference", speedup);
+
+    let json = Json::obj(vec![
+        ("artifact", Json::Str(artifact.name.clone())),
+        ("frame_ops", Json::Num(frame_ops as f64)),
+        ("f32_ns_per_frame", Json::Num(f32_stat.median * 1e9)),
+        ("packed_ns_per_frame", Json::Num(packed_stat.median * 1e9)),
+        ("speedup", Json::Num(speedup)),
+        ("f32_allocs_per_frame", Json::Num(f32_allocs)),
+        ("packed_allocs_per_frame", Json::Num(packed_allocs)),
+        ("serve_batch", Json::Num(batch as f64)),
+        ("serve_fps_f32", Json::Num(fps_f32)),
+        ("serve_fps_packed", Json::Num(fps_packed)),
+        ("f32_weight_bytes", Json::Num(f32_weight_bytes as f64)),
+        ("packed_weight_bytes", Json::Num(packed_weight_bytes as f64)),
+    ]);
+    let out = std::env::var("OXBNN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_functional.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", out);
+}

@@ -448,11 +448,21 @@ pub struct FunctionalBackend {
     pub seed: u64,
     /// Cap on VDPs recomputed per layer (keeps big layers affordable).
     pub max_checked_vdps: usize,
+    /// Which implementation computes the whole-vector bitcount side of
+    /// the differential check: bit-packed XNOR + popcount by default
+    /// (so every conformance run exercises the packed engine against the
+    /// sliced f32 accumulation), `OXBNN_FUNCTIONAL=f32` for the scalar
+    /// reference.
+    pub mode: crate::functional::FunctionalMode,
 }
 
 impl Default for FunctionalBackend {
     fn default() -> Self {
-        FunctionalBackend { seed: 0xB17C0, max_checked_vdps: 256 }
+        FunctionalBackend {
+            seed: 0xB17C0,
+            max_checked_vdps: 256,
+            mode: crate::functional::FunctionalMode::from_env(),
+        }
     }
 }
 
@@ -487,7 +497,16 @@ impl Backend for FunctionalBackend {
         for _ in 0..check {
             let input = rng.bits(layer.s);
             let weight = rng.bits(layer.s);
-            let whole = slice_xnor_popcount(&input, &weight);
+            let whole = match self.mode {
+                crate::functional::FunctionalMode::Packed => {
+                    let pi = crate::functional::pack01(&input);
+                    let pw = crate::functional::pack01(&weight);
+                    crate::functional::xnor_popcount_u64(pi.words(), pw.words(), layer.s)
+                }
+                crate::functional::FunctionalMode::F32 => {
+                    slice_xnor_popcount(&input, &weight)
+                }
+            };
             let sliced: u64 = slice_plan
                 .iter()
                 .map(|sl| {

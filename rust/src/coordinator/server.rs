@@ -165,6 +165,11 @@ pub struct ServerConfig {
     /// transaction-level whole-frame event space instead.
     pub sim_pipeline: bool,
     pub weight_seed: u64,
+    /// Which functional implementation the sim engine dispatches frames
+    /// to: bit-packed XNOR + popcount by default, with the f32 reference
+    /// as escape hatch. The default comes from `OXBNN_FUNCTIONAL` (unset
+    /// → packed); set the field to pin it regardless of the environment.
+    pub functional_mode: crate::functional::FunctionalMode,
     /// Extra per-batch execution delay (test/chaos knob for emulating a
     /// slow backend; zero in production).
     pub execute_delay: Duration,
@@ -193,6 +198,7 @@ impl ServerConfig {
             sim_backend: BackendKind::Analytic,
             sim_pipeline: true,
             weight_seed: 0x0B17,
+            functional_mode: crate::functional::FunctionalMode::from_env(),
             execute_delay: Duration::ZERO,
             manifest: None,
             plan_cache: Arc::new(crate::plan::PlanCache::default()),
@@ -606,10 +612,11 @@ fn worker_loop(
             return fail_all(rx, &router, &model, replica, &metrics, &format!("{:#}", e));
         }
     };
-    let mut runner = match BatchRunner::new(
+    let mut runner = match BatchRunner::with_mode(
         runtime,
         artifact.clone(),
         synthetic_weights(&artifact, cfg.weight_seed),
+        cfg.functional_mode,
     ) {
         Ok(r) => r,
         Err(e) => {
@@ -635,11 +642,13 @@ fn worker_loop(
         }
     };
     crate::log_info!(
-        "{}[{}]: worker ready (compile {:.3}s, {} policy, simulated photonic frame {})",
+        "{}[{}]: worker ready (compile {:.3}s, {} policy, {} functional engine, \
+         simulated photonic frame {})",
         model,
         replica,
         runner.compile_seconds,
         cfg.policy,
+        runner.mode(),
         crate::util::units::fmt_time(simulated_s)
     );
 

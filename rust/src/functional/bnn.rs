@@ -26,7 +26,9 @@ impl FeatureMap {
         FeatureMap { hw, c, data }
     }
 
-    fn at(&self, i: isize, j: isize, ch: usize) -> f32 {
+    /// Padding-aware accessor: SAME zero padding, so out-of-bounds reads
+    /// return binary 0.
+    pub fn at(&self, i: isize, j: isize, ch: usize) -> f32 {
         // SAME zero padding: out-of-bounds reads are binary 0.
         if i < 0 || j < 0 || i >= self.hw as isize || j >= self.hw as isize {
             0.0
@@ -41,6 +43,36 @@ pub fn binarize01(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| if v >= 0.0 { 1.0 } else { 0.0 }).collect()
 }
 
+/// Fill `row` with the im2col window for output position `pos`: python
+/// layout `(ki·k + kj)·C + c`, SAME zero padding, given stride. In-bounds
+/// kernel positions are contiguous C-length runs of the map, copied
+/// slice-wise; the reused buffer is cleared, not reallocated.
+fn fill_row(
+    data: &[f32],
+    hw: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    pos: (usize, usize),
+    row: &mut Vec<f32>,
+) {
+    let (oi, oj) = pos;
+    let pad = (kernel - 1) / 2;
+    row.clear();
+    for ki in 0..kernel {
+        let i = (oi * stride + ki) as isize - pad as isize;
+        for kj in 0..kernel {
+            let j = (oj * stride + kj) as isize - pad as isize;
+            if i < 0 || i >= hw as isize || j < 0 || j >= hw as isize {
+                row.resize(row.len() + c, 0.0);
+            } else {
+                let base = (i as usize * hw + j as usize) * c;
+                row.extend_from_slice(&data[base..base + c]);
+            }
+        }
+    }
+}
+
 /// im2col with the python layout: row per output position, feature index
 /// (ki·k + kj)·C + c, SAME padding, given stride.
 pub fn im2col(map: &FeatureMap, kernel: usize, stride: usize) -> Vec<Vec<f32>> {
@@ -50,15 +82,7 @@ pub fn im2col(map: &FeatureMap, kernel: usize, stride: usize) -> Vec<Vec<f32>> {
     for oi in 0..out_hw {
         for oj in 0..out_hw {
             let mut row = Vec::with_capacity(kernel * kernel * map.c);
-            for ki in 0..kernel {
-                for kj in 0..kernel {
-                    for ch in 0..map.c {
-                        let i = (oi * stride + ki) as isize - pad as isize;
-                        let j = (oj * stride + kj) as isize - pad as isize;
-                        row.push(map.at(i, j, ch));
-                    }
-                }
-            }
+            fill_row(&map.data, map.hw, map.c, kernel, stride, (oi, oj), &mut row);
             rows.push(row);
         }
     }
@@ -86,29 +110,43 @@ pub fn activation(z: f32, s: usize) -> f32 {
     }
 }
 
-/// 2×2 stride-2 max pool of a binary map (max == OR).
-pub fn maxpool2(map: &FeatureMap) -> FeatureMap {
-    assert_eq!(map.hw % 2, 0, "pooling needs even hw");
-    let out_hw = map.hw / 2;
-    let mut data = vec![0.0f32; out_hw * out_hw * map.c];
+/// 2×2 stride-2 max pool into a reused buffer (max over {0,1} == OR).
+fn maxpool2_into(data: &[f32], hw: usize, c: usize, out: &mut Vec<f32>) {
+    assert_eq!(hw % 2, 0, "pooling needs even hw");
+    let out_hw = hw / 2;
+    out.clear();
+    out.resize(out_hw * out_hw * c, 0.0);
     for i in 0..out_hw {
         for j in 0..out_hw {
-            for ch in 0..map.c {
+            for ch in 0..c {
                 let mut m = 0.0f32;
                 for di in 0..2 {
                     for dj in 0..2 {
-                        m = m.max(map.at(
-                            (2 * i + di) as isize,
-                            (2 * j + dj) as isize,
-                            ch,
-                        ));
+                        m = m.max(data[((2 * i + di) * hw + (2 * j + dj)) * c + ch]);
                     }
                 }
-                data[(i * out_hw + j) * map.c + ch] = m;
+                out[(i * out_hw + j) * c + ch] = m;
             }
         }
     }
-    FeatureMap::new(out_hw, map.c, data)
+}
+
+/// 2×2 stride-2 max pool of a binary map (max == OR).
+pub fn maxpool2(map: &FeatureMap) -> FeatureMap {
+    let mut data = Vec::new();
+    maxpool2_into(&map.data, map.hw, map.c, &mut data);
+    FeatureMap::new(map.hw / 2, map.c, data)
+}
+
+/// Reused f32 buffers for [`forward_with`]: one im2col row plus two
+/// ping-pong feature maps. One `Scratch` held across frames (and layers
+/// within a frame) removes the per-row/per-layer allocation storm the
+/// original `forward` paid via fresh `Vec<Vec<f32>>` im2col tables.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    row: Vec<f32>,
+    map: Vec<f32>,
+    next: Vec<f32>,
 }
 
 /// Full forward pass following the manifest's layer table. `weights[l]`
@@ -116,35 +154,59 @@ pub fn maxpool2(map: &FeatureMap) -> FeatureMap {
 /// any slice-of-slices shape works (`&[Vec<f32>]`, `&[&[f32]]`, ...) so
 /// callers holding staged device tensors never have to copy.
 pub fn forward(artifact: &Artifact, x: &[f32], weights: &[impl AsRef<[f32]>]) -> Vec<f32> {
+    forward_with(artifact, x, weights, &mut Scratch::default())
+}
+
+/// [`forward`] with caller-owned scratch buffers, so per-frame loops
+/// allocate nothing beyond the returned logits after warmup.
+pub fn forward_with(
+    artifact: &Artifact,
+    x: &[f32],
+    weights: &[impl AsRef<[f32]>],
+    scratch: &mut Scratch,
+) -> Vec<f32> {
     let input_hw = artifact.input_hw.expect("bnn artifact has input_hw");
     let input_c = artifact.input_channels.expect("input_channels");
     assert_eq!(x.len(), input_hw * input_hw * input_c);
     assert_eq!(weights.len(), artifact.layers.len());
 
-    let mut map = FeatureMap::new(input_hw, input_c, binarize01(x));
+    let Scratch { row, map, next } = scratch;
+    // Binarize (paper Eq. 1, {0,1} encoding) into the reused map buffer.
+    map.clear();
+    map.extend(x.iter().map(|&v| if v >= 0.0 { 1.0 } else { 0.0 }));
+    let mut hw = input_hw;
+    let mut c = input_c;
+
     let conv_layers: Vec<&LayerDim> =
         artifact.layers.iter().filter(|l| l.kind == "conv").collect();
     for (li, dim) in conv_layers.iter().enumerate() {
         let w = weights[li].as_ref();
         assert_eq!(w.len(), dim.s * dim.k, "layer {} weight size", li);
-        let rows = im2col(&map, 3, 1);
-        assert_eq!(rows.len(), dim.h, "layer {} H", li);
-        let mut out = vec![0.0f32; dim.h * dim.k];
-        for (r, row) in rows.iter().enumerate() {
-            for k in 0..dim.k {
-                // Weight matrix is (S, K) row-major: column k.
-                let mut count = 0u32;
-                for s in 0..dim.s {
-                    let a = row[s] > 0.5;
-                    let b = w[s * dim.k + k] > 0.5;
-                    if a == b {
-                        count += 1;
+        // SAME/stride-1 3×3 conv: one output row per input position.
+        assert_eq!(hw * hw, dim.h, "layer {} H", li);
+        next.clear();
+        next.resize(dim.h * dim.k, 0.0);
+        for oi in 0..hw {
+            for oj in 0..hw {
+                fill_row(map, hw, c, 3, 1, (oi, oj), row);
+                let r = oi * hw + oj;
+                for k in 0..dim.k {
+                    // Weight matrix is (S, K) row-major: column k.
+                    let mut count = 0u32;
+                    for s in 0..dim.s {
+                        let a = row[s] > 0.5;
+                        let b = w[s * dim.k + k] > 0.5;
+                        if a == b {
+                            count += 1;
+                        }
                     }
+                    next[r * dim.k + k] = activation(count as f32, dim.s);
                 }
-                out[r * dim.k + k] = activation(count as f32, dim.s);
             }
         }
-        map = FeatureMap::new(dim.fmap_hw, dim.k, out);
+        std::mem::swap(map, next);
+        hw = dim.fmap_hw;
+        c = dim.k;
         // The python model pools whenever the next layer's input is half
         // the current fmap; infer pooling from the geometry chain.
         let next_hw = if li + 1 < conv_layers.len() {
@@ -158,22 +220,24 @@ pub fn forward(artifact: &Artifact, x: &[f32], weights: &[impl AsRef<[f32]>]) ->
             let hw2 = fc.s / dim.k;
             (hw2 as f64).sqrt() as usize
         };
-        if next_hw * 2 == map.hw {
-            map = maxpool2(&map);
+        if next_hw * 2 == hw {
+            maxpool2_into(map, hw, c, next);
+            std::mem::swap(map, next);
+            hw = next_hw;
         } else {
-            assert_eq!(next_hw, map.hw, "geometry chain broken at layer {}", li);
+            assert_eq!(next_hw, hw, "geometry chain broken at layer {}", li);
         }
     }
     // Final FC: raw bitcount logits (no activation).
     let fc = artifact.layers.last().expect("fc layer");
     let w = weights[weights.len() - 1].as_ref();
     assert_eq!(w.len(), fc.s * fc.k);
-    assert_eq!(map.data.len(), fc.s, "flattened features");
+    assert_eq!(map.len(), fc.s, "flattened features");
     let mut logits = vec![0.0f32; fc.k];
     for k in 0..fc.k {
         let mut count = 0u32;
         for s in 0..fc.s {
-            let a = map.data[s] > 0.5;
+            let a = map[s] > 0.5;
             let b = w[s * fc.k + k] > 0.5;
             if a == b {
                 count += 1;

@@ -1,6 +1,81 @@
 //! Bit-exact functional BNN engine (independent of XLA) for
 //! cross-validating the AOT artifacts and served responses.
+//!
+//! Two executions of the same contract:
+//! - [`bnn`] — the f32 reference: binarized values carried as `f32`,
+//!   scalar compare-and-count VDPs. Slow, obviously correct.
+//! - [`packed`] — the production path: weights/activations packed one
+//!   bit per synapse into `u64` lanes, VDPs computed as XNOR +
+//!   `count_ones`. Bit-exact against the reference (differential suite
+//!   in `rust/tests/functional_packed.rs`) and the default everywhere.
+//!
+//! [`FunctionalMode`] selects between them; `OXBNN_FUNCTIONAL=f32` is
+//! the escape hatch back to the reference implementation.
 
 pub mod bnn;
+pub mod packed;
 
 pub use bnn::{activation, binarize01, forward, im2col, maxpool2, xnor_popcount, FeatureMap};
+pub use packed::{
+    forward_packed, pack01, xnor_popcount_u64, PackedBits, PackedMatrix, PackedWeights,
+};
+
+/// Which functional implementation executes BNN forward passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FunctionalMode {
+    /// Bit-packed XNOR + popcount over `u64` lanes (the default).
+    #[default]
+    Packed,
+    /// The scalar f32 reference (differential baseline / escape hatch).
+    F32,
+}
+
+impl FunctionalMode {
+    /// Resolve the mode from the `OXBNN_FUNCTIONAL` environment variable:
+    /// `f32` selects the reference path, anything else (or unset) packed.
+    pub fn from_env() -> FunctionalMode {
+        match std::env::var("OXBNN_FUNCTIONAL") {
+            Ok(v) if v.eq_ignore_ascii_case("f32") => FunctionalMode::F32,
+            _ => FunctionalMode::Packed,
+        }
+    }
+}
+
+impl std::fmt::Display for FunctionalMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FunctionalMode::Packed => write!(f, "packed"),
+            FunctionalMode::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+impl std::str::FromStr for FunctionalMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FunctionalMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "packed" => Ok(FunctionalMode::Packed),
+            "f32" => Ok(FunctionalMode::F32),
+            other => Err(format!(
+                "unknown functional mode '{}' (expected 'packed' or 'f32')",
+                other
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::FunctionalMode;
+
+    #[test]
+    fn mode_parses_and_displays() {
+        assert_eq!("packed".parse::<FunctionalMode>(), Ok(FunctionalMode::Packed));
+        assert_eq!("F32".parse::<FunctionalMode>(), Ok(FunctionalMode::F32));
+        assert!("qbits".parse::<FunctionalMode>().is_err());
+        assert_eq!(FunctionalMode::Packed.to_string(), "packed");
+        assert_eq!(FunctionalMode::F32.to_string(), "f32");
+        assert_eq!(FunctionalMode::default(), FunctionalMode::Packed);
+    }
+}

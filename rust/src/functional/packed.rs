@@ -1,0 +1,603 @@
+//! Bit-packed XNOR-popcount execution path for the functional BNN engine.
+//!
+//! The paper's premise is that binarization turns convolution into XNOR +
+//! bitcount; this module finally computes it that way in software. Weights
+//! and activations pack into `u64` lanes — one bit per synapse, 64
+//! synapses per word — and every VDP is `count_ones(!(a ^ b))` over the
+//! packed words with a tail mask for depths that are not a multiple of 64.
+//! Mirrors the electronic XNOR engines the paper cites (XNOR Neural
+//! Engine, XNORBIN): the datapath IS the wide XNOR+popcount.
+//!
+//! [`forward_packed`] follows [`super::bnn::forward`]'s layer chain
+//! operation-for-operation — same im2col layout (`(ki·KW + kj)·C + c`),
+//! SAME zero padding, comparator activation, 2×2 binary max-pool computed
+//! as word-wise OR — and is bit-exact against it (differential suite in
+//! `rust/tests/functional_packed.rs`; the f32 path is kept as the
+//! reference). The packed im2col writes window bits directly into a
+//! reused row buffer via word-level bit runs, so the hot loop performs no
+//! per-row allocation.
+
+use crate::runtime::manifest::{Artifact, LayerDim};
+
+/// Bits per packed word.
+pub const WORD_BITS: usize = 64;
+
+/// Packed words needed to hold `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS)
+}
+
+/// Mask selecting the valid bits of the LAST word of a `len`-bit buffer
+/// (all ones when `len` is a multiple of 64).
+#[inline]
+fn tail_mask(len: usize) -> u64 {
+    let rem = len % WORD_BITS;
+    if rem == 0 {
+        !0u64
+    } else {
+        (1u64 << rem) - 1
+    }
+}
+
+/// A fixed-length bit buffer (LSB-first within each word). Bits past
+/// `len` are kept zero — every mutator below preserves that invariant, so
+/// popcounts only need to mask the final word.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PackedBits {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl PackedBits {
+    /// An all-zero buffer of `len` bits.
+    pub fn zeros(len: usize) -> PackedBits {
+        PackedBits { words: vec![0u64; words_for(len)], len }
+    }
+
+    /// Reset to `len` bits, all zero, reusing the existing allocation
+    /// when it is large enough (the buffer-reuse contract of the packed
+    /// forward path).
+    pub fn clear_resize(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(words_for(len), 0);
+        self.len = len;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i` to 1.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 != 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+}
+
+/// Pack a {0,1}-valued f32 slice (bit = `v > 0.5`, matching the f32
+/// engine's comparisons on binarized data).
+pub fn pack01(xs: &[f32]) -> PackedBits {
+    let mut out = PackedBits::zeros(xs.len());
+    for (i, &v) in xs.iter().enumerate() {
+        if v > 0.5 {
+            out.set(i);
+        }
+    }
+    out
+}
+
+/// Pack a real-valued input (bit = `v >= 0.0` — paper Eq. 1's {0,1}
+/// binarization, identical to `binarize01` followed by [`pack01`]).
+pub fn pack_real(xs: &[f32]) -> PackedBits {
+    let mut out = PackedBits::zeros(xs.len());
+    for (i, &v) in xs.iter().enumerate() {
+        if v >= 0.0 {
+            out.set(i);
+        }
+    }
+    out
+}
+
+/// XNOR + popcount over two packed `len`-bit vectors: the number of
+/// positions where the operands agree. The tail of the last word is
+/// masked, so callers may hand over buffers whose spare bits disagree.
+#[inline]
+pub fn xnor_popcount_u64(a: &[u64], b: &[u64], len: usize) -> u64 {
+    let nw = words_for(len);
+    debug_assert!(a.len() >= nw && b.len() >= nw);
+    if nw == 0 {
+        return 0;
+    }
+    let mut count = 0u64;
+    for (x, y) in a[..nw - 1].iter().zip(&b[..nw - 1]) {
+        count += (!(x ^ y)).count_ones() as u64;
+    }
+    count + ((!(a[nw - 1] ^ b[nw - 1])) & tail_mask(len)).count_ones() as u64
+}
+
+/// Read `n` (1..=64) bits starting at bit offset `off` of `words`,
+/// returned in the low bits of a u64.
+#[inline]
+fn read_bits(words: &[u64], off: usize, n: usize) -> u64 {
+    debug_assert!((1..=WORD_BITS).contains(&n));
+    let w = off / WORD_BITS;
+    let b = off % WORD_BITS;
+    let mut val = words[w] >> b;
+    if b != 0 && b + n > WORD_BITS {
+        val |= words[w + 1] << (WORD_BITS - b);
+    }
+    if n == WORD_BITS {
+        val
+    } else {
+        val & ((1u64 << n) - 1)
+    }
+}
+
+/// OR the low `n` (1..=64) bits of `val` into `words` at bit offset
+/// `off`. Destination bits are assumed to start zero (the cleared-buffer
+/// invariant), so OR equals write.
+#[inline]
+fn or_bits(words: &mut [u64], off: usize, n: usize, val: u64) {
+    debug_assert!((1..=WORD_BITS).contains(&n));
+    let val = if n == WORD_BITS { val } else { val & ((1u64 << n) - 1) };
+    let w = off / WORD_BITS;
+    let b = off % WORD_BITS;
+    words[w] |= val << b;
+    if b != 0 && b + n > WORD_BITS {
+        words[w + 1] |= val >> (WORD_BITS - b);
+    }
+}
+
+/// Copy an `n`-bit run from `src` (starting at `src_off`) into `dst`
+/// (starting at `dst_off`, assumed zero). Word-level blit: ≤64-bit chunks
+/// with two-word combines, never bit-by-bit.
+pub fn copy_bits(src: &[u64], src_off: usize, dst: &mut [u64], dst_off: usize, mut n: usize) {
+    let mut s = src_off;
+    let mut d = dst_off;
+    while n > 0 {
+        let chunk = n.min(WORD_BITS);
+        or_bits(dst, d, chunk, read_bits(src, s, chunk));
+        s += chunk;
+        d += chunk;
+        n -= chunk;
+    }
+}
+
+/// One layer's weight matrix with every column packed into `u64` lanes:
+/// column `k` of the (S, K) row-major f32 matrix becomes a contiguous
+/// `ceil(S/64)`-word bit vector, ready for [`xnor_popcount_u64`] against
+/// a packed activation row. Packing happens ONCE (at artifact staging
+/// time on the serving path); every dispatch afterwards only reads.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    s: usize,
+    k: usize,
+    /// Words per column.
+    wpc: usize,
+    /// K columns × wpc words, column-major.
+    cols: Vec<u64>,
+}
+
+impl PackedMatrix {
+    /// Pack a (S, K) row-major {0,1} f32 weight matrix (bit = `w > 0.5`).
+    pub fn pack(data: &[f32], s: usize, k: usize) -> PackedMatrix {
+        assert_eq!(data.len(), s * k, "weight matrix must be S*K");
+        let wpc = words_for(s).max(1);
+        let mut cols = vec![0u64; wpc * k];
+        for si in 0..s {
+            let row = si * k;
+            let word = si / WORD_BITS;
+            let bit = 1u64 << (si % WORD_BITS);
+            for (ki, &v) in data[row..row + k].iter().enumerate() {
+                if v > 0.5 {
+                    cols[ki * wpc + word] |= bit;
+                }
+            }
+        }
+        PackedMatrix { s, k, wpc, cols }
+    }
+
+    #[inline]
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The packed bit-vector of column `ki` (length `ceil(S/64)` words).
+    #[inline]
+    pub fn col(&self, ki: usize) -> &[u64] {
+        debug_assert!(ki < self.k);
+        &self.cols[ki * self.wpc..(ki + 1) * self.wpc]
+    }
+
+    /// Heap bytes held by the packed representation (64× smaller than
+    /// the staged f32 matrix, modulo per-column padding).
+    pub fn packed_bytes(&self) -> usize {
+        self.cols.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// All of a bnn_forward artifact's weights packed once — one
+/// [`PackedMatrix`] per layer (conv layers then FC), geometry taken from
+/// the manifest layer table.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    mats: Vec<PackedMatrix>,
+}
+
+impl PackedWeights {
+    /// Pack every layer's (S, K) weight matrix of `artifact`.
+    pub fn pack(artifact: &Artifact, weights: &[impl AsRef<[f32]>]) -> PackedWeights {
+        assert_eq!(weights.len(), artifact.layers.len(), "one weight matrix per layer");
+        let mats = weights
+            .iter()
+            .zip(&artifact.layers)
+            .map(|(w, dim)| PackedMatrix::pack(w.as_ref(), dim.s, dim.k))
+            .collect();
+        PackedWeights { mats }
+    }
+
+    pub fn layers(&self) -> &[PackedMatrix] {
+        &self.mats
+    }
+
+    /// Borrowed per-layer views, the shape [`forward_packed`] consumes.
+    pub fn refs(&self) -> Vec<&PackedMatrix> {
+        self.mats.iter().collect()
+    }
+}
+
+/// Reused packed buffers for [`forward_packed_with`]: one im2col row and
+/// two ping-pong feature maps. Holding one `Scratch` per worker/frame
+/// loop makes the packed hot path allocation-free after warmup (gated in
+/// `rust/benches/bench_functional.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    row: PackedBits,
+    map: PackedBits,
+    next: PackedBits,
+}
+
+/// Fill `row` with the packed im2col window for output position
+/// (`oi`, `oj`): python layout `(ki·KW + kj)·C + c`, SAME zero padding
+/// (out-of-bounds bits stay zero in the cleared buffer), given stride.
+/// Each in-bounds kernel position contributes one contiguous C-bit run,
+/// blitted word-wise from the packed map.
+fn fill_packed_row(
+    map: &PackedBits,
+    hw: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    pos: (usize, usize),
+    row: &mut PackedBits,
+) {
+    let (oi, oj) = pos;
+    row.clear_resize(kernel * kernel * c);
+    let pad = (kernel - 1) / 2;
+    for ki in 0..kernel {
+        let i = (oi * stride + ki) as isize - pad as isize;
+        if i < 0 || i >= hw as isize {
+            continue;
+        }
+        for kj in 0..kernel {
+            let j = (oj * stride + kj) as isize - pad as isize;
+            if j < 0 || j >= hw as isize {
+                continue;
+            }
+            copy_bits(
+                map.words(),
+                (i as usize * hw + j as usize) * c,
+                row.words_mut(),
+                (ki * kernel + kj) * c,
+                c,
+            );
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool of a packed binary map: max over {0,1} is OR,
+/// computed as word-wise OR of the four window positions' channel runs.
+fn maxpool2_packed(map: &PackedBits, hw: usize, c: usize, out: &mut PackedBits) {
+    assert_eq!(hw % 2, 0, "pooling needs even hw");
+    let out_hw = hw / 2;
+    out.clear_resize(out_hw * out_hw * c);
+    for i in 0..out_hw {
+        for j in 0..out_hw {
+            let mut ch = 0;
+            while ch < c {
+                let n = (c - ch).min(WORD_BITS);
+                let mut v = 0u64;
+                for (di, dj) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let src = ((2 * i + di) * hw + (2 * j + dj)) * c + ch;
+                    v |= read_bits(map.words(), src, n);
+                }
+                or_bits(out.words_mut(), (i * out_hw + j) * c + ch, n, v);
+                ch += n;
+            }
+        }
+    }
+}
+
+/// Bit-packed full forward pass: identical layer chain to
+/// [`super::bnn::forward`] (conv layers then FC, pooling inferred from
+/// the geometry chain), computed as XNOR + `count_ones` over `u64` lanes.
+/// Allocates its own scratch; hot loops should hold a [`Scratch`] and
+/// call [`forward_packed_with`].
+pub fn forward_packed(
+    artifact: &Artifact,
+    x: &[f32],
+    weights: &[&PackedMatrix],
+) -> Vec<f32> {
+    let mut scratch = Scratch::default();
+    forward_packed_with(artifact, x, weights, &mut scratch)
+}
+
+/// [`forward_packed`] with caller-owned scratch buffers (no per-frame
+/// allocation beyond the returned logits).
+pub fn forward_packed_with(
+    artifact: &Artifact,
+    x: &[f32],
+    weights: &[&PackedMatrix],
+    scratch: &mut Scratch,
+) -> Vec<f32> {
+    let input_hw = artifact.input_hw.expect("bnn artifact has input_hw");
+    let input_c = artifact.input_channels.expect("input_channels");
+    assert_eq!(x.len(), input_hw * input_hw * input_c);
+    assert_eq!(weights.len(), artifact.layers.len());
+
+    let Scratch { row, map, next } = scratch;
+
+    // Binarize the real-valued input straight into packed form (Eq. 1).
+    map.clear_resize(x.len());
+    for (i, &v) in x.iter().enumerate() {
+        if v >= 0.0 {
+            map.set(i);
+        }
+    }
+    let mut hw = input_hw;
+    let mut c = input_c;
+
+    let conv_layers: Vec<&LayerDim> =
+        artifact.layers.iter().filter(|l| l.kind == "conv").collect();
+    for (li, dim) in conv_layers.iter().enumerate() {
+        let pm = weights[li];
+        assert_eq!(pm.s(), dim.s, "layer {} packed weight S", li);
+        assert_eq!(pm.k(), dim.k, "layer {} packed weight K", li);
+        // SAME-padded stride-1 3×3 conv: one output position per input
+        // position (the same geometry `forward` asserts via im2col).
+        assert_eq!(hw * hw, dim.h, "layer {} H", li);
+        next.clear_resize(dim.h * dim.k);
+        for oi in 0..hw {
+            for oj in 0..hw {
+                fill_packed_row(map, hw, c, 3, 1, (oi, oj), row);
+                let r = oi * hw + oj;
+                for k in 0..dim.k {
+                    let count = xnor_popcount_u64(row.words(), pm.col(k), dim.s);
+                    // Comparator activation `count > 0.5·S`, integer-exact.
+                    if 2 * count > dim.s as u64 {
+                        next.set(r * dim.k + k);
+                    }
+                }
+            }
+        }
+        std::mem::swap(map, next);
+        assert_eq!(dim.fmap_hw * dim.fmap_hw * dim.k, map.len(), "layer {} fmap", li);
+        hw = dim.fmap_hw;
+        c = dim.k;
+        // Pooling is inferred from the geometry chain exactly as in the
+        // f32 reference: pool whenever the next layer's input is half
+        // the current fmap.
+        let next_hw = if li + 1 < conv_layers.len() {
+            let nxt = conv_layers[li + 1];
+            (nxt.h as f64).sqrt() as usize
+        } else {
+            let fc = artifact.layers.last().expect("fc layer");
+            let hw2 = fc.s / dim.k;
+            (hw2 as f64).sqrt() as usize
+        };
+        if next_hw * 2 == hw {
+            maxpool2_packed(map, hw, c, next);
+            std::mem::swap(map, next);
+            hw = next_hw;
+        } else {
+            assert_eq!(next_hw, hw, "geometry chain broken at layer {}", li);
+        }
+    }
+
+    // Final FC: raw bitcount logits (no activation).
+    let fc = artifact.layers.last().expect("fc layer");
+    let pm = weights[weights.len() - 1];
+    assert_eq!(pm.s(), fc.s);
+    assert_eq!(pm.k(), fc.k);
+    assert_eq!(map.len(), fc.s, "flattened features");
+    (0..fc.k)
+        .map(|k| xnor_popcount_u64(map.words(), pm.col(k), fc.s) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrip_and_invariant() {
+        let xs = [0.0f32, 1.0, 1.0, 0.0, 1.0];
+        let p = pack01(&xs);
+        assert_eq!(p.len(), 5);
+        for (i, &v) in xs.iter().enumerate() {
+            assert_eq!(p.get(i), v > 0.5);
+        }
+        assert_eq!(p.count_ones(), 3);
+        // Spare bits of the last word stay zero.
+        assert_eq!(p.words()[0] >> 5, 0);
+    }
+
+    #[test]
+    fn pack_real_matches_binarize01_then_pack01() {
+        let mut rng = Rng::new(0xACE);
+        let xs: Vec<f32> = (0..200).map(|_| rng.f64() as f32 - 0.5).collect();
+        let direct = pack_real(&xs);
+        let via_f32 = pack01(&crate::functional::bnn::binarize01(&xs));
+        assert_eq!(direct, via_f32);
+    }
+
+    /// Scalar reference for the packed popcount.
+    fn xnor_ref(a: &[f32], b: &[f32]) -> u64 {
+        a.iter().zip(b).filter(|(x, y)| (**x > 0.5) == (**y > 0.5)).count() as u64
+    }
+
+    #[test]
+    fn xnor_popcount_tail_mask_edges() {
+        let mut rng = Rng::new(0x7A11);
+        // depth % 64 ∈ {0, 1, 63} plus the word-boundary edges themselves.
+        for len in [1usize, 63, 64, 65, 127, 128, 129, 191, 192, 513] {
+            let a = rng.bits(len);
+            let b = rng.bits(len);
+            let pa = pack01(&a);
+            let pb = pack01(&b);
+            assert_eq!(
+                xnor_popcount_u64(pa.words(), pb.words(), len),
+                xnor_ref(&a, &b),
+                "len {}",
+                len
+            );
+        }
+        assert_eq!(xnor_popcount_u64(&[], &[], 0), 0);
+    }
+
+    #[test]
+    fn xnor_popcount_ignores_spare_tail_bits() {
+        // Buffers whose spare bits DISAGREE must still count only len bits.
+        let len = 70;
+        let mut a = PackedBits::zeros(len);
+        let b = PackedBits::zeros(len);
+        for i in 0..len {
+            a.set(i);
+        }
+        // Corrupt a's spare tail bits (simulating a dirty scratch word).
+        a.words_mut()[1] |= !tail_mask(len);
+        assert_eq!(xnor_popcount_u64(a.words(), b.words(), len), 0);
+    }
+
+    #[test]
+    fn copy_bits_matches_per_bit_reference() {
+        let mut rng = Rng::new(0xB117);
+        for _ in 0..50 {
+            let n_src = 300;
+            let src_f = rng.bits(n_src);
+            let src = pack01(&src_f);
+            let src_off = (rng.f64() * 200.0) as usize;
+            let n = 1 + (rng.f64() * (n_src - src_off - 1).max(1) as f64) as usize;
+            let dst_off = (rng.f64() * 100.0) as usize;
+            let mut dst = PackedBits::zeros(dst_off + n + 64);
+            copy_bits(src.words(), src_off, dst.words_mut(), dst_off, n);
+            for i in 0..dst.len() {
+                let want = if i >= dst_off && i < dst_off + n {
+                    src.get(src_off + (i - dst_off))
+                } else {
+                    false
+                };
+                assert_eq!(dst.get(i), want, "bit {} (src_off {}, n {})", i, src_off, n);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matrix_columns_match_f32_layout() {
+        let (s, k) = (67, 5); // tail-mask depth
+        let mut rng = Rng::new(0x90);
+        let w = rng.bits(s * k);
+        let pm = PackedMatrix::pack(&w, s, k);
+        assert_eq!((pm.s(), pm.k()), (s, k));
+        for ki in 0..k {
+            let col = pm.col(ki);
+            for si in 0..s {
+                let bit = (col[si / 64] >> (si % 64)) & 1 != 0;
+                assert_eq!(bit, w[si * k + ki] > 0.5, "({}, {})", si, ki);
+            }
+        }
+        assert_eq!(pm.packed_bytes(), words_for(s) * k * 8);
+    }
+
+    #[test]
+    fn packed_maxpool_is_or() {
+        // 2×2 map, 3 channels: out bit = OR over the four positions.
+        let c = 3;
+        let mut map = PackedBits::zeros(4 * c);
+        map.set(c + 1); // position (0,1), channel 1
+        map.set(3 * c + 1); // position (1,1), channel 1
+        let mut out = PackedBits::zeros(0);
+        maxpool2_packed(&map, 2, c, &mut out);
+        assert_eq!(out.len(), c);
+        assert!(!out.get(0));
+        assert!(out.get(1));
+        assert!(!out.get(2));
+    }
+
+    #[test]
+    fn packed_im2col_row_matches_f32_im2col() {
+        use crate::functional::bnn::{im2col, FeatureMap};
+        let mut rng = Rng::new(0x1C01);
+        for (hw, c) in [(2usize, 1usize), (4, 3), (5, 7), (6, 64), (4, 65)] {
+            let data = rng.bits(hw * hw * c);
+            let fmap = FeatureMap::new(hw, c, data.clone());
+            let rows = im2col(&fmap, 3, 1);
+            let packed_map = pack01(&data);
+            let mut row = PackedBits::zeros(0);
+            for oi in 0..hw {
+                for oj in 0..hw {
+                    fill_packed_row(&packed_map, hw, c, 3, 1, (oi, oj), &mut row);
+                    let want = &rows[oi * hw + oj];
+                    assert_eq!(row.len(), want.len());
+                    for (i, &v) in want.iter().enumerate() {
+                        assert_eq!(
+                            row.get(i),
+                            v > 0.5,
+                            "hw {} c {} pos ({}, {}) bit {}",
+                            hw,
+                            c,
+                            oi,
+                            oj,
+                            i
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

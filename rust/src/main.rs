@@ -520,6 +520,15 @@ fn server_config_from_args(
             return Err(2);
         }
     }
+    // Functional engine: packed XNOR+popcount by default; empty keeps the
+    // environment-resolved default so OXBNN_FUNCTIONAL=f32 still works.
+    let functional = parsed.get("functional");
+    if !functional.is_empty() {
+        cfg.functional_mode = functional.parse().map_err(|e| {
+            eprintln!("error: {}", e);
+            2
+        })?;
+    }
     Ok(cfg)
 }
 
@@ -538,6 +547,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             "true",
             "true|false|event — pipelined-batch photonic reference (event: \
              transaction-level whole-frame event space)",
+        )
+        .opt(
+            "functional",
+            "",
+            "packed|f32 — sim-engine functional implementation (default: \
+             packed, or OXBNN_FUNCTIONAL)",
         );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -626,6 +641,12 @@ fn cmd_serve_http(args: &[String]) -> i32 {
         "true",
         "true|false|event — pipelined-batch photonic reference (event: \
          transaction-level whole-frame event space)",
+    )
+    .opt(
+        "functional",
+        "",
+        "packed|f32 — sim-engine functional implementation (default: \
+         packed, or OXBNN_FUNCTIONAL)",
     )
     .opt(
         "threads",
@@ -991,6 +1012,12 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
          transaction-level whole-frame event space)",
     )
     .opt(
+        "functional",
+        "",
+        "packed|f32 — sim-engine functional implementation (default: \
+         packed, or OXBNN_FUNCTIONAL)",
+    )
+    .opt(
         "http",
         "",
         "benchmark over HTTP instead of in-process: 'auto' boots a loopback \
@@ -1021,6 +1048,7 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
     let (max_batch, policy, queue_depth, replicas) =
         (cfg.max_batch, cfg.policy, cfg.queue_depth, cfg.replicas);
     let (accel_name, sim_backend) = (cfg.accelerator.name.clone(), cfg.sim_backend);
+    let functional = cfg.functional_mode;
     let server = match Server::start(cfg) {
         Ok(s) => std::sync::Arc::new(s),
         Err(e) => {
@@ -1031,8 +1059,8 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
     let input_len = server.input_len(&model).expect("model registered");
     println!(
         "serve-bench: model={} mode={} concurrency={} max_batch={} policy={} \
-         queue_depth={} replicas={}",
-        model, mode, concurrency, max_batch, policy, queue_depth, replicas
+         queue_depth={} replicas={} functional={}",
+        model, mode, concurrency, max_batch, policy, queue_depth, replicas, functional
     );
 
     let deadline = std::time::Instant::now()

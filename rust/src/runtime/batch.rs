@@ -20,11 +20,15 @@ use anyhow::{anyhow, Context, Result};
 
 use super::client::{DeviceTensor, Executable, HostTensor, Runtime};
 use super::manifest::Artifact;
+use crate::functional::FunctionalMode;
 
 /// Owns everything one serving worker needs to execute cut batches.
 pub struct BatchRunner {
     runtime: Runtime,
     artifact: Artifact,
+    /// Which functional implementation sim-engine dispatch uses (packed
+    /// XNOR + popcount by default; `OXBNN_FUNCTIONAL=f32` reverts).
+    mode: FunctionalMode,
     /// Weights staged on the device ONCE; the hot path only uploads the
     /// stacked input frames (EXPERIMENTS.md §Perf L3).
     weights: Vec<DeviceTensor>,
@@ -39,11 +43,23 @@ pub struct BatchRunner {
 
 impl BatchRunner {
     /// Stage `weight_bits` (one {0,1} tensor per weight argument) and
-    /// compile the base batch-1 executable.
+    /// compile the base batch-1 executable. The functional mode comes
+    /// from the environment (`OXBNN_FUNCTIONAL`); use
+    /// [`BatchRunner::with_mode`] to pin it explicitly.
     pub fn new(
         runtime: Runtime,
         artifact: Artifact,
         weight_bits: Vec<Vec<f32>>,
+    ) -> Result<BatchRunner> {
+        Self::with_mode(runtime, artifact, weight_bits, FunctionalMode::from_env())
+    }
+
+    /// [`BatchRunner::new`] with an explicit functional mode.
+    pub fn with_mode(
+        runtime: Runtime,
+        artifact: Artifact,
+        weight_bits: Vec<Vec<f32>>,
+        mode: FunctionalMode,
     ) -> Result<BatchRunner> {
         let weights = weight_bits
             .into_iter()
@@ -54,8 +70,21 @@ impl BatchRunner {
                 runtime.to_device(&host).context("weight upload")
             })
             .collect::<Result<Vec<_>>>()?;
+        // Pack weights into u64 lanes ONCE at staging time: every later
+        // dispatch reuses each tensor's cached packed view, so the hot
+        // path never re-reads the staged f32 weights.
+        if mode == FunctionalMode::Packed
+            && runtime.is_sim()
+            && artifact.kind == "bnn_forward"
+        {
+            for (tensor, dim) in weights.iter().zip(&artifact.layers) {
+                tensor
+                    .packed_matrix(dim.s, dim.k)
+                    .with_context(|| format!("packing {} weights", artifact.name))?;
+            }
+        }
         let base = runtime
-            .load_artifact(&artifact)
+            .load_artifact_batched_mode(&artifact, 1, mode)
             .with_context(|| format!("compiling {}", artifact.name))?;
         let compile_seconds = base.compile_seconds;
         let mut exes = BTreeMap::new();
@@ -63,6 +92,7 @@ impl BatchRunner {
         Ok(BatchRunner {
             runtime,
             artifact,
+            mode,
             weights,
             exes,
             batched_unsupported: false,
@@ -72,6 +102,18 @@ impl BatchRunner {
 
     pub fn artifact(&self) -> &Artifact {
         &self.artifact
+    }
+
+    /// The functional mode this runner's executables dispatch with.
+    pub fn mode(&self) -> FunctionalMode {
+        self.mode
+    }
+
+    /// How many weight tensors this runner's runtime has bit-packed
+    /// (once per staged tensor; a reload builds a fresh runner and packs
+    /// its own tensors exactly once).
+    pub fn weight_packs(&self) -> u64 {
+        self.runtime.weight_packs()
     }
 
     /// True when batches of `n > 1` frames execute as one invocation (vs
@@ -89,7 +131,9 @@ impl BatchRunner {
         if self.exes.contains_key(&batch) {
             return Ok(());
         }
-        let exe = self.runtime.load_artifact_batched(&self.artifact, batch)?;
+        let exe =
+            self.runtime
+                .load_artifact_batched_mode(&self.artifact, batch, self.mode)?;
         self.exes.insert(batch, exe);
         Ok(())
     }
@@ -170,5 +214,107 @@ impl BatchRunner {
             outputs.push(exe.run_device(&args)?.data);
         }
         Ok(outputs)
+    }
+}
+
+#[cfg(all(test, not(feature = "xla-runtime")))]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ArgSpec, LayerDim};
+    use crate::runtime::xla_stub::executable_invocations;
+    use crate::util::rng::Rng;
+
+    /// 4×4×3 input → conv (s = 27, k = 8, no pool) → fc (s = 128, k = 10).
+    fn bnn_artifact() -> Artifact {
+        Artifact {
+            name: "b".into(),
+            kind: "bnn_forward".into(),
+            file: std::path::PathBuf::from("<none>"),
+            args: vec![
+                ArgSpec { name: "x".into(), shape: vec![1, 4, 4, 3], dtype: "f32".into() },
+                ArgSpec { name: "w0".into(), shape: vec![27, 8], dtype: "f32".into() },
+                ArgSpec { name: "w1".into(), shape: vec![128, 10], dtype: "f32".into() },
+            ],
+            output_shape: vec![1, 10],
+            layers: vec![
+                LayerDim { kind: "conv".into(), h: 16, s: 27, k: 8, fmap_hw: 4 },
+                LayerDim { kind: "fc".into(), h: 1, s: 128, k: 10, fmap_hw: 1 },
+            ],
+            model: Some("t".into()),
+            input_hw: Some(4),
+            input_channels: Some(3),
+            num_classes: Some(10),
+            apply_activation: None,
+        }
+    }
+
+    fn weights(rng: &mut Rng) -> Vec<Vec<f32>> {
+        vec![rng.bits(27 * 8), rng.bits(128 * 10)]
+    }
+
+    fn runner(mode: FunctionalMode, seed: u64) -> BatchRunner {
+        let mut rng = Rng::new(seed);
+        BatchRunner::with_mode(
+            Runtime::cpu().unwrap(),
+            bnn_artifact(),
+            weights(&mut rng),
+            mode,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn staging_packs_once_and_dispatches_never_repack() {
+        let mut r = runner(FunctionalMode::Packed, 0x11);
+        // Both layers packed eagerly at staging time — before any run.
+        assert_eq!(r.weight_packs(), 2);
+        assert_eq!(r.mode(), FunctionalMode::Packed);
+        let mut rng = Rng::new(0x12);
+        let f1: Vec<f32> = (0..48).map(|_| rng.f64() as f32 - 0.5).collect();
+        let f2: Vec<f32> = (0..48).map(|_| rng.f64() as f32 - 0.5).collect();
+        let before = executable_invocations();
+        r.run(&[f1.as_slice()]).unwrap();
+        r.run(&[f1.as_slice(), f2.as_slice()]).unwrap();
+        // This runner issued (at least) two more invocations...
+        assert!(executable_invocations() >= before + 2);
+        // ...and none of them repacked a weight tensor.
+        assert_eq!(r.weight_packs(), 2);
+    }
+
+    #[test]
+    fn reload_repacks_exactly_once() {
+        let r1 = runner(FunctionalMode::Packed, 0x21);
+        assert_eq!(r1.weight_packs(), 2);
+        // A reload builds a fresh runtime + staged tensors (what the
+        // serving worker does): its meter counts one pack per layer, once.
+        let r2 = runner(FunctionalMode::Packed, 0x21);
+        assert_eq!(r2.weight_packs(), 2);
+        drop(r2);
+        assert_eq!(r1.weight_packs(), 2);
+    }
+
+    #[test]
+    fn f32_mode_never_packs() {
+        let mut r = runner(FunctionalMode::F32, 0x31);
+        assert_eq!(r.weight_packs(), 0);
+        let frame = vec![0.25f32; 48];
+        r.run(&[frame.as_slice()]).unwrap();
+        assert_eq!(r.weight_packs(), 0);
+    }
+
+    #[test]
+    fn packed_and_f32_runners_agree_across_batch_sizes() {
+        let mut packed = runner(FunctionalMode::Packed, 0x41);
+        let mut reference = runner(FunctionalMode::F32, 0x41);
+        let mut rng = Rng::new(0x42);
+        for n in [1usize, 2, 5] {
+            let frames: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..48).map(|_| rng.f64() as f32 - 0.5).collect())
+                .collect();
+            let refs: Vec<&[f32]> = frames.iter().map(|f| f.as_slice()).collect();
+            let a = packed.run(&refs).unwrap();
+            let b = reference.run(&refs).unwrap();
+            assert_eq!(a, b, "batch {}", n);
+        }
     }
 }

@@ -28,6 +28,8 @@
 //! [`super::xla_stub::executable_invocations`]).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -40,6 +42,9 @@ use super::xla_stub as xla;
 
 use super::manifest::Artifact;
 use super::xla_stub::record_invocation;
+use crate::functional::packed::{self, PackedMatrix};
+use crate::functional::FunctionalMode;
+use crate::util::threadpool::{host_threads, parallel_map};
 
 /// Fixed per-dispatch overhead charged by the sim engine, emulating the
 /// host-side launch cost (buffer hand-off, executable dispatch, result
@@ -94,6 +99,12 @@ enum RuntimeImpl {
 /// Wraps the process-wide PJRT CPU client (or the offline sim engine).
 pub struct Runtime {
     imp: RuntimeImpl,
+    /// Pack meter: how many weight tensors uploaded through this runtime
+    /// have been bit-packed. Reloading an artifact builds a fresh
+    /// runtime + tensors, so the meter makes "a reload repacks exactly
+    /// once" deterministically assertable (unlike the global invocation
+    /// counter, which other test threads also bump).
+    packs: Arc<AtomicU64>,
 }
 
 #[allow(dead_code)]
@@ -107,6 +118,42 @@ enum TensorRepr {
 pub struct DeviceTensor {
     repr: TensorRepr,
     pub shape: Vec<usize>,
+    /// Bit-packed view of this tensor as a (S, K) weight matrix, built at
+    /// most once per tensor (first use or eager staging) and shared by
+    /// every later dispatch. Caching on the tensor itself — rather than
+    /// keying an external map by data pointer — means a reloaded artifact
+    /// (new tensors) naturally repacks exactly once and a dropped tensor
+    /// can never alias a stale entry.
+    packed: OnceLock<Arc<PackedMatrix>>,
+    /// The owning runtime's pack meter.
+    packs: Arc<AtomicU64>,
+}
+
+impl DeviceTensor {
+    /// The packed (S, K) weight-matrix view of this tensor, built on
+    /// first use and cached for the tensor's lifetime (sim engine only).
+    pub fn packed_matrix(&self, s: usize, k: usize) -> Result<Arc<PackedMatrix>> {
+        let data = match &self.repr {
+            TensorRepr::Host(data) => data,
+            TensorRepr::Pjrt(_) => bail!(
+                "packed weights are a sim-engine cache; PJRT buffers stay on device"
+            ),
+        };
+        let m = self.packed.get_or_init(|| {
+            self.packs.fetch_add(1, Ordering::Relaxed);
+            Arc::new(PackedMatrix::pack(data, s, k))
+        });
+        if (m.s(), m.k()) != (s, k) {
+            bail!(
+                "tensor packed as ({}, {}) cannot be reused as ({}, {})",
+                m.s(),
+                m.k(),
+                s,
+                k
+            );
+        }
+        Ok(Arc::clone(m))
+    }
 }
 
 #[allow(dead_code)]
@@ -128,6 +175,9 @@ pub struct Executable {
     pub batch: usize,
     /// Wall-clock spent in compile (for EXPERIMENTS.md §Perf accounting).
     pub compile_seconds: f64,
+    /// Which functional implementation the sim engine dispatches
+    /// `bnn_forward` artifacts to (ignored by PJRT and `xnor_gemm`).
+    mode: FunctionalMode,
 }
 
 impl Runtime {
@@ -136,19 +186,28 @@ impl Runtime {
     #[cfg(feature = "xla-runtime")]
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { imp: RuntimeImpl::Pjrt(client) })
+        Ok(Runtime {
+            imp: RuntimeImpl::Pjrt(client),
+            packs: Arc::new(AtomicU64::new(0)),
+        })
     }
 
     /// Create the CPU PJRT client (with `--features xla-runtime`), or the
     /// offline sim engine otherwise.
     #[cfg(not(feature = "xla-runtime"))]
     pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { imp: RuntimeImpl::Sim })
+        Ok(Runtime { imp: RuntimeImpl::Sim, packs: Arc::new(AtomicU64::new(0)) })
     }
 
     /// True when this runtime is the offline functional sim engine.
     pub fn is_sim(&self) -> bool {
         matches!(self.imp, RuntimeImpl::Sim)
+    }
+
+    /// How many weight tensors uploaded through this runtime have been
+    /// bit-packed (each tensor packs at most once, ever).
+    pub fn weight_packs(&self) -> u64 {
+        self.packs.load(Ordering::Relaxed)
     }
 
     pub fn platform(&self) -> String {
@@ -199,6 +258,7 @@ impl Runtime {
             output_shape,
             batch: 1,
             compile_seconds: t0.elapsed().as_secs_f64(),
+            mode: FunctionalMode::default(),
         })
     }
 
@@ -212,7 +272,12 @@ impl Runtime {
             ),
             RuntimeImpl::Sim => TensorRepr::Host(t.data.clone()),
         };
-        Ok(DeviceTensor { repr, shape: t.shape.clone() })
+        Ok(DeviceTensor {
+            repr,
+            shape: t.shape.clone(),
+            packed: OnceLock::new(),
+            packs: Arc::clone(&self.packs),
+        })
     }
 
     /// Load an artifact described by the manifest (batch = 1).
@@ -227,11 +292,25 @@ impl Runtime {
     ///
     /// The PJRT engine compiles fixed-shape AOT artifacts, so it only
     /// supports `batch == 1` today (callers fall back to per-frame
-    /// dispatch); the sim engine supports any batch.
+    /// dispatch); the sim engine supports any batch. The functional mode
+    /// comes from the environment (`OXBNN_FUNCTIONAL`); callers that must
+    /// control it explicitly use [`Runtime::load_artifact_batched_mode`].
     pub fn load_artifact_batched(
         &self,
         artifact: &Artifact,
         batch: usize,
+    ) -> Result<Executable> {
+        self.load_artifact_batched_mode(artifact, batch, FunctionalMode::from_env())
+    }
+
+    /// [`Runtime::load_artifact_batched`] with an explicit functional
+    /// mode for the sim engine's `bnn_forward` dispatch (packed XNOR +
+    /// popcount vs the f32 reference).
+    pub fn load_artifact_batched_mode(
+        &self,
+        artifact: &Artifact,
+        batch: usize,
+        mode: FunctionalMode,
     ) -> Result<Executable> {
         if batch == 0 {
             bail!("{}: batch must be >= 1", artifact.name);
@@ -281,29 +360,90 @@ impl Runtime {
                 output_shape,
                 batch,
                 compile_seconds: 0.0,
+                mode,
             }),
         }
     }
 }
 
+/// Below this much per-frame GEMM work (Σ H·S·K over layers), batched
+/// dispatch stays sequential: scoped-thread spawn + hand-off costs more
+/// than the frames themselves for the tiny synthetic serving models.
+const SIM_PARALLEL_MIN_OPS: usize = 1_000_000;
+
+/// Split `batch` stacked frames out of argument 0.
+fn sim_frames<'a>(artifact: &Artifact, batch: usize, arg0: &'a [f32]) -> Vec<&'a [f32]> {
+    let frame_len = artifact.args[0].element_count();
+    (0..batch).map(|f| &arg0[f * frame_len..(f + 1) * frame_len]).collect()
+}
+
+/// Per-frame GEMM work of one forward pass (decides batch fan-out).
+fn sim_frame_ops(artifact: &Artifact) -> usize {
+    artifact.layers.iter().map(|l| l.h * l.s * l.k).sum()
+}
+
+/// Evaluate a `bnn_forward` artifact on the packed XNOR-popcount path:
+/// weights arrive already packed (from the per-tensor staging cache or a
+/// transient pack), frames fan across the threadpool when the batch is
+/// worth it.
+fn sim_execute_bnn_packed(
+    artifact: &Artifact,
+    batch: usize,
+    arg0: &[f32],
+    weights: &[&PackedMatrix],
+) -> Vec<f32> {
+    // Charge the per-invocation dispatch overhead once per call (see
+    // SIM_DISPATCH_OVERHEAD) so invocation-count effects are observable.
+    std::thread::sleep(SIM_DISPATCH_OVERHEAD);
+    let frames = sim_frames(artifact, batch, arg0);
+    let outs: Vec<Vec<f32>> = if batch > 1 && sim_frame_ops(artifact) >= SIM_PARALLEL_MIN_OPS {
+        parallel_map(frames, host_threads(), |x| {
+            packed::forward_packed(artifact, x, weights)
+        })
+    } else {
+        let mut scratch = packed::Scratch::default();
+        frames
+            .into_iter()
+            .map(|x| packed::forward_packed_with(artifact, x, weights, &mut scratch))
+            .collect()
+    };
+    outs.into_iter().flatten().collect()
+}
+
 /// Evaluate a sim-engine program: `args[i]` is the raw data of positional
-/// argument i (argument 0 carries `batch` stacked frames).
+/// argument i (argument 0 carries `batch` stacked frames). `bnn_forward`
+/// artifacts run the f32 reference here; the packed default goes through
+/// [`sim_execute_bnn_packed`].
 fn sim_execute(artifact: &Artifact, batch: usize, args: &[&[f32]]) -> Result<Vec<f32>> {
     // Charge the per-invocation dispatch overhead once per call (see
     // SIM_DISPATCH_OVERHEAD) so invocation-count effects are observable.
     std::thread::sleep(SIM_DISPATCH_OVERHEAD);
     match artifact.kind.as_str() {
         "bnn_forward" => {
-            let frame_len = artifact.args[0].element_count();
-            let classes: usize = artifact.output_shape.iter().product();
-            let mut out = Vec::with_capacity(batch * classes);
-            for f in 0..batch {
-                let x = &args[0][f * frame_len..(f + 1) * frame_len];
-                // Weight slices are borrowed straight from the staged
-                // device tensors — no per-dispatch copies.
-                out.extend(crate::functional::bnn::forward(artifact, x, &args[1..]));
-            }
-            Ok(out)
+            // Weight slices are borrowed straight from the staged device
+            // tensors — no per-dispatch copies.
+            let weights = &args[1..];
+            let frames = sim_frames(artifact, batch, args[0]);
+            let outs: Vec<Vec<f32>> =
+                if batch > 1 && sim_frame_ops(artifact) >= SIM_PARALLEL_MIN_OPS {
+                    parallel_map(frames, host_threads(), |x| {
+                        crate::functional::bnn::forward(artifact, x, weights)
+                    })
+                } else {
+                    let mut scratch = crate::functional::bnn::Scratch::default();
+                    frames
+                        .into_iter()
+                        .map(|x| {
+                            crate::functional::bnn::forward_with(
+                                artifact,
+                                x,
+                                weights,
+                                &mut scratch,
+                            )
+                        })
+                        .collect()
+                };
+            Ok(outs.into_iter().flatten().collect())
         }
         "xnor_gemm" => {
             // Same arithmetic the Pallas kernel lowers to:
@@ -344,6 +484,12 @@ fn sim_execute(artifact: &Artifact, batch: usize, args: &[&[f32]]) -> Result<Vec
 }
 
 impl Executable {
+    /// Which functional implementation sim-engine `bnn_forward` dispatch
+    /// uses.
+    pub fn mode(&self) -> FunctionalMode {
+        self.mode
+    }
+
     fn check_args(&self, shapes: &[&Vec<usize>]) -> Result<()> {
         if shapes.len() != self.arg_shapes.len() {
             bail!(
@@ -389,7 +535,21 @@ impl Executable {
         let data = match &self.imp {
             ExecImpl::Sim(artifact) => {
                 let raw: Vec<&[f32]> = args.iter().map(|a| a.data.as_slice()).collect();
-                sim_execute(artifact, self.batch, &raw)?
+                if self.mode == FunctionalMode::Packed && artifact.kind == "bnn_forward" {
+                    // Host-tensor path has no staged tensors to cache on:
+                    // pack transiently (O(S·K) bit writes, negligible next
+                    // to the O(H·S·K) forward pass it feeds).
+                    let mats: Vec<PackedMatrix> = artifact
+                        .layers
+                        .iter()
+                        .zip(&raw[1..])
+                        .map(|(dim, w)| PackedMatrix::pack(w, dim.s, dim.k))
+                        .collect();
+                    let refs: Vec<&PackedMatrix> = mats.iter().collect();
+                    sim_execute_bnn_packed(artifact, self.batch, raw[0], &refs)
+                } else {
+                    sim_execute(artifact, self.batch, &raw)?
+                }
             }
             ExecImpl::Pjrt(exe) => {
                 let mut literals = Vec::with_capacity(args.len());
@@ -434,7 +594,19 @@ impl Executable {
                         )),
                     })
                     .collect::<Result<Vec<_>>>()?;
-                sim_execute(artifact, self.batch, &raw)?
+                if self.mode == FunctionalMode::Packed && artifact.kind == "bnn_forward" {
+                    // Staged weights: each tensor's packed view is built
+                    // once (at staging or first dispatch) and reused here.
+                    let mats = args[1..]
+                        .iter()
+                        .zip(&artifact.layers)
+                        .map(|(t, dim)| t.packed_matrix(dim.s, dim.k))
+                        .collect::<Result<Vec<_>>>()?;
+                    let refs: Vec<&PackedMatrix> = mats.iter().map(|m| m.as_ref()).collect();
+                    sim_execute_bnn_packed(artifact, self.batch, raw[0], &refs)
+                } else {
+                    sim_execute(artifact, self.batch, &raw)?
+                }
             }
             ExecImpl::Pjrt(exe) => {
                 let buffers: Vec<&xla::PjRtBuffer> = args
@@ -484,7 +656,8 @@ mod tests {
     #[cfg(not(feature = "xla-runtime"))]
     mod sim_engine {
         use super::*;
-        use crate::runtime::manifest::{ArgSpec, Artifact};
+        use crate::functional::FunctionalMode;
+        use crate::runtime::manifest::{ArgSpec, Artifact, LayerDim};
 
         fn gemm_artifact(h: usize, s: usize, k: usize, apply: bool) -> Artifact {
             Artifact {
@@ -560,6 +733,63 @@ mod tests {
             let rt = Runtime::cpu().unwrap();
             assert!(rt.load_artifact_batched(&art, 2).is_err());
             assert!(rt.load_artifact_batched(&art, 0).is_err());
+        }
+
+        /// 4×4×3 input → conv (s = 27, k = 8, no pool) → fc (s = 128,
+        /// k = 10): small enough for debug-build tests, geometry-complete.
+        fn bnn_artifact() -> Artifact {
+            Artifact {
+                name: "b".into(),
+                kind: "bnn_forward".into(),
+                file: std::path::PathBuf::from("<none>"),
+                args: vec![
+                    ArgSpec {
+                        name: "x".into(),
+                        shape: vec![1, 4, 4, 3],
+                        dtype: "f32".into(),
+                    },
+                    ArgSpec { name: "w0".into(), shape: vec![27, 8], dtype: "f32".into() },
+                    ArgSpec {
+                        name: "w1".into(),
+                        shape: vec![128, 10],
+                        dtype: "f32".into(),
+                    },
+                ],
+                output_shape: vec![1, 10],
+                layers: vec![
+                    LayerDim { kind: "conv".into(), h: 16, s: 27, k: 8, fmap_hw: 4 },
+                    LayerDim { kind: "fc".into(), h: 1, s: 128, k: 10, fmap_hw: 1 },
+                ],
+                model: Some("t".into()),
+                input_hw: Some(4),
+                input_channels: Some(3),
+                num_classes: Some(10),
+                apply_activation: None,
+            }
+        }
+
+        #[test]
+        fn bnn_packed_and_f32_modes_agree() {
+            let art = bnn_artifact();
+            let rt = Runtime::cpu().unwrap();
+            let packed_exe = rt
+                .load_artifact_batched_mode(&art, 2, FunctionalMode::Packed)
+                .unwrap();
+            let f32_exe = rt
+                .load_artifact_batched_mode(&art, 2, FunctionalMode::F32)
+                .unwrap();
+            assert_eq!(packed_exe.mode(), FunctionalMode::Packed);
+            assert_eq!(f32_exe.mode(), FunctionalMode::F32);
+            let mut rng = crate::util::rng::Rng::new(0xB2);
+            let x: Vec<f32> = (0..2 * 48).map(|_| rng.f64() as f32 - 0.5).collect();
+            let args = [
+                HostTensor::new(vec![2, 4, 4, 3], x).unwrap(),
+                HostTensor::new(vec![27, 8], rng.bits(27 * 8)).unwrap(),
+                HostTensor::new(vec![128, 10], rng.bits(128 * 10)).unwrap(),
+            ];
+            let a = packed_exe.run(&args).unwrap();
+            let b = f32_exe.run(&args).unwrap();
+            assert_eq!(a, b);
         }
     }
 }

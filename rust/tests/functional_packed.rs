@@ -1,0 +1,255 @@
+//! Differential suite for the bit-packed functional engine: `forward_packed`
+//! must be BIT-exact against the f32 reference `forward` — same logits,
+//! f32-equal, no tolerance — over randomized geometries, tail-mask edge
+//! depths, and the five zoo-named model geometries the serving stack uses.
+//!
+//! The f32 path is the obviously-correct reference (scalar compares over
+//! {0,1} floats); the packed path is the production engine (XNOR +
+//! `count_ones` over `u64` lanes). Any divergence — a wrong tail mask, a
+//! mis-blitted im2col run, an off-by-one in the comparator — shows up as a
+//! logits mismatch here.
+
+use oxbnn::functional::{bnn, packed};
+use oxbnn::functional::{forward, forward_packed, PackedMatrix, PackedWeights};
+use oxbnn::runtime::{ArgSpec, Artifact, LayerDim};
+use oxbnn::util::quickcheck::{forall, prop_assert, prop_assert_eq, Config};
+use oxbnn::util::rng::Rng;
+
+/// Build a `bnn_forward` artifact the functional engine can run: a chain
+/// of SAME-padded stride-1 3×3 convs (each `(out_channels, pool_after)`)
+/// followed by one FC layer. The geometry conventions match the serving
+/// manifests: conv `h = hw²`, `s = 9·c_in`, `fmap_hw = hw` (pre-pool);
+/// fc `{h: 1, s: hw²·c_final, k: classes, fmap_hw: 1}`.
+fn artifact_for(
+    name: &str,
+    input_hw: usize,
+    input_c: usize,
+    convs: &[(usize, bool)],
+    classes: usize,
+) -> Artifact {
+    let mut args = vec![ArgSpec {
+        name: "x".into(),
+        shape: vec![1, input_hw, input_hw, input_c],
+        dtype: "f32".into(),
+    }];
+    let mut layers = Vec::new();
+    let (mut hw, mut c) = (input_hw, input_c);
+    for (li, &(k, pool)) in convs.iter().enumerate() {
+        let s = 9 * c;
+        layers.push(LayerDim {
+            kind: "conv".into(),
+            h: hw * hw,
+            s,
+            k,
+            fmap_hw: hw,
+        });
+        args.push(ArgSpec {
+            name: format!("w{}", li),
+            shape: vec![s, k],
+            dtype: "f32".into(),
+        });
+        c = k;
+        if pool {
+            assert_eq!(hw % 2, 0, "pooling needs even hw");
+            hw /= 2;
+        }
+    }
+    let fc_s = hw * hw * c;
+    layers.push(LayerDim { kind: "fc".into(), h: 1, s: fc_s, k: classes, fmap_hw: 1 });
+    args.push(ArgSpec {
+        name: format!("w{}", convs.len()),
+        shape: vec![fc_s, classes],
+        dtype: "f32".into(),
+    });
+    Artifact {
+        name: name.into(),
+        kind: "bnn_forward".into(),
+        file: std::path::PathBuf::from("<synthetic>"),
+        args,
+        output_shape: vec![1, classes],
+        layers,
+        model: Some(name.into()),
+        input_hw: Some(input_hw),
+        input_channels: Some(input_c),
+        num_classes: Some(classes),
+        apply_activation: None,
+    }
+}
+
+/// Random {0,1} weights, one matrix per layer.
+fn random_weights(artifact: &Artifact, rng: &mut Rng) -> Vec<Vec<f32>> {
+    artifact.layers.iter().map(|l| rng.bits(l.s * l.k)).collect()
+}
+
+/// Random real-valued input frame in [-0.5, 0.5) (exercises Eq. 1
+/// binarization, not just pre-binarized data).
+fn random_input(artifact: &Artifact, rng: &mut Rng) -> Vec<f32> {
+    let n = artifact.args[0].element_count();
+    (0..n).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+/// Run both engines on the same frame and assert bit-exact logits.
+/// Returns the logits for further shape checks.
+fn assert_bit_exact(artifact: &Artifact, x: &[f32], weights: &[Vec<f32>]) -> Vec<f32> {
+    let reference = forward(artifact, x, weights);
+    let pw = PackedWeights::pack(artifact, weights);
+    let got = forward_packed(artifact, x, &pw.refs());
+    assert_eq!(
+        reference, got,
+        "{}: packed logits diverge from f32 reference",
+        artifact.name
+    );
+    got
+}
+
+/// The ISSUE's headline invariant: over random geometries (spatial size,
+/// channel widths biased toward depth % 64 ∈ {0, 1, 63}, conv count,
+/// pooling placement), packed and f32 forward passes agree bit-for-bit.
+/// Scratch buffers are REUSED across cases on both sides, so stale state
+/// leaking between frames of different shapes would also fail here.
+#[test]
+fn prop_random_geometries_bit_exact() {
+    let mut f32_scratch = bnn::Scratch::default();
+    let mut packed_scratch = packed::Scratch::default();
+    forall(Config::default().cases(40).seed(0xB17_EAC7), |g| {
+        // Even spatial sizes so pooling is always legal.
+        let input_hw = *g.choose(&[2usize, 4, 6, 8]);
+        // Channel widths that push conv depth s = 9c and fc depth hw²·c
+        // across word boundaries: c = 7 → s = 63; c = 64 → s = 576 (9
+        // words exact); c = 65 → s = 585 (% 64 == 9, tail word).
+        let input_c = *g.choose(&[1usize, 3, 7, 8, 64, 65]);
+        let depth = g.usize_in(1, 3);
+        let convs: Vec<(usize, bool)> = (0..depth)
+            .map(|li| {
+                let k = *g.choose(&[1usize, 5, 7, 8, 16, 64]);
+                // Pool at most once (hw ≥ 2 must survive), early layer only.
+                (k, li == 0 && input_hw >= 4 && g.bool())
+            })
+            .collect();
+        let classes = g.usize_in(2, 12);
+        let artifact = artifact_for("prop", input_hw, input_c, &convs, classes);
+
+        let mut rng = Rng::new(0x5EED ^ (input_hw * 31 + input_c) as u64);
+        let weights = random_weights(&artifact, &mut rng);
+        let x = random_input(&artifact, &mut rng);
+
+        let reference = bnn::forward_with(&artifact, &x, &weights, &mut f32_scratch);
+        let pw = PackedWeights::pack(&artifact, &weights);
+        let got =
+            packed::forward_packed_with(&artifact, &x, &pw.refs(), &mut packed_scratch);
+        prop_assert_eq(reference.len(), classes)?;
+        prop_assert(
+            got == reference,
+            &format!(
+                "hw {} c {} convs {:?}: packed {:?} != f32 {:?}",
+                input_hw, input_c, convs, got, reference
+            ),
+        )
+    });
+}
+
+/// End-to-end tail-mask edges: FC-only artifacts whose single VDP depth is
+/// just below, exactly at, and just above one packed word (63 / 64 / 65).
+#[test]
+fn tail_mask_depths_end_to_end() {
+    for depth in [63usize, 64, 65] {
+        let artifact = artifact_for("fc_only", 1, depth, &[], 10);
+        assert_eq!(artifact.layers.last().unwrap().s, depth);
+        let mut rng = Rng::new(0xDEB7 + depth as u64);
+        let weights = random_weights(&artifact, &mut rng);
+        let x = random_input(&artifact, &mut rng);
+        let logits = assert_bit_exact(&artifact, &x, &weights);
+        assert_eq!(logits.len(), 10);
+        // FC logits are raw bitcounts: integers within [0, depth].
+        for &z in &logits {
+            assert_eq!(z.fract(), 0.0, "depth {}: logit {} not integral", depth, z);
+            assert!(z >= 0.0 && z <= depth as f32, "depth {}: logit {}", depth, z);
+        }
+    }
+}
+
+/// Conv-path tail mask: 7 input channels give im2col rows of depth
+/// s = 63 — one bit short of a word — through a pooled two-conv chain.
+#[test]
+fn conv_tail_depth_63_bit_exact() {
+    let artifact = artifact_for("conv63", 4, 7, &[(8, true), (5, false)], 10);
+    assert_eq!(artifact.layers[0].s, 63);
+    let mut rng = Rng::new(0xC063);
+    let weights = random_weights(&artifact, &mut rng);
+    for _ in 0..3 {
+        let x = random_input(&artifact, &mut rng);
+        assert_bit_exact(&artifact, &x, &weights);
+    }
+}
+
+/// The five zoo-named model geometries, shrunk to functional-engine scale
+/// (the engine runs kernel-3/stride-1/pool chains; the real zoo layers'
+/// strides and kernel mixes live in the analytic model, not here). Names
+/// match the serving manifests ("tiny", "small") and the paper's
+/// evaluation set; each runs packed-vs-f32 bit-exact on several frames.
+#[test]
+fn zoo_models_bit_exact() {
+    let zoo: [(&str, usize, usize, &[(usize, bool)]); 5] = [
+        ("tiny", 4, 3, &[(8, false)]),
+        ("small", 8, 3, &[(16, true), (16, false)]),
+        ("vgg_small", 8, 3, &[(32, false), (32, true), (64, false), (64, true)]),
+        ("resnet18", 8, 3, &[(16, false), (16, false), (32, true), (32, false)]),
+        ("mobilenet_v2", 8, 3, &[(24, true), (48, false), (48, true)]),
+    ];
+    for (name, hw, c, convs) in zoo {
+        let artifact = artifact_for(name, hw, c, convs, 10);
+        let mut rng = Rng::new(0x200 ^ name.len() as u64);
+        let weights = random_weights(&artifact, &mut rng);
+        for frame in 0..2 {
+            let x = random_input(&artifact, &mut rng);
+            let logits = assert_bit_exact(&artifact, &x, &weights);
+            assert_eq!(logits.len(), 10, "{} frame {}", name, frame);
+        }
+    }
+}
+
+/// `PackedWeights::pack` is exactly per-layer `PackedMatrix::pack` — the
+/// convenience bundle must not reorder or re-shape anything.
+#[test]
+fn packed_weights_bundle_matches_per_layer_packing() {
+    let artifact = artifact_for("bundle", 4, 3, &[(8, true), (16, false)], 10);
+    let mut rng = Rng::new(0xB0D1);
+    let weights = random_weights(&artifact, &mut rng);
+    let bundle = PackedWeights::pack(&artifact, &weights);
+    let manual: Vec<PackedMatrix> = weights
+        .iter()
+        .zip(&artifact.layers)
+        .map(|(w, dim)| PackedMatrix::pack(w, dim.s, dim.k))
+        .collect();
+    assert_eq!(bundle.layers().len(), manual.len());
+    let x = random_input(&artifact, &mut rng);
+    let via_bundle = forward_packed(&artifact, &x, &bundle.refs());
+    let refs: Vec<&PackedMatrix> = manual.iter().collect();
+    let via_manual = forward_packed(&artifact, &x, &refs);
+    assert_eq!(via_bundle, via_manual);
+}
+
+/// A reused `Scratch` carried across frames AND geometries yields the
+/// same logits as a fresh one per call (the allocation-free serving
+/// contract: no state may leak between frames).
+#[test]
+fn scratch_reuse_is_stateless() {
+    let artifacts = [
+        artifact_for("a", 4, 7, &[(8, false)], 10),
+        artifact_for("b", 8, 3, &[(16, true), (8, false)], 4),
+        artifact_for("c", 2, 65, &[(5, false)], 7),
+    ];
+    let mut scratch = packed::Scratch::default();
+    let mut rng = Rng::new(0x5C7A);
+    for artifact in &artifacts {
+        let weights = random_weights(artifact, &mut rng);
+        let pw = PackedWeights::pack(artifact, &weights);
+        for _ in 0..2 {
+            let x = random_input(artifact, &mut rng);
+            let fresh = forward_packed(artifact, &x, &pw.refs());
+            let reused =
+                packed::forward_packed_with(artifact, &x, &pw.refs(), &mut scratch);
+            assert_eq!(fresh, reused, "{}: scratch reuse changed logits", artifact.name);
+        }
+    }
+}
