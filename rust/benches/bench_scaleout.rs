@@ -1,0 +1,192 @@
+//! Multi-chip scale-out bench (ISSUE 9): K = 1/2/4 batched FPS for a
+//! VDP-split group on the paper's flagship pairing (vgg_small on
+//! OXBNN_50), inter-chip link occupancy on the transaction-level event
+//! path, and the serving rate of a K-chip group staged as ONE
+//! high-throughput replica. The acceptance gates mirror the CLI
+//! criterion: 4 chips strictly beat 1 on batched FPS with identical
+//! per-layer work multisets. Emits `BENCH_scaleout.json` (path
+//! overridable via `OXBNN_BENCH_OUT`) so CI can track the numbers.
+//!
+//! Run: `cargo bench --bench bench_scaleout`
+//! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_scaleout`
+
+use std::time::Instant;
+
+use oxbnn::api::{BackendKind, Session};
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::workload_sim::simulate_frames_sharded;
+use oxbnn::coordinator::{InferenceRequest, ServerConfig};
+use oxbnn::mapping::layer::{ConvGeom, GemmLayer};
+use oxbnn::plan::{ShardPlan, ShardPolicy};
+use oxbnn::serving::ModelRegistry;
+use oxbnn::util::bench::{fmt_secs, Bencher, Table};
+use oxbnn::util::json::Json;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let fast = std::env::var("OXBNN_BENCH_FAST").is_ok();
+    let batch: usize = if fast { 4 } else { 8 };
+    let bencher = Bencher::from_env();
+
+    // -----------------------------------------------------------------
+    // 1. Analytic K-sweep: vgg_small on OXBNN_50, VDP-split group.
+    // -----------------------------------------------------------------
+    let cfg = AcceleratorConfig::oxbnn_50();
+    let wl = Workload::evaluation_set()
+        .into_iter()
+        .find(|w| w.name == "vgg_small")
+        .expect("vgg_small is in the evaluation set");
+    println!(
+        "scale-out bench — {} on {}, batch {}, VDP-split groups\n",
+        wl.name, cfg.name, batch
+    );
+    let run = |chips: usize| {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(BackendKind::Analytic)
+            .batch(batch)
+            .pipeline(true)
+            .chips(chips)
+            .shard_policy(ShardPolicy::VdpSplit)
+            .build()
+            .expect("scale-out bench session")
+            .run()
+    };
+    let reports: Vec<_> = [1usize, 2, 4].iter().map(|&k| (k, run(k))).collect();
+    let fps1 = reports[0].1.batched_fps();
+    let mut t = Table::new(&["chips", "batched FPS", "speedup", "efficiency"]);
+    for (k, r) in &reports {
+        let fps = r.batched_fps();
+        t.row(&[
+            format!("{}", k),
+            format!("{:.1}", fps),
+            format!("{:.2}x", fps / fps1),
+            format!("{:.2}", fps / (*k as f64 * fps1)),
+        ]);
+    }
+    t.print();
+
+    // -----------------------------------------------------------------
+    // 2. Event path: link occupancy on a conv crop (4-chip VDP split).
+    // -----------------------------------------------------------------
+    let mut small = AcceleratorConfig::oxbnn_5();
+    small.n = 9;
+    small.xpe_total = 18;
+    let w: usize = if fast { 12 } else { 16 };
+    let crop = Workload::new(
+        "vgg_crop_scaleout",
+        vec![
+            GemmLayer::new("conv2", w * w, 1152, 8).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::new("conv3", w * w, 1152, 8).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::fc("fc", 2048, 10),
+        ],
+    );
+    let frames: usize = if fast { 4 } else { 8 };
+    let policy = oxbnn::api::default_policy(&small);
+    let shard1 = ShardPlan::compile(&small, &crop, policy, 1, ShardPolicy::VdpSplit);
+    let shard4 = ShardPlan::compile(&small, &crop, policy, 4, ShardPolicy::VdpSplit);
+    let one_stats = bencher.run("event_1chip", || simulate_frames_sharded(&shard1, frames));
+    let four_stats = bencher.run("event_4chip", || simulate_frames_sharded(&shard4, frames));
+    let t1 = simulate_frames_sharded(&shard1, frames);
+    let t4 = simulate_frames_sharded(&shard4, frames);
+    let occupancy = t4.link_occupancy_fraction();
+    println!(
+        "\nevent crop ({} frames): 1-chip {:.1} FPS vs 4-chip {:.1} FPS; link occupancy \
+         {:.1}% over {} transfers ({} busy); sim wall {} vs {}",
+        frames,
+        t1.fps(),
+        t4.fps(),
+        100.0 * occupancy,
+        t4.link_transfers,
+        fmt_secs(t4.link_busy_s),
+        fmt_secs(one_stats.median),
+        fmt_secs(four_stats.median),
+    );
+
+    // -----------------------------------------------------------------
+    // 3. Serving: a 2-chip group staged as ONE replica, measured rate.
+    // -----------------------------------------------------------------
+    let mut scfg = ServerConfig::synthetic(&[]);
+    scfg.max_batch = 4;
+    scfg.queue_depth = 64;
+    let reg = ModelRegistry::synthetic(scfg);
+    let entry = reg.load_with("m", 1, 2).expect("2-chip group loads");
+    let requests: usize = if fast { 32 } else { 128 };
+    let input = vec![0.25f32; entry.input_len];
+    let wall = Instant::now();
+    for _ in 0..requests {
+        entry
+            .server
+            .infer_blocking(InferenceRequest { model: "m".into(), input: input.clone() })
+            .expect("group replica serves");
+    }
+    let serve_fps = requests as f64 / wall.elapsed().as_secs_f64();
+    println!(
+        "group serving: {} requests through the 2-chip group replica at {:.0} req/s \
+         (photonic reference {:.1} FPS)",
+        requests, serve_fps, entry.photonic_fps
+    );
+    reg.drain_all();
+
+    // Acceptance gates: scale-out must be real AND conservative.
+    let (fps2, fps4) = (reports[1].1.batched_fps(), reports[2].1.batched_fps());
+    assert!(
+        fps4 > fps1,
+        "4-chip batched FPS {} must strictly beat 1-chip {}",
+        fps4,
+        fps1
+    );
+    assert!(fps2 >= fps1 && fps4 >= fps2, "FPS must be monotone in chips");
+    assert!(
+        fps4 <= 4.0 * fps1 * (1.0 + 1e-9),
+        "super-linear scaling: {} vs 4 x {}",
+        fps4,
+        fps1
+    );
+    for (k, r) in &reports[1..] {
+        assert_eq!(r.passes, reports[0].1.passes, "K={}: PASS conservation", k);
+        assert_eq!(r.psums, reports[0].1.psums, "K={}: psum conservation", k);
+    }
+    assert_eq!(
+        t4.stats.counter("passes"),
+        t1.stats.counter("passes"),
+        "event-path PASS conservation across sharding"
+    );
+    assert_eq!(t4.stats.counter("clamped_events"), 0, "no past-time clamps");
+    assert!(t4.link_transfers > 0, "a 4-chip VDP split must use the link");
+    assert!(
+        occupancy > 0.0 && occupancy <= 1.0,
+        "link occupancy {} out of range",
+        occupancy
+    );
+    assert!(serve_fps > 0.0 && serve_fps.is_finite());
+    println!("\nshape check OK: 4-chip group beats 1 chip with identical transactions");
+
+    let json = Json::obj(vec![
+        ("workload", Json::Str(wl.name.clone())),
+        ("accelerator", Json::Str(cfg.name.clone())),
+        ("batch", Json::Num(batch as f64)),
+        ("shard_policy", Json::Str("vdp".to_string())),
+        ("fps_k1", Json::Num(fps1)),
+        ("fps_k2", Json::Num(fps2)),
+        ("fps_k4", Json::Num(fps4)),
+        ("speedup_k4", Json::Num(fps4 / fps1)),
+        ("efficiency_k4", Json::Num(fps4 / (4.0 * fps1))),
+        ("event_crop_frames", Json::Num(frames as f64)),
+        ("event_fps_k1", Json::Num(t1.fps())),
+        ("event_fps_k4", Json::Num(t4.fps())),
+        ("link_occupancy_k4", Json::Num(occupancy)),
+        ("link_transfers_k4", Json::Num(t4.link_transfers as f64)),
+        ("link_busy_s_k4", Json::Num(t4.link_busy_s)),
+        ("group_chips", Json::Num(entry.chips as f64)),
+        ("group_serve_fps", Json::Num(serve_fps)),
+        ("group_photonic_fps", Json::Num(entry.photonic_fps)),
+        ("event_sim_wall_k1_s", Json::Num(one_stats.median)),
+        ("event_sim_wall_k4_s", Json::Num(four_stats.median)),
+    ]);
+    let out = std::env::var("OXBNN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_scaleout.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", out);
+}

@@ -17,12 +17,13 @@
 
 use std::collections::BTreeMap;
 
-use super::report::{LayerReport, Report};
+use super::report::{LayerReport, Report, ShardBreakdown};
 use super::session::ApiError;
 use crate::arch::accelerator::{AcceleratorConfig, BitcountMode};
+use crate::arch::workload_sim::PipelineTrace;
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::ExecutionPlan;
+use crate::plan::{ExecutionPlan, ShardPlan, ShardPolicy};
 use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
@@ -149,6 +150,23 @@ pub trait Backend {
     ) -> Report {
         self.run_planned(plan).with_batch(batch)
     }
+
+    /// Evaluate a model sharded across `shard.chips()` accelerators (the
+    /// [`super::SessionBuilder::chips`] path). The default ignores the
+    /// shard geometry and runs the underlying [`ShardPlan::plan`] as a
+    /// single (grouped) accelerator — backends with a genuine multi-chip
+    /// timing model (event, analytic) override it to charge the
+    /// inter-chip transfer channel and report the per-chip breakdown.
+    /// K = 1 groups must stay indistinguishable from the unsharded path
+    /// (pinned by `tests/scaleout.rs`).
+    fn run_planned_sharded(
+        &mut self,
+        shard: &ShardPlan,
+        batch: usize,
+        pipelined: bool,
+    ) -> Report {
+        self.run_planned_batched(&shard.plan, batch, pipelined)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -243,6 +261,83 @@ impl Backend for AnalyticBackend {
         let frame = end;
         let makespan = frame + (batch - 1) as f64 * bottleneck;
         report.with_pipelined_batch(batch, frame, makespan)
+    }
+
+    /// Closed-form K-chip estimate mirroring
+    /// [`ShardPlan::analytic_batched_fps`], but through the full report
+    /// machinery: each layer keeps the plan's queue-critical compute term
+    /// (already shrunk by the scaled grid under VdpSplit), the memory term
+    /// is split across the K parallel eDRAM channels under VdpSplit, and
+    /// cross-chip edges add their serialized link time. Steady state
+    /// streams one frame per bottleneck — the slowest layer (VdpSplit) or
+    /// slowest pipeline stage (LayerPipeline), never faster than the
+    /// shared link can carry a frame's cross-chip activations.
+    fn run_planned_sharded(
+        &mut self,
+        shard: &ShardPlan,
+        batch: usize,
+        pipelined: bool,
+    ) -> Report {
+        if shard.chips() == 1 {
+            return self.run_planned_batched(&shard.plan, batch, pipelined);
+        }
+        let base = plan_aware_report(self, &shard.plan);
+        let split = if shard.vdp_split() { shard.chips() as f64 } else { 1.0 };
+        let mut layers = base.layers;
+        for (l, lr) in layers.iter_mut().enumerate() {
+            let compute_s = lr.timing.get("compute_s").copied().unwrap_or(0.0);
+            let reduce_s = lr.timing.get("reduce_s").copied().unwrap_or(0.0);
+            let fixed_s = lr.timing.get("fixed_s").copied().unwrap_or(0.0);
+            let memory_s =
+                lr.timing.get("memory_s").copied().unwrap_or(0.0) / split;
+            let transfer_s = shard.transfer_time_s(l);
+            lr.timing.insert("memory_s".to_string(), memory_s);
+            lr.timing.insert("transfer_s".to_string(), transfer_s);
+            lr.latency_s =
+                compute_s.max(memory_s).max(reduce_s) + fixed_s + transfer_s;
+        }
+        let frame: f64 = layers.iter().map(|l| l.latency_s).sum();
+        let report = Report::from_layers(
+            self.kind(),
+            &shard.base,
+            &shard.plan.workload.name,
+            layers,
+            frame,
+        );
+        let link_serial =
+            shard.transfers_per_frame() as f64 * shard.link.occupancy_s();
+        let breakdown = ShardBreakdown {
+            chips: shard.chips(),
+            policy: shard.policy().as_str().to_string(),
+            chip_idle_fraction: Vec::new(),
+            link_busy_s: link_serial,
+            link_transfers: shard.transfers_per_frame() as u64,
+        };
+        let per_chip_static = shard.base.static_power_w();
+        if !pipelined {
+            return report
+                .with_batch(batch)
+                .with_shard(breakdown, per_chip_static);
+        }
+        let bottleneck = match shard.policy() {
+            ShardPolicy::VdpSplit => report
+                .layers
+                .iter()
+                .map(|l| l.latency_s)
+                .fold(0.0_f64, f64::max),
+            ShardPolicy::LayerPipeline => {
+                let mut stages = vec![0.0_f64; shard.chips()];
+                for (l, lr) in report.layers.iter().enumerate() {
+                    stages[shard.chip_of_layer[l]] += lr.latency_s;
+                }
+                stages.into_iter().fold(0.0_f64, f64::max)
+            }
+        }
+        .max(link_serial);
+        let makespan = frame + (batch - 1) as f64 * bottleneck;
+        report
+            .with_pipelined_batch(batch, frame, makespan)
+            .with_shard(breakdown, per_chip_static)
     }
 }
 
@@ -377,59 +472,116 @@ impl Backend for EventSimBackend {
             return self.run_planned(plan).with_batch(batch);
         }
         let trace = crate::arch::workload_sim::simulate_frames_pipelined(plan, batch);
-        let cfg = &plan.accelerator;
-        let mut layers: Vec<LayerReport> = trace
-            .layers
-            .iter()
-            .map(|lt| {
-                let mut counters = BTreeMap::new();
-                counters.insert("passes".to_string(), lt.passes);
-                counters.insert("pca_readouts".to_string(), lt.pca_readouts);
-                counters.insert("mid_vdp_readouts".to_string(), lt.mid_vdp_readouts);
-                counters.insert("psums".to_string(), lt.psums);
-                counters.insert("activations".to_string(), lt.activations);
-                let ledger = crate::arch::event_sim::energy_ledger(
-                    cfg,
-                    lt.passes,
-                    lt.pca_readouts,
-                    lt.mid_vdp_readouts,
-                    lt.psums,
-                );
-                let energy_breakdown: BTreeMap<String, f64> = ledger
-                    .iter()
-                    .map(|(k, v)| (k.to_string(), *v))
-                    .collect();
-                LayerReport {
-                    name: lt.name.clone(),
-                    // The unit's active span in the shared event space
-                    // (first pass issue → last activation drain).
-                    latency_s: lt.done_s - lt.start_s,
-                    dynamic_energy_j: ledger.iter().map(|(_, v)| *v).sum(),
-                    passes: lt.passes,
-                    psums: lt.psums,
-                    timing: BTreeMap::new(),
-                    counters,
-                    energy_breakdown,
-                }
-            })
-            .collect();
-        // Whole-batch engine diagnostics must survive into the report —
-        // the conformance suite gates on `clamped_events == 0` through the
-        // per-layer counter sum, so they ride on the first layer's map.
-        if let Some(first) = layers.first_mut() {
-            for key in [
-                "clamped_events",
-                "pca_saturations",
-                "pca_discharge_stalls",
-                "reduction_inits",
-                "peak_pending_events",
-            ] {
-                first.counters.insert(key.to_string(), trace.stats.counter(key));
-            }
-        }
-        Report::from_layers(self.kind(), cfg, &plan.workload.name, layers, trace.frame_latency_s)
+        report_from_pipeline_trace(self.kind(), &plan.accelerator, &plan.workload.name, &trace)
             .with_pipelined_batch(batch, trace.frame_latency_s, trace.batch_latency_s)
     }
+
+    /// K-chip groups run through the sharded whole-batch event space
+    /// ([`crate::arch::workload_sim::simulate_frames_sharded`]): one
+    /// shared scheduler over all K chips, per-chip eDRAM channels, and
+    /// the serialized inter-chip transfer channel gating cross-chip
+    /// admission on *arrivals*. The per-chip config (`shard.base`) is the
+    /// accelerator the report charges — [`Report::with_shard`] then
+    /// re-accounts static power for K chips and attaches the per-chip
+    /// idle / link breakdown. K = 1 delegates to the unsharded path for
+    /// bit-exact identity.
+    fn run_planned_sharded(
+        &mut self,
+        shard: &ShardPlan,
+        batch: usize,
+        pipelined: bool,
+    ) -> Report {
+        if shard.chips() == 1 {
+            return self.run_planned_batched(&shard.plan, batch, pipelined);
+        }
+        let cfg = &shard.base;
+        let frames = if pipelined { batch } else { 1 };
+        let trace = crate::arch::workload_sim::simulate_frames_sharded(shard, frames);
+        let breakdown = ShardBreakdown {
+            chips: trace.chips,
+            policy: shard.policy().as_str().to_string(),
+            chip_idle_fraction: trace.chip_idle_fraction(),
+            link_busy_s: trace.link_busy_s,
+            link_transfers: trace.link_transfers,
+        };
+        let report = report_from_pipeline_trace(
+            self.kind(),
+            cfg,
+            &shard.plan.workload.name,
+            &trace,
+        );
+        if pipelined {
+            report
+                .with_pipelined_batch(batch, trace.frame_latency_s, trace.batch_latency_s)
+                .with_shard(breakdown, cfg.static_power_w())
+        } else {
+            report.with_batch(batch).with_shard(breakdown, cfg.static_power_w())
+        }
+    }
+}
+
+/// Shape a whole-batch [`PipelineTrace`] into the unified report: frame
+/// 0's unit slices become the per-layer reports (every frame streams the
+/// identical compiled plan), and the whole-batch engine diagnostics ride
+/// on the first layer's counter map. Shared by the single-chip pipelined
+/// path and the sharded path, which differ only in which config and
+/// trace they hand in.
+fn report_from_pipeline_trace(
+    kind: BackendKind,
+    cfg: &AcceleratorConfig,
+    workload_name: &str,
+    trace: &PipelineTrace,
+) -> Report {
+    let mut layers: Vec<LayerReport> = trace
+        .layers
+        .iter()
+        .map(|lt| {
+            let mut counters = BTreeMap::new();
+            counters.insert("passes".to_string(), lt.passes);
+            counters.insert("pca_readouts".to_string(), lt.pca_readouts);
+            counters.insert("mid_vdp_readouts".to_string(), lt.mid_vdp_readouts);
+            counters.insert("psums".to_string(), lt.psums);
+            counters.insert("activations".to_string(), lt.activations);
+            let ledger = crate::arch::event_sim::energy_ledger(
+                cfg,
+                lt.passes,
+                lt.pca_readouts,
+                lt.mid_vdp_readouts,
+                lt.psums,
+            );
+            let energy_breakdown: BTreeMap<String, f64> = ledger
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect();
+            LayerReport {
+                name: lt.name.clone(),
+                // The unit's active span in the shared event space
+                // (first pass issue → last activation drain).
+                latency_s: lt.done_s - lt.start_s,
+                dynamic_energy_j: ledger.iter().map(|(_, v)| *v).sum(),
+                passes: lt.passes,
+                psums: lt.psums,
+                timing: BTreeMap::new(),
+                counters,
+                energy_breakdown,
+            }
+        })
+        .collect();
+    // Whole-batch engine diagnostics must survive into the report —
+    // the conformance suite gates on `clamped_events == 0` through the
+    // per-layer counter sum, so they ride on the first layer's map.
+    if let Some(first) = layers.first_mut() {
+        for key in [
+            "clamped_events",
+            "pca_saturations",
+            "pca_discharge_stalls",
+            "reduction_inits",
+            "peak_pending_events",
+        ] {
+            first.counters.insert(key.to_string(), trace.stats.counter(key));
+        }
+    }
+    Report::from_layers(kind, cfg, workload_name, layers, trace.frame_latency_s)
 }
 
 // ---------------------------------------------------------------------------

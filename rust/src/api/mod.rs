@@ -46,7 +46,7 @@ pub use backend::{
     default_policy, AnalyticBackend, Backend, BackendKind, EventSimBackend,
     FunctionalBackend,
 };
-pub use report::{Correctness, LayerReport, Report};
+pub use report::{Correctness, LayerReport, Report, ShardBreakdown};
 pub use session::{ApiError, Session, SessionBuilder};
 
 /// One-call fast path for the overwhelmingly common case: evaluate

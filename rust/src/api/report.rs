@@ -61,6 +61,24 @@ impl Correctness {
     }
 }
 
+/// Per-chip breakdown of a multi-accelerator (sharded) run — present iff
+/// the report came through [`super::Backend::run_planned_sharded`] with
+/// more than one chip.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardBreakdown {
+    /// Accelerators in the shard group.
+    pub chips: usize,
+    /// Shard policy name (`layer` or `vdp`).
+    pub policy: String,
+    /// Fraction of the makespan each chip's XPEs sat idle (len = chips;
+    /// event backend only — the analytic estimate leaves it empty).
+    pub chip_idle_fraction: Vec<f64>,
+    /// Total busy time of the serialized inter-chip transfer channel (s).
+    pub link_busy_s: f64,
+    /// Activations that crossed the inter-chip channel.
+    pub link_transfers: u64,
+}
+
 /// Unified whole-workload result (one frame unless `batch > 1`).
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -96,6 +114,9 @@ pub struct Report {
     pub energy_breakdown: BTreeMap<String, f64>,
     /// Present iff the backend carries correctness (functional).
     pub correctness: Option<Correctness>,
+    /// Present iff this run sharded the model across `chips > 1`
+    /// accelerators (per-chip idle + inter-chip transfer breakdown).
+    pub shard: Option<ShardBreakdown>,
     pub layers: Vec<LayerReport>,
 }
 
@@ -147,6 +168,7 @@ impl Report {
             psums,
             energy_breakdown,
             correctness,
+            shard: None,
             layers,
         }
     }
@@ -178,6 +200,30 @@ impl Report {
             + self.dynamic_energy_per_frame_j;
         self.avg_power_w = frame_energy * batch as f64 / batch_latency_s;
         self.fps_per_w = 1.0 / frame_energy;
+        self
+    }
+
+    /// Stamp a multi-chip sharded run: attach the per-chip breakdown and
+    /// re-account static power for `chips` accelerators burning
+    /// `per_chip_static_w` each — a K-chip group pays K× the wall-plug
+    /// static power for the same makespan, so `fps_per_w` is the honest
+    /// group efficiency, not a single chip's.
+    pub(crate) fn with_shard(
+        mut self,
+        breakdown: ShardBreakdown,
+        per_chip_static_w: f64,
+    ) -> Report {
+        self.static_power_w = per_chip_static_w * breakdown.chips as f64;
+        let frame_static_s = if self.pipelined {
+            self.batch_latency_s / self.batch as f64
+        } else {
+            self.frame_latency_s
+        };
+        let frame_energy = self.static_power_w * frame_static_s
+            + self.dynamic_energy_per_frame_j;
+        self.avg_power_w = frame_energy / frame_static_s;
+        self.fps_per_w = 1.0 / frame_energy;
+        self.shard = Some(breakdown);
         self
     }
 
@@ -246,6 +292,23 @@ impl Report {
                     ("vdps_checked", Json::Num(c.vdps_checked as f64)),
                     ("mismatches", Json::Num(c.mismatches as f64)),
                     ("pca_clamped", Json::Num(c.pca_clamped as f64)),
+                ]),
+            ));
+        }
+        if let Some(s) = &self.shard {
+            fields.push((
+                "shard",
+                Json::obj(vec![
+                    ("chips", Json::Num(s.chips as f64)),
+                    ("policy", Json::Str(s.policy.clone())),
+                    (
+                        "chip_idle_fraction",
+                        Json::Arr(
+                            s.chip_idle_fraction.iter().map(|f| Json::Num(*f)).collect(),
+                        ),
+                    ),
+                    ("link_busy_s", Json::Num(s.link_busy_s)),
+                    ("link_transfers", Json::Num(s.link_transfers as f64)),
                 ]),
             ));
         }

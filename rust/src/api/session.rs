@@ -23,7 +23,7 @@ use super::report::{LayerReport, Report};
 use crate::arch::accelerator::AcceleratorConfig;
 use crate::mapping::layer::GemmLayer;
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::{ExecutionPlan, PlanCache};
+use crate::plan::{ExecutionPlan, PlanCache, ShardPlan, ShardPolicy};
 use crate::workloads::Workload;
 
 /// Errors from building a [`Session`].
@@ -43,6 +43,10 @@ pub enum ApiError {
     UnknownBackend(String),
     #[error("batch must be >= 1")]
     ZeroBatch,
+    #[error("chips must be >= 1")]
+    ZeroChips,
+    #[error("unknown shard policy '{0}' (expected layer|vdp)")]
+    UnknownShardPolicy(String),
     #[error(transparent)]
     Config(#[from] crate::config::ConfigError),
 }
@@ -62,6 +66,8 @@ pub struct SessionBuilder {
     policy: Option<MappingPolicy>,
     batch: usize,
     pipeline: Option<bool>,
+    chips: usize,
+    shard_policy: Option<ShardPolicy>,
     plan_cache: Option<Arc<PlanCache>>,
 }
 
@@ -138,6 +144,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Shard the model across `chips` accelerators of the configured
+    /// geometry (default 1 — no sharding). With `chips > 1` the session
+    /// compiles a [`ShardPlan`] and routes through
+    /// [`Backend::run_planned_sharded`]: the report charges K chips'
+    /// static power and carries a per-chip idle / inter-chip transfer
+    /// breakdown ([`super::report::ShardBreakdown`]).
+    pub fn chips(mut self, chips: usize) -> Self {
+        self.chips = chips;
+        self
+    }
+
+    /// How a multi-chip group splits the model (default
+    /// [`ShardPolicy::VdpSplit`]): `VdpSplit` spreads every layer's VDPs
+    /// over all chips; `LayerPipeline` gives each chip a contiguous layer
+    /// range and streams frames through the chip pipeline. Ignored when
+    /// `chips == 1`.
+    pub fn shard_policy(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = Some(policy);
+        self
+    }
+
     /// Share a [`PlanCache`] with other sessions (parallel sweep cells,
     /// serving replicas): the `(accelerator, workload, policy)` mapping
     /// is compiled once and streamed by every session that hits the same
@@ -151,6 +178,9 @@ impl SessionBuilder {
     pub fn build(self) -> Result<Session, ApiError> {
         if self.batch == 0 {
             return Err(ApiError::ZeroBatch);
+        }
+        if self.chips == 0 {
+            return Err(ApiError::ZeroChips);
         }
         let accelerator = match (self.accelerator, self.accelerator_name) {
             (Some(cfg), _) => cfg,
@@ -190,6 +220,8 @@ impl SessionBuilder {
             policy,
             batch: self.batch,
             pipeline,
+            chips: self.chips,
+            shard_policy: self.shard_policy.unwrap_or(ShardPolicy::VdpSplit),
             plan_cache,
         })
     }
@@ -222,6 +254,8 @@ pub struct Session {
     policy: MappingPolicy,
     batch: usize,
     pipeline: bool,
+    chips: usize,
+    shard_policy: ShardPolicy,
     plan_cache: Arc<PlanCache>,
 }
 
@@ -236,6 +270,8 @@ impl Session {
             policy: None,
             batch: 1,
             pipeline: None,
+            chips: 1,
+            shard_policy: None,
             plan_cache: None,
         }
     }
@@ -247,6 +283,12 @@ impl Session {
     /// [`SessionBuilder::pipeline`] set, the event backend runs the batch
     /// through one whole-frame pipelined event space.
     pub fn run(&mut self) -> Report {
+        if self.chips > 1 {
+            let shard = self.shard_plan();
+            return self
+                .backend
+                .run_planned_sharded(&shard, self.batch, self.pipeline);
+        }
         let plan = self.plan();
         self.backend.run_planned_batched(&plan, self.batch, self.pipeline)
     }
@@ -255,6 +297,19 @@ impl Session {
     pub fn plan(&self) -> Arc<ExecutionPlan> {
         self.plan_cache
             .get_or_compile(&self.accelerator, &self.workload, self.policy)
+    }
+
+    /// The compiled K-chip shard plan for this session's group geometry
+    /// (fresh per call — [`ShardPlan::compile`] is cheap; the plan cache
+    /// keys single-accelerator triples only).
+    pub fn shard_plan(&self) -> ShardPlan {
+        ShardPlan::compile(
+            &self.accelerator,
+            &self.workload,
+            self.policy,
+            self.chips,
+            self.shard_policy,
+        )
     }
 
     /// Run a single layer (not necessarily from the configured workload)
@@ -286,6 +341,16 @@ impl Session {
     /// Whether batches run through the pipelined whole-frame event space.
     pub fn pipelined(&self) -> bool {
         self.pipeline
+    }
+
+    /// Accelerators in the session's shard group (1 = unsharded).
+    pub fn chips(&self) -> usize {
+        self.chips
+    }
+
+    /// How a multi-chip group splits the model.
+    pub fn shard_policy(&self) -> ShardPolicy {
+        self.shard_policy
     }
 
     /// The session's plan cache (shared when built with

@@ -392,7 +392,17 @@ pub struct FrameWorld<'a> {
     units: Vec<UnitState>,
     red_pending: Vec<usize>,
     red_free_at: Vec<f64>,
-    mem_free_at: f64,
+    /// Next-free time of each chip's eDRAM fetch channel (one entry for
+    /// an unsharded run).
+    mem_free_at: Vec<f64>,
+    /// Next-free time of the shared inter-chip activation link.
+    link_free_at: f64,
+    /// Per producer unit: activations that have ARRIVED over the
+    /// inter-chip link — what cross-chip consumer admission gates on
+    /// (same-chip edges gate on `UnitState::acts_done` as before).
+    acts_arrived: Vec<usize>,
+    n_link_transfers: u64,
+    link_busy_s: f64,
     ones_density: f64,
     frames_done: usize,
     frame_done_s: Vec<f64>,
@@ -423,17 +433,24 @@ pub struct FrameWorld<'a> {
 impl<'a> FrameWorld<'a> {
     pub fn new(cfg: &'a AcceleratorConfig, fp: &'a FramePlan<'a>) -> FrameWorld<'a> {
         let first = fp.layer_plan(0);
+        // A VDP-split shard compiles its layer grid over the whole K-chip
+        // group; a layer-pipeline shard (and the unsharded case) keeps the
+        // single-chip grid. Either way each chip must match `cfg`.
+        let grid_chips = if fp.chips() > 1 && fp.fetch_split() > 1 { fp.chips() } else { 1 };
         assert!(
-            first.n == cfg.n && first.m == cfg.m() && first.xpc_count == cfg.xpc_count(),
+            first.n == cfg.n
+                && first.m == cfg.m()
+                && first.xpc_count == cfg.xpc_count() * grid_chips,
             "frame plan geometry (N={}, M={}, XPCs={}) does not match accelerator '{}' \
-             (N={}, M={}, XPCs={})",
+             (N={}, M={}, XPCs={} x {} chip(s))",
             first.n,
             first.m,
             first.xpc_count,
             cfg.name,
             cfg.n,
             cfg.m(),
-            cfg.xpc_count()
+            cfg.xpc_count(),
+            grid_chips
         );
         let pca_mode = matches!(cfg.bitcount, BitcountMode::Pca { .. });
         let gamma = match cfg.bitcount {
@@ -441,7 +458,9 @@ impl<'a> FrameWorld<'a> {
             _ => 0,
         };
         let total = fp.total_xpes();
-        let xpcs = cfg.xpc_count();
+        // Reduction networks are per-XPC of the whole (possibly multi-chip)
+        // grid — each chip brings its own set.
+        let xpcs = total.div_ceil(cfg.m());
         let units: Vec<UnitState> = (0..fp.units())
             .map(|u| {
                 let mut s = UnitState::default();
@@ -466,7 +485,11 @@ impl<'a> FrameWorld<'a> {
             units,
             red_pending: vec![0; xpcs],
             red_free_at: vec![0.0; xpcs],
-            mem_free_at: 0.0,
+            mem_free_at: vec![0.0; fp.chips()],
+            link_free_at: 0.0,
+            acts_arrived: vec![0; fp.units()],
+            n_link_transfers: 0,
+            link_busy_s: 0.0,
             ones_density: 0.5,
             frames_done: 0,
             frame_done_s: vec![0.0; fp.frames()],
@@ -523,6 +546,45 @@ impl<'a> FrameWorld<'a> {
         &self.admission_log
     }
 
+    /// Activations that ARRIVED over the inter-chip link, per producer
+    /// unit (all zero on an unsharded run — nothing crosses a link).
+    pub fn acts_arrived(&self) -> &[usize] {
+        &self.acts_arrived
+    }
+
+    /// Activation transfers serialized onto the inter-chip link.
+    pub fn link_transfers(&self) -> u64 {
+        self.n_link_transfers
+    }
+
+    /// Total occupancy of the shared inter-chip link (seconds).
+    pub fn link_busy_s(&self) -> f64 {
+        self.link_busy_s
+    }
+
+    /// Accumulated PASS occupancy summed per chip (length = group size;
+    /// a single-element vec on an unsharded run).
+    pub fn per_chip_busy_s(&self) -> Vec<f64> {
+        let per_chip = self.fp.per_chip_xpes().max(1);
+        let mut out = vec![0.0; self.fp.chips()];
+        for (flat, b) in self.busy_s.iter().enumerate() {
+            let chip = (flat / per_chip).min(out.len() - 1);
+            out[chip] += *b;
+        }
+        out
+    }
+
+    /// Activations available from producer `p` for admitting work on
+    /// consumer unit `next`: arrivals over the inter-chip link when the
+    /// edge crosses chips, the producer's own drains otherwise.
+    fn avail_acts(&self, p: usize, next: usize) -> usize {
+        if self.fp.edge_crosses(next) {
+            self.acts_arrived[p]
+        } else {
+            self.units[p].acts_done
+        }
+    }
+
     /// Serialize a unit's operand fetch onto the shared memory channel and
     /// schedule its readiness event. Requested once, when the predecessor
     /// unit starts computing (double-buffered staging).
@@ -532,9 +594,28 @@ impl<'a> FrameWorld<'a> {
         }
         self.units[u].fetch_requested = true;
         let bits = self.fp.layer_plan(u).layer.operand_bits() as f64;
-        let start = sched.now().max(self.mem_free_at);
-        let done = start + bits / self.cfg.mem_bw_bits_per_s;
-        self.mem_free_at = done;
+        let now = sched.now();
+        let split = self.fp.fetch_split();
+        let done = if split > 1 {
+            // VDP-split: every chip holds 1/K of the layer's slices, so all
+            // K eDRAM channels stage their shares in parallel.
+            let share = bits / split as f64;
+            let mut done = now;
+            for free in self.mem_free_at.iter_mut() {
+                let start = now.max(*free);
+                *free = start + share / self.cfg.mem_bw_bits_per_s;
+                done = done.max(*free);
+            }
+            done
+        } else {
+            // Unsharded or layer-pipeline: the unit lives wholly on one
+            // chip and serializes on that chip's channel.
+            let chip = self.fp.unit_chip(u);
+            let start = now.max(self.mem_free_at[chip]);
+            let done = start + bits / self.cfg.mem_bw_bits_per_s;
+            self.mem_free_at[chip] = done;
+            done
+        };
         let ready = done + self.cfg.peripherals.edram.latency_s;
         self.units[u].fetch_ready_s = ready;
         sched.at(ready, EventKind::FetchDone { unit: u });
@@ -582,7 +663,7 @@ impl<'a> FrameWorld<'a> {
                     .peek_for(self.fp, next, flat)
                     .expect("first_open units have passes for this XPE");
                 let need = self.fp.need_acts(next, pass.vdp.0);
-                if self.units[p].acts_done >= need {
+                if self.avail_acts(p, next) >= need {
                     self.issue(next, flat, extra_delay, sched);
                 } else {
                     self.stream.register_waiter(next, need, flat);
@@ -600,10 +681,12 @@ impl<'a> FrameWorld<'a> {
             .expect("dispatch only picks units with passes left");
         if self.record_admissions {
             if let Some(p) = self.fp.producer(u) {
+                // Log the quantity admission actually gated on: link
+                // arrivals for a cross-chip edge, drains otherwise.
                 self.admission_log.push((
                     u as u32,
                     pass.vdp.0 as u32,
-                    self.units[p].acts_done as u32,
+                    self.avail_acts(p, u) as u32,
                 ));
             }
         }
@@ -772,14 +855,42 @@ impl World for FrameWorld<'_> {
                 // successor's waiters: pop exactly the XPEs whose head-pass
                 // threshold is now met — O(woken), where the old path
                 // re-dispatched every idle XPE. The bus hop carries the
-                // activation to the consumer's tile buffers.
+                // activation to the consumer's tile buffers; when the
+                // successor runs on another chip the activation first
+                // crosses the serialized inter-chip link, and the consumer
+                // is admitted by `LinkArrived` (on *arrival*, not drain).
                 if self.fp.unit_layer(u) + 1 < self.fp.layers() {
-                    let acts = self.units[u].acts_done;
-                    let bus = self.cfg.peripherals.bus.latency_s;
-                    for flat in self.stream.pop_admitted(u + 1, acts) {
-                        self.n_wake_dispatches += 1;
-                        self.dispatch(flat, bus, sched);
+                    if self.fp.edge_crosses(u + 1) {
+                        let link = self.fp.link().expect("cross-chip edge implies a link");
+                        let occ = link.occupancy_s();
+                        let arrive_lat = link.latency_s;
+                        let start = sched.now().max(self.link_free_at);
+                        self.link_free_at = start + occ;
+                        self.link_busy_s += occ;
+                        self.n_link_transfers += 1;
+                        sched.at(start + occ + arrive_lat, EventKind::LinkArrived { unit: u });
+                    } else {
+                        let acts = self.units[u].acts_done;
+                        let bus = self.cfg.peripherals.bus.latency_s;
+                        for flat in self.stream.pop_admitted(u + 1, acts) {
+                            self.n_wake_dispatches += 1;
+                            self.dispatch(flat, bus, sched);
+                        }
                     }
+                }
+            }
+            EventKind::LinkArrived { unit } => {
+                // The link is FIFO (serialized occupancy + constant
+                // latency), so arrivals land in drain order and this count
+                // is exactly the arrived raster prefix.
+                let u = *unit;
+                self.acts_arrived[u] += 1;
+                let acts = self.acts_arrived[u];
+                for flat in self.stream.pop_admitted(u + 1, acts) {
+                    self.n_wake_dispatches += 1;
+                    // The transfer itself already charged link occupancy +
+                    // latency; no extra bus hop on top.
+                    self.dispatch(flat, 0.0, sched);
                 }
             }
             _ => {}
@@ -813,6 +924,7 @@ impl World for FrameWorld<'_> {
         stats.count("reductions_done", self.n_reductions_done);
         stats.count("activations", acts);
         stats.count("wake_dispatches", self.n_wake_dispatches);
+        stats.count("link_transfers", self.n_link_transfers);
         for (category, joules) in energy_ledger(self.cfg, passes, readouts, mid, psums)
         {
             stats.energy(category, joules);

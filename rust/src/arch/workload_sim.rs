@@ -13,7 +13,7 @@
 use super::accelerator::AcceleratorConfig;
 use super::event_sim::{simulate_layer_planned, FrameWorld};
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan};
+use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan, ShardPlan};
 use crate::sim::stats::SimStats;
 use crate::workloads::Workload;
 
@@ -177,6 +177,15 @@ pub struct PipelineTrace {
     /// Frame-0 unit records, in layer order (per-frame counts/energy come
     /// from these — every frame runs the identical compiled plan).
     pub layers: Vec<PipelinedLayerTrace>,
+    /// Chips in the shard group (1 = ordinary single-chip batch).
+    pub chips: usize,
+    /// PASS occupancy summed per chip (one entry when unsharded).
+    pub chip_busy_s: Vec<f64>,
+    /// Serialized occupancy of the inter-chip activation link (0 when
+    /// unsharded).
+    pub link_busy_s: f64,
+    /// Activation flits that crossed the inter-chip link.
+    pub link_transfers: u64,
 }
 
 impl PipelineTrace {
@@ -193,6 +202,28 @@ impl PipelineTrace {
         }
         let busy: f64 = self.busy_s.iter().sum();
         1.0 - busy / (self.busy_s.len() as f64 * self.batch_latency_s)
+    }
+
+    /// Per-chip idle fraction over the batch makespan (one entry per
+    /// member chip; a single entry when unsharded).
+    pub fn chip_idle_fraction(&self) -> Vec<f64> {
+        if self.batch_latency_s <= 0.0 || self.chips == 0 {
+            return vec![0.0; self.chips.max(1)];
+        }
+        let per_chip = (self.busy_s.len() / self.chips.max(1)).max(1) as f64;
+        self.chip_busy_s
+            .iter()
+            .map(|b| (1.0 - b / (per_chip * self.batch_latency_s)).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    /// Fraction of the makespan the inter-chip link was occupied.
+    pub fn link_occupancy_fraction(&self) -> f64 {
+        if self.batch_latency_s <= 0.0 {
+            0.0
+        } else {
+            (self.link_busy_s / self.batch_latency_s).clamp(0.0, 1.0)
+        }
     }
 }
 
@@ -215,7 +246,40 @@ pub fn simulate_frames_pipelined_admission(
     admission: AdmissionMode,
 ) -> PipelineTrace {
     let fp = FramePlan::with_admission(plan, frames, admission);
-    let mut world = FrameWorld::new(&plan.accelerator, &fp);
+    run_frame_world(&plan.accelerator, &fp)
+}
+
+/// Event-simulate `frames` back-to-back frames of a K-chip [`ShardPlan`]
+/// through one shared event space: the unit table spans the whole
+/// group's XPEs, cross-chip activation edges are serialized onto the
+/// shared inter-chip link, and the consumer chip's admission counts
+/// *arrived* activations against the same exact receptive-field
+/// thresholds. A `K = 1` shard is event-identical to
+/// [`simulate_frames_pipelined`] on the inner plan (pinned by
+/// `rust/tests/scaleout.rs`).
+pub fn simulate_frames_sharded(shard: &ShardPlan, frames: usize) -> PipelineTrace {
+    simulate_frames_sharded_admission(shard, frames, AdmissionMode::Exact)
+}
+
+/// [`simulate_frames_sharded`] under an explicit [`AdmissionMode`].
+pub fn simulate_frames_sharded_admission(
+    shard: &ShardPlan,
+    frames: usize,
+    admission: AdmissionMode,
+) -> PipelineTrace {
+    let fp = FramePlan::for_shard(shard, frames, admission);
+    // The world runs against the per-chip accelerator: a VdpSplit plan's
+    // own `accelerator` is the scaled group grid, not a member chip.
+    run_frame_world(&shard.base, &fp)
+}
+
+/// The single home of "run a [`FrameWorld`] and package a
+/// [`PipelineTrace`]", shared by the unsharded and sharded entry points
+/// so the two cannot drift.
+fn run_frame_world(cfg: &AcceleratorConfig, fp: &FramePlan<'_>) -> PipelineTrace {
+    let plan = fp.plan();
+    let frames = fp.frames();
+    let mut world = FrameWorld::new(cfg, fp);
     let outcome = crate::sim::engine::run(&mut world, fp.event_budget());
     let mut stats = outcome.expect_complete(&format!(
         "pipelined batch of {} frame(s) of '{}'",
@@ -240,7 +304,7 @@ pub fn simulate_frames_pipelined_admission(
         })
         .collect();
     PipelineTrace {
-        accelerator: plan.accelerator.name.clone(),
+        accelerator: cfg.name.clone(),
         workload: plan.workload.name.clone(),
         frames,
         frame_latency_s: frame_done_s[0],
@@ -249,6 +313,10 @@ pub fn simulate_frames_pipelined_admission(
         busy_s: world.busy_s().to_vec(),
         stats,
         layers,
+        chips: fp.chips(),
+        chip_busy_s: world.per_chip_busy_s(),
+        link_busy_s: world.link_busy_s(),
+        link_transfers: world.link_transfers(),
     }
 }
 

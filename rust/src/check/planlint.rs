@@ -34,7 +34,7 @@ use std::fmt;
 use crate::arch::accelerator::BitcountMode;
 use crate::mapping::layer::{ConvGeom, GemmLayer};
 use crate::mapping::scheduler::MappingPolicy;
-use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan, LayerPlan};
+use crate::plan::{AdmissionMode, ExecutionPlan, FramePlan, LayerPlan, ShardPlan, ShardPolicy};
 
 /// How bad a finding is. Only `Error` findings fail the lint gate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -109,6 +109,25 @@ pub enum Code {
     /// PL302: the configured `γ` drifts from the paper-calibrated
     /// Table II value for the accelerator's data rate.
     PcaCapacityDrift,
+    /// PL401: a shard group's stage map does not cover the model — a
+    /// layer is assigned to a chip outside the group, the stage map's
+    /// length disagrees with the layer count, or the compiled grid does
+    /// not span `chips × T` XPE slots under VdpSplit.
+    ShardCoverage,
+    /// PL402: a LayerPipeline stage map is not a contiguous,
+    /// non-decreasing partition starting on chip 0 — stages would
+    /// interleave (two chips claiming overlapping layer ranges) and the
+    /// inter-chip transfer accounting breaks.
+    ShardOverlap,
+    /// PL403: the inter-chip transfer channel is degenerate (non-positive
+    /// bandwidth, zero-bit activations, negative or non-finite latency) —
+    /// cross-chip activations could never arrive.
+    LinkCapacity,
+    /// PL404: the shard group is poorly balanced — the bottleneck stage
+    /// dominates the mean stage time, or the serialized transfer channel
+    /// is slower than the bottleneck stage it feeds (the link, not the
+    /// chips, sets the streaming rate).
+    ShardImbalance,
 }
 
 impl Code {
@@ -129,6 +148,10 @@ impl Code {
             Code::AdmissionDrift => "PL206",
             Code::PcaOverflow => "PL301",
             Code::PcaCapacityDrift => "PL302",
+            Code::ShardCoverage => "PL401",
+            Code::ShardOverlap => "PL402",
+            Code::LinkCapacity => "PL403",
+            Code::ShardImbalance => "PL404",
         }
     }
 
@@ -146,8 +169,11 @@ impl Code {
             | Code::GeomInvalid
             | Code::GeomGemmMismatch
             | Code::AdmissionDrift
-            | Code::PcaOverflow => Severity::Error,
-            Code::PcaCapacityDrift => Severity::Warning,
+            | Code::PcaOverflow
+            | Code::ShardCoverage
+            | Code::ShardOverlap
+            | Code::LinkCapacity => Severity::Error,
+            Code::PcaCapacityDrift | Code::ShardImbalance => Severity::Warning,
             Code::AdmissionFallback => Severity::Info,
         }
     }
@@ -223,6 +249,31 @@ pub fn gate(subject: &str, plan: &ExecutionPlan) -> Result<Vec<Finding>, LintRej
     } else {
         Ok(findings)
     }
+}
+
+/// [`gate`] for a multi-chip [`ShardPlan`]: the inner plan must pass the
+/// full single-group lint AND the shard geometry checks of
+/// [`verify_shard`]. The serving registry routes every K-chip load
+/// through here exactly as single-chip loads go through [`gate`].
+pub fn gate_shard(subject: &str, shard: &ShardPlan) -> Result<Vec<Finding>, LintRejection> {
+    let findings = verify_shard(shard);
+    if has_errors(&findings) {
+        Err(LintRejection { subject: subject.to_string(), findings })
+    } else {
+        Ok(findings)
+    }
+}
+
+/// Verify a multi-chip [`ShardPlan`]: the inner [`ExecutionPlan`] runs
+/// the whole single-plan lint (its accelerator is the scaled group grid
+/// under VdpSplit, so the grid checks cover the group shape), then the
+/// shard geometry is checked on top — stage coverage/contiguity
+/// (PL401/PL402), transfer-channel sanity (PL403) and group balance
+/// (PL404).
+pub fn verify_shard(shard: &ShardPlan) -> Vec<Finding> {
+    let mut findings = verify(&shard.plan);
+    check_shard_geometry(shard, &mut findings);
+    findings
 }
 
 /// Verify `plan` under the default (receptive-field-exact) admission
@@ -563,6 +614,148 @@ fn check_geom(i: usize, layer: &GemmLayer, g: ConvGeom, findings: &mut Vec<Findi
 }
 
 // ---------------------------------------------------------------------
+// Shard geometry checks
+// ---------------------------------------------------------------------
+
+/// The PL4xx family: stage coverage and contiguity, transfer-channel
+/// sanity, and group balance. Deliberately re-derived from the raw
+/// `chip_of_layer` map and link parameters — not from the shard plan's
+/// own `edge_crosses`/`stage_times_s` helpers alone — so a corrupted
+/// stage map cannot vouch for itself.
+fn check_shard_geometry(shard: &ShardPlan, findings: &mut Vec<Finding>) {
+    let chips = shard.chips();
+    let layers = shard.plan.layers.len();
+    match shard.policy() {
+        ShardPolicy::VdpSplit => {
+            if !shard.chip_of_layer.is_empty() {
+                findings.push(Finding::new(
+                    Code::ShardCoverage,
+                    None,
+                    format!(
+                        "VdpSplit shard carries a {}-entry stage map (every layer must run on \
+                         every chip)",
+                        shard.chip_of_layer.len()
+                    ),
+                ));
+            }
+            let expect = shard.per_chip_xpes() * chips;
+            if let Some(first) = shard.plan.layers.first() {
+                if chips > 1 && first.total_xpes() != expect {
+                    findings.push(Finding::new(
+                        Code::ShardCoverage,
+                        Some(0),
+                        format!(
+                            "VdpSplit grid spans {} XPE slots but {} chips x {} slots = {}",
+                            first.total_xpes(),
+                            chips,
+                            shard.per_chip_xpes(),
+                            expect
+                        ),
+                    ));
+                }
+            }
+        }
+        ShardPolicy::LayerPipeline => {
+            if shard.chip_of_layer.len() != layers {
+                findings.push(Finding::new(
+                    Code::ShardCoverage,
+                    None,
+                    format!(
+                        "stage map covers {} layers but the model has {}",
+                        shard.chip_of_layer.len(),
+                        layers
+                    ),
+                ));
+            } else {
+                let mut prev = 0usize;
+                for (l, &chip) in shard.chip_of_layer.iter().enumerate() {
+                    if chip >= chips {
+                        findings.push(Finding::new(
+                            Code::ShardCoverage,
+                            Some(l),
+                            format!(
+                                "layer {} assigned to chip {} of a {}-chip group",
+                                l, chip, chips
+                            ),
+                        ));
+                        break;
+                    }
+                    if l == 0 && chip != 0 {
+                        findings.push(Finding::new(
+                            Code::ShardOverlap,
+                            Some(0),
+                            format!("stage map starts on chip {} (must start on chip 0)", chip),
+                        ));
+                        break;
+                    }
+                    if l > 0 && (chip < prev || chip > prev + 1) {
+                        findings.push(Finding::new(
+                            Code::ShardOverlap,
+                            Some(l),
+                            format!(
+                                "stage map jumps from chip {} to chip {} at layer {} — stages \
+                                 must be contiguous, non-decreasing layer ranges",
+                                prev, chip, l
+                            ),
+                        ));
+                        break;
+                    }
+                    prev = chip;
+                }
+            }
+        }
+    }
+    let link = &shard.link;
+    if link.bits_per_s <= 0.0
+        || !link.bits_per_s.is_finite()
+        || link.bits_per_act == 0
+        || link.latency_s < 0.0
+        || !link.latency_s.is_finite()
+    {
+        findings.push(Finding::new(
+            Code::LinkCapacity,
+            None,
+            format!(
+                "degenerate inter-chip channel: {} bits/act at {} bits/s, {} s latency — \
+                 cross-chip activations could never arrive",
+                link.bits_per_act, link.bits_per_s, link.latency_s
+            ),
+        ));
+        return; // the balance math below divides by this bandwidth
+    }
+    if chips > 1 {
+        let stages = shard.stage_times_s();
+        let bottleneck = stages.iter().copied().fold(0.0_f64, f64::max);
+        let link_serial = shard.transfers_per_frame() as f64 * link.occupancy_s();
+        if link_serial > bottleneck {
+            findings.push(Finding::new(
+                Code::ShardImbalance,
+                None,
+                format!(
+                    "the shared inter-chip channel needs {:.3e} s per frame vs the {:.3e} s \
+                     bottleneck stage — the link, not the chips, sets the streaming rate",
+                    link_serial, bottleneck
+                ),
+            ));
+        }
+        if shard.policy() == ShardPolicy::LayerPipeline {
+            let mean: f64 = stages.iter().sum::<f64>() / chips as f64;
+            if mean > 0.0 && bottleneck > 2.0 * mean {
+                findings.push(Finding::new(
+                    Code::ShardImbalance,
+                    None,
+                    format!(
+                        "bottleneck stage {:.3e} s vs mean stage {:.3e} s — over half the \
+                         group idles in steady state",
+                        bottleneck, mean
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Cross-layer admission checks
 // ---------------------------------------------------------------------
 
@@ -880,5 +1073,82 @@ mod tests {
         let rej = gate("bad", &plan).unwrap_err();
         assert!(rej.findings.iter().any(|f| f.code == Code::XpeOversubscribed));
         assert!(rej.to_string().contains("PL105"), "{}", rej);
+    }
+
+    #[test]
+    fn compiled_shard_plans_lint_clean() {
+        for shard_policy in ShardPolicy::all() {
+            for chips in [1, 2, 4] {
+                let shard = ShardPlan::compile(
+                    &AcceleratorConfig::oxbnn_5(),
+                    &chained(),
+                    MappingPolicy::PcaLocal,
+                    chips,
+                    shard_policy,
+                );
+                let findings = verify_shard(&shard);
+                assert!(
+                    !has_errors(&findings),
+                    "{:?} x {} chips: {:?}",
+                    shard_policy,
+                    chips,
+                    findings
+                );
+                assert!(gate_shard("ok", &shard).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_stage_map_mutations_are_detected() {
+        let compile = |chips| {
+            ShardPlan::compile(
+                &AcceleratorConfig::oxbnn_5(),
+                &chained(),
+                MappingPolicy::PcaLocal,
+                chips,
+                ShardPolicy::LayerPipeline,
+            )
+        };
+        // A layer assigned outside the group: coverage broken.
+        let mut shard = compile(2);
+        shard.chip_of_layer[0] = 5;
+        let rej = gate_shard("escaped", &shard).unwrap_err();
+        assert!(rej.findings.iter().any(|f| f.code == Code::ShardCoverage), "{}", rej);
+        // A stage map shorter than the model: coverage broken.
+        let mut shard = compile(2);
+        shard.chip_of_layer.pop();
+        assert!(verify_shard(&shard).iter().any(|f| f.code == Code::ShardCoverage));
+        // Interleaved stages: chip 0 claims a layer after chip 1 started.
+        let mut shard = compile(2);
+        shard.chip_of_layer = vec![0, 1, 0, 1];
+        let rej = gate_shard("interleaved", &shard).unwrap_err();
+        assert!(rej.findings.iter().any(|f| f.code == Code::ShardOverlap));
+        assert!(rej.to_string().contains("PL402"), "{}", rej);
+        // A VdpSplit shard must not carry a stage map at all.
+        let mut shard = ShardPlan::compile(
+            &AcceleratorConfig::oxbnn_5(),
+            &chained(),
+            MappingPolicy::PcaLocal,
+            2,
+            ShardPolicy::VdpSplit,
+        );
+        shard.chip_of_layer = vec![0];
+        assert!(verify_shard(&shard).iter().any(|f| f.code == Code::ShardCoverage));
+    }
+
+    #[test]
+    fn degenerate_link_is_refused() {
+        let mut shard = ShardPlan::compile(
+            &AcceleratorConfig::oxbnn_5(),
+            &chained(),
+            MappingPolicy::PcaLocal,
+            2,
+            ShardPolicy::VdpSplit,
+        );
+        shard.link.bits_per_s = 0.0;
+        let rej = gate_shard("no-link", &shard).unwrap_err();
+        assert!(rej.findings.iter().any(|f| f.code == Code::LinkCapacity));
+        assert!(rej.to_string().contains("PL403"), "{}", rej);
     }
 }

@@ -22,6 +22,7 @@ use oxbnn::coordinator::{
     BatchPolicy, InferenceRequest, Server, ServerConfig, SubmitError,
 };
 use oxbnn::devices::oxg::Oxg;
+use oxbnn::plan::ShardPolicy;
 use oxbnn::util::bench::Table;
 use oxbnn::util::cli::{CliError, Command};
 use oxbnn::util::logging;
@@ -115,6 +116,22 @@ fn parse_pipeline(s: &str) -> Result<Option<bool>, i32> {
     }
 }
 
+/// Parse the shared `--chips K` / `--shard layer|vdp` scale-out options.
+fn parse_shard(parsed: &oxbnn::util::cli::Parsed) -> Result<(usize, ShardPolicy), i32> {
+    let chips = match parsed.get_usize("chips") {
+        Ok(k) => k.max(1),
+        Err(e) => return Err(handle_cli(e)),
+    };
+    let shard: ShardPolicy = match parsed.get("shard").parse() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            return Err(2);
+        }
+    };
+    Ok((chips, shard))
+}
+
 fn cmd_table2() -> i32 {
     let solver = ScalabilitySolver::default();
     let mut table = Table::new(&[
@@ -159,6 +176,8 @@ fn cmd_fps(args: &[String]) -> i32 {
             "auto",
             "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
         )
+        .opt("chips", "1", "accelerators per model (K-chip scale-out group)")
+        .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
         .flag("json", "emit JSON instead of tables");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -174,6 +193,10 @@ fn cmd_fps(args: &[String]) -> i32 {
     };
     let pipeline = match parse_pipeline(parsed.get("pipeline")) {
         Ok(p) => p,
+        Err(code) => return code,
+    };
+    let (chips, shard) = match parse_shard(&parsed) {
+        Ok(v) => v,
         Err(code) => return code,
     };
     let accels = AcceleratorConfig::evaluation_set();
@@ -193,7 +216,9 @@ fn cmd_fps(args: &[String]) -> i32 {
                 .accelerator(a)
                 .workload(w)
                 .backend(backend)
-                .batch(batch);
+                .batch(batch)
+                .chips(chips)
+                .shard_policy(shard);
             if let Some(p) = pipeline {
                 builder = builder.pipeline(p);
             }
@@ -250,13 +275,20 @@ fn cmd_fps(args: &[String]) -> i32 {
         );
         let obj = Json::obj(vec![
             ("backend", Json::Str(backend.as_str().to_string())),
+            ("chips", Json::Num(chips as f64)),
+            ("shard", Json::Str(shard.as_str().to_string())),
             ("accelerators", accelerators),
         ]);
         println!("{}", obj.to_string_pretty());
     } else {
-        println!("Fig. 7(a) — FPS (higher is better, {} backend)\n", backend);
+        let group = if chips > 1 {
+            format!(", {}-chip {} shard", chips, shard.as_str())
+        } else {
+            String::new()
+        };
+        println!("Fig. 7(a) — FPS (higher is better, {} backend{})\n", backend, group);
         fps_table.print();
-        println!("\nFig. 7(b) — FPS/W (higher is better, {} backend)\n", backend);
+        println!("\nFig. 7(b) — FPS/W (higher is better, {} backend{})\n", backend, group);
         fpsw_table.print();
     }
     0
@@ -294,6 +326,8 @@ fn cmd_simulate(args: &[String]) -> i32 {
         "auto|true|false — whole-frame pipelined batches: cross-layer + multi-frame \
          overlap with receptive-field-exact admission (auto: on when batch > 1)",
     )
+    .opt("chips", "1", "accelerators sharing the model (K-chip scale-out group)")
+    .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
     .flag("json", "emit the unified report as JSON")
     .flag("layers", "print per-layer breakdown");
     let parsed = match cmd.parse(args) {
@@ -352,11 +386,17 @@ fn cmd_simulate(args: &[String]) -> i32 {
         Ok(p) => p,
         Err(code) => return code,
     };
+    let (chips, shard) = match parse_shard(&parsed) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     let mut builder = Session::builder()
         .accelerator(acc)
         .workload(workload)
         .backend(backend)
-        .batch(batch);
+        .batch(batch)
+        .chips(chips)
+        .shard_policy(shard);
     if let Some(p) = pipeline {
         builder = builder.pipeline(p);
     }
@@ -406,6 +446,21 @@ fn cmd_simulate(args: &[String]) -> i32 {
             println!(
                 "  functional check: {} VDPs recomputed, {} mismatches, {} PCA clamps",
                 c.vdps_checked, c.mismatches, c.pca_clamped
+            );
+        }
+        if let Some(s) = &report.shard {
+            let idle: Vec<String> = s
+                .chip_idle_fraction
+                .iter()
+                .map(|f| format!("{:.0}%", f * 100.0))
+                .collect();
+            println!(
+                "  scale-out: {} chips ({} shard), chip idle [{}], link busy {} over {} transfers",
+                s.chips,
+                s.policy,
+                idle.join(", "),
+                fmt_time(s.link_busy_s),
+                s.link_transfers
             );
         }
         if parsed.has_flag("layers") {
@@ -1502,6 +1557,8 @@ fn cmd_sweep(args: &[String]) -> i32 {
         "auto",
         "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
     )
+    .opt("chips", "1", "accelerators per cell (K-chip scale-out group)")
+    .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
     .opt("out", "-", "output CSV path ('-' for stdout)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -1524,6 +1581,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
     };
     let pipeline = match parse_pipeline(parsed.get("pipeline")) {
         Ok(p) => p,
+        Err(code) => return code,
+    };
+    let (chips, shard) = match parse_shard(&parsed) {
+        Ok(v) => v,
         Err(code) => return code,
     };
     let xpes: Vec<usize> = parsed
@@ -1557,17 +1618,19 @@ fn cmd_sweep(args: &[String]) -> i32 {
             .accelerator(cfg)
             .workload(workload.clone())
             .backend(backend)
-            .batch(batch);
+            .batch(batch)
+            .chips(chips)
+            .shard_policy(shard);
         if let Some(p) = pipeline {
             builder = builder.pipeline(p);
         }
         let report = builder.build().expect("sweep session").run();
         format!(
-            "{},{},{},{},{:.1},{:.2},{:.2}\n",
-            dr, n, gamma, x, report.fps, report.fps_per_w, report.static_power_w
+            "{},{},{},{},{},{:.1},{:.2},{:.2}\n",
+            dr, n, gamma, x, chips, report.fps, report.fps_per_w, report.static_power_w
         )
     });
-    let mut csv = String::from("dr_gsps,n,gamma,xpe_total,fps,fps_per_w,static_w\n");
+    let mut csv = String::from("dr_gsps,n,gamma,xpe_total,chips,fps,fps_per_w,static_w\n");
     for line in &lines {
         csv.push_str(line);
     }
@@ -1648,10 +1711,58 @@ fn cmd_lint(args: &[String]) -> i32 {
             }
         }
     }
+    // Scale-out walk: the same zoo × policies grid again, sharded onto
+    // K ∈ {1, 2, 4} chip groups under both shard policies, through the
+    // PL4xx geometry lints (verify_shard re-lints the underlying
+    // single-chip plan too, so a shard regression cannot hide one).
+    let mut shard_plans = 0usize;
+    for acc in &accels {
+        for model in &models {
+            for policy in policies {
+                for chips in [1usize, 2, 4] {
+                    for shard in ShardPolicy::all() {
+                        shard_plans += 1;
+                        let splan =
+                            oxbnn::plan::ShardPlan::compile(acc, model, policy, chips, shard);
+                        let subject = format!(
+                            "{} × {} [{:?}, {} chips, {}]",
+                            acc.name,
+                            model.name,
+                            policy,
+                            chips,
+                            shard.as_str()
+                        );
+                        for finding in planlint::verify_shard(&splan) {
+                            match finding.severity {
+                                Severity::Error => {
+                                    errors += 1;
+                                    eprintln!("{}: {}", subject, finding);
+                                }
+                                Severity::Warning => {
+                                    warnings += 1;
+                                    if verbose {
+                                        println!("{}: {}", subject, finding);
+                                    }
+                                }
+                                Severity::Info => {
+                                    infos += 1;
+                                    if verbose {
+                                        println!("{}: {}", subject, finding);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
     println!(
-        "lint: {} plans checked ({} models × {} accelerators × {} policies × {} \
-         admission modes): {} errors, {} warnings, {} info",
+        "lint: {} plans + {} shard plans checked ({} models × {} accelerators × {} \
+         policies × {} admission modes; shards × K in {{1,2,4}} × both shard policies): \
+         {} errors, {} warnings, {} info",
         plans,
+        shard_plans,
         models.len(),
         accels.len(),
         policies.len(),

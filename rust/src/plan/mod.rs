@@ -23,9 +23,11 @@
 //! the property tests that prove stream/materialized equivalence.
 
 pub mod cache;
+pub mod shard;
 pub mod stream;
 
 pub use cache::PlanCache;
+pub use shard::{ChipLink, ShardPlan, ShardPolicy};
 pub use stream::{FrameStream, LayerPlan, PassStream};
 
 use crate::arch::accelerator::AcceleratorConfig;
@@ -155,6 +157,17 @@ pub struct FramePlan<'a> {
     /// Per-layer VDP base within one frame (prefix sums), plus the total.
     layer_vdp_base: Vec<usize>,
     frame_vdps: usize,
+    /// Chips in the shard group (1 = the ordinary single-chip batch).
+    chips: usize,
+    /// XPE slots per chip. For a single chip (and VdpSplit, whose
+    /// recompiled grid already spans `chips × T`) this divides the layer
+    /// grid; for LayerPipeline the layer grid IS one chip's slots and
+    /// the physical flat space is `chips ×` wider.
+    per_chip_xpes: usize,
+    /// Stage chip per layer (LayerPipeline shards; empty otherwise).
+    chip_of_layer: Vec<usize>,
+    /// The inter-chip activation channel (None when `chips == 1`).
+    link: Option<ChipLink>,
 }
 
 impl<'a> FramePlan<'a> {
@@ -178,7 +191,38 @@ impl<'a> FramePlan<'a> {
             layer_vdp_base.push(acc);
             acc += lp.vdp_count();
         }
-        FramePlan { plan, frames, admission, layer_vdp_base, frame_vdps: acc }
+        let grid = plan.layers.first().map(|l| l.total_xpes()).unwrap_or(0);
+        FramePlan {
+            plan,
+            frames,
+            admission,
+            layer_vdp_base,
+            frame_vdps: acc,
+            chips: 1,
+            per_chip_xpes: grid,
+            chip_of_layer: Vec::new(),
+            link: None,
+        }
+    }
+
+    /// Lay `frames` frames over a [`ShardPlan`]: the unit table spans the
+    /// whole K-chip group's XPEs, cross-chip edges route their
+    /// activations through the shared link, and admission for those
+    /// edges counts *arrived* (not merely drained) activations against
+    /// the same exact thresholds.
+    pub fn for_shard(
+        shard: &'a ShardPlan,
+        frames: usize,
+        admission: AdmissionMode,
+    ) -> FramePlan<'a> {
+        let mut fp = FramePlan::with_admission(&shard.plan, frames, admission);
+        fp.chips = shard.chips();
+        fp.per_chip_xpes = shard.per_chip_xpes();
+        fp.chip_of_layer = shard.chip_of_layer.clone();
+        if fp.chips > 1 {
+            fp.link = Some(shard.link.clone());
+        }
+        fp
     }
 
     pub fn admission(&self) -> AdmissionMode {
@@ -220,9 +264,94 @@ impl<'a> FramePlan<'a> {
         &self.plan.layers[self.unit_layer(unit)]
     }
 
-    /// XPE slots the batch runs on (same physical grid for every unit).
+    /// XPE slots the batch runs on: the whole shard group's flat space
+    /// (`chips × per-chip slots`; one chip's grid when unsharded).
     pub fn total_xpes(&self) -> usize {
-        self.plan.layers.first().map(|l| l.total_xpes()).unwrap_or(0)
+        if self.chip_of_layer.is_empty() {
+            // Single chip, or VdpSplit whose recompiled layer grid
+            // already spans the whole group.
+            self.plan.layers.first().map(|l| l.total_xpes()).unwrap_or(0)
+        } else {
+            self.chips * self.per_chip_xpes
+        }
+    }
+
+    /// Chips in the shard group (1 = unsharded).
+    pub fn chips(&self) -> usize {
+        self.chips
+    }
+
+    /// XPE slots per member chip.
+    pub fn per_chip_xpes(&self) -> usize {
+        self.per_chip_xpes
+    }
+
+    /// The chip owning the XPE at flat slot `flat`.
+    pub fn xpe_chip(&self, flat: usize) -> usize {
+        if self.per_chip_xpes == 0 {
+            0
+        } else {
+            flat / self.per_chip_xpes
+        }
+    }
+
+    /// The chip a unit's operand fetch is charged to (LayerPipeline: the
+    /// stage chip; otherwise chip 0 — VdpSplit fetches are split across
+    /// every chip, see [`Self::fetch_split`]).
+    pub fn unit_chip(&self, unit: usize) -> usize {
+        self.chip_of_layer.get(self.unit_layer(unit)).copied().unwrap_or(0)
+    }
+
+    /// Chips an operand fetch is split across in parallel (VdpSplit:
+    /// every chip stages its own VDP share; otherwise 1).
+    pub fn fetch_split(&self) -> usize {
+        if self.chips > 1 && self.chip_of_layer.is_empty() {
+            self.chips
+        } else {
+            1
+        }
+    }
+
+    /// May the XPE at flat slot `flat` service `unit`? Under
+    /// LayerPipeline sharding a chip only runs its own stage's layers;
+    /// everywhere else every XPE services every unit.
+    pub fn eligible(&self, unit: usize, flat: usize) -> bool {
+        match self.chip_of_layer.get(self.unit_layer(unit)) {
+            Some(&chip) => self.xpe_chip(flat) == chip,
+            None => true,
+        }
+    }
+
+    /// Translate a group-wide flat slot to the layer-grid slot the
+    /// unit's pass map is indexed by (identity except under
+    /// LayerPipeline sharding, whose layer grids span one chip).
+    pub fn local_flat(&self, unit: usize, flat: usize) -> usize {
+        if self.chip_of_layer.get(self.unit_layer(unit)).is_some() {
+            flat % self.per_chip_xpes
+        } else {
+            flat
+        }
+    }
+
+    /// Does the edge feeding `unit` cross chips (so its activations
+    /// traverse the inter-chip link and admission counts *arrivals*)?
+    pub fn edge_crosses(&self, unit: usize) -> bool {
+        if self.chips == 1 {
+            return false;
+        }
+        let layer = self.unit_layer(unit);
+        if layer == 0 {
+            return false;
+        }
+        match (self.chip_of_layer.get(layer - 1), self.chip_of_layer.get(layer)) {
+            (Some(a), Some(b)) => a != b,
+            _ => true, // VdpSplit: every edge is all-to-all
+        }
+    }
+
+    /// The shared inter-chip activation channel (None when unsharded).
+    pub fn link(&self) -> Option<&ChipLink> {
+        self.link.as_ref()
     }
 
     /// First global VDP id of `unit`.

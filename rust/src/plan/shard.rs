@@ -1,0 +1,426 @@
+//! Multi-accelerator scale-out plans: one model sharded across K chips.
+//!
+//! The paper evaluates OXBNN at single-chip N (Table II); production
+//! serving asks the question the paper doesn't — how many chips serve a
+//! given traffic level. A [`ShardPlan`] splits one compiled model across
+//! `K` identical accelerators in one of two ways:
+//!
+//! * [`ShardPolicy::LayerPipeline`] — contiguous layer ranges per chip
+//!   (pipeline parallelism). Chip boundaries are chosen by a contiguous
+//!   partition DP that minimizes the bottleneck stage (per-layer cost =
+//!   the critical-path pass count `max_queue_len`). Activations crossing
+//!   a stage boundary traverse the inter-chip link.
+//! * [`ShardPolicy::VdpSplit`] — every layer's VDPs/slices spread over
+//!   all K chips (tensor parallelism): the pass maps are recompiled onto
+//!   a `K × T` XPE grid, which the modular index maps spread evenly, so
+//!   each chip owns the contiguous flat-slot block `[c·T, (c+1)·T)`.
+//!   Every produced activation must be visible on the other chips, so
+//!   every cross-layer edge traverses the link.
+//!
+//! The inter-chip link is modeled as one more shared serialized channel
+//! (like the eDRAM fetch channel): per-activation flits are
+//! bandwidth-charged back-to-back and arrive one hop latency later. The
+//! receptive-field-exact `need_acts` thresholds of
+//! [`super::FramePlan`] are reused verbatim for cross-chip admission —
+//! a consumer chip admits a pass exactly when the producer's raster
+//! prefix has *arrived* over the link, not merely drained on the
+//! producer chip.
+//!
+//! A `K = 1` shard plan compiles to the identical [`ExecutionPlan`] and
+//! drives the identical event world — the differential suite
+//! (`rust/tests/scaleout.rs`) pins event-identity per zoo model.
+
+use crate::arch::accelerator::AcceleratorConfig;
+use crate::mapping::scheduler::MappingPolicy;
+use crate::workloads::Workload;
+
+use super::ExecutionPlan;
+
+/// How a model is split across the K chips of a [`ShardPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Contiguous layer ranges per chip (pipeline parallelism).
+    LayerPipeline,
+    /// Every layer's VDPs spread over all chips (tensor parallelism).
+    VdpSplit,
+}
+
+impl ShardPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardPolicy::LayerPipeline => "layer",
+            ShardPolicy::VdpSplit => "vdp",
+        }
+    }
+
+    pub fn all() -> [ShardPolicy; 2] {
+        [ShardPolicy::LayerPipeline, ShardPolicy::VdpSplit]
+    }
+}
+
+impl std::str::FromStr for ShardPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ShardPolicy, String> {
+        match s {
+            "layer" | "pipeline" | "layer-pipeline" => Ok(ShardPolicy::LayerPipeline),
+            "vdp" | "split" | "vdp-split" => Ok(ShardPolicy::VdpSplit),
+            other => Err(format!("unknown shard policy '{}' (use layer|vdp)", other)),
+        }
+    }
+}
+
+/// The shared inter-chip activation link: a serialized channel with a
+/// per-hop latency and a flit budget per activation. Derived
+/// deterministically from the accelerator config so every (config, K)
+/// pair models the same fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipLink {
+    /// One-hop transfer latency (charged once per activation, pipelined
+    /// with the bandwidth term).
+    pub latency_s: f64,
+    /// Serialized link bandwidth shared by all chip pairs.
+    pub bits_per_s: f64,
+    /// Flit size per transferred activation (1 binary value + routing
+    /// header).
+    pub bits_per_act: u64,
+}
+
+impl ChipLink {
+    /// The link a K-chip group of `cfg` instances would share: one
+    /// router + bus hop of latency, SerDes bandwidth at 1/8 of the
+    /// on-chip eDRAM aggregate.
+    pub fn for_config(cfg: &AcceleratorConfig) -> ChipLink {
+        ChipLink {
+            latency_s: cfg.peripherals.router.latency_s + cfg.peripherals.bus.latency_s,
+            bits_per_s: cfg.mem_bw_bits_per_s / 8.0,
+            bits_per_act: 32,
+        }
+    }
+
+    /// Serialized channel occupancy of one activation flit.
+    pub fn occupancy_s(&self) -> f64 {
+        self.bits_per_act as f64 / self.bits_per_s
+    }
+}
+
+/// One model compiled across a group of `chips` identical accelerators.
+///
+/// For [`ShardPolicy::LayerPipeline`] the inner [`ExecutionPlan`] is the
+/// ordinary single-chip compile and [`ShardPlan::chip_of_layer`] maps
+/// each layer to its stage chip. For [`ShardPolicy::VdpSplit`] the inner
+/// plan is recompiled onto a grid of `chips × T` XPE slots (`T` = the
+/// single-chip slot count `m · xpc_count`) and `chip_of_layer` is empty
+/// — every layer runs on every chip.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    chips: usize,
+    policy: ShardPolicy,
+    /// The per-chip accelerator (timing/energy/peripherals come from
+    /// here; the grid of `plan` may span `chips ×` its slots).
+    pub base: AcceleratorConfig,
+    /// The compiled pass maps the shard group executes.
+    pub plan: ExecutionPlan,
+    /// Stage chip per layer (LayerPipeline; empty under VdpSplit).
+    pub chip_of_layer: Vec<usize>,
+    /// The shared inter-chip activation channel.
+    pub link: ChipLink,
+}
+
+impl ShardPlan {
+    /// Compile `workload` onto a group of `chips` copies of `cfg` under
+    /// mapping `policy`, sharded by `shard`. `chips = 1` compiles the
+    /// identical single-chip [`ExecutionPlan`] (event-identity is pinned
+    /// by the differential suite).
+    pub fn compile(
+        cfg: &AcceleratorConfig,
+        workload: &Workload,
+        policy: MappingPolicy,
+        chips: usize,
+        shard: ShardPolicy,
+    ) -> ShardPlan {
+        assert!(chips > 0, "a shard plan needs at least one chip");
+        let link = ChipLink::for_config(cfg);
+        match shard {
+            ShardPolicy::LayerPipeline => {
+                let plan = ExecutionPlan::compile(cfg, workload, policy);
+                let costs: Vec<f64> =
+                    plan.layers.iter().map(|l| l.max_queue_len() as f64).collect();
+                let chip_of_layer = balance_contiguous(&costs, chips);
+                ShardPlan { chips, policy: shard, base: cfg.clone(), plan, chip_of_layer, link }
+            }
+            ShardPolicy::VdpSplit => {
+                let plan = if chips == 1 {
+                    ExecutionPlan::compile(cfg, workload, policy)
+                } else {
+                    // Scale the slot grid, not `xpe_total`'s ceil: K · T
+                    // slots where T = m · xpc_count, so each chip owns an
+                    // identically-shaped contiguous block (the last XPC
+                    // of each chip may be partially populated, exactly as
+                    // on a single chip).
+                    let mut scaled = cfg.clone();
+                    scaled.xpe_total = cfg.xpc_count() * cfg.m() * chips;
+                    ExecutionPlan::compile(&scaled, workload, policy)
+                };
+                ShardPlan {
+                    chips,
+                    policy: shard,
+                    base: cfg.clone(),
+                    plan,
+                    chip_of_layer: Vec::new(),
+                    link,
+                }
+            }
+        }
+    }
+
+    pub fn chips(&self) -> usize {
+        self.chips
+    }
+
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// XPE slots per member chip (`T = m · xpc_count` of the base
+    /// accelerator — identical for both shard policies).
+    pub fn per_chip_xpes(&self) -> usize {
+        self.base.xpc_count() * self.base.m()
+    }
+
+    /// True when every layer runs on every chip (tensor parallelism).
+    pub fn vdp_split(&self) -> bool {
+        self.policy == ShardPolicy::VdpSplit
+    }
+
+    /// Does the edge feeding `layer` cross chips (and therefore the
+    /// inter-chip link)? Layer 0 has no input edge.
+    pub fn edge_crosses(&self, layer: usize) -> bool {
+        if layer == 0 || self.chips == 1 {
+            return false;
+        }
+        match self.policy {
+            ShardPolicy::VdpSplit => true,
+            ShardPolicy::LayerPipeline => {
+                self.chip_of_layer[layer - 1] != self.chip_of_layer[layer]
+            }
+        }
+    }
+
+    /// Activation flits crossing the link per frame.
+    pub fn transfers_per_frame(&self) -> usize {
+        (0..self.plan.layers.len())
+            .filter(|&l| self.edge_crosses(l))
+            .map(|l| self.plan.layers[l - 1].vdp_count())
+            .sum()
+    }
+
+    /// Analytic per-layer service time: critical-path compute vs the
+    /// per-chip operand fetch (VdpSplit fetches each chip's share in
+    /// parallel).
+    pub fn layer_time_s(&self, layer: usize) -> f64 {
+        let lp = &self.plan.layers[layer];
+        let compute = lp.max_queue_len() as f64 * self.base.tau_s();
+        let split = if self.vdp_split() { self.chips } else { 1 };
+        let memory =
+            lp.layer.operand_bits() as f64 / (self.base.mem_bw_bits_per_s * split as f64);
+        compute.max(memory)
+    }
+
+    /// Serialized link time of the edge feeding `layer` (0 when the edge
+    /// stays on-chip).
+    pub fn transfer_time_s(&self, layer: usize) -> f64 {
+        if !self.edge_crosses(layer) {
+            return 0.0;
+        }
+        let produced = self.plan.layers[layer - 1].vdp_count() as f64;
+        produced * self.link.occupancy_s() + self.link.latency_s
+    }
+
+    /// Analytic per-chip stage time (LayerPipeline: the sum of the
+    /// chip's layers plus its incoming transfers; VdpSplit: every chip
+    /// sees the whole frame, so the stage is the frame itself).
+    pub fn stage_times_s(&self) -> Vec<f64> {
+        let frame: f64 = (0..self.plan.layers.len())
+            .map(|l| self.layer_time_s(l) + self.transfer_time_s(l))
+            .sum();
+        match self.policy {
+            ShardPolicy::VdpSplit => vec![frame; self.chips],
+            ShardPolicy::LayerPipeline => {
+                let mut stages = vec![0.0; self.chips];
+                for (l, &chip) in self.chip_of_layer.iter().enumerate() {
+                    stages[chip] += self.layer_time_s(l) + self.transfer_time_s(l);
+                }
+                stages
+            }
+        }
+    }
+
+    /// Closed-form batched-FPS estimate the conformance suite pins the
+    /// event simulation against: fill one frame, then stream at the
+    /// bottleneck stage (which is never faster than the shared link can
+    /// carry all cross-chip activations of a frame).
+    pub fn analytic_batched_fps(&self, batch: usize) -> f64 {
+        assert!(batch > 0);
+        let layers = self.plan.layers.len();
+        let frame: f64 =
+            (0..layers).map(|l| self.layer_time_s(l) + self.transfer_time_s(l)).sum();
+        let link_serial: f64 = self.transfers_per_frame() as f64 * self.link.occupancy_s();
+        let per_layer_bottleneck = (0..layers)
+            .map(|l| self.layer_time_s(l) + self.transfer_time_s(l))
+            .fold(0.0f64, f64::max);
+        let stage_bottleneck =
+            self.stage_times_s().into_iter().fold(0.0f64, f64::max);
+        let bottleneck = match self.policy {
+            ShardPolicy::VdpSplit => per_layer_bottleneck,
+            ShardPolicy::LayerPipeline => stage_bottleneck,
+        }
+        .max(link_serial);
+        batch as f64 / (frame + (batch - 1) as f64 * bottleneck)
+    }
+}
+
+/// Partition `costs` into (at most) `chips` contiguous groups minimizing
+/// the bottleneck group sum — classic linear-partition DP, O(K·L²).
+/// Returns the group id per element, non-decreasing from 0; when there
+/// are fewer elements than chips the tail chips stay empty.
+fn balance_contiguous(costs: &[f64], chips: usize) -> Vec<usize> {
+    let l = costs.len();
+    if l == 0 {
+        return Vec::new();
+    }
+    let k = chips.min(l).max(1);
+    let mut prefix = vec![0.0; l + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // [a, b)
+    // dp[j][i]: min bottleneck splitting the first i elements into j parts.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; l + 1]; k + 1];
+    let mut cut = vec![vec![0usize; l + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=l {
+            for s in (j - 1)..i {
+                let cand = dp[j - 1][s].max(seg(s, i));
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = s;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![l; k + 1];
+    for j in (1..=k).rev() {
+        bounds[j - 1] = cut[j][bounds[j]];
+    }
+    let mut out = vec![0usize; l];
+    for j in 0..k {
+        for slot in out.iter_mut().take(bounds[j + 1]).skip(bounds[j]) {
+            *slot = j;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::layer::GemmLayer;
+
+    fn wl() -> Workload {
+        Workload::new(
+            "shard-t",
+            vec![
+                GemmLayer::new("a", 16, 120, 8),
+                GemmLayer::new("b", 16, 90, 8),
+                GemmLayer::new("c", 8, 60, 4),
+                GemmLayer::fc("fc", 64, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn k1_compiles_the_single_chip_plan() {
+        let cfg = AcceleratorConfig::oxbnn_5();
+        for shard in ShardPolicy::all() {
+            let sp = ShardPlan::compile(&cfg, &wl(), MappingPolicy::PcaLocal, 1, shard);
+            let single = ExecutionPlan::compile(&cfg, &wl(), MappingPolicy::PcaLocal);
+            assert_eq!(sp.plan.layers.len(), single.layers.len());
+            for (a, b) in sp.plan.layers.iter().zip(&single.layers) {
+                assert_eq!(a.total_xpes(), b.total_xpes());
+                assert_eq!(a.total_passes(), b.total_passes());
+                assert_eq!(a.max_queue_len(), b.max_queue_len());
+            }
+            assert!(!sp.edge_crosses(1), "K=1 has no cross-chip edges");
+            assert_eq!(sp.transfers_per_frame(), 0);
+        }
+    }
+
+    #[test]
+    fn vdp_split_scales_the_grid_and_shrinks_queues() {
+        let cfg = AcceleratorConfig::oxbnn_50();
+        let single =
+            ShardPlan::compile(&cfg, &wl(), MappingPolicy::PcaLocal, 1, ShardPolicy::VdpSplit);
+        for k in [2usize, 3, 4] {
+            let sp =
+                ShardPlan::compile(&cfg, &wl(), MappingPolicy::PcaLocal, k, ShardPolicy::VdpSplit);
+            assert_eq!(sp.per_chip_xpes(), cfg.xpc_count() * cfg.m());
+            for (lp, lp1) in sp.plan.layers.iter().zip(&single.plan.layers) {
+                assert_eq!(lp.total_xpes(), k * sp.per_chip_xpes());
+                assert_eq!(lp.total_passes(), lp1.total_passes(), "multiset size conserved");
+                assert!(lp.max_queue_len() <= lp1.max_queue_len());
+            }
+            assert!(sp.edge_crosses(1), "every edge crosses under VdpSplit");
+            assert!(sp.analytic_batched_fps(8) >= single.analytic_batched_fps(8));
+        }
+    }
+
+    #[test]
+    fn layer_pipeline_partition_is_contiguous_and_covering() {
+        let cfg = AcceleratorConfig::oxbnn_5();
+        for k in [1usize, 2, 3, 4, 8] {
+            let sp = ShardPlan::compile(
+                &cfg,
+                &wl(),
+                MappingPolicy::PcaLocal,
+                k,
+                ShardPolicy::LayerPipeline,
+            );
+            assert_eq!(sp.chip_of_layer.len(), sp.plan.layers.len());
+            let mut prev = 0usize;
+            for &c in &sp.chip_of_layer {
+                assert!(c < k, "chip id in range");
+                assert!(c == prev || c == prev + 1, "contiguous non-decreasing stages");
+                prev = c;
+            }
+            assert_eq!(sp.chip_of_layer[0], 0, "stage 0 starts the pipeline");
+            // Stage times cover the frame.
+            let stages = sp.stage_times_s();
+            assert_eq!(stages.len(), k);
+            assert!(stages.iter().all(|s| *s >= 0.0));
+        }
+    }
+
+    #[test]
+    fn balance_dp_minimizes_the_bottleneck() {
+        // Costs 8,1,1,8 into 2 chips: the optimal contiguous cut is
+        // [8,1] | [1,8] (bottleneck 9), not [8] | [1,1,8] (10).
+        let out = balance_contiguous(&[8.0, 1.0, 1.0, 8.0], 2);
+        assert_eq!(out, vec![0, 0, 1, 1]);
+        // More chips than layers: one layer per chip, tail chips empty.
+        let out = balance_contiguous(&[3.0, 2.0], 4);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn link_is_deterministic_from_config() {
+        let cfg = AcceleratorConfig::oxbnn_50();
+        let link = ChipLink::for_config(&cfg);
+        assert!(link.latency_s > 0.0);
+        assert!(link.bits_per_s > 0.0);
+        assert_eq!(link.bits_per_act, 32);
+        assert_eq!(link, ChipLink::for_config(&cfg));
+    }
+}

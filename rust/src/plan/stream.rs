@@ -275,14 +275,16 @@ impl FrameStream {
         }
     }
 
-    /// The next pass of `unit` on XPE `flat`, advancing that unit's cursor.
+    /// The next pass of `unit` on XPE `flat`, advancing that unit's
+    /// cursor. `flat` indexes the whole shard group's slot space; the
+    /// unit's pass map is indexed by its chip-local slot.
     pub fn next_for(
         &mut self,
         fp: &super::FramePlan<'_>,
         unit: usize,
         flat: usize,
     ) -> Option<ScheduledPass> {
-        self.streams[unit].next_for(fp.layer_plan(unit), flat)
+        self.streams[unit].next_for(fp.layer_plan(unit), fp.local_flat(unit, flat))
     }
 
     /// Peek the next pass of `unit` on XPE `flat` without advancing.
@@ -292,12 +294,12 @@ impl FrameStream {
         unit: usize,
         flat: usize,
     ) -> Option<ScheduledPass> {
-        self.streams[unit].peek_for(fp.layer_plan(unit), flat)
+        self.streams[unit].peek_for(fp.layer_plan(unit), fp.local_flat(unit, flat))
     }
 
     /// True once `unit` has no passes left for XPE `flat`.
     pub fn exhausted_for(&self, fp: &super::FramePlan<'_>, unit: usize, flat: usize) -> bool {
-        self.streams[unit].exhausted_for(fp.layer_plan(unit), flat)
+        self.streams[unit].exhausted_for(fp.layer_plan(unit), fp.local_flat(unit, flat))
     }
 
     /// Passes issued so far by `unit` (all XPEs).
@@ -324,10 +326,13 @@ impl FrameStream {
         self.first_open[flat]
     }
 
-    /// Permanently skip drained leading units for XPE `flat`.
+    /// Permanently skip leading units XPE `flat` will never service:
+    /// drained units, and (under LayerPipeline sharding) units staged on
+    /// a different chip.
     pub fn advance_first_open(&mut self, fp: &super::FramePlan<'_>, flat: usize) {
         while self.first_open[flat] < self.streams.len()
-            && self.exhausted_for(fp, self.first_open[flat], flat)
+            && (!fp.eligible(self.first_open[flat], flat)
+                || self.exhausted_for(fp, self.first_open[flat], flat))
         {
             self.first_open[flat] += 1;
         }

@@ -62,8 +62,14 @@ pub struct ModelEntry {
     /// Replicas the entry was configured with (live count may be lower
     /// after quarantines — see [`Server::replicas`]).
     pub replicas: usize,
+    /// Accelerators in the entry's shard group (1 = single-chip). A
+    /// K-chip group is ONE registry entry — the router sees one
+    /// high-throughput replica set, health is the whole group's, and
+    /// unload/drain retires the group atomically.
+    pub chips: usize,
     /// Simulated photonic FPS of this geometry on the configured
-    /// accelerator (the paper-model reference the front-end reports).
+    /// accelerator group (the paper-model reference the front-end
+    /// reports; for `chips > 1` this is the sharded group's batched FPS).
     pub photonic_fps: f64,
 }
 
@@ -116,6 +122,19 @@ impl ModelRegistry {
     /// config's replica count). Builds the new server fully before
     /// swapping it in; a replaced server drains in the background.
     pub fn load(&self, name: &str, replicas: usize) -> Result<Arc<ModelEntry>> {
+        self.load_with(name, replicas, 1)
+    }
+
+    /// [`ModelRegistry::load`] onto a `chips`-accelerator shard group
+    /// (VdpSplit). The group is staged as ONE entry: the compiled
+    /// [`crate::plan::ShardPlan`] runs through
+    /// [`crate::check::planlint::gate_shard`] — exactly the same refusal
+    /// surface as single-chip loads through `gate` (`LintRejection` →
+    /// HTTP 422) — and the published photonic reference is the sharded
+    /// group's batched FPS. `chips = 0` or `1` is the plain single-chip
+    /// load.
+    pub fn load_with(&self, name: &str, replicas: usize, chips: usize) -> Result<Arc<ModelEntry>> {
+        let chips = chips.max(1);
         let replicas = if replicas > 0 { replicas } else { self.base.replicas.max(1) };
         let mut cfg = self.base.clone();
         cfg.models = vec![name.to_string()];
@@ -135,18 +154,43 @@ impl ModelRegistry {
         // correctly; surface it as a typed rejection instead of letting
         // workers fail at runtime.
         let policy = crate::api::default_policy(&cfg.accelerator);
-        let plan = cfg.plan_cache.get_or_compile(&cfg.accelerator, &workload, policy);
-        crate::check::planlint::gate(name, &plan)
-            .with_context(|| format!("refusing to load model '{}'", name))?;
-        let photonic_fps = crate::api::simulated_photonic_fps_cached(
-            &cfg.plan_cache,
-            &cfg.accelerator,
-            &workload,
-            cfg.sim_backend,
-            if cfg.sim_pipeline { cfg.max_batch } else { 1 },
-            cfg.sim_pipeline,
-        )
-        .map_err(|e| anyhow!("simulating photonic reference for '{}': {}", name, e))?;
+        let photonic_fps = if chips > 1 {
+            let shard = crate::plan::ShardPlan::compile(
+                &cfg.accelerator,
+                &workload,
+                policy,
+                chips,
+                crate::plan::ShardPolicy::VdpSplit,
+            );
+            crate::check::planlint::gate_shard(name, &shard)
+                .with_context(|| format!("refusing to load model '{}'", name))?;
+            let batch = if cfg.sim_pipeline { cfg.max_batch.max(1) } else { 1 };
+            crate::api::Session::builder()
+                .accelerator(cfg.accelerator.clone())
+                .workload(workload.clone())
+                .backend(cfg.sim_backend)
+                .batch(batch)
+                .pipeline(cfg.sim_pipeline)
+                .chips(chips)
+                .plan_cache(Arc::clone(&cfg.plan_cache))
+                .build()
+                .map_err(|e| anyhow!("building sharded session for '{}': {}", name, e))?
+                .run()
+                .batched_fps()
+        } else {
+            let plan = cfg.plan_cache.get_or_compile(&cfg.accelerator, &workload, policy);
+            crate::check::planlint::gate(name, &plan)
+                .with_context(|| format!("refusing to load model '{}'", name))?;
+            crate::api::simulated_photonic_fps_cached(
+                &cfg.plan_cache,
+                &cfg.accelerator,
+                &workload,
+                cfg.sim_backend,
+                if cfg.sim_pipeline { cfg.max_batch } else { 1 },
+                cfg.sim_pipeline,
+            )
+            .map_err(|e| anyhow!("simulating photonic reference for '{}': {}", name, e))?
+        };
         let server = Arc::new(Server::start(cfg)?);
         let input_len = server
             .input_len(name)
@@ -158,6 +202,7 @@ impl ModelRegistry {
             server,
             input_len,
             replicas,
+            chips,
             photonic_fps,
         });
         // Epoch-guarded swap: only replace an entry with a LOWER epoch.
@@ -185,13 +230,14 @@ impl ModelRegistry {
         Ok(published)
     }
 
-    /// Hot-reload `name` at its current replica count (epoch bump).
+    /// Hot-reload `name` at its current replica count and shard-group
+    /// width (epoch bump).
     pub fn reload(&self, name: &str) -> Result<Arc<ModelEntry>> {
-        let replicas = self
+        let (replicas, chips) = self
             .get(name)
-            .map(|e| e.replicas)
+            .map(|e| (e.replicas, e.chips))
             .ok_or_else(|| anyhow!("model '{}' is not loaded", name))?;
-        self.load(name, replicas)
+        self.load_with(name, replicas, chips)
     }
 
     /// Unload `name`; its server drains in the background (accepted
@@ -317,6 +363,34 @@ mod tests {
         // Same geometry + accelerator → one compiled plan across models
         // (registry photonic-FPS computation AND both servers' workers).
         assert_eq!(cache.len(), 1, "synthetic models must share one plan");
+        reg.drain_all();
+    }
+
+    #[test]
+    fn group_load_stages_k_chip_entry() {
+        let reg = ModelRegistry::synthetic(base());
+        let solo = reg.load("alpha", 1).unwrap();
+        assert_eq!(solo.chips, 1);
+        let group = reg.load_with("alpha", 1, 2).unwrap();
+        assert_eq!(group.chips, 2);
+        assert_eq!(group.epoch, 2, "group load is an epoch-bumping swap");
+        assert!(
+            group.photonic_fps > 0.0 && group.photonic_fps.is_finite(),
+            "group photonic FPS must be a positive reference, got {}",
+            group.photonic_fps
+        );
+        // Reload preserves the group width.
+        let again = reg.reload("alpha").unwrap();
+        assert_eq!(again.chips, 2);
+        // The group still serves as one replica set.
+        let resp = again
+            .server
+            .infer_blocking(InferenceRequest {
+                model: "alpha".into(),
+                input: vec![0.5; again.input_len],
+            })
+            .unwrap();
+        assert_eq!(resp.logits.len(), 10);
         reg.drain_all();
     }
 

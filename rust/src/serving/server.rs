@@ -427,6 +427,7 @@ fn models_listing(ctx: &Ctx) -> String {
                 ("epoch", Json::Num(entry.epoch as f64)),
                 ("replicas", Json::arr_f64(&live)),
                 ("configured_replicas", Json::Num(entry.replicas as f64)),
+                ("chips", Json::Num(entry.chips as f64)),
                 ("input_len", Json::Num(entry.input_len as f64)),
                 ("photonic_fps", Json::Num(entry.photonic_fps)),
             ])
@@ -436,9 +437,11 @@ fn models_listing(ctx: &Ctx) -> String {
 }
 
 /// `PUT /v1/models` — desired-state reconcile. Body shape:
-/// `{"models": [{"name": "a", "replicas": 2}, ...], "reload": ["b"]}`.
-/// When `models` is present, listed models are loaded (or resized) and
-/// unlisted ones unloaded; `reload` hot-reloads by name (epoch bump).
+/// `{"models": [{"name": "a", "replicas": 2, "chips": 4}, ...],
+/// "reload": ["b"]}`. When `models` is present, listed models are
+/// loaded (or resized) and unlisted ones unloaded; an optional `chips`
+/// stages the model onto a K-accelerator shard group that serves as ONE
+/// high-throughput replica; `reload` hot-reloads by name (epoch bump).
 /// A model whose compiled plan fails the static lint gate
 /// ([`LintRejection`] in the load error chain) is refused with
 /// `422 Unprocessable Entity` — the request was well-formed, the plan
@@ -456,7 +459,7 @@ fn put_models(req: &Request, ctx: &Ctx) -> Reply {
         }
     };
     if let Some(models) = j.get("models").and_then(Json::as_arr) {
-        let mut desired: Vec<(String, usize)> = Vec::new();
+        let mut desired: Vec<(String, usize, usize)> = Vec::new();
         for m in models {
             let name = match m.get("name").and_then(Json::as_str) {
                 Some(n) => n.to_string(),
@@ -469,21 +472,24 @@ fn put_models(req: &Request, ctx: &Ctx) -> Reply {
                 }
             };
             let replicas = m.get("replicas").and_then(Json::as_usize).unwrap_or(0);
-            desired.push((name, replicas));
+            let chips = m.get("chips").and_then(Json::as_usize).unwrap_or(1).max(1);
+            desired.push((name, replicas, chips));
         }
         for name in ctx.registry.names() {
-            if !desired.iter().any(|(n, _)| *n == name) {
+            if !desired.iter().any(|(n, _, _)| *n == name) {
                 ctx.registry.unload(&name);
                 ctx.health.invalidate(&name);
             }
         }
-        for (name, replicas) in &desired {
+        for (name, replicas, chips) in &desired {
             let needs_load = match ctx.registry.get(name) {
                 None => true,
-                Some(entry) => *replicas > 0 && entry.replicas != *replicas,
+                Some(entry) => {
+                    entry.chips != *chips || (*replicas > 0 && entry.replicas != *replicas)
+                }
             };
             if needs_load {
-                if let Err(e) = ctx.registry.load(name, *replicas) {
+                if let Err(e) = ctx.registry.load_with(name, *replicas, *chips) {
                     return Reply::json(
                         "/v1/models",
                         load_error_status(&e),

@@ -114,6 +114,12 @@ enum Attempt {
     Broken(String),
 }
 
+/// Model-level router over the registry. The routing unit is the
+/// registry ENTRY: a model staged onto a K-chip shard group
+/// ([`ModelRegistry::load_with`]) is one entry and therefore ONE
+/// high-throughput replica set here — the router never addresses
+/// individual chips, group health is the whole entry's live-replica
+/// state, and an unload/swap drains the group atomically.
 pub struct ShardRouter {
     registry: Arc<ModelRegistry>,
     policy: RetryPolicy,
@@ -290,6 +296,27 @@ mod tests {
         assert!(entry.server.quarantine("m", expect));
         let reply = router.infer("m", &vec![0.5; 192], Some(key)).unwrap();
         assert_eq!(reply.response.logits.len(), 10);
+        router.registry().drain_all();
+    }
+
+    #[test]
+    fn chip_group_routes_as_one_replica() {
+        let router = router_with(|_| {}, RetryPolicy::default());
+        router.registry().load_with("m", 2, 2).unwrap();
+        let entry = router.registry().get("m").unwrap();
+        assert_eq!(entry.chips, 2, "group width is recorded on the entry");
+        // The group is ONE routing target: session affinity and plain
+        // routing both resolve through the single entry.
+        let reply = router.infer("m", &vec![0.25; 192], None).unwrap();
+        assert_eq!(reply.response.logits.len(), 10);
+        let pinned = router.infer("m", &vec![0.25; 192], Some("sess")).unwrap();
+        assert_eq!(pinned.response.logits.len(), 10);
+        // Atomic group drain: after unload the whole group refuses.
+        assert!(router.registry().unload("m"));
+        assert!(matches!(
+            router.infer("m", &vec![0.25; 192], None),
+            Err(InferError::UnknownModel(_))
+        ));
         router.registry().drain_all();
     }
 

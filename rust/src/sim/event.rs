@@ -36,6 +36,11 @@ pub enum EventKind {
     /// buffer write) completed — the whole-frame pipelined world's
     /// admission trigger for that unit's first passes.
     FetchDone { unit: usize },
+    /// One of producer `unit`'s activations finished crossing the
+    /// inter-chip link of a sharded group — the consumer chip's
+    /// cross-chip admission trigger (consumers admit on *arrivals*, not
+    /// on the producer chip's drains).
+    LinkArrived { unit: usize },
     /// Generic scheduler wakeup.
     Wakeup,
 }

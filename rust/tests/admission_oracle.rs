@@ -267,6 +267,76 @@ fn frame_world_never_admits_before_oracle_threshold() {
     assert_eq!(outcome.stats.counter("clamped_events"), 0);
 }
 
+/// Cross-chip event-replay (ISSUE 9): shard the same conv chain over two
+/// chips — both policies — and replay with admission recording on. For a
+/// chip-crossing edge the recorded availability is the producer's
+/// **arrived** raster prefix (`acts_arrived`, fed only by `LinkArrived`
+/// events after link occupancy + hop latency), so `acts >= oracle`
+/// proves no consumer pass was ever issued before its receptive field
+/// had physically crossed the inter-chip link. The same PR-5 thresholds
+/// gate both sides — the log is pass-for-pass the size of the unsharded
+/// one.
+#[test]
+fn sharded_world_never_admits_before_activations_cross_the_link() {
+    use oxbnn::plan::{AdmissionMode, ShardPlan, ShardPolicy};
+    let cfg = small_cfg(8);
+    let wl = Workload::new(
+        "replay",
+        vec![
+            GemmLayer::new("c1", 64, 48, 4).with_geom(ConvGeom::new(3, 1, 1, 8)),
+            GemmLayer::new("c2", 64, 48, 2).with_geom(ConvGeom::new(3, 1, 1, 8)),
+            GemmLayer::new("c3", 16, 24, 2).with_geom(ConvGeom::new(3, 2, 1, 8)),
+            GemmLayer::fc("fc", 32, 6),
+        ],
+    );
+    let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+    let base_fp = FramePlan::with_admission(&plan, 2, AdmissionMode::Exact);
+    let mut base_world = FrameWorld::new(&cfg, &base_fp);
+    base_world.record_admissions(true);
+    let base_outcome = oxbnn::sim::engine::run(&mut base_world, base_fp.event_budget());
+    assert!(base_outcome.completed, "unsharded replay truncated");
+    let base_len = base_world.admission_log().len();
+    for policy in ShardPolicy::all() {
+        let shard = ShardPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal, 2, policy);
+        let fp = FramePlan::for_shard(&shard, 2, AdmissionMode::Exact);
+        let mut world = FrameWorld::new(&shard.base, &fp);
+        world.record_admissions(true);
+        let outcome = oxbnn::sim::engine::run(&mut world, fp.event_budget());
+        assert!(outcome.completed, "{:?} sharded replay truncated", policy);
+        assert!(world.link_transfers() > 0, "{:?}: link never used", policy);
+        let log = world.admission_log();
+        assert_eq!(log.len(), base_len, "{:?}: admission count diverged", policy);
+        let mut crossing = 0usize;
+        for &(unit, vdp, acts) in log {
+            let (unit, vdp, acts) = (unit as usize, vdp as usize, acts as usize);
+            let layer = fp.unit_layer(unit);
+            assert!(layer > 0, "layer-0 passes have no producer to record");
+            let consumer = &wl.layers[layer];
+            let producer = &wl.layers[layer - 1];
+            let produced = fp.layer_plan(unit - 1).vdp_count();
+            let threshold = oracle_need(consumer, producer, produced, vdp);
+            assert!(
+                acts >= threshold,
+                "{:?} unit {} vdp {} admitted at {} acts < oracle {}",
+                policy,
+                unit,
+                vdp,
+                acts,
+                threshold
+            );
+            if fp.edge_crosses(unit) {
+                crossing += 1;
+            }
+        }
+        assert!(
+            crossing > 0,
+            "{:?}: no admission ever rode a chip-crossing edge",
+            policy
+        );
+        assert_eq!(outcome.stats.counter("clamped_events"), 0);
+    }
+}
+
 /// Wake-index regression (ISSUE 5 satellite): on a 64-XPE world whose
 /// whole second layer lives on one XPE, the entire run performs exactly
 /// ONE wake dispatch — the drain that crosses the single waiter's

@@ -316,6 +316,81 @@ fn event_pipelined_mode_agrees_with_sequential_and_wins_batched() {
     );
 }
 
+/// ISSUE-9 scale-out conformance. On the paper's flagship pairing
+/// (vgg_small on OXBNN_50), K-chip VDP-split batched FPS is monotone
+/// non-decreasing in K with parallel efficiency ≤ 1 (sharding can never
+/// conjure super-linear throughput: per-chip queue lengths are ceilings
+/// and the link only ever adds time). On an event-simulable geometry the
+/// sharded event space lands within a factor of two of the
+/// `ShardPlan` closed-form batched-FPS estimate. The single-chip Fig. 7
+/// and Table II pins above are untouched by sharding.
+#[test]
+fn scaleout_fps_scaling_is_monotone_and_analytically_consistent() {
+    use oxbnn::arch::workload_sim::simulate_frames_sharded;
+    use oxbnn::plan::{ShardPlan, ShardPolicy};
+    let cfg = AcceleratorConfig::oxbnn_50();
+    let wl = Workload::evaluation_set()
+        .into_iter()
+        .find(|w| w.name == "vgg_small")
+        .expect("vgg_small is in the evaluation set");
+    let fps_at = |chips: usize| {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(BackendKind::Analytic)
+            .batch(8)
+            .pipeline(true)
+            .chips(chips)
+            .shard_policy(ShardPolicy::VdpSplit)
+            .build()
+            .expect("sharded conformance session")
+            .run()
+            .batched_fps()
+    };
+    let f1 = fps_at(1);
+    assert!(f1 > 0.0 && f1.is_finite());
+    let mut last = f1;
+    for k in [2usize, 4] {
+        let fk = fps_at(k);
+        assert!(
+            fk >= last,
+            "FPS must be monotone in chips: K={} gives {} < {}",
+            k,
+            fk,
+            last
+        );
+        let efficiency = fk / (k as f64 * f1);
+        assert!(
+            efficiency <= 1.0 + 1e-9,
+            "K={}: super-linear scaling efficiency {:.3}",
+            k,
+            efficiency
+        );
+        last = fk;
+    }
+    // Event-domain agreement with the closed-form estimate on a geometry
+    // the transaction simulator can sweep in test time.
+    let scfg = small_pca();
+    let swl = tiny_workload();
+    let policy = oxbnn::api::default_policy(&scfg);
+    let batch = 4usize;
+    for chips in [2usize, 4] {
+        let shard = ShardPlan::compile(&scfg, &swl, policy, chips, ShardPolicy::VdpSplit);
+        let trace = simulate_frames_sharded(&shard, batch);
+        let event_fps = trace.frames as f64 / trace.batch_latency_s;
+        let estimate = shard.analytic_batched_fps(batch);
+        let ratio = event_fps / estimate;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "K={}: event batched FPS {:.1} vs analytic estimate {:.1} (ratio {:.2})",
+            chips,
+            event_fps,
+            estimate,
+            ratio
+        );
+    }
+}
+
 /// The CI admission matrix runs this suite with `OXBNN_PIPELINE=1` and
 /// `=0`: a batched session built WITHOUT an explicit `.pipeline(..)`
 /// resolves the env-controlled default, and the claims that must hold in

@@ -18,7 +18,7 @@ use oxbnn::check::planlint::{self, has_errors, Code, Severity};
 use oxbnn::coordinator::{synthetic_manifest, workload_from_artifact};
 use oxbnn::mapping::layer::GemmLayer;
 use oxbnn::mapping::scheduler::MappingPolicy;
-use oxbnn::plan::{AdmissionMode, ExecutionPlan};
+use oxbnn::plan::{AdmissionMode, ExecutionPlan, ShardPlan, ShardPolicy};
 use oxbnn::workloads::{zoo, Workload};
 
 const POLICIES: [MappingPolicy; 2] = [MappingPolicy::PcaLocal, MappingPolicy::SlicedSpread];
@@ -223,7 +223,119 @@ fn pca_overflow_is_pl301() {
 }
 
 // ---------------------------------------------------------------------
-// 3. The machine-readable surface is stable
+// 3. Shard lints (PL4xx, ISSUE 9): zoo conformance + mutations
+// ---------------------------------------------------------------------
+
+/// The scale-out half of the CLI lint walk: every zoo model, both paper
+/// accelerators, both shard policies, K in {1, 2, 4} — compiled shard
+/// plans carry zero `Error` findings and pass the shard gate.
+#[test]
+fn all_zoo_shard_plans_lint_clean_across_k() {
+    let accels = [AcceleratorConfig::oxbnn_5(), AcceleratorConfig::oxbnn_50()];
+    let mut plans = 0usize;
+    for acc in &accels {
+        for model in &model_zoo() {
+            for shard_policy in ShardPolicy::all() {
+                for chips in [1usize, 2, 4] {
+                    plans += 1;
+                    let shard = ShardPlan::compile(
+                        acc,
+                        model,
+                        MappingPolicy::PcaLocal,
+                        chips,
+                        shard_policy,
+                    );
+                    let findings = planlint::verify_shard(&shard);
+                    assert!(
+                        !has_errors(&findings),
+                        "{} x {} [{:?} K={}]: {:?}",
+                        acc.name,
+                        model.name,
+                        shard_policy,
+                        chips,
+                        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+                    );
+                    planlint::gate_shard(&model.name, &shard)
+                        .expect("zoo shard plan must pass the gate");
+                }
+            }
+        }
+    }
+    // 5 models x 2 accelerators x 2 shard policies x 3 chip counts.
+    assert_eq!(plans, 60);
+}
+
+fn shard(policy: ShardPolicy, chips: usize) -> ShardPlan {
+    ShardPlan::compile(
+        &AcceleratorConfig::oxbnn_5(),
+        &chained(),
+        MappingPolicy::PcaLocal,
+        chips,
+        policy,
+    )
+}
+
+#[test]
+fn shard_stage_map_out_of_range_is_pl401_and_gate_refuses() {
+    let mut s = shard(ShardPolicy::LayerPipeline, 2);
+    assert!(planlint::gate_shard("ok", &s).is_ok());
+    *s.chip_of_layer.last_mut().unwrap() = 5; // chip 5 of a 2-chip group
+    let rej = planlint::gate_shard("bad", &s).unwrap_err();
+    assert!(rej.findings.iter().any(|f| f.code == Code::ShardCoverage));
+    assert!(rej.to_string().contains("PL401"), "{}", rej);
+}
+
+#[test]
+fn truncated_stage_map_is_pl401() {
+    let mut s = shard(ShardPolicy::LayerPipeline, 2);
+    s.chip_of_layer.pop(); // a layer with no stage — the model is uncovered
+    let findings = planlint::verify_shard(&s);
+    assert!(
+        findings.iter().any(|f| f.code == Code::ShardCoverage),
+        "{:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn noncontiguous_stage_map_is_pl402() {
+    let mut s = shard(ShardPolicy::LayerPipeline, 3);
+    // Make the map skip a chip: stages must be contiguous, non-decreasing
+    // layer ranges, so a 0 -> 2 jump is a malformed pipeline.
+    s.chip_of_layer = vec![0, 2, 2, 2];
+    let rej = planlint::gate_shard("jump", &s).unwrap_err();
+    assert!(rej.findings.iter().any(|f| f.code == Code::ShardOverlap));
+    assert!(rej.to_string().contains("PL402"), "{}", rej);
+}
+
+#[test]
+fn vdp_split_with_residual_stage_map_is_pl401() {
+    let mut s = shard(ShardPolicy::VdpSplit, 2);
+    assert!(s.chip_of_layer.is_empty(), "VdpSplit compiles no stage map");
+    s.chip_of_layer.push(0); // a stage map on a policy that must not have one
+    let findings = planlint::verify_shard(&s);
+    assert!(findings.iter().any(|f| f.code == Code::ShardCoverage));
+}
+
+#[test]
+fn degenerate_link_is_pl403_and_gate_refuses() {
+    type LinkMutation = fn(&mut oxbnn::plan::ChipLink);
+    let mutations: [LinkMutation; 3] = [
+        |l| l.bits_per_s = 0.0,
+        |l| l.bits_per_act = 0,
+        |l| l.latency_s = f64::NAN,
+    ];
+    for mutate in mutations {
+        let mut s = shard(ShardPolicy::LayerPipeline, 2);
+        mutate(&mut s.link);
+        let rej = planlint::gate_shard("deadlink", &s).unwrap_err();
+        assert!(rej.findings.iter().any(|f| f.code == Code::LinkCapacity));
+        assert!(rej.to_string().contains("PL403"), "{}", rej);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. The machine-readable surface is stable
 // ---------------------------------------------------------------------
 
 #[test]
@@ -234,6 +346,12 @@ fn codes_and_severities_are_stable() {
     assert_eq!(Code::AdmissionFallback.id(), "PL205");
     assert_eq!(Code::PcaOverflow.id(), "PL301");
     assert_eq!(Code::PcaCapacityDrift.id(), "PL302");
+    assert_eq!(Code::ShardCoverage.id(), "PL401");
+    assert_eq!(Code::ShardOverlap.id(), "PL402");
+    assert_eq!(Code::LinkCapacity.id(), "PL403");
+    assert_eq!(Code::ShardImbalance.id(), "PL404");
+    assert_eq!(Code::ShardCoverage.severity(), Severity::Error);
+    assert_eq!(Code::ShardImbalance.severity(), Severity::Warning);
     assert_eq!(Code::AdmissionFallback.severity(), Severity::Info);
     assert_eq!(Code::PcaCapacityDrift.severity(), Severity::Warning);
     assert_eq!(Code::PcaOverflow.severity(), Severity::Error);

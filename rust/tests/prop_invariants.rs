@@ -298,6 +298,100 @@ fn prop_exact_vs_halo_admission_differential() {
     });
 }
 
+/// ISSUE-9 scale-out invariants. Over random layer chains, both shard
+/// policies and K ∈ {1, 2, 3, 4, 8}:
+///
+/// 1. **Conservation** — the sharded event space executes exactly the
+///    unsharded per-layer transaction multisets (scale-out moves work
+///    across chips, it never invents or drops any), with zero past-time
+///    clamps.
+/// 2. **K = 1 identity** — a one-chip shard is the unsharded run, with
+///    an exactly equal makespan.
+/// 3. **Bounded slowdown** — the K-chip makespan never exceeds the
+///    1-chip makespan plus a generous serialized-link allowance (the
+///    link is the only thing sharding ADDS; everything else only gains
+///    parallel capacity).
+/// 4. **Work-conservation floor** — the makespan is never below any
+///    chip's accumulated PASS occupancy spread over its XPEs.
+#[test]
+fn prop_sharded_execution_conserves_and_scales() {
+    use oxbnn::arch::workload_sim::simulate_frames_sharded;
+    use oxbnn::plan::{ShardPlan, ShardPolicy};
+    forall(Config::default().cases(10), |g| {
+        let layers: Vec<GemmLayer> = (0..g.usize_in(2, 4))
+            .map(|i| {
+                GemmLayer::new(
+                    format!("l{}", i),
+                    g.usize_in(2, 10),
+                    g.usize_in(30, 160),
+                    g.usize_in(1, 4),
+                )
+            })
+            .collect();
+        let wl = Workload::new("prop_shard", layers);
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = g.usize_in(4, 16);
+        cfg.xpe_total = g.usize_in(4, 20);
+        cfg.bitcount = BitcountMode::Pca { gamma: 1 << 20 };
+        let frames = g.usize_in(1, 3);
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let base = simulate_frames_pipelined(&plan, frames);
+        for shard_policy in ShardPolicy::all() {
+            for k in [1usize, 2, 3, 4, 8] {
+                let shard =
+                    ShardPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal, k, shard_policy);
+                let t = simulate_frames_sharded(&shard, frames);
+                // (1) conservation, per layer and whole-run.
+                for (lt, lb) in t.layers.iter().zip(&base.layers) {
+                    prop_assert_eq(lt.passes, lb.passes)?;
+                    prop_assert_eq(lt.pca_readouts, lb.pca_readouts)?;
+                    prop_assert_eq(lt.psums, lb.psums)?;
+                    prop_assert_eq(lt.activations, lb.activations)?;
+                }
+                for key in ["passes", "pca_readouts", "activations", "psums"] {
+                    prop_assert_eq(t.stats.counter(key), base.stats.counter(key))?;
+                }
+                prop_assert_eq(t.stats.counter("clamped_events"), 0)?;
+                // (2) K = 1 is THE unsharded run.
+                if k == 1 {
+                    prop_assert(
+                        t.batch_latency_s == base.batch_latency_s
+                            && t.frame_latency_s == base.frame_latency_s,
+                        "K=1 shard diverged from the unsharded event space",
+                    )?;
+                    prop_assert_eq(t.link_transfers, 0)?;
+                }
+                // (3) bounded slowdown: base makespan + 2x the batch's
+                // serialized link work (occupancy of every transfer plus
+                // one hop latency per crossing edge per frame).
+                let edges =
+                    (0..wl.layers.len()).filter(|&l| shard.edge_crosses(l)).count();
+                let slack = 2.0
+                    * frames as f64
+                    * (edges as f64 + 1.0)
+                    * (shard.transfers_per_frame() as f64 * shard.link.occupancy_s()
+                        + shard.link.latency_s);
+                prop_assert(
+                    t.batch_latency_s <= base.batch_latency_s * (1.0 + 1e-9) + slack,
+                    &format!(
+                        "[{:?} K={}] makespan {} above base {} + link slack {}",
+                        shard_policy, k, t.batch_latency_s, base.batch_latency_s, slack
+                    ),
+                )?;
+                // (4) no chip's work fits below the makespan floor.
+                let per_chip = shard.per_chip_xpes() as f64;
+                for busy in &t.chip_busy_s {
+                    prop_assert(
+                        t.batch_latency_s >= busy / per_chip - 1e-12,
+                        "makespan below a chip's busy/XPE work floor",
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_json_roundtrip_numbers_and_strings() {
     forall(Config::default().cases(200), |g| {

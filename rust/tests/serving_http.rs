@@ -264,6 +264,52 @@ fn graceful_drain_completes_in_flight_requests() {
     );
 }
 
+/// ISSUE-9 group staging over the wire: a `chips` field in
+/// `PUT /v1/models` stages the model onto a K-accelerator shard group
+/// that the router serves as ONE replica set, the listing reports the
+/// group width, and a group whose plan fails the static lint is refused
+/// with 422 exactly like a single-chip load — the shard gate runs the
+/// full single-plan lint underneath.
+#[test]
+fn put_models_chips_field_stages_and_gates_groups() {
+    let _guard = serial();
+    let handle = boot(|_| {}, RetryPolicy::default(), 4, &[("m", 1)]);
+    let addr = handle.addr().to_string();
+
+    let body = br#"{"models": [{"name": "m", "replicas": 1, "chips": 2}]}"#;
+    let (status, listing) = request_once(&addr, "PUT", "/v1/models", body).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&listing));
+    let j = Json::parse(std::str::from_utf8(&listing).unwrap()).unwrap();
+    let models = j.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(models[0].get("name").and_then(Json::as_str), Some("m"));
+    assert_eq!(models[0].get("chips").and_then(Json::as_usize), Some(2));
+    let entry = handle.registry().get("m").expect("group staged");
+    assert_eq!(entry.chips, 2);
+    assert!(entry.photonic_fps > 0.0 && entry.photonic_fps.is_finite());
+
+    // The group serves inference like any single replica would.
+    let (status, resp) = request_once(
+        &addr,
+        "POST",
+        "/v1/infer",
+        infer_body("m", &vec![0.4; entry.input_len]).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert_eq!(logits_of(&resp).len(), 10);
+
+    // A lint-failing plan is refused with 422 through the shard gate too,
+    // and the refused group is never published.
+    let body =
+        br#"{"models": [{"name": "m", "chips": 2}, {"name": "bad-overcap", "chips": 2}]}"#;
+    let (status, reply) = request_once(&addr, "PUT", "/v1/models", body).unwrap();
+    let text = String::from_utf8_lossy(&reply).to_string();
+    assert_eq!(status, 422, "{}", text);
+    assert!(text.contains("PL301"), "{}", text);
+    assert!(!handle.registry().names().contains(&"bad-overcap".to_string()));
+    handle.shutdown();
+}
+
 /// Error surface: bad JSON, unknown model, wrong method, unknown path,
 /// plus the healthy-path health and models pages.
 #[test]
