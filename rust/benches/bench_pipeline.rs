@@ -11,9 +11,7 @@
 
 use oxbnn::api::{BackendKind, Report, Session};
 use oxbnn::arch::accelerator::AcceleratorConfig;
-use oxbnn::arch::workload_sim::{
-    simulate_frames_pipelined, simulate_frames_pipelined_admission,
-};
+use oxbnn::arch::workload_sim::simulate_frames_pipelined_opts;
 use oxbnn::mapping::layer::{ConvGeom, GemmLayer};
 use oxbnn::plan::{AdmissionMode, ExecutionPlan};
 use oxbnn::util::bench::{fmt_secs, Bencher, Table};
@@ -69,12 +67,18 @@ fn main() {
 
     // The raw pipelined traces carry the idle-fraction / wake-index /
     // admission-mode metrics the report doesn't.
+    // The admission differential runs on the STRICT frontier (steal off):
+    // the exact-≥-halo ordering is the monotone-release argument of the
+    // ISSUE-5 scheduler, which bounded stealing (its own bench,
+    // `bench_steal`) deliberately perturbs.
     let plan = ExecutionPlan::compile(&cfg, &wl, oxbnn::api::default_policy(&cfg));
-    let trace = simulate_frames_pipelined(&plan, frames);
-    let halo_trace = simulate_frames_pipelined_admission(
+    let trace =
+        simulate_frames_pipelined_opts(&plan, frames, AdmissionMode::Exact, false);
+    let halo_trace = simulate_frames_pipelined_opts(
         &plan,
         frames,
         AdmissionMode::RasterHalo(0.125),
+        false,
     );
     let tau = cfg.tau_s();
     let total_xpes = plan.layers[0].total_xpes();

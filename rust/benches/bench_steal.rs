@@ -1,0 +1,228 @@
+//! Bounded work-stealing (ISSUE-10) on vs off: the same whole-frame
+//! pipelined event space, same workload, with the thief scheduler as the
+//! only variable. Reports batched FPS, the busy/parked/idle three-way XPE
+//! breakdown and the steal counters, and gates that stealing is real
+//! (steals happen, parked time strictly drops) AND conservative
+//! (identical transaction multisets, makespan never grows, zero
+//! past-time clamps). Emits `BENCH_steal.json` (path overridable via
+//! `OXBNN_BENCH_OUT`) so CI can track the numbers over time.
+//!
+//! Run: `cargo bench --bench bench_steal`
+//! CI:  `OXBNN_BENCH_FAST=1 cargo bench --bench bench_steal`
+
+use oxbnn::api::{BackendKind, Report, Session};
+use oxbnn::arch::accelerator::AcceleratorConfig;
+use oxbnn::arch::workload_sim::simulate_frames_pipelined_opts;
+use oxbnn::mapping::layer::{ConvGeom, GemmLayer};
+use oxbnn::plan::{AdmissionMode, ExecutionPlan};
+use oxbnn::util::bench::{fmt_secs, Bencher, Table};
+use oxbnn::util::json::Json;
+use oxbnn::workloads::Workload;
+
+fn main() {
+    let fast = std::env::var("OXBNN_BENCH_FAST").is_ok();
+    let frames: usize = if fast { 4 } else { 8 };
+
+    // The dependency-stall-heavy shape from the pipeline bench: a conv
+    // spine feeding a tiny FC tail on a small grid. XPEs holding FC work
+    // park on the whole-map admission threshold while the spine drains —
+    // exactly the stall the thief scheduler hides by running the next
+    // frame's already-staged first-layer VDPs (prefetched when this
+    // frame's layer 0 started, admitted trivially, never last-layer).
+    let mut cfg = AcceleratorConfig::oxbnn_5();
+    cfg.n = 9;
+    cfg.xpe_total = 18;
+    let w: usize = if fast { 12 } else { 16 };
+    let (k3, k4) = if fast { (8, 8) } else { (16, 16) };
+    let wl = Workload::new(
+        "vgg_crop_steal",
+        vec![
+            GemmLayer::new("conv2", w * w, 1152, 8).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::new("conv3", w * w, 1152, k3).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::new("conv4", w * w, 2304, k4).with_geom(ConvGeom::new(3, 1, 1, w)),
+            GemmLayer::fc("fc", 2048, 10),
+        ],
+    );
+    println!(
+        "steal bench — {} frames of {} ({}×{} maps) on {} ({} XPEs)\n",
+        frames, wl.name, w, w, cfg.name, cfg.xpe_total
+    );
+
+    let session = |steal: bool| -> Report {
+        Session::builder()
+            .accelerator(cfg.clone())
+            .workload(wl.clone())
+            .backend(BackendKind::Event)
+            .batch(frames)
+            .pipeline(true)
+            .steal(steal)
+            .build()
+            .expect("steal bench session")
+            .run()
+    };
+
+    let bencher = Bencher::from_env();
+    let off_stats = bencher.run("steal_off", || session(false));
+    let on_stats = bencher.run("steal_on", || session(true));
+    let off = session(false);
+    let on = session(true);
+
+    // The raw traces carry the three-way idle breakdown and counters.
+    let plan = ExecutionPlan::compile(&cfg, &wl, oxbnn::api::default_policy(&cfg));
+    let on_trace =
+        simulate_frames_pipelined_opts(&plan, frames, AdmissionMode::Exact, true);
+    let off_trace =
+        simulate_frames_pipelined_opts(&plan, frames, AdmissionMode::Exact, false);
+
+    let steals = on_trace.stats.counter("steal_dispatches");
+    let stolen = on_trace.stats.counter("stolen_passes");
+    let frac = |t: &oxbnn::arch::workload_sim::PipelineTrace| {
+        (t.xpe_busy_fraction(), t.xpe_parked_fraction(), t.xpe_idle_fraction())
+    };
+    let (on_busy, on_parked, on_idle) = frac(&on_trace);
+    let (off_busy, off_parked, off_idle) = frac(&off_trace);
+
+    let mut t = Table::new(&["metric", "steal off", "steal on"]);
+    t.row(&[
+        "batched FPS".into(),
+        format!("{:.1}", off.batched_fps()),
+        format!("{:.1}", on.batched_fps()),
+    ]);
+    t.row(&[
+        "batch latency".into(),
+        fmt_secs(off.batch_latency_s),
+        fmt_secs(on.batch_latency_s),
+    ]);
+    t.row(&[
+        "XPE busy fraction".into(),
+        format!("{:.3}", off_busy),
+        format!("{:.3}", on_busy),
+    ]);
+    t.row(&[
+        "XPE parked fraction".into(),
+        format!("{:.3}", off_parked),
+        format!("{:.3}", on_parked),
+    ]);
+    t.row(&[
+        "XPE idle fraction".into(),
+        format!("{:.3}", off_idle),
+        format!("{:.3}", on_idle),
+    ]);
+    t.row(&[
+        "steal dispatches".into(),
+        format!("{}", off_trace.stats.counter("steal_dispatches")),
+        format!("{}", steals),
+    ]);
+    t.row(&[
+        "stolen passes".into(),
+        format!("{}", off_trace.stats.counter("stolen_passes")),
+        format!("{}", stolen),
+    ]);
+    t.row(&[
+        "sim wall-clock".into(),
+        fmt_secs(off_stats.median),
+        fmt_secs(on_stats.median),
+    ]);
+    t.print();
+    println!(
+        "\n{} steals ({} passes) hid {:.1} → {:.1}% parked time; FPS {:.1} → {:.1}",
+        steals,
+        stolen,
+        100.0 * off_parked,
+        100.0 * on_parked,
+        off.batched_fps(),
+        on.batched_fps(),
+    );
+
+    // Acceptance gates (ISSUE 10): the thief scheduler must actually
+    // steal on this stall-heavy shape, strictly convert parked time into
+    // busy time, and stay a pure permutation — same multiset, makespan
+    // never grows, no past-time clamps, and the strict frontier reports
+    // zero steal activity.
+    assert!(steals > 0, "stall-heavy geometry must trigger steals");
+    assert!(stolen >= steals, "every steal dispatch runs at least one pass");
+    assert_eq!(
+        off_trace.stats.counter("steal_dispatches"),
+        0,
+        "strict frontier must never steal"
+    );
+    assert_eq!(
+        off_trace.stats.counter("stolen_passes"),
+        0,
+        "strict frontier must never steal passes"
+    );
+    for key in ["passes", "pca_readouts", "activations", "psums"] {
+        assert_eq!(
+            on_trace.stats.counter(key),
+            off_trace.stats.counter(key),
+            "stealing must conserve the {} multiset",
+            key
+        );
+    }
+    assert_eq!(on_trace.stats.counter("clamped_events"), 0, "no past-time clamps (on)");
+    assert_eq!(off_trace.stats.counter("clamped_events"), 0, "no past-time clamps (off)");
+    assert!(
+        on_trace.batch_latency_s <= off_trace.batch_latency_s * (1.0 + 1e-9),
+        "stealing must never grow the makespan ({} vs {})",
+        on_trace.batch_latency_s,
+        off_trace.batch_latency_s
+    );
+    assert!(
+        on.batched_fps() >= off.batched_fps() * (1.0 - 1e-9),
+        "steal-on batched FPS {} must not lose to steal-off {}",
+        on.batched_fps(),
+        off.batched_fps()
+    );
+    assert!(
+        on_parked < off_parked,
+        "stealing must strictly reduce parked time ({:.4} vs {:.4})",
+        on_parked,
+        off_parked
+    );
+    for trace in [&on_trace, &off_trace] {
+        let sum = trace.xpe_busy_fraction()
+            + trace.xpe_parked_fraction()
+            + trace.xpe_idle_fraction();
+        assert!(
+            (sum - 1.0).abs() < 1e-9,
+            "busy/parked/idle must partition the makespan, got {}",
+            sum
+        );
+    }
+    println!("\nshape check OK: steals hide stalls without changing the transaction multiset");
+
+    let json = Json::obj(vec![
+        ("workload", Json::Str(wl.name.clone())),
+        ("accelerator", Json::Str(cfg.name.clone())),
+        ("frames", Json::Num(frames as f64)),
+        ("steal_off_batched_fps", Json::Num(off.batched_fps())),
+        ("steal_on_batched_fps", Json::Num(on.batched_fps())),
+        ("speedup", Json::Num(on.batched_fps() / off.batched_fps())),
+        ("steal_off_batch_latency_s", Json::Num(off_trace.batch_latency_s)),
+        ("steal_on_batch_latency_s", Json::Num(on_trace.batch_latency_s)),
+        ("steal_dispatches", Json::Num(steals as f64)),
+        ("stolen_passes", Json::Num(stolen as f64)),
+        ("steal_off_busy_fraction", Json::Num(off_busy)),
+        ("steal_on_busy_fraction", Json::Num(on_busy)),
+        ("steal_off_parked_fraction", Json::Num(off_parked)),
+        ("steal_on_parked_fraction", Json::Num(on_parked)),
+        ("steal_off_idle_fraction", Json::Num(off_idle)),
+        ("steal_on_idle_fraction", Json::Num(on_idle)),
+        ("parked_fraction_delta", Json::Num(off_parked - on_parked)),
+        (
+            "wake_dispatches",
+            Json::Num(on_trace.stats.counter("wake_dispatches") as f64),
+        ),
+        (
+            "fetch_wake_dispatches",
+            Json::Num(on_trace.stats.counter("fetch_wake_dispatches") as f64),
+        ),
+        ("clamped_events", Json::Num(on_trace.stats.counter("clamped_events") as f64)),
+        ("steal_off_sim_wall_s", Json::Num(off_stats.median)),
+        ("steal_on_sim_wall_s", Json::Num(on_stats.median)),
+    ]);
+    let out = std::env::var("OXBNN_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_steal.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", out);
+}

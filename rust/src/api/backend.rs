@@ -137,16 +137,19 @@ pub trait Backend {
 
     /// Evaluate `batch` back-to-back frames of a pre-compiled plan. The
     /// default models frames as strictly sequential (one frame simulated,
-    /// batch latency multiplied) and ignores `pipelined` — only backends
-    /// that can genuinely overlap frames honor it. The event backend
-    /// overrides this to run the whole batch through one shared event
-    /// space when `pipelined` is set (see
-    /// [`crate::arch::workload_sim::simulate_frames_pipelined`]).
+    /// batch latency multiplied) and ignores `pipelined` and `steal` —
+    /// only backends that can genuinely overlap frames honor them. The
+    /// event backend overrides this to run the whole batch through one
+    /// shared event space when `pipelined` is set (see
+    /// [`crate::arch::workload_sim::simulate_frames_pipelined`]),
+    /// with bounded work-stealing past admission-blocked units enabled
+    /// by `steal`.
     fn run_planned_batched(
         &mut self,
         plan: &ExecutionPlan,
         batch: usize,
         _pipelined: bool,
+        _steal: bool,
     ) -> Report {
         self.run_planned(plan).with_batch(batch)
     }
@@ -164,8 +167,9 @@ pub trait Backend {
         shard: &ShardPlan,
         batch: usize,
         pipelined: bool,
+        steal: bool,
     ) -> Report {
-        self.run_planned_batched(&shard.plan, batch, pipelined)
+        self.run_planned_batched(&shard.plan, batch, pipelined, steal)
     }
 }
 
@@ -230,8 +234,11 @@ impl Backend for AnalyticBackend {
     /// layer `l` starts once the receptive-field prefix of layer `l−1` has
     /// drained (its activations taken as draining uniformly over the
     /// layer's span), and in steady state the batch completes one frame
-    /// per bottleneck-layer latency. Optimistic on memory-bound chains
-    /// (the shared fetch channel is not serialized here) — the event
+    /// per bottleneck. The bottleneck is admission-aware on memory too:
+    /// every frame's operands cross the ONE shared eDRAM fetch channel,
+    /// so the steady-state rate can never beat the serialized sum of the
+    /// per-layer memory terms — without that floor the estimate was
+    /// systematically optimistic on memory-bound chains. The event
     /// backend remains the reference; `sim_vs_analytic.rs` pins the gap.
     ///
     /// [`FramePlan::need_acts`]: crate::plan::FramePlan::need_acts
@@ -240,6 +247,7 @@ impl Backend for AnalyticBackend {
         plan: &ExecutionPlan,
         batch: usize,
         pipelined: bool,
+        _steal: bool,
     ) -> Report {
         let report = plan_aware_report(self, plan);
         if !pipelined {
@@ -249,6 +257,7 @@ impl Backend for AnalyticBackend {
         let mut start = 0.0_f64;
         let mut end = 0.0_f64;
         let mut bottleneck = 0.0_f64;
+        let mut fetch_serial = 0.0_f64;
         for (l, lr) in report.layers.iter().enumerate() {
             if l > 0 {
                 let produced = plan.layers[l - 1].vdp_count() as f64;
@@ -257,8 +266,10 @@ impl Backend for AnalyticBackend {
             }
             end = (start + lr.latency_s).max(end);
             bottleneck = bottleneck.max(lr.latency_s);
+            fetch_serial += lr.timing.get("memory_s").copied().unwrap_or(0.0);
         }
         let frame = end;
+        let bottleneck = bottleneck.max(fetch_serial);
         let makespan = frame + (batch - 1) as f64 * bottleneck;
         report.with_pipelined_batch(batch, frame, makespan)
     }
@@ -277,9 +288,10 @@ impl Backend for AnalyticBackend {
         shard: &ShardPlan,
         batch: usize,
         pipelined: bool,
+        steal: bool,
     ) -> Report {
         if shard.chips() == 1 {
-            return self.run_planned_batched(&shard.plan, batch, pipelined);
+            return self.run_planned_batched(&shard.plan, batch, pipelined, steal);
         }
         let base = plan_aware_report(self, &shard.plan);
         let split = if shard.vdp_split() { shard.chips() as f64 } else { 1.0 };
@@ -319,12 +331,24 @@ impl Backend for AnalyticBackend {
                 .with_batch(batch)
                 .with_shard(breakdown, per_chip_static);
         }
+        // Per-channel fetch serialization, mirroring the single-chip
+        // estimate: under VdpSplit every chip's eDRAM channel stages its
+        // 1/K share of EVERY layer, so the steady-state rate is floored
+        // by the sum of the (already split) memory terms; under
+        // LayerPipeline each stage's fetch serial is bounded by the stage
+        // latency sum, so the stage bottleneck already covers it.
+        let fetch_serial: f64 = report
+            .layers
+            .iter()
+            .map(|l| l.timing.get("memory_s").copied().unwrap_or(0.0))
+            .sum();
         let bottleneck = match shard.policy() {
             ShardPolicy::VdpSplit => report
                 .layers
                 .iter()
                 .map(|l| l.latency_s)
-                .fold(0.0_f64, f64::max),
+                .fold(0.0_f64, f64::max)
+                .max(fetch_serial),
             ShardPolicy::LayerPipeline => {
                 let mut stages = vec![0.0_f64; shard.chips()];
                 for (l, lr) in report.layers.iter().enumerate() {
@@ -461,17 +485,25 @@ impl Backend for EventSimBackend {
     /// report's per-layer slice comes from frame 0's units (every frame
     /// runs the identical compiled plan), `frame_latency_s` is frame 0's
     /// completion and `fps` is the honest `batch / makespan` throughput.
-    /// Sequential batches keep the `with_batch` multiply.
+    /// Sequential batches keep the `with_batch` multiply. `steal`
+    /// enables bounded work-stealing past admission-blocked units (the
+    /// default through the Session facade; `--steal off` disables it).
     fn run_planned_batched(
         &mut self,
         plan: &ExecutionPlan,
         batch: usize,
         pipelined: bool,
+        steal: bool,
     ) -> Report {
         if !pipelined {
             return self.run_planned(plan).with_batch(batch);
         }
-        let trace = crate::arch::workload_sim::simulate_frames_pipelined(plan, batch);
+        let trace = crate::arch::workload_sim::simulate_frames_pipelined_opts(
+            plan,
+            batch,
+            crate::plan::AdmissionMode::Exact,
+            steal,
+        );
         report_from_pipeline_trace(self.kind(), &plan.accelerator, &plan.workload.name, &trace)
             .with_pipelined_batch(batch, trace.frame_latency_s, trace.batch_latency_s)
     }
@@ -490,13 +522,19 @@ impl Backend for EventSimBackend {
         shard: &ShardPlan,
         batch: usize,
         pipelined: bool,
+        steal: bool,
     ) -> Report {
         if shard.chips() == 1 {
-            return self.run_planned_batched(&shard.plan, batch, pipelined);
+            return self.run_planned_batched(&shard.plan, batch, pipelined, steal);
         }
         let cfg = &shard.base;
         let frames = if pipelined { batch } else { 1 };
-        let trace = crate::arch::workload_sim::simulate_frames_sharded(shard, frames);
+        let trace = crate::arch::workload_sim::simulate_frames_sharded_opts(
+            shard,
+            frames,
+            crate::plan::AdmissionMode::Exact,
+            steal,
+        );
         let breakdown = ShardBreakdown {
             chips: trace.chips,
             policy: shard.policy().as_str().to_string(),
@@ -577,6 +615,11 @@ fn report_from_pipeline_trace(
             "pca_discharge_stalls",
             "reduction_inits",
             "peak_pending_events",
+            "wake_dispatches",
+            "steal_dispatches",
+            "stolen_passes",
+            "fetch_wake_dispatches",
+            "fetch_sweep_skips",
         ] {
             first.counters.insert(key.to_string(), trace.stats.counter(key));
         }

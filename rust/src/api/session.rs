@@ -66,6 +66,7 @@ pub struct SessionBuilder {
     policy: Option<MappingPolicy>,
     batch: usize,
     pipeline: Option<bool>,
+    steal: Option<bool>,
     chips: usize,
     shard_policy: Option<ShardPolicy>,
     plan_cache: Option<Arc<PlanCache>>,
@@ -144,6 +145,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable bounded work-stealing in the pipelined event space: an XPE
+    /// parked on an admission threshold may run an already-admitted VDP
+    /// from a later unit when its closed-form cost fits inside a lower
+    /// bound on the stall, shrinking parked time without ever delaying
+    /// the blocked unit past its wake (the "pipelined ≤ sequential"
+    /// guarantee is property-tested with stealing on).
+    ///
+    /// **Default: on.** Call `.steal(false)` for the strict frame-major
+    /// frontier; the `OXBNN_STEAL` environment variable pins the unset
+    /// default (`1` = stealing, `0` = strict). No effect outside the
+    /// pipelined event path.
+    pub fn steal(mut self, steal: bool) -> Self {
+        self.steal = Some(steal);
+        self
+    }
+
     /// Shard the model across `chips` accelerators of the configured
     /// geometry (default 1 — no sharding). With `chips > 1` the session
     /// compiles a [`ShardPlan`] and routes through
@@ -213,6 +230,7 @@ impl SessionBuilder {
         let pipeline = self
             .pipeline
             .unwrap_or_else(|| default_pipeline(self.batch));
+        let steal = self.steal.unwrap_or_else(default_steal);
         Ok(Session {
             accelerator,
             workload,
@@ -220,6 +238,7 @@ impl SessionBuilder {
             policy,
             batch: self.batch,
             pipeline,
+            steal,
             chips: self.chips,
             shard_policy: self.shard_policy.unwrap_or(ShardPolicy::VdpSplit),
             plan_cache,
@@ -246,6 +265,21 @@ fn default_pipeline(batch: usize) -> bool {
     }
 }
 
+/// The work-stealing default for sessions that did not call
+/// [`SessionBuilder::steal`]: on, unless `OXBNN_STEAL` pins it off —
+/// the same env-pinned-default pattern as [`default_pipeline`], so the
+/// CI matrix can run both scheduler frontiers without code changes.
+fn default_steal() -> bool {
+    match std::env::var("OXBNN_STEAL").ok().as_deref() {
+        Some("1") | Some("true") | Some("on") | Some("auto") | None => true,
+        Some("0") | Some("false") | Some("off") => false,
+        Some(other) => panic!(
+            "OXBNN_STEAL must be 1/true/on/auto or 0/false/off, got '{}'",
+            other
+        ),
+    }
+}
+
 /// A configured accelerator × workload × backend evaluation.
 pub struct Session {
     accelerator: AcceleratorConfig,
@@ -254,6 +288,7 @@ pub struct Session {
     policy: MappingPolicy,
     batch: usize,
     pipeline: bool,
+    steal: bool,
     chips: usize,
     shard_policy: ShardPolicy,
     plan_cache: Arc<PlanCache>,
@@ -270,6 +305,7 @@ impl Session {
             policy: None,
             batch: 1,
             pipeline: None,
+            steal: None,
             chips: 1,
             shard_policy: None,
             plan_cache: None,
@@ -287,10 +323,11 @@ impl Session {
             let shard = self.shard_plan();
             return self
                 .backend
-                .run_planned_sharded(&shard, self.batch, self.pipeline);
+                .run_planned_sharded(&shard, self.batch, self.pipeline, self.steal);
         }
         let plan = self.plan();
-        self.backend.run_planned_batched(&plan, self.batch, self.pipeline)
+        self.backend
+            .run_planned_batched(&plan, self.batch, self.pipeline, self.steal)
     }
 
     /// The compiled execution plan for this session's triple (cached).
@@ -341,6 +378,12 @@ impl Session {
     /// Whether batches run through the pipelined whole-frame event space.
     pub fn pipelined(&self) -> bool {
         self.pipeline
+    }
+
+    /// Whether the pipelined scheduler may steal boundedly past
+    /// admission-blocked units.
+    pub fn steal(&self) -> bool {
+        self.steal
     }
 
     /// Accelerators in the session's shard group (1 = unsharded).

@@ -422,6 +422,30 @@ pub struct FrameWorld<'a> {
     /// per woken XPE — the satellite regression gate: an activation drain
     /// must wake O(woken) XPEs, not re-dispatch every idle one).
     n_wake_dispatches: u64,
+    /// Bounded work-stealing past admission-blocked units: a parked XPE
+    /// may run already-admitted VDPs from later units when their
+    /// closed-form remaining cost undercuts a floor on its stall. On by
+    /// default; [`FrameWorld::set_steal`] restores strict frame-major
+    /// order.
+    steal: bool,
+    /// Steal claims issued (one per stolen VDP under PcaLocal, one per
+    /// stolen slice under SlicedSpread).
+    n_steal_dispatches: u64,
+    /// Passes executed through steal claims.
+    n_stolen_passes: u64,
+    /// `FetchDone` sweep dispatches that hit the one unit the idle XPE
+    /// was actually waiting on, vs idle XPEs swept but skipped (the old
+    /// sweep re-dispatched every idle unparked XPE on every fetch).
+    n_fetch_wake_dispatches: u64,
+    n_fetch_sweep_skips: u64,
+    /// Seconds each XPE spent parked on an admission threshold —
+    /// reported separately from idle (a parked XPE is waiting on a
+    /// dependency, not lacking work).
+    parked_s: Vec<f64>,
+    /// Open park-interval start per XPE (INFINITY = not parked-idle).
+    park_since: Vec<f64>,
+    /// PASS occupancy accumulated per owning chip at issue time.
+    chip_busy_s: Vec<f64>,
     /// When set, every admitted pass with a producer records `(unit, local
     /// vdp, producer activations drained at issue)` — raw facts the
     /// admission-oracle suite replays against an independent sliding-window
@@ -500,6 +524,14 @@ impl<'a> FrameWorld<'a> {
             n_discharge_stalls: 0,
             n_saturations: 0,
             n_wake_dispatches: 0,
+            steal: true,
+            n_steal_dispatches: 0,
+            n_stolen_passes: 0,
+            n_fetch_wake_dispatches: 0,
+            n_fetch_sweep_skips: 0,
+            parked_s: vec![0.0; total],
+            park_since: vec![f64::INFINITY; total],
+            chip_busy_s: vec![0.0; fp.chips()],
             record_admissions: false,
             admission_log: Vec::new(),
         }
@@ -534,6 +566,39 @@ impl<'a> FrameWorld<'a> {
         self.n_wake_dispatches
     }
 
+    /// Enable/disable bounded work-stealing past admission-blocked units
+    /// (on by default; off restores strict frame-major dispatch order).
+    pub fn set_steal(&mut self, on: bool) {
+        self.steal = on;
+    }
+
+    /// Steal claims issued by parked XPEs.
+    pub fn steal_dispatches(&self) -> u64 {
+        self.n_steal_dispatches
+    }
+
+    /// Passes executed through steal claims.
+    pub fn stolen_passes(&self) -> u64 {
+        self.n_stolen_passes
+    }
+
+    /// `FetchDone` sweep dispatches that hit the unit the idle XPE was
+    /// waiting on (the O(woken) part of the sweep).
+    pub fn fetch_wake_dispatches(&self) -> u64 {
+        self.n_fetch_wake_dispatches
+    }
+
+    /// Idle XPEs a `FetchDone` sweep examined but did NOT dispatch
+    /// (their frontier was elsewhere — the old sweep dispatched them).
+    pub fn fetch_sweep_skips(&self) -> u64 {
+        self.n_fetch_sweep_skips
+    }
+
+    /// Per-XPE accumulated admission-parked time (seconds).
+    pub fn parked_s(&self) -> &[f64] {
+        &self.parked_s
+    }
+
     /// Record `(unit, local vdp, producer acts drained)` for every issued
     /// pass with a producer — the admission-oracle replay hook.
     pub fn record_admissions(&mut self, on: bool) {
@@ -563,15 +628,12 @@ impl<'a> FrameWorld<'a> {
     }
 
     /// Accumulated PASS occupancy summed per chip (length = group size;
-    /// a single-element vec on an unsharded run).
+    /// a single-element vec on an unsharded run). Accumulated at issue
+    /// time against the owning chip rather than re-derived from a flat
+    /// division, so a grid that does not divide evenly by K cannot
+    /// misattribute work.
     pub fn per_chip_busy_s(&self) -> Vec<f64> {
-        let per_chip = self.fp.per_chip_xpes().max(1);
-        let mut out = vec![0.0; self.fp.chips()];
-        for (flat, b) in self.busy_s.iter().enumerate() {
-            let chip = (flat / per_chip).min(out.len() - 1);
-            out[chip] += *b;
-        }
-        out
+        self.chip_busy_s.clone()
     }
 
     /// Activations available from producer `p` for admitting work on
@@ -628,13 +690,21 @@ impl<'a> FrameWorld<'a> {
     ///
     /// An XPE skips permanently *exhausted* units (that is what lets it
     /// stream into a later frame when it holds none of this frame's tail)
-    /// but never skips past a unit whose work is merely *blocked* on
-    /// admission: stealing later work there could leave the XPE mid-VDP at
-    /// the exact moment the earlier unit unblocks, delaying the older
-    /// frame's critical path beyond its sequential baseline. Idle-waiting
-    /// instead keeps every XPE's schedule a concatenation of its unit
-    /// queues in frame-major order, which is what makes "pipelined is
-    /// never slower than sequential" provable (and property-tested).
+    /// but never *advances its frontier* past a unit that is merely
+    /// blocked on admission: its schedule stays a concatenation of its
+    /// unit queues in frame-major order, which is what makes "pipelined
+    /// is never slower than sequential" provable (and property-tested).
+    ///
+    /// What a blocked XPE MAY do (the ISSUE-10 tentpole, with the
+    /// steal/park/wake handshake model-checked in `check::protocols`
+    /// first) is **steal, boundedly**: run one already-admitted VDP from
+    /// a later unit of its own queue, provided its closed-form cost
+    /// (read off the compiled pass maps) fits inside a lower bound on
+    /// the stall it is parked for — see [`Self::steal_candidate`]. The
+    /// registration in the wake index survives the detour (a stolen unit
+    /// must not orphan the wake-heap entry); the XPE re-checks admission
+    /// itself when the stolen VDP completes, so a wake arriving mid-steal
+    /// is never lost and never double-dispatches.
     ///
     /// A blocked XPE does not spin: one blocked on admission parks itself
     /// in the stream's wake index under its head-pass threshold (the
@@ -665,12 +735,140 @@ impl<'a> FrameWorld<'a> {
                 let need = self.fp.need_acts(next, pass.vdp.0);
                 if self.avail_acts(p, next) >= need {
                     self.issue(next, flat, extra_delay, sched);
-                } else {
-                    self.stream.register_waiter(next, need, flat);
-                    self.idle[flat] = true;
+                    return;
                 }
+                // Park under the head-pass threshold. The XPE may pass
+                // through here again mid-park (after a stolen VDP
+                // completes), so the registration is guarded: the heap
+                // entry from the first park is still live and must not
+                // be duplicated.
+                if self.stream.waiting_on(flat).is_none() {
+                    self.stream.register_waiter(next, need, flat);
+                }
+                if self.steal {
+                    if let Some(v) = self.steal_candidate(flat, next, need) {
+                        let cost = self.steal_cost(v, flat);
+                        self.n_steal_dispatches += 1;
+                        self.n_stolen_passes += cost as u64;
+                        self.issue(v, flat, extra_delay, sched);
+                        return;
+                    }
+                }
+                self.park(flat, sched.now());
             }
         }
+    }
+
+    /// Open XPE `flat`'s parked interval (idle while registered in the
+    /// wake index). Closed by the next [`Self::issue`].
+    fn park(&mut self, flat: usize, now: f64) {
+        self.idle[flat] = true;
+        if self.park_since[flat].is_infinite() {
+            self.park_since[flat] = now;
+        }
+    }
+
+    /// The first later unit whose already-admitted head VDP the parked
+    /// XPE may run without risking the "pipelined ≤ sequential"
+    /// guarantee or in-order frame completion. A candidate must be
+    ///
+    /// * eligible on this XPE with passes left, operands staged, and its
+    ///   own admission threshold met (a steal never front-runs an
+    ///   admission oracle);
+    /// * not a last-layer unit — last-layer work per XPE stays in frame
+    ///   order, which keeps `frame_done_s` monotone under stealing;
+    /// * not feeding a cross-chip edge — a stolen drain must not reorder
+    ///   the serialized inter-chip link against in-order transfers;
+    /// * cheap enough: its closed-form cost ([`Self::steal_cost`]) must
+    ///   fit inside the stall floor ([`Self::stall_floor_passes`]), so
+    ///   the XPE is back — and never mid-VDP — before the earliest
+    ///   moment its blocked unit can possibly be admitted.
+    fn steal_candidate(&self, flat: usize, next: usize, need: usize) -> Option<usize> {
+        if !self.pca_mode {
+            // Reduction-network bitcount serializes psums per XPC; a
+            // steal could contend with in-order reductions there.
+            return None;
+        }
+        let floor = self.stall_floor_passes(next, need);
+        if floor == 0 {
+            return None;
+        }
+        for v in next + 1..self.fp.units() {
+            if self.fp.unit_layer(v) + 1 == self.fp.layers() {
+                continue;
+            }
+            if self.fp.unit_layer(v) + 1 < self.fp.layers() && self.fp.edge_crosses(v + 1) {
+                continue;
+            }
+            if !self.fp.eligible(v, flat)
+                || !self.units[v].fetch_done
+                || self.stream.exhausted_for(self.fp, v, flat)
+            {
+                continue;
+            }
+            let Some(pass) = self.stream.peek_for(self.fp, v, flat) else {
+                continue;
+            };
+            if let Some(p) = self.fp.producer(v) {
+                if self.avail_acts(p, v) < self.fp.need_acts(v, pass.vdp.0) {
+                    continue;
+                }
+            }
+            if self.steal_cost(v, flat) <= floor {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Closed-form cost, in PASS counts on this XPE, of stealing unit
+    /// `v`'s head work: a whole VDP under PcaLocal (the analog PCA
+    /// accumulation locks the XPE until the VDP's last slice), one slice
+    /// under SlicedSpread.
+    fn steal_cost(&self, v: usize, flat: usize) -> usize {
+        let lp = self.fp.layer_plan(v);
+        match lp.policy {
+            MappingPolicy::PcaLocal => {
+                lp.slices().min(self.stream.remaining_for(self.fp, v, flat))
+            }
+            MappingPolicy::SlicedSpread => 1,
+        }
+    }
+
+    /// A LOWER bound, in PASS counts, on how long XPE `flat` stays
+    /// parked on consumer `next`'s threshold `need`. The producer must
+    /// still drain `need − acts_done` activations; drains obtainable
+    /// from VDPs already issued (or mid-issue — up to one partial VDP
+    /// per producer XPE) are generously assumed free, and the rest need
+    /// whole new VDPs whose slice chains run serially per XPE. Only a
+    /// PcaLocal producer has this closed form (one VDP = one XPE's
+    /// back-to-back slices); any other shape returns 0 — no steal.
+    /// Underestimating the stall only makes stealing rarer, never
+    /// unsafe.
+    fn stall_floor_passes(&self, next: usize, need: usize) -> usize {
+        let Some(p) = self.fp.producer(next) else {
+            return 0;
+        };
+        let lp = self.fp.layer_plan(p);
+        if lp.policy != MappingPolicy::PcaLocal {
+            return 0;
+        }
+        let drained = self.units[p].acts_done;
+        let deficit = need.saturating_sub(drained);
+        if deficit == 0 {
+            return 0; // waiting on in-flight latency (or the link) only
+        }
+        let slices = lp.slices().max(1);
+        let t = lp.total_xpes().max(1);
+        // VDPs with at least one slice issued: every fully-issued chain
+        // plus at most one partial per producer XPE.
+        let touched = self.stream.issued(p) / slices + t;
+        let in_flight = touched.saturating_sub(drained);
+        let new_vdps = deficit.saturating_sub(in_flight);
+        if new_vdps == 0 {
+            return 0;
+        }
+        new_vdps.div_ceil(t) * slices
     }
 
     fn issue(&mut self, u: usize, flat: usize, extra_delay: f64, sched: &mut Scheduler) {
@@ -718,6 +916,15 @@ impl<'a> FrameWorld<'a> {
         let ones = (pass.slice_len as f64 * self.ones_density).round() as u64;
         self.idle[flat] = false;
         self.busy_s[flat] += tau;
+        // Attribute the pass to the owning chip directly: deriving chip
+        // totals from a flat division downstream misattributes work when
+        // the grid does not divide evenly by K.
+        let chip = self.fp.xpe_chip(flat).min(self.chip_busy_s.len() - 1);
+        self.chip_busy_s[chip] += tau;
+        if self.park_since[flat].is_finite() {
+            self.parked_s[flat] += sched.now() - self.park_since[flat];
+            self.park_since[flat] = f64::INFINITY;
+        }
         sched.after(
             extra_delay + tau,
             EventKind::PassComplete {
@@ -731,13 +938,24 @@ impl<'a> FrameWorld<'a> {
 
     /// Re-dispatch idle XPEs that are NOT parked on an admission
     /// threshold (a fetch completion cannot advance a producer's
-    /// activation count, so parked waiters stay parked). `FetchDone`
-    /// events are rare — one per unit — so the O(idle XPEs) scan here is
-    /// cheap; the per-activation path goes through the wake index.
-    fn wake_unparked(&mut self, sched: &mut Scheduler) {
+    /// activation count, so parked waiters stay parked) and whose
+    /// frontier is the unit whose operands just landed. An idle,
+    /// unparked XPE waits on exactly one thing — `first_open`'s fetch
+    /// (the frontier is stable while the XPE is idle: only its own
+    /// issues advance it) — so dispatching for any other unit's
+    /// `FetchDone` is a redundant sweep. Those sweep touches used to be
+    /// full `dispatch` calls; now they are counted but skipped, pinning
+    /// the per-event work to O(woken) like the activation path.
+    fn wake_unparked(&mut self, unit: usize, sched: &mut Scheduler) {
         for flat in 0..self.idle.len() {
-            if self.idle[flat] && self.stream.waiting_on(flat).is_none() {
+            if !self.idle[flat] || self.stream.waiting_on(flat).is_some() {
+                continue;
+            }
+            if self.stream.first_open(flat) == unit {
+                self.n_fetch_wake_dispatches += 1;
                 self.dispatch(flat, 0.0, sched);
+            } else {
+                self.n_fetch_sweep_skips += 1;
             }
         }
     }
@@ -754,7 +972,7 @@ impl World for FrameWorld<'_> {
         match event {
             EventKind::FetchDone { unit } => {
                 self.units[*unit].fetch_done = true;
-                self.wake_unparked(sched);
+                self.wake_unparked(*unit, sched);
             }
             EventKind::PassComplete { xpe, vdp, slice_idx, ones } => {
                 let (u, _local) = self.fp.unit_of_vdp(vdp.0);
@@ -873,6 +1091,14 @@ impl World for FrameWorld<'_> {
                         let acts = self.units[u].acts_done;
                         let bus = self.cfg.peripherals.bus.latency_s;
                         for flat in self.stream.pop_admitted(u + 1, acts) {
+                            // A waiter woken mid-steal is busy, not
+                            // parked: its own PassComplete re-enters
+                            // dispatch, which re-checks admission
+                            // directly. Dispatching it here would run
+                            // two passes on one XPE at once.
+                            if !self.idle[flat] {
+                                continue;
+                            }
                             self.n_wake_dispatches += 1;
                             self.dispatch(flat, bus, sched);
                         }
@@ -887,6 +1113,10 @@ impl World for FrameWorld<'_> {
                 self.acts_arrived[u] += 1;
                 let acts = self.acts_arrived[u];
                 for flat in self.stream.pop_admitted(u + 1, acts) {
+                    // Same mid-steal guard as the local-drain wake path.
+                    if !self.idle[flat] {
+                        continue;
+                    }
                     self.n_wake_dispatches += 1;
                     // The transfer itself already charged link occupancy +
                     // latency; no extra bus hop on top.
@@ -924,6 +1154,10 @@ impl World for FrameWorld<'_> {
         stats.count("reductions_done", self.n_reductions_done);
         stats.count("activations", acts);
         stats.count("wake_dispatches", self.n_wake_dispatches);
+        stats.count("steal_dispatches", self.n_steal_dispatches);
+        stats.count("stolen_passes", self.n_stolen_passes);
+        stats.count("fetch_wake_dispatches", self.n_fetch_wake_dispatches);
+        stats.count("fetch_sweep_skips", self.n_fetch_sweep_skips);
         stats.count("link_transfers", self.n_link_transfers);
         for (category, joules) in energy_ledger(self.cfg, passes, readouts, mid, psums)
         {

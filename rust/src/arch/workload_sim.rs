@@ -174,6 +174,13 @@ pub struct PipelineTrace {
     pub stats: SimStats,
     /// Per-XPE accumulated PASS occupancy (s).
     pub busy_s: Vec<f64>,
+    /// Per-XPE time spent parked on an admission threshold (registered
+    /// in the wake index with no steal available). Disjoint from both
+    /// `busy_s` and plain idle time.
+    pub parked_s: Vec<f64>,
+    /// XPEs per member chip — the correct per-chip denominator even
+    /// when the flat grid does not divide evenly by `chips`.
+    pub per_chip_xpes: usize,
     /// Frame-0 unit records, in layer order (per-frame counts/energy come
     /// from these — every frame runs the identical compiled plan).
     pub layers: Vec<PipelinedLayerTrace>,
@@ -194,23 +201,48 @@ impl PipelineTrace {
         self.frames as f64 / self.batch_latency_s
     }
 
-    /// Mean fraction of the makespan each XPE spent idle (not running a
-    /// PASS) — the quantity multi-frame pipelining exists to shrink.
+    /// Mean fraction of the makespan each XPE spent running a PASS.
+    pub fn xpe_busy_fraction(&self) -> f64 {
+        self.mean_fraction(&self.busy_s)
+    }
+
+    /// Mean fraction of the makespan each XPE spent parked on an
+    /// admission threshold — blocked with work in hand, waiting on a
+    /// producer's drains. This is the time bounded work-stealing eats
+    /// into; it is NOT idle capacity a bigger batch could fill.
+    pub fn xpe_parked_fraction(&self) -> f64 {
+        self.mean_fraction(&self.parked_s)
+    }
+
+    /// Mean fraction of the makespan each XPE spent genuinely idle:
+    /// neither running a PASS nor parked on an admission threshold —
+    /// the quantity multi-frame pipelining exists to shrink. (Earlier
+    /// revisions folded parked time in here, overstating idleness on
+    /// dependency-stalled batches.)
     pub fn xpe_idle_fraction(&self) -> f64 {
         if self.busy_s.is_empty() || self.batch_latency_s <= 0.0 {
             return 0.0;
         }
-        let busy: f64 = self.busy_s.iter().sum();
-        1.0 - busy / (self.busy_s.len() as f64 * self.batch_latency_s)
+        (1.0 - self.xpe_busy_fraction() - self.xpe_parked_fraction()).clamp(0.0, 1.0)
+    }
+
+    fn mean_fraction(&self, per_xpe_s: &[f64]) -> f64 {
+        if per_xpe_s.is_empty() || self.batch_latency_s <= 0.0 {
+            return 0.0;
+        }
+        let total: f64 = per_xpe_s.iter().sum();
+        (total / (per_xpe_s.len() as f64 * self.batch_latency_s)).clamp(0.0, 1.0)
     }
 
     /// Per-chip idle fraction over the batch makespan (one entry per
-    /// member chip; a single entry when unsharded).
+    /// member chip; a single entry when unsharded). The denominator is
+    /// the plan's own per-chip XPE count — dividing the flat grid by
+    /// `chips` misattributes capacity whenever K does not divide it.
     pub fn chip_idle_fraction(&self) -> Vec<f64> {
         if self.batch_latency_s <= 0.0 || self.chips == 0 {
             return vec![0.0; self.chips.max(1)];
         }
-        let per_chip = (self.busy_s.len() / self.chips.max(1)).max(1) as f64;
+        let per_chip = self.per_chip_xpes.max(1) as f64;
         self.chip_busy_s
             .iter()
             .map(|b| (1.0 - b / (per_chip * self.batch_latency_s)).clamp(0.0, 1.0))
@@ -245,8 +277,21 @@ pub fn simulate_frames_pipelined_admission(
     frames: usize,
     admission: AdmissionMode,
 ) -> PipelineTrace {
+    simulate_frames_pipelined_opts(plan, frames, admission, true)
+}
+
+/// [`simulate_frames_pipelined`] with every scheduler knob explicit:
+/// admission mode and bounded work-stealing (`steal = false` reproduces
+/// the strict frame-major frontier; the differential is property-tested
+/// and benched by `bench_steal`).
+pub fn simulate_frames_pipelined_opts(
+    plan: &ExecutionPlan,
+    frames: usize,
+    admission: AdmissionMode,
+    steal: bool,
+) -> PipelineTrace {
     let fp = FramePlan::with_admission(plan, frames, admission);
-    run_frame_world(&plan.accelerator, &fp)
+    run_frame_world(&plan.accelerator, &fp, steal)
 }
 
 /// Event-simulate `frames` back-to-back frames of a K-chip [`ShardPlan`]
@@ -267,19 +312,30 @@ pub fn simulate_frames_sharded_admission(
     frames: usize,
     admission: AdmissionMode,
 ) -> PipelineTrace {
+    simulate_frames_sharded_opts(shard, frames, admission, true)
+}
+
+/// [`simulate_frames_sharded`] with admission and work-stealing explicit.
+pub fn simulate_frames_sharded_opts(
+    shard: &ShardPlan,
+    frames: usize,
+    admission: AdmissionMode,
+    steal: bool,
+) -> PipelineTrace {
     let fp = FramePlan::for_shard(shard, frames, admission);
     // The world runs against the per-chip accelerator: a VdpSplit plan's
     // own `accelerator` is the scaled group grid, not a member chip.
-    run_frame_world(&shard.base, &fp)
+    run_frame_world(&shard.base, &fp, steal)
 }
 
 /// The single home of "run a [`FrameWorld`] and package a
 /// [`PipelineTrace`]", shared by the unsharded and sharded entry points
 /// so the two cannot drift.
-fn run_frame_world(cfg: &AcceleratorConfig, fp: &FramePlan<'_>) -> PipelineTrace {
+fn run_frame_world(cfg: &AcceleratorConfig, fp: &FramePlan<'_>, steal: bool) -> PipelineTrace {
     let plan = fp.plan();
     let frames = fp.frames();
     let mut world = FrameWorld::new(cfg, fp);
+    world.set_steal(steal);
     let outcome = crate::sim::engine::run(&mut world, fp.event_budget());
     let mut stats = outcome.expect_complete(&format!(
         "pipelined batch of {} frame(s) of '{}'",
@@ -311,9 +367,11 @@ fn run_frame_world(cfg: &AcceleratorConfig, fp: &FramePlan<'_>) -> PipelineTrace
         batch_latency_s,
         frame_done_s,
         busy_s: world.busy_s().to_vec(),
+        parked_s: world.parked_s().to_vec(),
         stats,
         layers,
         chips: fp.chips(),
+        per_chip_xpes: fp.per_chip_xpes(),
         chip_busy_s: world.per_chip_busy_s(),
         link_busy_s: world.link_busy_s(),
         link_transfers: world.link_transfers(),
@@ -536,6 +594,80 @@ mod tests {
         assert!(pipe.fps() > 1.0 / seq.frame_latency_s);
         let idle = pipe.xpe_idle_fraction();
         assert!((0.0..1.0).contains(&idle), "idle fraction {}", idle);
+    }
+
+    #[test]
+    fn steal_off_conserves_and_never_beats_steal_on() {
+        // The bounded-steal differential at module scope: the same
+        // compiled plan with stealing disabled runs the identical
+        // transaction multiset, never faster, and reports zero steal
+        // counters (the prop suite fuzzes this across geometries).
+        let cfg = small_cfg();
+        let wl = tiny_workload();
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let n = 4;
+        let on = simulate_frames_pipelined_opts(&plan, n, AdmissionMode::Exact, true);
+        let off = simulate_frames_pipelined_opts(&plan, n, AdmissionMode::Exact, false);
+        for key in ["passes", "pca_readouts", "activations", "psums"] {
+            assert_eq!(on.stats.counter(key), off.stats.counter(key), "counter '{}'", key);
+        }
+        assert_eq!(on.stats.counter("clamped_events"), 0);
+        assert_eq!(off.stats.counter("clamped_events"), 0);
+        assert_eq!(off.stats.counter("steal_dispatches"), 0);
+        assert_eq!(off.stats.counter("stolen_passes"), 0);
+        assert!(
+            on.batch_latency_s <= off.batch_latency_s * (1.0 + 1e-9),
+            "steal-on {} vs steal-off {}",
+            on.batch_latency_s,
+            off.batch_latency_s
+        );
+        // Busy + parked + idle fractions tile the makespan.
+        for t in [&on, &off] {
+            let total = t.xpe_busy_fraction() + t.xpe_parked_fraction() + t.xpe_idle_fraction();
+            assert!((total - 1.0).abs() < 1e-9, "fractions sum to {}", total);
+        }
+    }
+
+    #[test]
+    fn sharded_chip_fractions_use_stage_map_k3_on_64_xpes() {
+        // K = 3 chips of 64 XPEs each under LayerPipeline: the per-chip
+        // denominator must come from the ShardPlan's own per-chip slot
+        // count, never from dividing the flat grid by `chips`, and
+        // chip attribution must land each stage's work on its stage
+        // chip with nothing lost.
+        use crate::plan::{ShardPlan, ShardPolicy};
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = 8;
+        cfg.xpe_total = 64;
+        let wl = tiny_workload();
+        let shard =
+            ShardPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal, 3, ShardPolicy::LayerPipeline);
+        assert_eq!(shard.per_chip_xpes(), 64);
+        let trace = simulate_frames_sharded(&shard, 2);
+        assert_eq!(trace.stats.counter("clamped_events"), 0);
+        assert_eq!(trace.chips, 3);
+        assert_eq!(trace.per_chip_xpes, 64);
+        assert_eq!(trace.chip_busy_s.len(), 3);
+        // Attribution conserves occupancy exactly.
+        let flat: f64 = trace.busy_s.iter().sum();
+        let chips: f64 = trace.chip_busy_s.iter().sum();
+        assert!((flat - chips).abs() < 1e-9, "busy {} vs per-chip {}", flat, chips);
+        // Occupancy lands exactly on the chips the stage map names.
+        let stages: std::collections::HashSet<usize> =
+            shard.chip_of_layer.iter().copied().collect();
+        for (c, b) in trace.chip_busy_s.iter().enumerate() {
+            assert_eq!(
+                *b > 0.0,
+                stages.contains(&c),
+                "chip {} occupancy {} disagrees with stage map {:?}",
+                c,
+                b,
+                shard.chip_of_layer
+            );
+        }
+        for (c, f) in trace.chip_idle_fraction().iter().enumerate() {
+            assert!((0.0..=1.0).contains(f), "chip {} idle fraction {}", c, f);
+        }
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //!   accesses through a [`interleave::Shared`] shim and the explorer
 //!   enumerates thread schedules exhaustively (DFS, optionally bounded by
 //!   a preemption budget), checking an invariant after every step and at
-//!   quiescence. [`protocols`] models the three riskiest concurrent
-//!   protocols in the serving stack against it.
+//!   quiescence. [`protocols`] models the riskiest concurrent protocols
+//!   in the stack against it — three from the serving path plus the
+//!   event-sim scheduler's bounded work-stealing handshake.
 //!
 //! [`ExecutionPlan`]: crate::plan::ExecutionPlan
 //! [`FramePlan`]: crate::plan::FramePlan

@@ -1,4 +1,5 @@
-//! The three riskiest concurrent protocols of the serving stack,
+//! The riskiest concurrent protocols of the stack — three from the
+//! serving path plus the event-sim scheduler's work-stealing frontier —
 //! expressed as [`interleave`] models and checked exhaustively.
 //!
 //! Each model mirrors one real protocol at the granularity of its
@@ -25,6 +26,15 @@
 //!    tokens stay within `[0, cap]` and, when the cap never binds,
 //!    conserve exactly (the split read-modify-write variant loses
 //!    deposits).
+//! 4. **Bounded work-stealing past admission-blocked units**
+//!    ([`check_steal`]) — the `FrameWorld` scheduler frontier: an XPE
+//!    parked on an admission threshold steals short already-admitted
+//!    VDPs while a producer drains activations toward its wake.
+//!    Invariants: no VDP executes a slice twice (double-steal), a
+//!    mid-VDP PCA charge never loses its owner (abandonment), a woken
+//!    XPE never claims fresh stolen work (the stall bound that keeps
+//!    "pipelined ≤ sequential" provable), no XPE issues its own unit
+//!    before its threshold, and no wake-heap entry is orphaned.
 //!
 //! [`interleave`]: super::interleave
 
@@ -527,6 +537,354 @@ pub fn check_budget(
     })
 }
 
+// ---------------------------------------------------------------------
+// 4. Bounded work-stealing past admission-blocked units
+// ---------------------------------------------------------------------
+
+/// One stealable side VDP: `slices` passes of closed-form remaining
+/// cost, `done` of them executed, locked to the claiming stealer while
+/// mid-VDP (the PcaLocal accumulation charge that must not change
+/// hands).
+#[derive(Debug, Clone)]
+pub struct StealUnit {
+    pub slices: usize,
+    pub done: usize,
+    pub claimed: Option<usize>,
+}
+
+/// Shared scheduler state: one producer draining `acts_done` toward the
+/// stealers' admission thresholds, the wake index (`registered` /
+/// `woken` per stealer, mirroring the threshold heap), the stealable
+/// side units, and per-stealer steal budgets (the expected-stall bound
+/// in pass slots).
+#[derive(Debug, Clone)]
+pub struct StealState {
+    pub acts_done: usize,
+    /// Admission threshold of each stealer's own (consumer) unit.
+    pub need: Vec<usize>,
+    /// Wake-heap entry live (registered at park, popped at wake).
+    pub registered: Vec<bool>,
+    /// Wake delivered: the stealer's threshold has been crossed.
+    pub woken: Vec<bool>,
+    /// Remaining steal budget per stealer, in slices.
+    pub budget: Vec<usize>,
+    pub units: Vec<StealUnit>,
+    /// Producer count observed when each stealer issued its own unit.
+    pub own_issued_at: Vec<Option<usize>>,
+    /// Set when a stealer claimed a fresh unit after its wake.
+    pub claim_after_wake: bool,
+    /// Stolen slices executed in total.
+    pub stolen: u64,
+    /// Wakes delivered by the producer's drain loop.
+    pub wakes: u64,
+}
+
+/// Seeded bugs for [`check_steal`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealBug {
+    /// Split the claim into a read step and a write step: two parked
+    /// XPEs claim the same VDP and its slices execute twice.
+    DoubleSteal,
+    /// Ignore the wake when choosing the next steal: a woken XPE keeps
+    /// claiming fresh work, stretching its stall past the closed-form
+    /// bound that keeps "pipelined ≤ sequential" provable.
+    StealPastWake,
+    /// Abandon a stolen VDP's remaining slices on wake: the mid-VDP
+    /// PCA charge is left with no owner.
+    MidVdpAbandon,
+}
+
+/// First side unit stealer `k` may claim under its remaining budget.
+fn steal_eligible(s: &StealState, k: usize) -> Option<usize> {
+    s.units
+        .iter()
+        .position(|u| u.claimed.is_none() && u.done < u.slices && u.slices - u.done <= s.budget[k])
+}
+
+/// The producer: drains one activation per step and, atomically with
+/// the drain, pops every waiter whose threshold the new count crosses —
+/// exactly the shape of the real `ActivationDone` handler over the
+/// PR-5 wake heap.
+#[derive(Clone)]
+struct Drainer {
+    left: usize,
+}
+
+impl Thread<StealState> for Drainer {
+    fn step(&mut self, shared: &mut Shared<StealState>) -> Step {
+        shared.with(|s| {
+            s.acts_done += 1;
+            for k in 0..s.registered.len() {
+                if s.registered[k] && s.acts_done >= s.need[k] {
+                    s.registered[k] = false;
+                    s.woken[k] = true;
+                    s.wakes += 1;
+                }
+            }
+        });
+        self.left -= 1;
+        if self.left == 0 {
+            Step::Done
+        } else {
+            Step::Ran
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<StealState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// What a stealer decided in one atomic scheduler op.
+enum StealNext {
+    Own,
+    Claimed(usize),
+    Wait,
+}
+
+/// An XPE parked on an admission threshold. Faithful protocol: park
+/// with an atomic check-then-register (pc 0); then loop — claim an
+/// eligible side unit atomically or return to its own unit once woken
+/// (pc 1); execute a stolen VDP to completion, one slice per step,
+/// even if the wake lands mid-VDP (pc 2); finally issue its own unit
+/// (pc 3).
+#[derive(Clone)]
+struct Stealer {
+    k: usize,
+    pc: u8,
+    unit: usize,
+    /// DoubleSteal only: unit picked in the split claim's read phase.
+    pending: Option<usize>,
+    bug: Option<StealBug>,
+}
+
+impl Thread<StealState> for Stealer {
+    fn step(&mut self, shared: &mut Shared<StealState>) -> Step {
+        let k = self.k;
+        match self.pc {
+            0 => {
+                // Park: threshold check and waiter registration are ONE
+                // op (the real dispatch() runs inside a single event
+                // handler), so the wake can never be lost between them.
+                shared.with(|s| {
+                    if s.acts_done >= s.need[k] {
+                        s.woken[k] = true; // admitted immediately: no park
+                    } else {
+                        s.registered[k] = true;
+                    }
+                });
+                self.pc = 1;
+                Step::Ran
+            }
+            1 if self.bug == Some(StealBug::DoubleSteal) => {
+                if let Some(u) = self.pending {
+                    // Write phase of the split claim: claim blindly —
+                    // the unit may have been claimed since the read.
+                    // (The read phase already honored the wake, so only
+                    // the double-execution class is seeded here.)
+                    shared.with(|s| {
+                        let rem = s.units[u].slices.saturating_sub(s.units[u].done);
+                        s.units[u].claimed = Some(k);
+                        s.budget[k] = s.budget[k].saturating_sub(rem);
+                    });
+                    self.pending = None;
+                    self.unit = u;
+                    self.pc = 2;
+                    return Step::Ran;
+                }
+                // Read phase: pick a unit without claiming it.
+                let next = shared.with(|s| {
+                    if s.woken[k] {
+                        StealNext::Own
+                    } else {
+                        match steal_eligible(s, k) {
+                            Some(u) => StealNext::Claimed(u),
+                            None => StealNext::Wait,
+                        }
+                    }
+                });
+                match next {
+                    StealNext::Own => {
+                        self.pc = 3;
+                        Step::Ran
+                    }
+                    StealNext::Claimed(u) => {
+                        self.pending = Some(u);
+                        Step::Ran
+                    }
+                    StealNext::Wait => Step::Blocked,
+                }
+            }
+            1 => {
+                // Faithful claim-or-return, one atomic op. StealPastWake
+                // drops the woken check and keeps claiming.
+                let past_wake = self.bug == Some(StealBug::StealPastWake);
+                let next = shared.with(|s| {
+                    if !past_wake && s.woken[k] {
+                        return StealNext::Own;
+                    }
+                    match steal_eligible(s, k) {
+                        Some(u) => {
+                            let rem = s.units[u].slices - s.units[u].done;
+                            s.units[u].claimed = Some(k);
+                            s.budget[k] -= rem;
+                            if s.woken[k] {
+                                s.claim_after_wake = true;
+                            }
+                            StealNext::Claimed(u)
+                        }
+                        None if s.woken[k] => StealNext::Own,
+                        None => StealNext::Wait,
+                    }
+                });
+                match next {
+                    StealNext::Own => {
+                        self.pc = 3;
+                        Step::Ran
+                    }
+                    StealNext::Claimed(u) => {
+                        self.unit = u;
+                        self.pc = 2;
+                        Step::Ran
+                    }
+                    StealNext::Wait => Step::Blocked,
+                }
+            }
+            2 => {
+                // Execute one stolen slice. Faithful: run the VDP to
+                // completion even if woken mid-flight; MidVdpAbandon
+                // drops it on wake instead.
+                let abandon = self.bug == Some(StealBug::MidVdpAbandon);
+                let u = self.unit;
+                let finished = shared.with(|s| {
+                    if abandon && s.woken[k] && s.units[u].done < s.units[u].slices {
+                        s.units[u].claimed = None;
+                        return None; // abandoned mid-VDP
+                    }
+                    s.units[u].done += 1;
+                    s.stolen += 1;
+                    if s.units[u].done >= s.units[u].slices {
+                        s.units[u].claimed = None;
+                        Some(true)
+                    } else {
+                        Some(false)
+                    }
+                });
+                match finished {
+                    None => {
+                        self.pc = 3;
+                        Step::Ran
+                    }
+                    Some(true) => {
+                        self.pc = 1;
+                        Step::Ran
+                    }
+                    Some(false) => Step::Ran,
+                }
+            }
+            _ => {
+                // Issue the own (consumer) unit, recording the producer
+                // count it was admitted at.
+                shared.with(|s| s.own_issued_at[k] = Some(s.acts_done));
+                Step::Done
+            }
+        }
+    }
+    fn boxed_clone(&self) -> Box<dyn Thread<StealState>> {
+        Box::new(self.clone())
+    }
+}
+
+/// Explore one producer draining `acts_total` activations racing one
+/// parked stealer per entry of `needs` (its admission threshold), over
+/// side units of the given slice counts, each stealer holding `budget`
+/// slices of steal headroom.
+pub fn check_steal(
+    explorer: &Explorer,
+    needs: &[usize],
+    acts_total: usize,
+    unit_slices: &[usize],
+    budget: usize,
+    bug: Option<StealBug>,
+) -> Report {
+    assert!(
+        needs.iter().all(|&n| n <= acts_total),
+        "producer must drain past every threshold or the park never wakes"
+    );
+    let stealers = needs.len();
+    let init = StealState {
+        acts_done: 0,
+        need: needs.to_vec(),
+        registered: vec![false; stealers],
+        woken: vec![false; stealers],
+        budget: vec![budget; stealers],
+        units: unit_slices
+            .iter()
+            .map(|&slices| StealUnit { slices, done: 0, claimed: None })
+            .collect(),
+        own_issued_at: vec![None; stealers],
+        claim_after_wake: false,
+        stolen: 0,
+        wakes: 0,
+    };
+    let mut threads: Vec<Box<dyn Thread<StealState>>> =
+        vec![Box::new(Drainer { left: acts_total })];
+    for k in 0..stealers {
+        threads.push(Box::new(Stealer { k, pc: 0, unit: 0, pending: None, bug }));
+    }
+    explorer.explore(init, threads, |s: &StealState, quiescent| {
+        for (i, u) in s.units.iter().enumerate() {
+            if u.done > u.slices {
+                return Err(format!(
+                    "unit {} executed {} of {} slices (double-steal)",
+                    i, u.done, u.slices
+                ));
+            }
+            if u.done > 0 && u.done < u.slices && u.claimed.is_none() {
+                return Err(format!(
+                    "unit {} abandoned mid-VDP at {}/{} slices with no owner",
+                    i, u.done, u.slices
+                ));
+            }
+            if quiescent && u.done != 0 && u.done != u.slices {
+                return Err(format!(
+                    "unit {} quiesced mid-VDP at {}/{} slices",
+                    i, u.done, u.slices
+                ));
+            }
+        }
+        if s.claim_after_wake {
+            return Err(
+                "a woken stealer claimed fresh work (steal past wake breaks the stall bound)"
+                    .to_string(),
+            );
+        }
+        for (k, issued) in s.own_issued_at.iter().enumerate() {
+            if let Some(acts) = issued {
+                if *acts < s.need[k] {
+                    return Err(format!(
+                        "stealer {} issued its own unit at {} acts < threshold {}",
+                        k, acts, s.need[k]
+                    ));
+                }
+            }
+        }
+        if quiescent {
+            for k in 0..s.need.len() {
+                if s.registered[k] {
+                    return Err(format!(
+                        "stealer {} quiesced with a live wake-heap entry (orphaned waiter)",
+                        k
+                    ));
+                }
+                if s.own_issued_at[k].is_none() {
+                    return Err(format!("stealer {} never issued its own unit", k));
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -540,6 +898,7 @@ mod tests {
         check_router(&fast(), 2, 2, true, None).assert_clean();
         check_registry(&fast(), 2, 2, None).assert_clean();
         check_budget(&fast(), 2, 1, 1, 1, 10, 1000, None).assert_clean();
+        check_steal(&fast(), &[2], 2, &[2, 1], 4, None).assert_clean();
     }
 
     #[test]
@@ -567,6 +926,24 @@ mod tests {
                 .violation
                 .is_some(),
             "split RMW must lose a deposit"
+        );
+        assert!(
+            check_steal(&fast(), &[2, 2], 2, &[1], 4, Some(StealBug::DoubleSteal))
+                .violation
+                .is_some(),
+            "a split claim must execute the same VDP twice"
+        );
+        assert!(
+            check_steal(&fast(), &[1], 1, &[1, 1], 4, Some(StealBug::StealPastWake))
+                .violation
+                .is_some(),
+            "claiming past the wake must break the stall bound"
+        );
+        assert!(
+            check_steal(&fast(), &[1], 1, &[2], 4, Some(StealBug::MidVdpAbandon))
+                .violation
+                .is_some(),
+            "abandoning a stolen VDP mid-flight must orphan the PCA charge"
         );
     }
 }

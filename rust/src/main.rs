@@ -116,6 +116,22 @@ fn parse_pipeline(s: &str) -> Result<Option<bool>, i32> {
     }
 }
 
+/// Parse the shared `--steal auto|on|off` option. `auto` (the default)
+/// leaves the session's own rule in charge (stealing on, or whatever
+/// `OXBNN_STEAL` pins); `off` is the opt-out back to the strict
+/// frame-major scheduler frontier.
+fn parse_steal(s: &str) -> Result<Option<bool>, i32> {
+    match s {
+        "auto" | "" => Ok(None),
+        "true" | "on" | "1" => Ok(Some(true)),
+        "false" | "off" | "0" => Ok(Some(false)),
+        other => {
+            eprintln!("error: --steal must be auto|on|off, got '{}'", other);
+            Err(2)
+        }
+    }
+}
+
 /// Parse the shared `--chips K` / `--shard layer|vdp` scale-out options.
 fn parse_shard(parsed: &oxbnn::util::cli::Parsed) -> Result<(usize, ShardPolicy), i32> {
     let chips = match parsed.get_usize("chips") {
@@ -176,6 +192,11 @@ fn cmd_fps(args: &[String]) -> i32 {
             "auto",
             "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
         )
+        .opt(
+            "steal",
+            "auto",
+            "auto|on|off — bounded work-stealing past admission-blocked units",
+        )
         .opt("chips", "1", "accelerators per model (K-chip scale-out group)")
         .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
         .flag("json", "emit JSON instead of tables");
@@ -193,6 +214,10 @@ fn cmd_fps(args: &[String]) -> i32 {
     };
     let pipeline = match parse_pipeline(parsed.get("pipeline")) {
         Ok(p) => p,
+        Err(code) => return code,
+    };
+    let steal = match parse_steal(parsed.get("steal")) {
+        Ok(s) => s,
         Err(code) => return code,
     };
     let (chips, shard) = match parse_shard(&parsed) {
@@ -221,6 +246,9 @@ fn cmd_fps(args: &[String]) -> i32 {
                 .shard_policy(shard);
             if let Some(p) = pipeline {
                 builder = builder.pipeline(p);
+            }
+            if let Some(s) = steal {
+                builder = builder.steal(s);
             }
             builder.build().expect("session over built-in configs").run()
         });
@@ -326,6 +354,12 @@ fn cmd_simulate(args: &[String]) -> i32 {
         "auto|true|false — whole-frame pipelined batches: cross-layer + multi-frame \
          overlap with receptive-field-exact admission (auto: on when batch > 1)",
     )
+    .opt(
+        "steal",
+        "auto",
+        "auto|on|off — bounded work-stealing past admission-blocked units in the \
+         pipelined event space (auto: on)",
+    )
     .opt("chips", "1", "accelerators sharing the model (K-chip scale-out group)")
     .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
     .flag("json", "emit the unified report as JSON")
@@ -386,6 +420,10 @@ fn cmd_simulate(args: &[String]) -> i32 {
         Ok(p) => p,
         Err(code) => return code,
     };
+    let steal = match parse_steal(parsed.get("steal")) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
     let (chips, shard) = match parse_shard(&parsed) {
         Ok(v) => v,
         Err(code) => return code,
@@ -399,6 +437,9 @@ fn cmd_simulate(args: &[String]) -> i32 {
         .shard_policy(shard);
     if let Some(p) = pipeline {
         builder = builder.pipeline(p);
+    }
+    if let Some(s) = steal {
+        builder = builder.steal(s);
     }
     let mut session = match builder.build() {
         Ok(s) => s,
@@ -1557,6 +1598,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
         "auto",
         "auto|true|false — whole-frame pipelined batches (auto: on when batch > 1)",
     )
+    .opt(
+        "steal",
+        "auto",
+        "auto|on|off — bounded work-stealing past admission-blocked units",
+    )
     .opt("chips", "1", "accelerators per cell (K-chip scale-out group)")
     .opt("shard", "vdp", "layer|vdp — shard policy when --chips > 1")
     .opt("out", "-", "output CSV path ('-' for stdout)");
@@ -1581,6 +1627,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
     };
     let pipeline = match parse_pipeline(parsed.get("pipeline")) {
         Ok(p) => p,
+        Err(code) => return code,
+    };
+    let steal = match parse_steal(parsed.get("steal")) {
+        Ok(s) => s,
         Err(code) => return code,
     };
     let (chips, shard) = match parse_shard(&parsed) {
@@ -1623,6 +1673,9 @@ fn cmd_sweep(args: &[String]) -> i32 {
             .shard_policy(shard);
         if let Some(p) = pipeline {
             builder = builder.pipeline(p);
+        }
+        if let Some(s) = steal {
+            builder = builder.steal(s);
         }
         let report = builder.build().expect("sweep session").run();
         format!(

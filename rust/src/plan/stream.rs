@@ -215,6 +215,13 @@ impl PassStream {
         self.cursor[flat] >= plan.queue_len(flat)
     }
 
+    /// Passes still queued for the XPE at `flat` — the closed-form
+    /// remaining cost a work-stealing scheduler compares against an
+    /// expected stall, O(1) off the compiled pass map.
+    pub fn remaining_for(&self, plan: &LayerPlan, flat: usize) -> usize {
+        plan.queue_len(flat).saturating_sub(self.cursor[flat])
+    }
+
     /// Passes handed out so far.
     pub fn issued(&self) -> usize {
         self.issued
@@ -300,6 +307,11 @@ impl FrameStream {
     /// True once `unit` has no passes left for XPE `flat`.
     pub fn exhausted_for(&self, fp: &super::FramePlan<'_>, unit: usize, flat: usize) -> bool {
         self.streams[unit].exhausted_for(fp.layer_plan(unit), fp.local_flat(unit, flat))
+    }
+
+    /// Passes `unit` still has queued for XPE `flat` — closed-form, O(1).
+    pub fn remaining_for(&self, fp: &super::FramePlan<'_>, unit: usize, flat: usize) -> usize {
+        self.streams[unit].remaining_for(fp.layer_plan(unit), fp.local_flat(unit, flat))
     }
 
     /// Passes issued so far by `unit` (all XPEs).

@@ -368,4 +368,16 @@ fn activation_drain_wakes_exactly_the_eligible_waiter() {
     );
     assert_eq!(outcome.stats.counter("wake_dispatches"), 1);
     assert_eq!(outcome.stats.counter("clamped_events"), 0);
+    // Fetch-side O(woken) pin (ISSUE 10 satellite): a `FetchDone` sweep
+    // dispatches only the idle XPEs whose frontier IS the fetched unit.
+    // c1's fetch wakes all 64 XPEs; fc's fetch can wake at most the one
+    // XPE that exhausted c1 first and moved its frontier to fc. The
+    // pre-filter sweep re-dispatched every idle XPE on every fetch
+    // (up to ~2 × 64 here).
+    assert!(
+        world.fetch_wake_dispatches() <= 65,
+        "fetch sweeps must dispatch O(woken) XPEs, got {}",
+        world.fetch_wake_dispatches()
+    );
+    assert!(world.fetch_wake_dispatches() >= 64, "c1's fetch must wake the full grid");
 }

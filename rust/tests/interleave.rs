@@ -1,6 +1,8 @@
-//! Deterministic-interleaving model-check suite (ISSUE 7 satellite).
+//! Deterministic-interleaving model-check suite (ISSUE 7 satellite;
+//! steal protocol added in ISSUE 10).
 //!
-//! Exhaustively explores the three serving-path protocols under every
+//! Exhaustively explores the three serving-path protocols plus the
+//! event-sim scheduler's bounded work-stealing handshake under every
 //! thread interleaving (bounded only by the schedule cap) and proves:
 //!
 //! * the faithful protocols hold their invariants on **every** schedule
@@ -8,7 +10,9 @@
 //!   distinct schedules, the CI depth floor;
 //! * each seeded regression (the pre-fix double-complete, a torn or
 //!   unguarded registry publication, a split read-modify-write on the
-//!   retry budget) is caught with a concrete replayable schedule.
+//!   retry budget, and the three work-stealing races — double-steal,
+//!   steal-past-wake, mid-VDP abandonment) is caught with a concrete
+//!   replayable schedule.
 //!
 //! The explorer is dependency-free and single-threaded, so these runs
 //! are exactly reproducible; the nightly TSan job covers the real
@@ -16,7 +20,8 @@
 
 use oxbnn::check::interleave::Explorer;
 use oxbnn::check::protocols::{
-    check_budget, check_registry, check_router, BudgetBug, RegistryBug, RouterBug,
+    check_budget, check_registry, check_router, check_steal, BudgetBug, RegistryBug,
+    RouterBug, StealBug,
 };
 
 /// Exhaustive within the default CI schedule cap.
@@ -57,6 +62,22 @@ fn retry_budget_accounting_is_exhaustively_clean() {
 }
 
 #[test]
+fn steal_park_wake_handshake_is_exhaustively_clean() {
+    // One producer draining 3 activations racing two parked stealers
+    // (thresholds 2 and 3) over a 2-slice and a 1-slice side unit:
+    // 50 010 schedules, all explored. Every schedule conserves each
+    // stolen VDP's slices exactly once, keeps the mid-VDP PCA charge
+    // owned, never claims past a wake, never issues a consumer unit
+    // below its threshold, and quiesces with no wake-heap entry
+    // orphaned — the guarantees the `FrameWorld` steal integration
+    // relies on.
+    let report = check_steal(&ci(), &[2, 3], 3, &[2, 1], 4, None);
+    report.assert_clean();
+    assert!(!report.capped, "steal exploration must finish uncapped");
+    assert!(report.schedules >= 10_000, "only {} schedules explored", report.schedules);
+}
+
+#[test]
 fn every_seeded_regression_is_caught() {
     let fast = Explorer { max_preemptions: usize::MAX, max_schedules: 50_000 };
     let double = check_router(&fast, 2, 2, true, Some(RouterBug::DoubleComplete));
@@ -78,6 +99,17 @@ fn every_seeded_regression_is_caught() {
             .is_some(),
         "a split read-modify-write must lose a deposit"
     );
+
+    let double = check_steal(&fast, &[2, 2], 2, &[1], 4, Some(StealBug::DoubleSteal));
+    let v = double.violation.expect("a split claim must execute the same VDP twice");
+    assert!(!v.schedule.is_empty(), "steal violations carry a replayable schedule");
+    assert!(v.message.contains("double-steal"), "{}", v.message);
+    let past = check_steal(&fast, &[1], 1, &[1, 1], 4, Some(StealBug::StealPastWake));
+    let v = past.violation.expect("claiming past the wake must break the stall bound");
+    assert!(v.message.contains("stall bound"), "{}", v.message);
+    let abandon = check_steal(&fast, &[1], 1, &[2], 4, Some(StealBug::MidVdpAbandon));
+    let v = abandon.violation.expect("mid-VDP abandonment must orphan the PCA charge");
+    assert!(v.message.contains("abandoned mid-VDP"), "{}", v.message);
 }
 
 #[test]

@@ -7,7 +7,8 @@ use oxbnn::arch::accelerator::{AcceleratorConfig, BitcountMode};
 use oxbnn::arch::perf::layer_perf;
 use oxbnn::arch::workload_sim::{
     simulate_frame_planned, simulate_frames_pipelined,
-    simulate_frames_pipelined_admission,
+    simulate_frames_pipelined_admission, simulate_frames_pipelined_opts,
+    simulate_frames_sharded_opts,
 };
 use oxbnn::coordinator::Batcher;
 use oxbnn::coordinator::Router;
@@ -386,6 +387,132 @@ fn prop_sharded_execution_conserves_and_scales() {
                         "makespan below a chip's busy/XPE work floor",
                     )?;
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE-10 tentpole invariants: bounded work-stealing past
+/// admission-blocked units is a pure schedule permutation.
+///
+/// For random conv-chain + FC-tail workloads (the shapes that actually
+/// park XPEs on receptive-field thresholds), both admission modes and
+/// K ∈ {1, 2, 4} chips under both shard policies:
+///
+/// 1. **Conservation** — stealing on vs off executes the identical
+///    per-layer PASS/readout/psum/activation multisets (a steal reorders
+///    admitted work, it never invents or drops any).
+/// 2. **Never slower** — the steal-on makespan ≤ the steal-off makespan:
+///    the stall-floor bound returns every thief before the earliest
+///    possible wake of its blocked unit, so no critical path grows.
+/// 3. **Pipelined ≤ sequential survives stealing** (K = 1): the PR-4
+///    guarantee holds with the thief scheduler on, frame 0 and whole
+///    batch alike.
+/// 4. Zero event-budget clamps everywhere, and the strict frontier
+///    reports zero steal counters.
+#[test]
+fn prop_steal_conserves_and_never_slows() {
+    use oxbnn::plan::{ShardPlan, ShardPolicy};
+    forall(Config::default().cases(6), |g| {
+        let w = [8usize, 12, 16][g.usize_in(0, 2)];
+        let mut layers = Vec::new();
+        for i in 0..g.usize_in(2, 3) {
+            layers.push(
+                GemmLayer::new(
+                    format!("c{}", i),
+                    w * w,
+                    g.usize_in(20, 60),
+                    g.usize_in(1, 3),
+                )
+                .with_geom(ConvGeom::new(3, 1, 1, w)),
+            );
+        }
+        layers.push(GemmLayer::fc("fc", 64, g.usize_in(2, 6)));
+        let wl = Workload::new("prop_steal", layers);
+        let mut cfg = AcceleratorConfig::oxbnn_5();
+        cfg.n = g.usize_in(4, 12);
+        cfg.xpe_total = g.usize_in(4, 12);
+        cfg.bitcount = BitcountMode::Pca { gamma: 1 << 20 };
+        let frames = g.usize_in(2, 3);
+        let plan = ExecutionPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal);
+        let seq = simulate_frame_planned(&plan);
+        for admission in [AdmissionMode::Exact, AdmissionMode::RasterHalo(0.125)] {
+            // (3) the PR-4 guarantee with the thief scheduler on.
+            let on = simulate_frames_pipelined_opts(&plan, frames, admission, true);
+            let off = simulate_frames_pipelined_opts(&plan, frames, admission, false);
+            prop_assert_eq(off.stats.counter("steal_dispatches"), 0)?;
+            prop_assert_eq(off.stats.counter("stolen_passes"), 0)?;
+            for (a, b) in on.layers.iter().zip(&off.layers) {
+                prop_assert_eq(a.passes, b.passes)?;
+                prop_assert_eq(a.pca_readouts, b.pca_readouts)?;
+                prop_assert_eq(a.psums, b.psums)?;
+                prop_assert_eq(a.activations, b.activations)?;
+            }
+            for key in ["passes", "pca_readouts", "activations", "psums"] {
+                prop_assert_eq(on.stats.counter(key), off.stats.counter(key))?;
+            }
+            prop_assert_eq(on.stats.counter("clamped_events"), 0)?;
+            prop_assert_eq(off.stats.counter("clamped_events"), 0)?;
+            prop_assert(
+                on.batch_latency_s <= off.batch_latency_s * (1.0 + 1e-9),
+                &format!(
+                    "steal-on makespan {} above steal-off {}",
+                    on.batch_latency_s, off.batch_latency_s
+                ),
+            )?;
+            prop_assert(
+                on.frame_latency_s <= seq.frame_latency_s * (1.0 + 1e-9),
+                "stealing broke pipelined-frame ≤ sequential-frame",
+            )?;
+            prop_assert(
+                on.batch_latency_s <= frames as f64 * seq.frame_latency_s * (1.0 + 1e-9),
+                "stealing broke pipelined-batch ≤ sequential multiply",
+            )?;
+            // Frame completions stay in order: last-layer work is never
+            // stolen, so monotonicity survives the thief scheduler.
+            for pair in on.frame_done_s.windows(2) {
+                prop_assert(
+                    pair[1] >= pair[0] - 1e-12,
+                    "stealing reordered frame completions",
+                )?;
+            }
+        }
+        // (1) + (2) across chip counts and shard policies.
+        for shard_policy in ShardPolicy::all() {
+            for k in [1usize, 2, 4] {
+                let shard =
+                    ShardPlan::compile(&cfg, &wl, MappingPolicy::PcaLocal, k, shard_policy);
+                let on = simulate_frames_sharded_opts(
+                    &shard,
+                    frames,
+                    AdmissionMode::Exact,
+                    true,
+                );
+                let off = simulate_frames_sharded_opts(
+                    &shard,
+                    frames,
+                    AdmissionMode::Exact,
+                    false,
+                );
+                for (a, b) in on.layers.iter().zip(&off.layers) {
+                    prop_assert_eq(a.passes, b.passes)?;
+                    prop_assert_eq(a.pca_readouts, b.pca_readouts)?;
+                    prop_assert_eq(a.psums, b.psums)?;
+                    prop_assert_eq(a.activations, b.activations)?;
+                }
+                for key in ["passes", "pca_readouts", "activations", "psums"] {
+                    prop_assert_eq(on.stats.counter(key), off.stats.counter(key))?;
+                }
+                prop_assert_eq(on.stats.counter("clamped_events"), 0)?;
+                prop_assert_eq(off.stats.counter("clamped_events"), 0)?;
+                prop_assert(
+                    on.batch_latency_s <= off.batch_latency_s * (1.0 + 1e-9),
+                    &format!(
+                        "[{:?} K={}] steal-on makespan {} above steal-off {}",
+                        shard_policy, k, on.batch_latency_s, off.batch_latency_s
+                    ),
+                )?;
             }
         }
         Ok(())
